@@ -1,0 +1,74 @@
+//! End-to-end serving driver (DESIGN.md §5): load the AOT-compiled model,
+//! serve a batch of mixed-task requests through the coordinator (router →
+//! batcher → hybrid engine), and report prefill/decode throughput and
+//! latency percentiles. All layers compose here: L1 Pallas kernels inside
+//! the L2 graphs, compiled ONCE to PJRT executables, driven by the L3
+//! coordinator with real file IO for offloaded neuron bundles.
+//!
+//!     make artifacts && cargo run --release --example serve_e2e
+//!     # flags: --requests N --throttle --cold-cache N
+
+use std::path::Path;
+
+use powerinfer2::coordinator::Coordinator;
+use powerinfer2::engine::real::RealEngineOptions;
+use powerinfer2::trace::request_mix;
+use powerinfer2::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n_requests = args.opt_usize("requests", 8);
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("run `make artifacts` first");
+        std::process::exit(2);
+    }
+    let weight_path = std::env::temp_dir().join("pi2_serve_e2e_weights.bin");
+    let opts = RealEngineOptions {
+        // UFS throttling makes the laptop behave like phone flash; enable
+        // with --throttle for paper-like IO economics
+        throttle_io: args.flag("throttle"),
+        cold_cache_neurons: args.opt_usize("cold-cache", 4096),
+        ..Default::default()
+    };
+    println!("# serve_e2e: compiling NPU graph table…");
+    let t0 = std::time::Instant::now();
+    let mut coord = Coordinator::new(artifacts, &weight_path, opts)?;
+    println!("ready in {:.1}s", t0.elapsed().as_secs_f64());
+
+    let mut requests = request_mix(n_requests, 7);
+    for r in requests.iter_mut() {
+        // clamp to the e2e model's windows
+        r.prompt_tokens = r.prompt_tokens.clamp(4, 64);
+        r.output_tokens = r.output_tokens.clamp(8, 48);
+    }
+    println!("serving {} requests (mixed dialogue/code/math/role-play)…",
+             requests.len());
+    let t1 = std::time::Instant::now();
+    let mut report = coord.serve(&requests)?;
+    let wall = t1.elapsed().as_secs_f64();
+
+    println!("\n## results");
+    println!("{:>5}{:>12}{:>9}{:>9}{:>12}{:>12}",
+             "id", "task", "prompt", "out", "TTFT (s)", "total (s)");
+    for c in &report.completions {
+        let task = requests.iter().find(|r| r.id == c.id).unwrap().task;
+        println!("{:>5}{:>12}{:>9}{:>9}{:>12.3}{:>12.3}",
+                 c.id, task.name(), c.prompt_tokens, c.output_tokens,
+                 c.first_token_s, c.total_s);
+    }
+    println!("\nprefill: {} tokens @ {:.1} tok/s", report.prefill_tokens,
+             report.prefill_tps());
+    println!("decode:  {} tokens @ {:.1} tok/s", report.decode_tokens,
+             report.decode_tps());
+    let (mean, p50, p90, p99) = (
+        report.step_latency_ms.mean(),
+        report.step_latency_ms.percentile(50.0),
+        report.step_latency_ms.percentile(90.0),
+        report.step_latency_ms.percentile(99.0),
+    );
+    println!("step latency (ms): mean {mean:.1} p50 {p50:.1} p90 {p90:.1} p99 {p99:.1}");
+    println!("wall clock: {wall:.2}s for {} requests", requests.len());
+    std::fs::remove_file(weight_path).ok();
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: L2 JAX model + L1 Pallas kernels → HLO text.
+
+Nothing in this package is imported at runtime; the rust coordinator only
+consumes the artifacts/ directory this package produces.
+"""

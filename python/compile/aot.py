@@ -1,0 +1,171 @@
+"""AOT lowering: the NPU-graph table → artifacts/*.hlo.txt + manifest.
+
+Runs ONCE at build time (`make artifacts`); python is never on the request
+path. For every graph in model.graph_table() this script:
+
+  1. jits + lowers the function to StableHLO,
+  2. converts it to an XlaComputation and dumps HLO **text** —
+     xla_extension 0.5.1 (the version the published `xla` crate binds)
+     rejects jax≥0.5's serialized HloModuleProto (64-bit instruction ids);
+     the text parser reassigns ids, so text round-trips cleanly
+     (see /opt/xla-example/README.md),
+  3. records name/arg-shapes/metadata in artifacts/manifest.json, which the
+     rust runtime reads to compile and index the executables.
+
+It also emits:
+  * model_config.json — the ModelDims the rust side must mirror,
+  * selftest/ — a tiny-dims graph table plus seeded input/output vectors
+    (selftest.json) that rust integration tests replay through PJRT to
+    prove the full AOT bridge is numerically sound.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import ModelDims, graph_table
+
+SELFTEST_DIMS = ModelDims(
+    hidden=32,
+    inter=256,
+    layers=2,
+    heads=4,
+    kv_heads=2,
+    vocab=64,
+    seq_max=16,
+    prefill_chunk=8,
+    batches=(1, 2),
+    hot_ks=(128, 256),
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_graph(fn, arg_specs):
+    specs = [spec for _, spec in arg_specs]
+    return jax.jit(fn).lower(*specs)
+
+
+def emit_table(dims: ModelDims, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for name, fn, arg_specs, meta in graph_table(dims):
+        lowered = lower_graph(fn, arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_tree = jax.eval_shape(fn, *[s for _, s in arg_specs])
+        outs = jax.tree_util.tree_leaves(out_tree)
+        entries.append({
+            "name": name,
+            "file": fname,
+            "meta": meta,
+            "args": [
+                {"name": an, "shape": list(s.shape), "dtype": s.dtype.name}
+                for an, s in arg_specs
+            ],
+            "outputs": [
+                {"shape": list(o.shape), "dtype": o.dtype.name} for o in outs
+            ],
+        })
+        print(f"  {name}: {len(text)} chars, {len(arg_specs)} args, "
+              f"{len(outs)} outputs")
+    return {
+        "dims": dataclasses.asdict(dims),
+        "graphs": entries,
+    }
+
+
+def _rand_for_spec(rng, spec):
+    if spec.dtype == jnp.int32:
+        # the only int32 input is `pos`; keep it small and valid
+        return np.int32(3) if spec.shape == () else rng.integers(
+            0, 4, size=spec.shape, dtype=np.int32)
+    scale = 0.25
+    return (rng.standard_normal(spec.shape) * scale).astype(np.float32)
+
+
+def emit_selftest(out_dir: str) -> None:
+    """Tiny-dims artifacts + seeded input/expected-output vectors."""
+    dims = SELFTEST_DIMS
+    st_dir = os.path.join(out_dir, "selftest")
+    manifest = emit_table(dims, st_dir)
+    rng = np.random.default_rng(2024)
+    cases = []
+    for name, fn, arg_specs, _meta in graph_table(dims):
+        if not ("_b1" in name or name.startswith("prefill")):
+            continue
+        inputs = [_rand_for_spec(rng, spec) for _, spec in arg_specs]
+        outputs = jax.tree_util.tree_leaves(fn(*[jnp.asarray(v) for v in inputs]))
+        cases.append({
+            "graph": name,
+            "inputs": [
+                {"shape": list(np.shape(v)), "dtype": str(np.asarray(v).dtype),
+                 "data": np.asarray(v, dtype=np.float64).ravel().tolist()
+                 if np.asarray(v).dtype != np.int32
+                 else np.asarray(v).ravel().tolist()}
+                for v in inputs
+            ],
+            "outputs": [
+                {"shape": list(o.shape),
+                 "data": np.asarray(o, dtype=np.float64).ravel().tolist()}
+                for o in outputs
+            ],
+        })
+    manifest["cases"] = [c["graph"] for c in cases]
+    with open(os.path.join(st_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(st_dir, "selftest.json"), "w") as f:
+        json.dump({"dims": dataclasses.asdict(dims), "cases": cases}, f)
+    print(f"selftest: {len(cases)} cases")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument("--hidden", type=int)
+    p.add_argument("--inter", type=int)
+    p.add_argument("--layers", type=int)
+    p.add_argument("--vocab", type=int)
+    p.add_argument("--seq-max", type=int)
+    p.add_argument("--skip-selftest", action="store_true")
+    args = p.parse_args()
+
+    overrides = {
+        k: v for k, v in (
+            ("hidden", args.hidden), ("inter", args.inter),
+            ("layers", args.layers), ("vocab", args.vocab),
+            ("seq_max", args.seq_max),
+        ) if v is not None
+    }
+    dims = dataclasses.replace(ModelDims(), **overrides)
+
+    print(f"emitting NPU graph table for dims={dims}")
+    manifest = emit_table(dims, args.out)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(os.path.join(args.out, "model_config.json"), "w") as f:
+        json.dump(dataclasses.asdict(dims), f, indent=1)
+    if not args.skip_selftest:
+        emit_selftest(args.out)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""L1 Pallas kernels (interpret mode) + pure-jnp oracles."""
+
+from .attention import decode_attention
+from .sparse_ffn import hot_ffn
+
+__all__ = ["decode_attention", "hot_ffn"]

@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: single-step GQA decode attention.
+
+During decoding PowerInfer-2 runs attention on the NPU (the attention
+block is dense but small, §4.1.2); this kernel is the NPU-graph form of
+one decode step over a ring KV cache:
+
+    out[b, h] = softmax(q[b, h] @ K[b, :len, kv(h)]^T / sqrt(dh)) @ V
+
+The grid iterates over (batch, kv-head); each step loads one batch row of
+one KV group — the [S, dh] K/V tiles stream HBM→VMEM while the [G, dh]
+query group stays resident — and computes the masked softmax for the G
+query heads sharing that KV head. `valid_len` arrives as a [B] int32
+vector so the same compiled graph serves any cache fill level (the paper's
+static NPU graphs are shape-specialized but length-dynamic in the same
+way).
+
+interpret=True for the CPU PJRT plugin; see sparse_ffn.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, len_ref, o_ref):
+    """One grid step: one (batch, kv-head) pair.
+
+    q_ref:   [G, dh]  query heads in this KV group
+    k_ref:   [S, dh]  cached keys for this batch/kv-head
+    v_ref:   [S, dh]  cached values
+    len_ref: [1]      valid cache length for this batch row
+    o_ref:   [G, dh]  attention output for the group
+    """
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    valid = len_ref[0]
+    s = k.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    mask = jax.lax.broadcasted_iota(jnp.int32, (s,), 0) < valid
+    scores = jnp.where(mask[None, :], scores, NEG_INF)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    probs = jnp.exp(scores)
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(probs, v, preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def decode_attention(q, k_cache, v_cache, valid_len):
+    """Grouped-query decode attention over a pre-filled KV cache.
+
+    Args:
+      q:         [B, NH, DH] roped queries for the new token.
+      k_cache:   [B, S, NKV, DH] key cache (new key already inserted).
+      v_cache:   [B, S, NKV, DH] value cache.
+      valid_len: [B] int32, number of valid cache entries per row.
+
+    Returns:
+      [B, NH, DH] attention outputs.
+    """
+    batch, n_heads, dh = q.shape
+    _, seq, n_kv, _ = k_cache.shape
+    group = n_heads // n_kv
+    grid = (batch, n_kv)
+    return pl.pallas_call(
+        _decode_attn_kernel,
+        grid=grid,
+        in_specs=[
+            # q viewed as [B, NKV, G, DH]; None dims are squeezed → [G, DH]
+            pl.BlockSpec((None, None, group, dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, seq, None, dh), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((None, seq, None, dh), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1,), lambda b, h: (b,)),
+        ],
+        out_specs=pl.BlockSpec((None, None, group, dh), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n_kv, group, dh), jnp.float32),
+        interpret=True,
+    )(
+        q.reshape(batch, n_kv, group, dh),
+        k_cache,
+        v_cache,
+        valid_len,
+    ).reshape(batch, n_heads, dh)

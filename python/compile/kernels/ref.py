@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for the Pallas kernels and the L2 layer graphs.
+
+Every kernel in this package and every entry point in model.py has a
+reference implementation here, written with nothing but jnp primitives in
+the most obvious way possible. pytest (python/tests/) asserts allclose
+between kernel and oracle across a hypothesis-driven sweep of shapes; the
+rust integration tests compare the AOT-compiled artifacts against vectors
+produced by these oracles (artifacts/selftest.json).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_hot_ffn(x, gate, up, gate_bias, down):
+    """Oracle for kernels.sparse_ffn.hot_ffn."""
+    pre = x @ gate.T + gate_bias[None, :]
+    act = jnp.maximum(pre, 0.0) * (x @ up.T)
+    return act @ down
+
+
+def ref_decode_attention(q, k_cache, v_cache, valid_len):
+    """Oracle for kernels.attention.decode_attention (GQA, masked)."""
+    batch, n_heads, dh = q.shape
+    _, seq, n_kv, _ = k_cache.shape
+    group = n_heads // n_kv
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    # expand kv heads to query heads
+    k = jnp.repeat(k_cache, group, axis=2)  # [B, S, NH, DH]
+    v = jnp.repeat(v_cache, group, axis=2)
+    scores = jnp.einsum("bhd,bshd->bhs", q, k) * scale
+    mask = jnp.arange(seq)[None, None, :] < valid_len[:, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", probs, v)
+
+
+def ref_rmsnorm(x, gamma, eps=1e-5):
+    """Oracle RMSNorm (matches model.rmsnorm)."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gamma
+
+
+def ref_rope(x, positions, theta=10000.0):
+    """Oracle rotary embedding.
+
+    x: [..., n_heads, dh]; positions: broadcastable to x[..., 0, 0].
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., half]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def ref_prefill_attention(q, k, v):
+    """Causal full-sequence GQA attention. q [T,NH,DH], k/v [T,NKV,DH]."""
+    t, n_heads, dh = q.shape
+    n_kv = k.shape[1]
+    group = n_heads // n_kv
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("thd,shd->hts", q, kx) * scale
+    causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(causal[None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hts,shd->thd", probs, vx)

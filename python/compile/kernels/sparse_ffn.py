@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: hot-neuron-cluster GLU FFN.
+
+This is the compute hot-spot of PowerInfer-2's NPU path (§4.1.2): the hot
+neuron cluster — the rows of the Gate/Up matrices and the matching columns
+of the Down matrix that the offline planner classified as frequently
+activated — is evaluated as one dense block:
+
+    y = relu(x @ G^T + b) * (x @ U^T) @ D
+
+where G, U are [K, H] (K = number of hot neurons, H = hidden dim), b is the
+per-neuron gate bias [K] (the bias is what gives the model its calibrated
+activation sparsity; see rust/src/model/), and D is stored row-major as
+[K, H] so that the k-th *bundle* (g_k, u_k, d_k) is contiguous — mirroring
+the on-flash Gate-Up-Down bundle layout of §4.4.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper tiles the
+hot cluster into the Qualcomm HTP's tightly-coupled memory; here the neuron
+dimension K is the Pallas grid axis and each grid step streams one
+[BLOCK_K, H] tile of G/U/D from HBM into VMEM, accumulating the output
+block in place. On a real TPU the matmuls map onto the MXU; on this image
+the kernel runs with interpret=True (the CPU PJRT plugin cannot execute
+Mosaic custom-calls) and serves as the canonical definition of the hot
+path that `aot.py` lowers into the NPU-graph artifacts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile along the neuron (cluster) dimension. 128 matches the MXU
+# systolic-array edge; every hot-cluster size emitted by the planner is a
+# multiple of this.
+BLOCK_K = 128
+
+
+def _hot_ffn_kernel(x_ref, g_ref, u_ref, b_ref, d_ref, o_ref):
+    """One grid step: accumulate the contribution of one neuron tile.
+
+    x_ref: [B, H]   (same block every step)
+    g_ref: [bk, H]  gate rows of this tile
+    u_ref: [bk, H]  up rows of this tile
+    b_ref: [bk]     gate bias of this tile
+    d_ref: [bk, H]  down rows (transposed-out layout) of this tile
+    o_ref: [B, H]   output block, revisited by every grid step
+    """
+    step = pl.program_id(0)
+    x = x_ref[...]
+    pre = jnp.dot(x, g_ref[...].T, preferred_element_type=jnp.float32)
+    pre = pre + b_ref[...][None, :]
+    act = jnp.maximum(pre, 0.0) * jnp.dot(
+        x, u_ref[...].T, preferred_element_type=jnp.float32
+    )
+    contrib = jnp.dot(act, d_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref[...])
+
+    o_ref[...] += contrib
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def hot_ffn(x, gate, up, gate_bias, down, *, block_k: int = BLOCK_K):
+    """Dense GLU FFN over a hot neuron cluster.
+
+    Args:
+      x:         [B, H] activations (post-norm FFN input).
+      gate:      [K, H] gate projection rows for the cluster.
+      up:        [K, H] up projection rows.
+      gate_bias: [K]    per-neuron gate bias.
+      down:      [K, H] down projection rows (output = act @ down).
+      block_k:   tile size along K; K must be a multiple of it.
+
+    Returns:
+      [B, H] cluster contribution to the FFN output (no residual).
+    """
+    batch, hidden = x.shape
+    k = gate.shape[0]
+    if k % block_k != 0:
+        raise ValueError(f"cluster size {k} not a multiple of block_k {block_k}")
+    grid = (k // block_k,)
+    return pl.pallas_call(
+        _hot_ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((batch, hidden), lambda i: (0, 0)),
+            pl.BlockSpec((block_k, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((block_k, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((block_k,), lambda i: (i,)),
+            pl.BlockSpec((block_k, hidden), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((batch, hidden), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, hidden), jnp.float32),
+        interpret=True,
+    )(x, gate, up, gate_bias, down)

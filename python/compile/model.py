@@ -1,0 +1,292 @@
+"""L2: the JAX model — transformer layer graphs that become NPU artifacts.
+
+PowerInfer-2 pre-builds a table of *static NPU computation graphs*, one per
+(batch size, hot-neuron ratio) operating point (§4.1.3); switching the
+CPU/NPU split ratio at runtime means activating a different pre-built
+graph. We reproduce that table literally: every function below is lowered
+by aot.py into one HLO-text artifact per grid point, and the rust runtime
+(rust/src/runtime/) compiles each once on the PJRT CPU client and switches
+between the resulting executables.
+
+Graph inventory (kind → role in the paper):
+
+  prefill_layer      NPU-centric prefill (§4.1.1): one dense transformer
+                     layer over a T-token chunk, full FFN, returns the
+                     layer output plus the K/V rows to install in the
+                     cache.
+  decode_attn        decode-phase attention (§4.1.2): RMSNorm → QKV →
+                     RoPE → cache insert → GQA attention (Pallas kernel)
+                     → output proj → residual; also emits the FFN-normed
+                     hidden state that both the NPU hot path and the CPU
+                     cold path consume.
+  decode_hot_ffn     the NPU side of the hybrid FFN: dense GLU over the
+                     hot neuron cluster (Pallas hot_ffn kernel). The cold
+                     (sparse, predictor-gated) side is NOT an HLO graph —
+                     it runs natively on the rust CPU path, mirroring the
+                     paper's NPU-dense / CPU-sparse split.
+  decode_layer_dense dense full-FFN decode layer, used by the QNN-style
+                     NPU-only baseline and as the ratio=1.0 grid point.
+  lm_head            final RMSNorm + vocabulary projection.
+
+All weights are graph *inputs*, not constants: on the phone the NPU reads
+weights from UMA shared memory that the CPU-side cache manager populates
+(§4.2); here the rust cache manager owns the buffers and passes them per
+call.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import decode_attention, hot_ffn
+from .kernels.sparse_ffn import BLOCK_K
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class ModelDims:
+    """Geometry of the e2e model (a scaled-down Bamboo/Mistral shape).
+
+    The simulation-side ModelSpec presets in rust/src/config/ carry the
+    papers' true 7B/13B/47B shapes; this one is the model that actually
+    runs through PJRT in the end-to-end example.
+    """
+
+    hidden: int = 512
+    inter: int = 2048          # FFN neurons per layer (I)
+    layers: int = 8
+    heads: int = 8
+    kv_heads: int = 2
+    vocab: int = 4096
+    seq_max: int = 256         # KV cache length (S)
+    prefill_chunk: int = 64    # T
+    batches: tuple = (1, 2, 4)
+    # hot-cluster sizes (rows) the planner may pick; all multiples of BLOCK_K
+    hot_ks: tuple = (512, 1024, 1536, 2048)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    @property
+    def kv_dim(self) -> int:
+        return self.kv_heads * self.head_dim
+
+    def validate(self) -> None:
+        assert self.hidden % self.heads == 0
+        assert self.heads % self.kv_heads == 0
+        for k in self.hot_ks:
+            assert k % BLOCK_K == 0 and k <= self.inter
+        assert self.inter % BLOCK_K == 0
+
+
+def rmsnorm(x, gamma, eps=1e-5):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gamma
+
+
+def rope(x, positions, theta=10000.0):
+    """Rotary embedding. x: [..., n_heads, dh]; positions broadcastable."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=F32) / half)
+    angles = positions[..., None].astype(F32) * freqs
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# decode-phase graphs
+# ---------------------------------------------------------------------------
+
+
+def decode_attn(dims: ModelDims, x, norm1, wq, wk, wv, wo, norm2,
+                k_cache, v_cache, pos):
+    """Attention block for one decode step.
+
+    Args:
+      x:        [B, H] residual stream.
+      norm1/2:  [H] RMSNorm gains (pre-attn / pre-FFN).
+      wq:       [H, H]; wk, wv: [KVD, H]; wo: [H, H].
+      k_cache:  [B, S, NKV, DH]; v_cache likewise.
+      pos:      [] int32 — index of the new token (cache insert slot).
+
+    Returns:
+      (x_attn [B,H], ffn_in [B,H], k_cache', v_cache')
+    """
+    b = x.shape[0]
+    nh, nkv, dh = dims.heads, dims.kv_heads, dims.head_dim
+    h = rmsnorm(x, norm1, dims.norm_eps)
+    q = (h @ wq.T).reshape(b, nh, dh)
+    k = (h @ wk.T).reshape(b, nkv, dh)
+    v = (h @ wv.T).reshape(b, nkv, dh)
+    posv = jnp.full((b,), pos, dtype=jnp.int32)
+    q = rope(q, posv, dims.rope_theta)
+    k = rope(k, posv, dims.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k[:, None, :, :], (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v[:, None, :, :], (0, pos, 0, 0))
+    valid = posv + 1
+    attn = decode_attention(q, k_cache, v_cache, valid)
+    y = attn.reshape(b, nh * dh) @ wo.T
+    x_attn = x + y
+    ffn_in = rmsnorm(x_attn, norm2, dims.norm_eps)
+    return x_attn, ffn_in, k_cache, v_cache
+
+
+def decode_hot_ffn(dims: ModelDims, ffn_in, gate, up, gate_bias, down):
+    """NPU hot-cluster FFN partial: [B,H] × hot cluster → [B,H]."""
+    return hot_ffn(ffn_in, gate, up, gate_bias, down, block_k=BLOCK_K)
+
+
+def decode_layer_dense(dims: ModelDims, x, norm1, wq, wk, wv, wo, norm2,
+                       gate, up, gate_bias, down, k_cache, v_cache, pos):
+    """Full dense decode layer (attention + full-I FFN + residuals)."""
+    x_attn, ffn_in, k_cache, v_cache = decode_attn(
+        dims, x, norm1, wq, wk, wv, wo, norm2, k_cache, v_cache, pos)
+    y = hot_ffn(ffn_in, gate, up, gate_bias, down, block_k=BLOCK_K)
+    return x_attn + y, k_cache, v_cache
+
+
+def lm_head(dims: ModelDims, x, norm_f, w_lm):
+    """Final norm + logits. x [B,H], w_lm [V,H] → [B,V]."""
+    return rmsnorm(x, norm_f, dims.norm_eps) @ w_lm.T
+
+
+# ---------------------------------------------------------------------------
+# prefill-phase graph
+# ---------------------------------------------------------------------------
+
+
+def prefill_layer(dims: ModelDims, x, norm1, wq, wk, wv, wo, norm2,
+                  gate, up, gate_bias, down):
+    """One dense transformer layer over a T-token prefill chunk.
+
+    x: [T, H] (single sequence; the paper prefills one prompt at a time).
+    Returns (x_out [T,H], k [T,NKV,DH], v [T,NKV,DH]) — the caller installs
+    k/v into the cache rows for positions 0..T.
+    """
+    t = x.shape[0]
+    nh, nkv, dh = dims.heads, dims.kv_heads, dims.head_dim
+    h = rmsnorm(x, norm1, dims.norm_eps)
+    q = (h @ wq.T).reshape(t, nh, dh)
+    k = (h @ wk.T).reshape(t, nkv, dh)
+    v = (h @ wv.T).reshape(t, nkv, dh)
+    positions = jnp.arange(t, dtype=jnp.int32)
+    q = rope(q, positions, dims.rope_theta)
+    k = rope(k, positions, dims.rope_theta)
+
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    group = nh // nkv
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("thd,shd->hts", q, kx) * scale
+    causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(causal[None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    attn = jnp.einsum("hts,shd->thd", probs, vx)
+
+    x_attn = x + attn.reshape(t, nh * dh) @ wo.T
+    ffn_in = rmsnorm(x_attn, norm2, dims.norm_eps)
+    y = hot_ffn(ffn_in, gate, up, gate_bias, down, block_k=BLOCK_K)
+    return x_attn + y, k, v
+
+
+# ---------------------------------------------------------------------------
+# shape helpers for aot.py
+# ---------------------------------------------------------------------------
+
+
+def _s(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), F32)
+
+
+def _si(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.int32)
+
+
+def attn_weight_specs(d: ModelDims):
+    return [
+        ("norm1", _s(d.hidden)),
+        ("wq", _s(d.hidden, d.hidden)),
+        ("wk", _s(d.kv_dim, d.hidden)),
+        ("wv", _s(d.kv_dim, d.hidden)),
+        ("wo", _s(d.hidden, d.hidden)),
+        ("norm2", _s(d.hidden)),
+    ]
+
+
+def ffn_weight_specs(d: ModelDims, k: int):
+    return [
+        ("gate", _s(k, d.hidden)),
+        ("up", _s(k, d.hidden)),
+        ("gate_bias", _s(k)),
+        ("down", _s(k, d.hidden)),
+    ]
+
+
+def graph_table(d: ModelDims):
+    """The full NPU-graph table: list of (name, fn, arg specs, meta)."""
+    d.validate()
+    graphs = []
+
+    for b in d.batches:
+        cache = _s(b, d.seq_max, d.kv_heads, d.head_dim)
+        args = ([("x", _s(b, d.hidden))] + attn_weight_specs(d)
+                + [("k_cache", cache), ("v_cache", cache), ("pos", _si())])
+        graphs.append((
+            f"decode_attn_b{b}",
+            lambda *a, _d=d: decode_attn(_d, *a),
+            args,
+            {"kind": "decode_attn", "batch": b},
+        ))
+
+        for k in d.hot_ks:
+            args = [("ffn_in", _s(b, d.hidden))] + ffn_weight_specs(d, k)
+            graphs.append((
+                f"decode_ffn_b{b}_k{k}",
+                lambda *a, _d=d: decode_hot_ffn(_d, *a),
+                args,
+                {"kind": "decode_hot_ffn", "batch": b, "hot_k": k},
+            ))
+
+        args = ([("x", _s(b, d.hidden))] + attn_weight_specs(d)
+                + ffn_weight_specs(d, d.inter)
+                + [("k_cache", cache), ("v_cache", cache), ("pos", _si())])
+        graphs.append((
+            f"decode_dense_b{b}",
+            lambda *a, _d=d: decode_layer_dense(_d, *a),
+            args,
+            {"kind": "decode_layer_dense", "batch": b},
+        ))
+
+        args = [("x", _s(b, d.hidden)),
+                ("norm_f", _s(d.hidden)),
+                ("w_lm", _s(d.vocab, d.hidden))]
+        graphs.append((
+            f"lm_head_b{b}",
+            lambda *a, _d=d: lm_head(_d, *a),
+            args,
+            {"kind": "lm_head", "batch": b},
+        ))
+
+    t = d.prefill_chunk
+    args = ([("x", _s(t, d.hidden))] + attn_weight_specs(d)
+            + ffn_weight_specs(d, d.inter))
+    graphs.append((
+        f"prefill_layer_t{t}",
+        lambda *a, _d=d: prefill_layer(_d, *a),
+        args,
+        {"kind": "prefill_layer", "tokens": t},
+    ))
+
+    return graphs

@@ -1,0 +1,148 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the CORE correctness signal for the compute hot path: hypothesis
+sweeps shapes and batch sizes, numpy supplies seeded data, and every case
+asserts allclose against ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import decode_attention, hot_ffn
+from compile.kernels import ref
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _ffn_inputs(rng, b, h, k):
+    x = jnp.asarray(rng.standard_normal((b, h)), jnp.float32)
+    g = jnp.asarray(rng.standard_normal((k, h)) * 0.1, jnp.float32)
+    u = jnp.asarray(rng.standard_normal((k, h)) * 0.1, jnp.float32)
+    bias = jnp.asarray(rng.standard_normal(k) * 0.1, jnp.float32)
+    d = jnp.asarray(rng.standard_normal((k, h)) * 0.1, jnp.float32)
+    return x, g, u, bias, d
+
+
+class TestHotFfn:
+    @settings(max_examples=16, deadline=None)
+    @given(
+        b=st.sampled_from([1, 2, 4]),
+        h=st.sampled_from([16, 32, 64]),
+        blocks=st.integers(1, 4),
+        block_k=st.sampled_from([64, 128]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_ref_across_shapes(self, b, h, blocks, block_k, seed):
+        k = blocks * block_k
+        x, g, u, bias, d = _ffn_inputs(_rng(seed), b, h, k)
+        got = hot_ffn(x, g, u, bias, d, block_k=block_k)
+        want = ref.ref_hot_ffn(x, g, u, bias, d)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_single_block(self):
+        x, g, u, bias, d = _ffn_inputs(_rng(0), 2, 32, 128)
+        got = hot_ffn(x, g, u, bias, d, block_k=128)
+        want = ref.ref_hot_ffn(x, g, u, bias, d)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_rejects_unaligned_cluster(self):
+        x, g, u, bias, d = _ffn_inputs(_rng(0), 1, 16, 96)
+        with pytest.raises(ValueError, match="multiple"):
+            hot_ffn(x, g, u, bias, d, block_k=64)
+
+    def test_zero_input_gives_bias_only_activation(self):
+        # x = 0 → pre-act = bias; only positive-bias neurons contribute,
+        # and their up-projection is 0, so the output must be exactly 0.
+        rng = _rng(1)
+        _, g, u, bias, d = _ffn_inputs(rng, 1, 32, 128)
+        x = jnp.zeros((1, 32), jnp.float32)
+        got = hot_ffn(x, g, u, bias, d, block_k=128)
+        np.testing.assert_allclose(got, jnp.zeros_like(got), atol=1e-7)
+
+    def test_negative_bias_kills_neurons(self):
+        # Strongly negative gate bias must silence every neuron.
+        rng = _rng(2)
+        x, g, u, _, d = _ffn_inputs(rng, 2, 32, 128)
+        bias = jnp.full((128,), -1e4, jnp.float32)
+        got = hot_ffn(x, g, u, bias, d, block_k=128)
+        np.testing.assert_allclose(got, jnp.zeros_like(got), atol=1e-7)
+
+    def test_cluster_additivity(self):
+        # The FFN output of a 2-block cluster equals the sum of the two
+        # 1-block halves — the invariant PowerInfer-2's neuron-cluster
+        # decomposition (hot partial on NPU + cold partial on CPU) rests on.
+        rng = _rng(3)
+        x, g, u, bias, d = _ffn_inputs(rng, 2, 32, 256)
+        whole = hot_ffn(x, g, u, bias, d, block_k=128)
+        lo = hot_ffn(x, g[:128], u[:128], bias[:128], d[:128], block_k=128)
+        hi = hot_ffn(x, g[128:], u[128:], bias[128:], d[128:], block_k=128)
+        np.testing.assert_allclose(whole, lo + hi, rtol=1e-4, atol=1e-5)
+
+
+class TestDecodeAttention:
+    def _inputs(self, rng, b, nh, nkv, dh, s):
+        q = jnp.asarray(rng.standard_normal((b, nh, dh)), jnp.float32)
+        kc = jnp.asarray(rng.standard_normal((b, s, nkv, dh)), jnp.float32)
+        vc = jnp.asarray(rng.standard_normal((b, s, nkv, dh)), jnp.float32)
+        return q, kc, vc
+
+    @settings(max_examples=16, deadline=None)
+    @given(
+        b=st.sampled_from([1, 2, 4]),
+        nkv=st.sampled_from([1, 2]),
+        group=st.sampled_from([1, 2, 4]),
+        dh=st.sampled_from([8, 16, 32]),
+        s=st.sampled_from([8, 16, 64]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_ref_across_shapes(self, b, nkv, group, dh, s, seed):
+        rng = _rng(seed)
+        nh = nkv * group
+        q, kc, vc = self._inputs(rng, b, nh, nkv, dh, s)
+        valid = jnp.asarray(rng.integers(1, s + 1, size=b), jnp.int32)
+        got = decode_attention(q, kc, vc, valid)
+        want = ref.ref_decode_attention(q, kc, vc, valid)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_valid_len_one_returns_first_value(self):
+        # With one valid cache slot, softmax collapses and the output is
+        # exactly v[:, 0] expanded over query heads.
+        rng = _rng(4)
+        q, kc, vc = self._inputs(rng, 2, 4, 2, 16, 8)
+        valid = jnp.asarray([1, 1], jnp.int32)
+        got = decode_attention(q, kc, vc, valid)
+        want = jnp.repeat(vc[:, 0], 2, axis=1)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_full_cache(self):
+        rng = _rng(5)
+        q, kc, vc = self._inputs(rng, 1, 8, 2, 32, 64)
+        valid = jnp.asarray([64], jnp.int32)
+        got = decode_attention(q, kc, vc, valid)
+        want = ref.ref_decode_attention(q, kc, vc, valid)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_mask_ignores_garbage_tail(self):
+        # Entries past valid_len must not affect the result.
+        rng = _rng(6)
+        q, kc, vc = self._inputs(rng, 1, 4, 2, 16, 32)
+        valid = jnp.asarray([7], jnp.int32)
+        base = decode_attention(q, kc, vc, valid)
+        kc2 = kc.at[:, 7:].set(1e3)
+        vc2 = vc.at[:, 7:].set(-1e3)
+        poisoned = decode_attention(q, kc2, vc2, valid)
+        np.testing.assert_allclose(base, poisoned, rtol=1e-5, atol=1e-6)
+
+    def test_per_row_valid_lengths_differ(self):
+        rng = _rng(7)
+        q, kc, vc = self._inputs(rng, 4, 4, 2, 16, 16)
+        valid = jnp.asarray([1, 5, 9, 16], jnp.int32)
+        got = decode_attention(q, kc, vc, valid)
+        want = ref.ref_decode_attention(q, kc, vc, valid)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

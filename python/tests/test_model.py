@@ -1,0 +1,221 @@
+"""L2 correctness: layer graphs compose, decode ≡ prefill, shapes match."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+DIMS = model.ModelDims(
+    hidden=32, inter=128, layers=2, heads=4, kv_heads=2,
+    vocab=64, seq_max=16, prefill_chunk=8, batches=(1, 2), hot_ks=(128,),
+)
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def _attn_weights(rng, d):
+    h, kvd = d.hidden, d.kv_dim
+    mk = lambda *s: jnp.asarray(rng.standard_normal(s) * (1.0 / np.sqrt(s[-1])),
+                                jnp.float32)
+    return dict(
+        norm1=jnp.ones(h, jnp.float32),
+        wq=mk(h, h), wk=mk(kvd, h), wv=mk(kvd, h), wo=mk(h, h),
+        norm2=jnp.ones(h, jnp.float32),
+    )
+
+
+def _ffn_weights(rng, d, k=None):
+    k = k or d.inter
+    h = d.hidden
+    mk = lambda *s: jnp.asarray(rng.standard_normal(s) * (1.0 / np.sqrt(s[-1])),
+                                jnp.float32)
+    return dict(gate=mk(k, h), up=mk(k, h),
+                gate_bias=jnp.asarray(rng.standard_normal(k) * 0.1, jnp.float32),
+                down=mk(k, h))
+
+
+class TestRmsNormAndRope:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31))
+    def test_rmsnorm_unit_rms(self, seed):
+        x = jnp.asarray(_rng(seed).standard_normal((4, 32)) * 3, jnp.float32)
+        y = model.rmsnorm(x, jnp.ones(32, jnp.float32))
+        rms = jnp.sqrt(jnp.mean(y * y, axis=-1))
+        np.testing.assert_allclose(rms, jnp.ones(4), rtol=1e-3)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31), pos=st.integers(0, 100))
+    def test_rope_preserves_norm(self, seed, pos):
+        x = jnp.asarray(_rng(seed).standard_normal((2, 4, 16)), jnp.float32)
+        y = model.rope(x, jnp.full((2,), pos, jnp.int32))
+        np.testing.assert_allclose(
+            jnp.linalg.norm(y, axis=-1), jnp.linalg.norm(x, axis=-1), rtol=1e-4)
+
+    def test_rope_position_zero_is_identity(self):
+        x = jnp.asarray(_rng(1).standard_normal((2, 4, 16)), jnp.float32)
+        y = model.rope(x, jnp.zeros((2,), jnp.int32))
+        np.testing.assert_allclose(y, x, rtol=1e-6, atol=1e-6)
+
+    def test_rope_matches_ref(self):
+        x = jnp.asarray(_rng(2).standard_normal((3, 4, 16)), jnp.float32)
+        pos = jnp.asarray([0, 5, 11], jnp.int32)
+        np.testing.assert_allclose(
+            model.rope(x, pos), ref.ref_rope(x, pos), rtol=1e-5, atol=1e-6)
+
+
+class TestDecodeAttnGraph:
+    def test_shapes_and_cache_insert(self):
+        d = DIMS
+        rng = _rng(3)
+        w = _attn_weights(rng, d)
+        b = 2
+        x = jnp.asarray(rng.standard_normal((b, d.hidden)), jnp.float32)
+        kc = jnp.zeros((b, d.seq_max, d.kv_heads, d.head_dim), jnp.float32)
+        vc = jnp.zeros_like(kc)
+        pos = jnp.int32(5)
+        x_attn, ffn_in, kc2, vc2 = model.decode_attn(
+            d, x, w["norm1"], w["wq"], w["wk"], w["wv"], w["wo"], w["norm2"],
+            kc, vc, pos)
+        assert x_attn.shape == (b, d.hidden)
+        assert ffn_in.shape == (b, d.hidden)
+        # only row `pos` of the caches may change
+        assert not jnp.allclose(kc2[:, 5], 0.0)
+        np.testing.assert_array_equal(kc2[:, :5], 0.0)
+        np.testing.assert_array_equal(kc2[:, 6:], 0.0)
+        np.testing.assert_array_equal(vc2[:, :5], 0.0)
+
+    def test_ffn_in_is_normed_x_attn(self):
+        d = DIMS
+        rng = _rng(4)
+        w = _attn_weights(rng, d)
+        x = jnp.asarray(rng.standard_normal((1, d.hidden)), jnp.float32)
+        kc = jnp.zeros((1, d.seq_max, d.kv_heads, d.head_dim), jnp.float32)
+        x_attn, ffn_in, _, _ = model.decode_attn(
+            d, x, w["norm1"], w["wq"], w["wk"], w["wv"], w["wo"], w["norm2"],
+            kc, jnp.zeros_like(kc), jnp.int32(0))
+        np.testing.assert_allclose(
+            ffn_in, ref.ref_rmsnorm(x_attn, w["norm2"]), rtol=1e-5, atol=1e-6)
+
+
+class TestDenseLayerEquivalence:
+    def test_dense_layer_equals_attn_plus_full_ffn(self):
+        """decode_layer_dense ≡ decode_attn + hot_ffn(I) + residual.
+
+        This is the identity that lets the engine swap the QNN-style dense
+        graph for the hybrid split without changing semantics.
+        """
+        d = DIMS
+        rng = _rng(5)
+        aw, fw = _attn_weights(rng, d), _ffn_weights(rng, d)
+        x = jnp.asarray(rng.standard_normal((2, d.hidden)), jnp.float32)
+        kc = jnp.zeros((2, d.seq_max, d.kv_heads, d.head_dim), jnp.float32)
+        vc = jnp.zeros_like(kc)
+        pos = jnp.int32(2)
+        args = [x, aw["norm1"], aw["wq"], aw["wk"], aw["wv"], aw["wo"],
+                aw["norm2"]]
+        y_dense, kc_d, vc_d = model.decode_layer_dense(
+            d, *args, fw["gate"], fw["up"], fw["gate_bias"], fw["down"],
+            kc, vc, pos)
+        x_attn, ffn_in, kc_a, vc_a = model.decode_attn(d, *args, kc, vc, pos)
+        y_split = x_attn + model.decode_hot_ffn(
+            d, ffn_in, fw["gate"], fw["up"], fw["gate_bias"], fw["down"])
+        np.testing.assert_allclose(y_dense, y_split, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(kc_d, kc_a, rtol=1e-6)
+        np.testing.assert_allclose(vc_d, vc_a, rtol=1e-6)
+
+    def test_hot_plus_cold_partials_sum_to_full_ffn(self):
+        """Splitting I into hot[0:k] on NPU + cold[k:] on CPU is exact."""
+        d = DIMS
+        rng = _rng(6)
+        fw = _ffn_weights(rng, d)
+        x = jnp.asarray(rng.standard_normal((2, d.hidden)), jnp.float32)
+        full = ref.ref_hot_ffn(x, fw["gate"], fw["up"], fw["gate_bias"],
+                               fw["down"])
+        k = 64
+        hot = ref.ref_hot_ffn(x, fw["gate"][:k], fw["up"][:k],
+                              fw["gate_bias"][:k], fw["down"][:k])
+        cold = ref.ref_hot_ffn(x, fw["gate"][k:], fw["up"][k:],
+                               fw["gate_bias"][k:], fw["down"][k:])
+        np.testing.assert_allclose(hot + cold, full, rtol=1e-4, atol=1e-5)
+
+
+class TestPrefillDecodeConsistency:
+    def test_prefill_then_decode_matches_all_prefill(self):
+        """Token t computed by decode after a (t)-token prefill must equal
+        token t of a (t+1)-token prefill — KV cache install + RoPE offsets
+        + masked attention all have to line up for this to hold."""
+        d = DIMS
+        rng = _rng(7)
+        aw, fw = _attn_weights(rng, d), _ffn_weights(rng, d)
+        t = d.prefill_chunk
+        x_full = jnp.asarray(rng.standard_normal((t, d.hidden)), jnp.float32)
+
+        args_w = [aw["norm1"], aw["wq"], aw["wk"], aw["wv"], aw["wo"],
+                  aw["norm2"], fw["gate"], fw["up"], fw["gate_bias"],
+                  fw["down"]]
+        y_full, k_full, v_full = model.prefill_layer(d, x_full, *args_w)
+
+        # prefill the first t-1 tokens, then decode token t-1
+        y_pre, k_pre, v_pre = model.prefill_layer(d, x_full[:t - 1], *args_w)
+        kc = jnp.zeros((1, d.seq_max, d.kv_heads, d.head_dim), jnp.float32)
+        vc = jnp.zeros_like(kc)
+        kc = kc.at[0, :t - 1].set(k_pre)
+        vc = vc.at[0, :t - 1].set(v_pre)
+        x_attn, ffn_in, kc2, vc2 = model.decode_attn(
+            d, x_full[t - 1:t], aw["norm1"], aw["wq"], aw["wk"], aw["wv"],
+            aw["wo"], aw["norm2"], kc, vc, jnp.int32(t - 1))
+        y_dec = x_attn + model.decode_hot_ffn(
+            d, ffn_in, fw["gate"], fw["up"], fw["gate_bias"], fw["down"])
+        np.testing.assert_allclose(y_dec[0], y_full[t - 1], rtol=2e-3,
+                                   atol=2e-4)
+        np.testing.assert_allclose(kc2[0, t - 1], k_full[t - 1], rtol=1e-4,
+                                   atol=1e-5)
+
+
+class TestLmHead:
+    def test_logits_shape_and_value(self):
+        d = DIMS
+        rng = _rng(8)
+        x = jnp.asarray(rng.standard_normal((2, d.hidden)), jnp.float32)
+        nf = jnp.ones(d.hidden, jnp.float32)
+        wlm = jnp.asarray(rng.standard_normal((d.vocab, d.hidden)) * 0.05,
+                          jnp.float32)
+        logits = model.lm_head(d, x, nf, wlm)
+        assert logits.shape == (2, d.vocab)
+        want = ref.ref_rmsnorm(x, nf) @ wlm.T
+        np.testing.assert_allclose(logits, want, rtol=1e-5, atol=1e-5)
+
+
+class TestGraphTable:
+    def test_table_covers_grid(self):
+        d = DIMS
+        names = [g[0] for g in model.graph_table(d)]
+        for b in d.batches:
+            assert f"decode_attn_b{b}" in names
+            assert f"decode_dense_b{b}" in names
+            assert f"lm_head_b{b}" in names
+            for k in d.hot_ks:
+                assert f"decode_ffn_b{b}_k{k}" in names
+        assert f"prefill_layer_t{d.prefill_chunk}" in names
+        # (attn + dense + lm_head + ffn·|hot_ks|) per batch + 1 prefill
+        assert len(names) == len(d.batches) * (3 + len(d.hot_ks)) + 1
+
+    def test_arg_specs_are_lowerable(self):
+        d = DIMS
+        for name, fn, arg_specs, _ in model.graph_table(d):
+            out = jax.eval_shape(fn, *[s for _, s in arg_specs])
+            assert jax.tree_util.tree_leaves(out), name
+
+    def test_validate_rejects_bad_dims(self):
+        with pytest.raises(AssertionError):
+            model.graph_table(dataclasses.replace(DIMS, hot_ks=(100,)))
+        with pytest.raises(AssertionError):
+            model.graph_table(dataclasses.replace(DIMS, heads=3))

@@ -1,0 +1,21 @@
+//! Bench: neuron cache LRU — touched tens of thousands of times per
+//! simulated token.
+mod common;
+
+use powerinfer2::cache::NeuronLru;
+use powerinfer2::util::prng::Rng;
+
+fn main() {
+    println!("# bench: neuron LRU");
+    for (universe, cap) in [(100_000usize, 10_000usize), (3_700_000, 400_000)] {
+        let mut lru = NeuronLru::new(universe, cap);
+        let mut rng = Rng::new(2);
+        let ids: Vec<u32> = (0..4096).map(|_| rng.below(universe) as u32).collect();
+        let r = common::bench(&format!("lru_access/u{universe}_c{cap}"), || {
+            for &id in &ids {
+                std::hint::black_box(lru.access(id));
+            }
+        });
+        println!("    → {:.1} M accesses/s", 4096.0 / r.min_ns * 1e3);
+    }
+}

@@ -1,0 +1,52 @@
+//! Minimal bench harness (criterion is not in the offline dependency
+//! set): warm up, run until both a time and an iteration floor are met,
+//! report mean/min per iteration.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+}
+
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    for _ in 0..3 {
+        f(); // warmup
+    }
+    let mut times = Vec::new();
+    let budget = std::time::Duration::from_millis(800);
+    let start = Instant::now();
+    while start.elapsed() < budget || times.len() < 10 {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_nanos() as f64);
+        if times.len() >= 10_000 {
+            break;
+        }
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: times.len() as u64,
+        mean_ns: mean,
+        min_ns: min,
+    };
+    println!("{:<46} {:>7} iters  mean {:>10}  min {:>10}",
+             r.name, r.iters, fmt_ns(r.mean_ns), fmt_ns(r.min_ns));
+    r
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}

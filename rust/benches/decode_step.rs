@@ -1,0 +1,38 @@
+//! Bench: end-to-end decode step — one per paper table (Fig.7's row
+//! economics): the simulated engines for each system, plus the REAL
+//! PJRT engine when artifacts are present.
+mod common;
+
+use std::path::Path;
+
+use powerinfer2::config::{bamboo_7b, oneplus_12};
+use powerinfer2::engine::real::{RealEngine, RealEngineOptions};
+use powerinfer2::engine::SimEngine;
+use powerinfer2::experiments::system_cfg;
+
+fn main() {
+    println!("# bench: decode step");
+    for sys in ["powerinfer2", "llmflash", "llamacpp"] {
+        let mut e = SimEngine::new(oneplus_12(), bamboo_7b(), system_cfg(sys));
+        e.decode_step(1); // warm the plan/cache
+        common::bench(&format!("sim_decode_step/{sys}"), || {
+            std::hint::black_box(e.decode_step(1));
+        });
+    }
+    let artifacts = Path::new("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        let wp = std::env::temp_dir().join("pi2_bench_weights.bin");
+        let opts = RealEngineOptions { throttle_io: false, ..Default::default() };
+        let mut e = RealEngine::new(artifacts, &wp, 1, opts).unwrap();
+        let mut tok = vec![1u32];
+        tok = e.decode_step(&tok).unwrap();
+        let r = common::bench("real_decode_step/pjrt_b1", || {
+            tok = e.decode_step(&tok).unwrap();
+            if e.pos >= e.dims.seq_max - 2 {
+                e.reset();
+            }
+        });
+        println!("    → {:.1} tok/s real engine", 1e9 / r.mean_ns);
+        std::fs::remove_file(wp).ok();
+    }
+}

@@ -1,0 +1,31 @@
+//! Bench: the 5-stage cluster pipeline scheduler (Fig.6) — the per-layer
+//! hot-path of every simulated decode step.
+mod common;
+
+use powerinfer2::config::PipelineMode;
+use powerinfer2::pipeline::{schedule, ClusterTask};
+
+fn tasks(n: usize) -> Vec<ClusterTask> {
+    (0..n)
+        .map(|i| ClusterTask {
+            pred_s: 1e-5,
+            gate_io_s: if i % 2 == 0 { 0.0 } else { 5e-6 },
+            gate_c_s: 2e-5,
+            ud_io_s: if i % 2 == 0 { 0.0 } else { 5e-6 },
+            ud_c_s: 4e-5,
+        })
+        .collect()
+}
+
+fn main() {
+    println!("# bench: pipeline scheduler");
+    for n in [8usize, 32, 128] {
+        let t = tasks(n);
+        for mode in [PipelineMode::None, PipelineMode::MatrixLevel,
+                     PipelineMode::ClusterLevel] {
+            common::bench(&format!("schedule/{mode:?}/{n}"), || {
+                std::hint::black_box(schedule(&t, mode, 4));
+            });
+        }
+    }
+}

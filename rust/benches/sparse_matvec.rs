@@ -1,0 +1,31 @@
+//! Bench: the CPU-side sparse GLU kernel (cold neuron accumulation) —
+//! the real engine's compute hot path. Reports effective GB/s.
+mod common;
+
+use powerinfer2::engine::real::accumulate_neuron;
+use powerinfer2::util::prng::Rng;
+
+fn main() {
+    println!("# bench: cold-neuron sparse GLU kernel");
+    let mut rng = Rng::new(1);
+    for (b, h, neurons) in [(1usize, 512usize, 256usize), (4, 512, 256), (1, 4096, 64)] {
+        let bundles: Vec<Vec<f32>> = (0..neurons)
+            .map(|_| {
+                let mut v = vec![0f32; 3 * h + 1];
+                rng.fill_normal(&mut v, 0.05);
+                v
+            })
+            .collect();
+        let mut x = vec![0f32; b * h];
+        rng.fill_normal(&mut x, 1.0);
+        let mut y = vec![0f32; b * h];
+        let r = common::bench(&format!("accumulate/{neurons}n_b{b}_h{h}"), || {
+            for bu in &bundles {
+                accumulate_neuron(bu, &x, b, h, &mut y);
+            }
+            std::hint::black_box(&y);
+        });
+        let bytes = (neurons * (3 * h + 1) * 4) as f64;
+        println!("    → {:.2} GB/s weight streaming", bytes / r.min_ns);
+    }
+}

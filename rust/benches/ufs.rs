@@ -1,0 +1,26 @@
+//! Bench: UFS timing model evaluation + real throttled file reads.
+mod common;
+
+use powerinfer2::config::{oneplus_12, CoreClass};
+use powerinfer2::storage::{IoBurst, IoPattern, UfsModel};
+
+fn main() {
+    println!("# bench: UFS model");
+    let ufs = UfsModel::new(oneplus_12().ufs);
+    let burst = IoBurst {
+        pattern: IoPattern::Random,
+        block_bytes: 4096,
+        count: 100,
+        range_bytes: 1 << 30,
+        core: CoreClass::Big,
+        issuers: 1,
+    };
+    common::bench("burst_time_s/random_4k_x100", || {
+        std::hint::black_box(ufs.burst_time_s(&burst));
+    });
+    let seq = IoBurst { pattern: IoPattern::Sequential, block_bytes: 512 * 1024,
+                        count: 8, ..burst };
+    common::bench("burst_time_s/seq_512k_x8", || {
+        std::hint::black_box(ufs.burst_time_s(&seq));
+    });
+}

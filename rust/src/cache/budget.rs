@@ -1,0 +1,124 @@
+//! Memory-budget arithmetic (§7.2.3's memory breakdown): given a device
+//! budget and a model, decide what is pinned (non-FFN weights, predictor,
+//! quantization scales, KV, runtime) and how many neurons of hot + cold
+//! cache fit in the remainder.
+
+use crate::config::{ModelSpec, RuntimeConfig};
+
+/// Resolved memory plan, all in bytes.
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryBudget {
+    pub total: u64,
+    pub non_ffn: u64,
+    pub predictor: u64,
+    pub scales: u64,
+    pub kv_cache: u64,
+    pub runtime_misc: u64,
+    /// Bytes left for FFN neuron weights (hot region + cold cache).
+    pub ffn_cache: u64,
+    /// FFN neuron-weight bytes the model would need fully resident.
+    pub ffn_total: u64,
+}
+
+pub const RUNTIME_MISC_BYTES: u64 = 300 * 1024 * 1024; // §7.2.3: ~300MB
+
+impl MemoryBudget {
+    /// Plan for a given total budget. `seq_max`/`max_batch` size the KV
+    /// region (INT8 KV at 2 heads-worth per token is close enough for the
+    /// class of models here; the paper folds KV into "non-FFN").
+    pub fn plan(spec: &ModelSpec, cfg: &RuntimeConfig, total: u64) -> MemoryBudget {
+        let kv_per_tok = (2 * spec.kv_heads * (spec.hidden / spec.heads)) as u64 * 2;
+        let kv_cache = kv_per_tok * 2048 * cfg.max_batch as u64 * spec.layers as u64 / 2;
+        let non_ffn = spec.non_ffn_bytes();
+        let predictor = spec.predictor_bytes();
+        let scales = spec.scales_bytes();
+        let fixed = non_ffn + predictor + scales + kv_cache + RUNTIME_MISC_BYTES;
+        let ffn_cache = total.saturating_sub(fixed);
+        MemoryBudget {
+            total,
+            non_ffn,
+            predictor,
+            scales,
+            kv_cache,
+            runtime_misc: RUNTIME_MISC_BYTES,
+            ffn_cache,
+            ffn_total: spec.ffn_bytes_per_layer() * spec.layers as u64
+                - scales, // scales counted separately
+        }
+    }
+
+    /// Budget implied by "offload X% of FFN weights" (the Fig.7 setups):
+    /// fixed costs + (1−X)·FFN bytes.
+    pub fn for_offload_frac(spec: &ModelSpec, cfg: &RuntimeConfig, frac: f64) -> MemoryBudget {
+        let probe = Self::plan(spec, cfg, u64::MAX / 2);
+        let fixed = probe.total_fixed();
+        let resident = (probe.ffn_total as f64 * (1.0 - frac)) as u64;
+        Self::plan(spec, cfg, fixed + resident)
+    }
+
+    pub fn total_fixed(&self) -> u64 {
+        self.non_ffn + self.predictor + self.scales + self.kv_cache + self.runtime_misc
+    }
+
+    /// Fraction of FFN weights that fit in memory.
+    pub fn resident_ffn_frac(&self) -> f64 {
+        (self.ffn_cache as f64 / self.ffn_total as f64).min(1.0)
+    }
+
+    /// Neurons (per whole model) the FFN cache region can hold, given
+    /// bytes per neuron bundle in DRAM.
+    pub fn cache_neurons(&self, bundle_dram_bytes: u64) -> usize {
+        (self.ffn_cache / bundle_dram_bytes.max(1)) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{bamboo_7b, mixtral_47b};
+
+    const GB: u64 = 1024 * 1024 * 1024;
+
+    #[test]
+    fn mixtral_7gb_budget_is_nearly_all_fixed() {
+        // §7.2.3: at 7GB, only ~400MB is left for the neuron cache (1.8%
+        // of FFN weights).
+        let spec = mixtral_47b();
+        let cfg = RuntimeConfig::default();
+        let b = MemoryBudget::plan(&spec, &cfg, 7 * GB);
+        let frac = b.resident_ffn_frac();
+        assert!(frac < 0.06, "resident frac {frac}");
+        assert!(b.ffn_cache < 1024 * 1024 * 1024, "cache {}", b.ffn_cache);
+    }
+
+    #[test]
+    fn mixtral_19gb_fits_most_of_ffn() {
+        let spec = mixtral_47b();
+        let cfg = RuntimeConfig::default();
+        let b = MemoryBudget::plan(&spec, &cfg, 19 * GB);
+        let frac = b.resident_ffn_frac();
+        assert!((0.3..0.9).contains(&frac), "resident frac {frac}");
+    }
+
+    #[test]
+    fn offload_frac_roundtrips() {
+        let spec = bamboo_7b();
+        let cfg = RuntimeConfig::default();
+        let b = MemoryBudget::for_offload_frac(&spec, &cfg, 0.5);
+        let frac = b.resident_ffn_frac();
+        assert!((frac - 0.5).abs() < 0.02, "resident {frac}");
+        let b75 = MemoryBudget::for_offload_frac(&spec, &cfg, 0.75);
+        assert!((b75.resident_ffn_frac() - 0.25).abs() < 0.02);
+        assert!(b75.total < b.total);
+    }
+
+    #[test]
+    fn cache_neurons_scale_with_budget() {
+        let spec = bamboo_7b();
+        let cfg = RuntimeConfig::default();
+        let small = MemoryBudget::plan(&spec, &cfg, 4 * GB);
+        let large = MemoryBudget::plan(&spec, &cfg, 8 * GB);
+        let bb = spec.bundle_bytes();
+        assert!(large.cache_neurons(bb) > small.cache_neurons(bb));
+    }
+}

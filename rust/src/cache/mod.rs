@@ -1,0 +1,347 @@
+//! In-memory neuron cache (§4.2): the temperature-segmented cache with a
+//! fixed region (attention/KV/predictors, preloaded and pinned), a hot
+//! region (NPU-side dense clusters, cluster-granular), and a cold region
+//! (CPU-side neurons, *neuron-granular* LRU — bundling is deliberately not
+//! used for caching because residual cold co-activation is <20%).
+//!
+//! The LRU is a real O(1) intrusive-list implementation over a
+//! pre-allocated slot table (the cold universe is known up front: every
+//! (layer, neuron) pair), used both by the simulation engine (millions of
+//! touches per run) and the real serving engine.
+
+pub mod budget;
+
+pub use budget::MemoryBudget;
+
+/// Result of a cold-region access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Access {
+    Hit,
+    /// Miss; the returned neuron (if any) was evicted to make room.
+    Miss { evicted: Option<u32> },
+}
+
+const NIL: u32 = u32::MAX;
+
+/// O(1) LRU over a dense id universe `0..universe`.
+#[derive(Debug, Clone)]
+pub struct NeuronLru {
+    prev: Vec<u32>,
+    next: Vec<u32>,
+    resident: Vec<bool>,
+    head: u32, // most recent
+    tail: u32, // least recent
+    len: usize,
+    capacity: usize,
+}
+
+impl NeuronLru {
+    pub fn new(universe: usize, capacity: usize) -> Self {
+        NeuronLru {
+            prev: vec![NIL; universe],
+            next: vec![NIL; universe],
+            resident: vec![false; universe],
+            head: NIL,
+            tail: NIL,
+            len: 0,
+            capacity,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn contains(&self, id: u32) -> bool {
+        self.resident[id as usize]
+    }
+
+    fn detach(&mut self, id: u32) {
+        let (p, n) = (self.prev[id as usize], self.next[id as usize]);
+        if p != NIL {
+            self.next[p as usize] = n;
+        } else {
+            self.head = n;
+        }
+        if n != NIL {
+            self.prev[n as usize] = p;
+        } else {
+            self.tail = p;
+        }
+    }
+
+    fn push_front(&mut self, id: u32) {
+        self.prev[id as usize] = NIL;
+        self.next[id as usize] = self.head;
+        if self.head != NIL {
+            self.prev[self.head as usize] = id;
+        }
+        self.head = id;
+        if self.tail == NIL {
+            self.tail = id;
+        }
+    }
+
+    fn evict_lru(&mut self) -> Option<u32> {
+        let victim = self.tail;
+        if victim == NIL {
+            return None;
+        }
+        self.detach(victim);
+        self.resident[victim as usize] = false;
+        self.len -= 1;
+        Some(victim)
+    }
+
+    /// Touch `id`: hit moves it to MRU; miss inserts it (evicting the LRU
+    /// entry if at capacity). Evicted weights are discarded, never written
+    /// back (§4.2 — flash already has them).
+    pub fn access(&mut self, id: u32) -> Access {
+        if self.resident[id as usize] {
+            self.detach(id);
+            self.push_front(id);
+            return Access::Hit;
+        }
+        if self.capacity == 0 {
+            return Access::Miss { evicted: None };
+        }
+        let evicted = if self.len >= self.capacity {
+            self.evict_lru()
+        } else {
+            None
+        };
+        self.resident[id as usize] = true;
+        self.push_front(id);
+        self.len += 1;
+        Access::Miss { evicted }
+    }
+
+    /// Insert without counting as an access miss (prefetch path).
+    pub fn insert(&mut self, id: u32) -> Option<u32> {
+        match self.access(id) {
+            Access::Hit => None,
+            Access::Miss { evicted } => evicted,
+        }
+    }
+
+    /// Shrink/grow capacity, evicting LRU entries as needed (the §4.2
+    /// hot/cold rebalancing path). Returns evicted ids.
+    pub fn resize(&mut self, new_capacity: usize) -> Vec<u32> {
+        self.capacity = new_capacity;
+        let mut evicted = Vec::new();
+        while self.len > self.capacity {
+            if let Some(v) = self.evict_lru() {
+                evicted.push(v);
+            } else {
+                break;
+            }
+        }
+        evicted
+    }
+
+    /// Ids from MRU to LRU (test/debug; O(len)).
+    pub fn iter_mru(&self) -> impl Iterator<Item = u32> + '_ {
+        struct It<'a> {
+            lru: &'a NeuronLru,
+            cur: u32,
+        }
+        impl Iterator for It<'_> {
+            type Item = u32;
+            fn next(&mut self) -> Option<u32> {
+                if self.cur == NIL {
+                    return None;
+                }
+                let id = self.cur;
+                self.cur = self.lru.next[id as usize];
+                Some(id)
+            }
+        }
+        It { lru: self, cur: self.head }
+    }
+}
+
+/// The segmented neuron cache: hot region (cluster-granular, tracked as a
+/// resident hot fraction) + cold region (neuron-granular LRU).
+#[derive(Debug, Clone)]
+pub struct NeuronCache {
+    pub cold: NeuronLru,
+    /// Hot neurons pinned for the NPU, per layer (prefix of the neuron
+    /// axis — temperature order).
+    pub hot_per_layer: usize,
+    pub layers: usize,
+    pub neurons_per_layer: usize,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl NeuronCache {
+    /// `cold_capacity` in neurons across all layers.
+    pub fn new(
+        layers: usize,
+        neurons_per_layer: usize,
+        hot_per_layer: usize,
+        cold_capacity: usize,
+    ) -> Self {
+        NeuronCache {
+            cold: NeuronLru::new(layers * neurons_per_layer, cold_capacity),
+            hot_per_layer,
+            layers,
+            neurons_per_layer,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn id(&self, layer: usize, neuron: usize) -> u32 {
+        (layer * self.neurons_per_layer + neuron) as u32
+    }
+
+    /// Access (layer, neuron). Hot-prefix neurons always hit.
+    pub fn access(&mut self, layer: usize, neuron: usize) -> Access {
+        if neuron < self.hot_per_layer {
+            self.hits += 1;
+            return Access::Hit;
+        }
+        let r = self.cold.access(self.id(layer, neuron));
+        match r {
+            Access::Hit => self.hits += 1,
+            Access::Miss { .. } => self.misses += 1,
+        }
+        r
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        let n = self.hits + self.misses;
+        if n == 0 {
+            0.0
+        } else {
+            self.misses as f64 / n as f64
+        }
+    }
+
+    /// Rebalance on batch-size change (§4.2): growing the hot region
+    /// shrinks the cold region's capacity and vice versa. `bundle_neurons`
+    /// converts hot-cluster growth into cold-neuron evictions 1:1 here
+    /// (both sides are measured in neurons).
+    pub fn set_hot_per_layer(&mut self, hot_per_layer: usize, total_budget_neurons: usize) {
+        self.hot_per_layer = hot_per_layer.min(self.neurons_per_layer);
+        let hot_total = self.hot_per_layer * self.layers;
+        let cold_cap = total_budget_neurons.saturating_sub(hot_total);
+        self.cold.resize(cold_cap);
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lru_hit_miss_basics() {
+        let mut lru = NeuronLru::new(10, 2);
+        assert!(matches!(lru.access(1), Access::Miss { evicted: None }));
+        assert!(matches!(lru.access(2), Access::Miss { evicted: None }));
+        assert_eq!(lru.access(1), Access::Hit);
+        // inserting 3 evicts 2 (LRU), since 1 was just touched
+        assert!(matches!(lru.access(3), Access::Miss { evicted: Some(2) }));
+        assert!(lru.contains(1) && lru.contains(3) && !lru.contains(2));
+    }
+
+    #[test]
+    fn lru_order_is_recency() {
+        let mut lru = NeuronLru::new(10, 3);
+        for id in [5, 6, 7] {
+            lru.access(id);
+        }
+        lru.access(5);
+        assert_eq!(lru.iter_mru().collect::<Vec<_>>(), vec![5, 7, 6]);
+    }
+
+    #[test]
+    fn zero_capacity_never_caches() {
+        let mut lru = NeuronLru::new(4, 0);
+        assert!(matches!(lru.access(0), Access::Miss { evicted: None }));
+        assert!(matches!(lru.access(0), Access::Miss { evicted: None }));
+        assert_eq!(lru.len(), 0);
+    }
+
+    #[test]
+    fn resize_evicts_lru_first() {
+        let mut lru = NeuronLru::new(10, 4);
+        for id in 0..4 {
+            lru.access(id);
+        }
+        let evicted = lru.resize(2);
+        assert_eq!(evicted, vec![0, 1]); // oldest first
+        assert_eq!(lru.len(), 2);
+        assert!(lru.contains(2) && lru.contains(3));
+    }
+
+    #[test]
+    fn segmented_cache_hot_prefix_always_hits() {
+        let mut c = NeuronCache::new(2, 100, 10, 5);
+        for n in 0..10 {
+            assert_eq!(c.access(0, n), Access::Hit);
+            assert_eq!(c.access(1, n), Access::Hit);
+        }
+        assert_eq!(c.miss_rate(), 0.0);
+        // cold accesses miss first, then hit
+        assert!(matches!(c.access(0, 50), Access::Miss { .. }));
+        assert_eq!(c.access(0, 50), Access::Hit);
+    }
+
+    #[test]
+    fn layers_do_not_collide() {
+        let mut c = NeuronCache::new(2, 100, 0, 10);
+        c.access(0, 42);
+        assert!(matches!(c.access(1, 42), Access::Miss { .. }));
+        assert_eq!(c.access(0, 42), Access::Hit);
+    }
+
+    #[test]
+    fn rebalance_shrinks_cold_when_hot_grows() {
+        let mut c = NeuronCache::new(2, 100, 0, 0);
+        c.set_hot_per_layer(0, 100);
+        for n in 0..50 {
+            c.access(0, n);
+        }
+        assert_eq!(c.cold.len(), 50);
+        // grow hot region to 40/layer: budget 100 − 80 = 20 cold slots
+        c.set_hot_per_layer(40, 100);
+        assert_eq!(c.cold.capacity(), 20);
+        assert!(c.cold.len() <= 20);
+        // shrink hot region back: cold capacity grows again
+        c.set_hot_per_layer(10, 100);
+        assert_eq!(c.cold.capacity(), 80);
+    }
+
+    #[test]
+    fn stress_random_accesses_maintain_invariants() {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(3);
+        let mut lru = NeuronLru::new(1000, 64);
+        for _ in 0..50_000 {
+            lru.access(rng.below(1000) as u32);
+            debug_assert!(lru.len() <= 64);
+        }
+        assert_eq!(lru.len(), 64);
+        assert_eq!(lru.iter_mru().count(), 64);
+        let resident = lru.iter_mru().collect::<std::collections::HashSet<_>>();
+        assert_eq!(resident.len(), 64);
+        for id in resident {
+            assert!(lru.contains(id));
+        }
+    }
+}

@@ -1,0 +1,320 @@
+//! Device (smartphone) hardware descriptions.
+//!
+//! Every number here is lifted from the paper's §2.3 measurements (or the
+//! public Snapdragon spec sheets where the paper is silent) and is what the
+//! XPU / UFS simulators are calibrated against. The two presets are the
+//! paper's two testbeds (Table 3).
+
+/// CPU core class in the big.LITTLE hierarchy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CoreClass {
+    Big,
+    Mid,
+    Little,
+}
+
+impl CoreClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            CoreClass::Big => "big",
+            CoreClass::Mid => "mid",
+            CoreClass::Little => "little",
+        }
+    }
+}
+
+/// One CPU core group (count × identical cores).
+#[derive(Debug, Clone, Copy)]
+pub struct CoreGroup {
+    pub class: CoreClass,
+    pub count: usize,
+    pub freq_ghz: f64,
+    /// Sustained f32 GFLOPS per core on NEON-style matvec kernels.
+    pub gflops: f64,
+    /// 4KB random-read throughput when this core drives UFS I/O (MB/s),
+    /// within a 128MB locality range — the paper's Table 1.
+    pub io_4k_mbps: f64,
+}
+
+/// CPU complex.
+#[derive(Debug, Clone)]
+pub struct CpuConfig {
+    pub groups: Vec<CoreGroup>,
+    /// Memory bandwidth ceiling when only the CPU is loading memory (GB/s).
+    pub mem_bw_gbps: f64,
+}
+
+impl CpuConfig {
+    pub fn total_cores(&self) -> usize {
+        self.groups.iter().map(|g| g.count).sum()
+    }
+
+    /// Aggregate sustained GFLOPS over the compute-worthy cores
+    /// (big + mid; little cores are left for the OS, as in the paper).
+    pub fn compute_gflops(&self) -> f64 {
+        self.groups
+            .iter()
+            .filter(|g| g.class != CoreClass::Little)
+            .map(|g| g.count as f64 * g.gflops)
+            .sum()
+    }
+
+    pub fn group(&self, class: CoreClass) -> Option<&CoreGroup> {
+        self.groups.iter().find(|g| g.class == class)
+    }
+}
+
+/// NPU description (Qualcomm Hexagon-style: dense-only, static graphs).
+#[derive(Debug, Clone, Copy)]
+pub struct NpuConfig {
+    /// Effective dense INT4 throughput on transformer matmuls (TOPS).
+    /// Calibrated so a 7B INT4 model prefills at ~770 tok/s (§2.3.1).
+    pub tops_int4: f64,
+    /// Memory bandwidth ceiling when only the NPU is loading (GB/s).
+    pub mem_bw_gbps: f64,
+    /// Per-invocation graph launch overhead (ms) — why the NPU loses to
+    /// the CPU at batch size 1 in Fig.3-a.
+    pub launch_overhead_ms: f64,
+    /// Size of one serialized compute graph (bytes); graphs are swapped
+    /// asynchronously during attention (§4.1.3).
+    pub graph_bytes: u64,
+    /// Time to load + activate a new static graph (ms), fully overlappable
+    /// with attention compute.
+    pub graph_switch_ms: f64,
+}
+
+/// Mobile GPU description (render-sharing, low matvec efficiency).
+#[derive(Debug, Clone, Copy)]
+pub struct GpuConfig {
+    pub gflops: f64,
+    /// Fraction of kernel time doing useful compute (§2.3.1: ~50%).
+    pub compute_utilization: f64,
+    pub mem_bw_gbps: f64,
+    pub launch_overhead_ms: f64,
+}
+
+/// UFS storage characteristics (§2.3.2).
+#[derive(Debug, Clone)]
+pub struct UfsConfig {
+    /// (block size bytes, MB/s) anchor points for sequential reads;
+    /// log-interpolated between anchors.
+    pub seq_curve: Vec<(u64, f64)>,
+    /// (block size bytes, MB/s) anchors for random reads issued by a BIG
+    /// core within a 128MB locality range.
+    pub rand_curve: Vec<(u64, f64)>,
+    /// (range bytes, multiplier) anchors for data-range sensitivity of
+    /// small random reads (Fig.3-b): 128MB→1.0, 512MB→~0.79, floor beyond.
+    pub range_factor: Vec<(u64, f64)>,
+    /// Random-read multiplier per issuing core class (Table 1, normalized
+    /// to the big core).
+    pub core_factor_big: f64,
+    pub core_factor_mid: f64,
+    pub core_factor_little: f64,
+    /// Throughput multiplier when `n` threads issue concurrently — UFS has
+    /// a single command queue; contention costs up to 40% (§2.3.2).
+    pub multi_queue_penalty: f64,
+    /// Average per-command latency floor (µs) — dominates tiny reads.
+    pub cmd_latency_us: f64,
+}
+
+/// A complete device.
+#[derive(Debug, Clone)]
+pub struct DeviceConfig {
+    pub name: String,
+    pub soc: String,
+    pub cpu: CpuConfig,
+    pub npu: NpuConfig,
+    pub gpu: GpuConfig,
+    pub ufs: UfsConfig,
+    /// Physical DRAM (bytes).
+    pub dram_total: u64,
+    /// Max memory one app may occupy (Table 3 "Available").
+    pub dram_available: u64,
+    /// Aggregate memory bandwidth when CPU+NPU load simultaneously (GB/s)
+    /// — the UMA sharing effect (§2.3.1: 43.9 / 56 / 59.6 on OnePlus 12).
+    pub shared_mem_bw_gbps: f64,
+    /// Power model (W) for the energy accounting of Table 8.
+    pub power: PowerConfig,
+}
+
+/// Active-power draws per unit (W); idle baseline separate.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerConfig {
+    pub idle_w: f64,
+    pub cpu_core_big_w: f64,
+    pub cpu_core_mid_w: f64,
+    pub cpu_core_little_w: f64,
+    pub npu_w: f64,
+    pub gpu_w: f64,
+    pub ufs_w: f64,
+    pub dram_per_gbps_w: f64,
+}
+
+const GB: u64 = 1024 * 1024 * 1024;
+const KB: u64 = 1024;
+
+/// OnePlus 12: Snapdragon 8 Gen 3, 24GB DRAM (19GB available), UFS 4.0.
+pub fn oneplus_12() -> DeviceConfig {
+    DeviceConfig {
+        name: "OnePlus 12".into(),
+        soc: "Snapdragon 8 Gen 3".into(),
+        cpu: CpuConfig {
+            groups: vec![
+                CoreGroup { class: CoreClass::Big, count: 1, freq_ghz: 3.3, gflops: 28.0, io_4k_mbps: 1076.10 },
+                CoreGroup { class: CoreClass::Mid, count: 5, freq_ghz: 3.0, gflops: 20.0, io_4k_mbps: 1007.95 },
+                CoreGroup { class: CoreClass::Little, count: 2, freq_ghz: 2.2, gflops: 7.0, io_4k_mbps: 761.87 },
+            ],
+            mem_bw_gbps: 43.9,
+        },
+        npu: NpuConfig {
+            tops_int4: 11.0,
+            mem_bw_gbps: 56.0,
+            launch_overhead_ms: 1.2,
+            graph_bytes: 10 * KB,
+            graph_switch_ms: 0.8,
+        },
+        gpu: GpuConfig {
+            gflops: 550.0,
+            compute_utilization: 0.5,
+            mem_bw_gbps: 40.0,
+            launch_overhead_ms: 2.5,
+        },
+        ufs: UfsConfig {
+            // §2.3.2: sequential 450MB/s @4KB → 4GB/s @512KB.
+            seq_curve: vec![
+                (4 * KB, 450.0),
+                (16 * KB, 1100.0),
+                (64 * KB, 2300.0),
+                (256 * KB, 3400.0),
+                (512 * KB, 4000.0),
+            ],
+            // §2.3.2 + Table 1: 4KB random @128MB range ≈ 1GB/s (big core),
+            // 512KB random ≈ 3.5GB/s.
+            rand_curve: vec![
+                (4 * KB, 1076.0),
+                (8 * KB, 950.0),
+                (16 * KB, 1500.0),
+                (64 * KB, 2600.0),
+                (512 * KB, 3500.0),
+            ],
+            // Fig.3-b: 1GB/s @128MB → <850MB/s @512MB, flattening beyond.
+            range_factor: vec![
+                (64 * 1024 * 1024, 1.05),
+                (128 * 1024 * 1024, 1.0),
+                (256 * 1024 * 1024, 0.88),
+                (512 * 1024 * 1024, 0.79),
+                (2 * GB, 0.72),
+                (16 * GB, 0.68),
+            ],
+            core_factor_big: 1.0,
+            core_factor_mid: 1007.95 / 1076.10,
+            core_factor_little: 761.87 / 1076.10,
+            multi_queue_penalty: 0.40,
+            cmd_latency_us: 55.0,
+        },
+        dram_total: 24 * GB,
+        dram_available: 19 * GB,
+        shared_mem_bw_gbps: 59.6,
+        power: PowerConfig {
+            idle_w: 0.5,
+            cpu_core_big_w: 0.9,
+            cpu_core_mid_w: 0.45,
+            cpu_core_little_w: 0.25,
+            npu_w: 1.2,
+            gpu_w: 2.0,
+            ufs_w: 0.5,
+            dram_per_gbps_w: 0.008,
+        },
+    }
+}
+
+/// OnePlus Ace 2: Snapdragon 8+ Gen 1, 16GB DRAM (11GB available), UFS 3.1.
+pub fn oneplus_ace2() -> DeviceConfig {
+    let mut d = oneplus_12();
+    d.name = "OnePlus Ace 2".into();
+    d.soc = "Snapdragon 8+ Gen 1".into();
+    d.cpu = CpuConfig {
+        groups: vec![
+            CoreGroup { class: CoreClass::Big, count: 1, freq_ghz: 3.2, gflops: 22.0, io_4k_mbps: 870.0 },
+            CoreGroup { class: CoreClass::Mid, count: 3, freq_ghz: 2.8, gflops: 16.0, io_4k_mbps: 820.0 },
+            CoreGroup { class: CoreClass::Little, count: 4, freq_ghz: 2.0, gflops: 5.5, io_4k_mbps: 610.0 },
+        ],
+        mem_bw_gbps: 35.0,
+    };
+    d.npu.tops_int4 = 6.8;
+    d.npu.mem_bw_gbps = 44.0;
+    d.gpu.gflops = 420.0;
+    // UFS 3.1: roughly half the sequential bandwidth, ~0.7× random.
+    d.ufs.seq_curve = vec![
+        (4 * KB, 330.0),
+        (16 * KB, 760.0),
+        (64 * KB, 1400.0),
+        (256 * KB, 1900.0),
+        (512 * KB, 2100.0),
+    ];
+    d.ufs.rand_curve = vec![
+        (4 * KB, 730.0),
+        (8 * KB, 660.0),
+        (16 * KB, 1000.0),
+        (64 * KB, 1600.0),
+        (512 * KB, 2000.0),
+    ];
+    d.ufs.core_factor_mid = 820.0 / 870.0;
+    d.ufs.core_factor_little = 610.0 / 870.0;
+    d.ufs.cmd_latency_us = 70.0;
+    d.dram_total = 16 * GB;
+    d.dram_available = 11 * GB;
+    d.shared_mem_bw_gbps = 47.0;
+    d
+}
+
+/// Look up a device preset by name.
+pub fn device_preset(name: &str) -> Option<DeviceConfig> {
+    match name.to_ascii_lowercase().replace([' ', '-', '_'], "").as_str() {
+        "oneplus12" | "op12" => Some(oneplus_12()),
+        "oneplusace2" | "ace2" => Some(oneplus_ace2()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oneplus12_matches_paper_table3() {
+        let d = oneplus_12();
+        assert_eq!(d.dram_total, 24 * GB);
+        assert_eq!(d.dram_available, 19 * GB);
+        assert_eq!(d.cpu.total_cores(), 8); // 1 + 5 + 2
+        assert!((d.cpu.mem_bw_gbps - 43.9).abs() < 1e-9);
+        assert!((d.shared_mem_bw_gbps - 59.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn core_io_hierarchy_matches_table1() {
+        let d = oneplus_12();
+        let big = d.cpu.group(CoreClass::Big).unwrap().io_4k_mbps;
+        let mid = d.cpu.group(CoreClass::Mid).unwrap().io_4k_mbps;
+        let little = d.cpu.group(CoreClass::Little).unwrap().io_4k_mbps;
+        assert!(big > mid && mid > little);
+        assert!((big - 1076.10).abs() < 0.01);
+        assert!((little - 761.87).abs() < 0.01);
+    }
+
+    #[test]
+    fn ace2_is_strictly_weaker() {
+        let a = oneplus_ace2();
+        let b = oneplus_12();
+        assert!(a.npu.tops_int4 < b.npu.tops_int4);
+        assert!(a.dram_available < b.dram_available);
+        assert!(a.ufs.seq_curve.last().unwrap().1 < b.ufs.seq_curve.last().unwrap().1);
+    }
+
+    #[test]
+    fn presets_resolve() {
+        assert!(device_preset("OnePlus 12").is_some());
+        assert!(device_preset("ace2").is_some());
+        assert!(device_preset("pixel").is_none());
+    }
+}

@@ -1,0 +1,16 @@
+//! Configuration layer: device presets (paper Table 3 testbeds), model
+//! descriptors (the five evaluated LLMs), and runtime/serving options.
+
+pub mod device;
+pub mod models;
+pub mod runtime;
+
+pub use device::{
+    device_preset, oneplus_12, oneplus_ace2, CoreClass, CoreGroup, CpuConfig,
+    DeviceConfig, GpuConfig, NpuConfig, PowerConfig, UfsConfig,
+};
+pub use models::{
+    all_models, bamboo_7b, llama_13b, mistral_7b_silu, mixtral_47b,
+    model_preset, qwen2_7b, Activation, ModelSpec, Quant,
+};
+pub use runtime::{PipelineMode, RuntimeConfig, XpuMode};

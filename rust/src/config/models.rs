@@ -1,0 +1,365 @@
+//! Model descriptors for the five LLMs the paper evaluates (§7.1), plus
+//! the scaled-down e2e model that actually runs through PJRT.
+//!
+//! The simulator consumes *geometry and sparsity*, never weights: parameter
+//! counts drive bytes-moved, activation statistics drive the hot/cold
+//! economics. Shapes follow the public model cards; sparsity levels follow
+//! the paper (§7.2.1: Bamboo ≈ 3B activated params/token, Llama-13B ≈ 2×
+//! Bamboo, Mixtral-47B ≈ 3B via MoE routing; §7.2.5: SiLU models ≈ 50%).
+
+/// FFN activation function family — decides the sparsity regime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    /// ReLU-family (Bamboo, TurboSparse, ProSparse): ~85-95% zeros.
+    Relu,
+    /// SiLU with CATS/CHESS-style thresholding: ~50% zeros (§7.2.5).
+    Silu,
+}
+
+/// Weight quantization used on-device (§7.6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Quant {
+    /// 4-bit weights + FP16 scales (group or per-channel — the accuracy
+    /// study in quant/ distinguishes; the size model uses paper numbers:
+    /// 2KB int4 + 0.5KB scales per 4096-wide row).
+    Int4,
+    /// FP16: each 4096-wide neuron row is 8KB (§4.4).
+    Fp16,
+}
+
+/// Static description of one model.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub hidden: usize,
+    /// FFN intermediate size (neurons per FFN, per expert for MoE).
+    pub inter: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub vocab: usize,
+    /// MoE: total experts per layer (1 = dense FFN).
+    pub experts: usize,
+    /// MoE: experts activated per token.
+    pub active_experts: usize,
+    pub activation: Activation,
+    pub quant: Quant,
+    /// Mean fraction of FFN neurons (within an activated expert) that fire
+    /// for a single token.
+    pub sparsity_active_frac: f64,
+    /// Fraction of neurons that are "hot" (top of the temperature
+    /// distribution) at batch size 1 — <1% per Fig.2.
+    pub hot_frac_b1: f64,
+    /// Cross-matrix (Gate/Up/Down) bundle co-activation probability (§4.4).
+    pub bundle_coactivation: f64,
+    /// Token-to-token activation persistence: probability that a neuron
+    /// active for token t stays active for token t+1 (§7.2.4's "tokens
+    /// share activation patterns" — what makes the LRU cache effective).
+    pub activation_persistence: f64,
+    /// Per-layer activation predictor parameter bytes (low-rank MLP).
+    pub predictor_bytes_per_layer: u64,
+}
+
+const KB_F: f64 = 1024.0;
+
+impl ModelSpec {
+    // ---- parameter geometry -------------------------------------------
+
+    /// Parameters in one attention block (Q,K,V,O + norms).
+    pub fn attn_params_per_layer(&self) -> u64 {
+        let h = self.hidden as u64;
+        let kvd = (self.hidden / self.heads * self.kv_heads) as u64;
+        h * h * 2 + h * kvd * 2 + 2 * h
+    }
+
+    /// FFN neurons per layer across all experts.
+    pub fn neurons_per_layer(&self) -> u64 {
+        (self.inter * self.experts) as u64
+    }
+
+    /// Parameters in one FFN neuron bundle (gate row + up row + down col).
+    pub fn params_per_neuron(&self) -> u64 {
+        3 * self.hidden as u64
+    }
+
+    pub fn ffn_params_per_layer(&self) -> u64 {
+        self.neurons_per_layer() * self.params_per_neuron()
+    }
+
+    pub fn total_params(&self) -> u64 {
+        let per_layer = self.attn_params_per_layer() + self.ffn_params_per_layer();
+        per_layer * self.layers as u64 + 2 * (self.vocab * self.hidden) as u64
+    }
+
+    /// Mean parameters actually used per decoded token (the quantity the
+    /// paper uses to explain Fig.7's per-model differences).
+    pub fn activated_params_per_token(&self) -> u64 {
+        let expert_frac = self.active_experts as f64 / self.experts as f64;
+        let ffn = self.ffn_params_per_layer() as f64
+            * expert_frac
+            * self.sparsity_active_frac;
+        let per_layer = self.attn_params_per_layer() as f64 + ffn;
+        (per_layer * self.layers as f64) as u64
+            + 2 * (self.vocab * self.hidden) as u64
+    }
+
+    // ---- byte geometry -------------------------------------------------
+
+    /// Bytes per weight for bulk (non-bundle) storage.
+    pub fn bytes_per_param(&self) -> f64 {
+        match self.quant {
+            Quant::Int4 => 0.5 + 0.5 * KB_F / (4.0 * KB_F) * 0.5, // int4 + amortized scales ≈ 0.5625
+            Quant::Fp16 => 2.0,
+        }
+    }
+
+    /// On-flash bytes of one Gate-Up-Down neuron bundle (§4.4): FP16 →
+    /// 3 rows × 2B; INT4 → 2KB weights + 0.5KB scales per matrix at
+    /// H=4096, i.e. (H/2 + H/8) per row, aligned to 4KB units at load.
+    pub fn bundle_bytes(&self) -> u64 {
+        let h = self.hidden as u64;
+        match self.quant {
+            Quant::Fp16 => 3 * h * 2,
+            Quant::Int4 => 3 * (h / 2 + h / 8),
+        }
+    }
+
+    /// The bundle's aligned storage footprint (8KB for INT4 @ H=4096).
+    pub fn bundle_aligned_bytes(&self) -> u64 {
+        let b = self.bundle_bytes();
+        b.next_multiple_of(4096)
+    }
+
+    /// Total FFN bytes per layer (all experts).
+    pub fn ffn_bytes_per_layer(&self) -> u64 {
+        (self.ffn_params_per_layer() as f64 * self.bytes_per_param()) as u64
+    }
+
+    /// Non-FFN resident bytes (embeddings, attention, lm head, norms).
+    pub fn non_ffn_bytes(&self) -> u64 {
+        let attn = self.attn_params_per_layer() * self.layers as u64;
+        let emb = 2 * (self.vocab * self.hidden) as u64;
+        ((attn + emb) as f64 * self.bytes_per_param()) as u64
+    }
+
+    pub fn predictor_bytes(&self) -> u64 {
+        self.predictor_bytes_per_layer * self.layers as u64
+    }
+
+    /// FP16 quantization scales kept resident for INT4 models (the 2.7GB
+    /// line item in §7.2.3's memory budget).
+    pub fn scales_bytes(&self) -> u64 {
+        match self.quant {
+            Quant::Fp16 => 0,
+            Quant::Int4 => {
+                // Group-32 FP16 scales: H/32 groups × 2B = H/16 per row
+                // (the resident "FFN quantization scales" line item that
+                // §7.2.3 prices at 2.7GB for Mixtral-47B).
+                let rows = self.neurons_per_layer() * 3 * self.layers as u64;
+                rows * (self.hidden as u64 / 16)
+            }
+        }
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.non_ffn_bytes()
+            + self.ffn_bytes_per_layer() * self.layers as u64
+            + self.predictor_bytes()
+    }
+}
+
+const MB: u64 = 1024 * 1024;
+
+/// Mistral-7B with SiLU activations (the §7.2.5 baseline-architecture run).
+pub fn mistral_7b_silu() -> ModelSpec {
+    ModelSpec {
+        name: "Mistral(SiLU)-7B".into(),
+        hidden: 4096,
+        inter: 14336,
+        layers: 32,
+        heads: 32,
+        kv_heads: 8,
+        vocab: 32000,
+        experts: 1,
+        active_experts: 1,
+        activation: Activation::Silu,
+        quant: Quant::Int4,
+        sparsity_active_frac: 0.50,
+        hot_frac_b1: 0.02,
+        bundle_coactivation: 0.80,
+        activation_persistence: 0.78,
+        predictor_bytes_per_layer: 10 * MB,
+    }
+}
+
+/// Bamboo-7B: Mistral architecture retrained with ReLU² (high sparsity).
+pub fn bamboo_7b() -> ModelSpec {
+    ModelSpec {
+        name: "Bamboo-7B".into(),
+        sparsity_active_frac: 0.11,
+        hot_frac_b1: 0.008,
+        activation: Activation::Relu,
+        // ReLU-retrained models keep a far more stable active set across
+        // consecutive tokens than thresholded-SiLU ones (§7.2.5's
+        // "bottleneck in neuron loading" for SiLU).
+        activation_persistence: 0.90,
+        ..mistral_7b_silu()
+    }
+}
+
+/// Sparse Qwen2-7B (TurboSparse recipe).
+pub fn qwen2_7b() -> ModelSpec {
+    ModelSpec {
+        name: "Qwen2-7B".into(),
+        hidden: 3584,
+        inter: 18944,
+        layers: 28,
+        heads: 28,
+        kv_heads: 4,
+        vocab: 151936,
+        experts: 1,
+        active_experts: 1,
+        activation: Activation::Relu,
+        quant: Quant::Int4,
+        sparsity_active_frac: 0.12,
+        hot_frac_b1: 0.009,
+        bundle_coactivation: 0.80,
+        activation_persistence: 0.88,
+        predictor_bytes_per_layer: 11 * MB,
+    }
+}
+
+/// Sparse (ProSparse) Llama-13B — lower sparsity: ~2× Bamboo's activated
+/// params per token (§7.2.1).
+pub fn llama_13b() -> ModelSpec {
+    ModelSpec {
+        name: "Llama-13B".into(),
+        hidden: 5120,
+        inter: 13824,
+        layers: 40,
+        heads: 40,
+        kv_heads: 40,
+        vocab: 32000,
+        experts: 1,
+        active_experts: 1,
+        activation: Activation::Relu,
+        quant: Quant::Int4,
+        sparsity_active_frac: 0.15,
+        hot_frac_b1: 0.012,
+        bundle_coactivation: 0.78,
+        activation_persistence: 0.86,
+        predictor_bytes_per_layer: 13 * MB,
+    }
+}
+
+/// TurboSparse-Mixtral-47B: 8-expert MoE, 2 active, ~3B activated
+/// params/token — "first 47B served on a phone" (§7.2.1).
+pub fn mixtral_47b() -> ModelSpec {
+    ModelSpec {
+        name: "TurboSparse-Mixtral-47B".into(),
+        hidden: 4096,
+        inter: 14336,
+        layers: 32,
+        heads: 32,
+        kv_heads: 8,
+        vocab: 32000,
+        experts: 8,
+        active_experts: 2,
+        activation: Activation::Relu,
+        quant: Quant::Int4,
+        sparsity_active_frac: 0.105,
+        hot_frac_b1: 0.007,
+        bundle_coactivation: 0.80,
+        activation_persistence: 0.88,
+        predictor_bytes_per_layer: 84 * MB, // 2.6GB / 32 layers ≈ 84MB (§7.2.3)
+    }
+}
+
+pub fn all_models() -> Vec<ModelSpec> {
+    vec![mistral_7b_silu(), qwen2_7b(), bamboo_7b(), llama_13b(), mixtral_47b()]
+}
+
+pub fn model_preset(name: &str) -> Option<ModelSpec> {
+    let key = name.to_ascii_lowercase().replace([' ', '-', '_', '(', ')'], "");
+    all_models().into_iter().find(|m| {
+        m.name
+            .to_ascii_lowercase()
+            .replace([' ', '-', '_', '(', ')'], "")
+            .contains(&key)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_are_plausible() {
+        let b = bamboo_7b();
+        let total = b.total_params();
+        assert!((6_500_000_000..8_000_000_000).contains(&total), "{total}");
+        let m = mixtral_47b();
+        let total = m.total_params();
+        assert!((44_000_000_000..50_000_000_000).contains(&total), "{total}");
+        let l = llama_13b();
+        let total = l.total_params();
+        assert!((12_000_000_000..15_000_000_000).contains(&total), "{total}");
+    }
+
+    #[test]
+    fn activated_params_match_paper_narrative() {
+        // §7.2.1: Mixtral-47B activates ~3B params/token, similar to
+        // Bamboo-7B; Llama-13B ≈ 2× Bamboo.
+        let bamboo = bamboo_7b().activated_params_per_token() as f64;
+        let mixtral = mixtral_47b().activated_params_per_token() as f64;
+        let llama = llama_13b().activated_params_per_token() as f64;
+        assert!((mixtral / bamboo) < 1.9 && (mixtral / bamboo) > 0.8,
+                "mixtral/bamboo = {}", mixtral / bamboo);
+        // (Llama-2-13B is MHA, so its attention blocks alone are ~2× a GQA
+        // 7B's; the paper's "nearly 2×" lands between 1.8× and 2.8× here.)
+        assert!((llama / bamboo) > 1.8 && (llama / bamboo) < 2.8,
+                "llama/bamboo = {}", llama / bamboo);
+    }
+
+    #[test]
+    fn ffn_dominates_params() {
+        // §2.1: FFN ≈ 80% of parameters in 7B-class GQA models.
+        let b = bamboo_7b();
+        let ffn = (b.ffn_params_per_layer() * b.layers as u64) as f64;
+        let frac = ffn / b.total_params() as f64;
+        assert!(frac > 0.75 && frac < 0.92, "ffn frac {frac}");
+    }
+
+    #[test]
+    fn bundle_bytes_match_section_4_4() {
+        // §4.4: FP16 neuron = 8KB ⇒ 24KB bundle; INT4 bundle = 7.5KB
+        // aligned to 8KB (H = 4096).
+        let mut m = mistral_7b_silu();
+        m.quant = Quant::Fp16;
+        assert_eq!(m.bundle_bytes(), 24 * 1024);
+        let b = bamboo_7b();
+        assert_eq!(b.bundle_bytes(), 7680); // 7.5KB
+        assert_eq!(b.bundle_aligned_bytes(), 8192);
+    }
+
+    #[test]
+    fn mixtral_memory_budget_matches_7_2_3() {
+        // §7.2.3 @7GB: ~1GB non-FFN, 2.6GB predictors, 2.7GB scales.
+        let m = mixtral_47b();
+        let gb = |b: u64| b as f64 / (1024.0 * 1024.0 * 1024.0);
+        assert!((gb(m.predictor_bytes()) - 2.6).abs() < 0.2,
+                "predictor {}", gb(m.predictor_bytes()));
+        assert!((gb(m.scales_bytes()) - 2.7).abs() < 0.6,
+                "scales {}", gb(m.scales_bytes()));
+        assert!(gb(m.non_ffn_bytes()) < 1.6, "non-ffn {}", gb(m.non_ffn_bytes()));
+    }
+
+    #[test]
+    fn presets_resolve_by_fuzzy_name() {
+        assert!(model_preset("bamboo").is_some());
+        assert!(model_preset("Mixtral-47B").is_some());
+        assert!(model_preset("qwen2").is_some());
+        assert!(model_preset("gpt-extra").is_none());
+        assert_eq!(all_models().len(), 5);
+    }
+}

@@ -1,0 +1,220 @@
+//! Runtime (serving) configuration: what the offline planner + engine are
+//! parameterized by at launch, loadable from a JSON file or CLI flags.
+
+use crate::util::json::Json;
+
+/// Which pipeline strategy the engine runs (Fig.6 / Fig.14 ablation axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineMode {
+    /// No compute/I-O overlap at all (Fig.14 baseline).
+    None,
+    /// Matrix-level overlap with a barrier per matrix (Fig.6-a, LLMFlash).
+    MatrixLevel,
+    /// PowerInfer-2's neuron-cluster-level pipeline (Fig.6-b).
+    ClusterLevel,
+}
+
+/// Which compute units participate in decoding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum XpuMode {
+    CpuOnly,
+    NpuOnly,
+    GpuOnly,
+    /// PowerInfer-2's hybrid: hot clusters on NPU, cold on CPU (§4.1.2).
+    Hybrid,
+}
+
+/// Per-run serving configuration.
+#[derive(Debug, Clone)]
+pub struct RuntimeConfig {
+    /// Fraction of FFN weights whose *placement* is restricted to flash
+    /// (the paper's "offloading 50% FFN weights" setups).
+    pub offload_ffn_frac: f64,
+    /// Explicit memory budget in bytes (0 = derive from offload fraction).
+    pub memory_budget: u64,
+    /// Max concurrent sequences (Best-of-N / server batch ceiling).
+    pub max_batch: usize,
+    pub pipeline: PipelineMode,
+    pub xpu: XpuMode,
+    /// Gate-Up-Down storage bundling (§4.4) on/off (Fig.14 "Bundle").
+    pub bundling: bool,
+    /// Two-phase INT4 bundle loading: gate 4KB first, up/down 4KB only if
+    /// the gate output is non-zero (§4.4).
+    pub two_phase_load: bool,
+    /// Neuron cache enabled (Fig.14 "Neuron Cache"); off = every cold
+    /// neuron access goes to flash.
+    pub neuron_cache: bool,
+    /// Online activation predictor enabled; off = dense FFN passes
+    /// (llama.cpp-style).
+    pub predictor: bool,
+    /// Dynamic hot/cold ratio re-planning as batch size changes (§4.1.3).
+    pub dynamic_ratio: bool,
+    /// Number of CPU compute threads for the cold path.
+    pub compute_threads: usize,
+    /// Number of I/O threads (UFS has one command queue; >1 contends).
+    pub io_threads: usize,
+    /// Seed for all stochastic components.
+    pub seed: u64,
+    /// Cold-path neuron-cluster size (neurons per scheduling unit).
+    pub cluster_neurons: usize,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        RuntimeConfig {
+            offload_ffn_frac: 0.5,
+            memory_budget: 0,
+            max_batch: 4,
+            pipeline: PipelineMode::ClusterLevel,
+            xpu: XpuMode::Hybrid,
+            bundling: true,
+            two_phase_load: true,
+            neuron_cache: true,
+            predictor: true,
+            dynamic_ratio: true,
+            compute_threads: 4,
+            io_threads: 1,
+            seed: 42,
+            cluster_neurons: 64,
+        }
+    }
+}
+
+impl RuntimeConfig {
+    /// The llama.cpp-style configuration (mmap, CPU dense, no smarts).
+    pub fn llama_cpp_like() -> Self {
+        RuntimeConfig {
+            pipeline: PipelineMode::None,
+            xpu: XpuMode::CpuOnly,
+            bundling: false,
+            two_phase_load: false,
+            neuron_cache: false,
+            predictor: false,
+            dynamic_ratio: false,
+            // mmap page faults come from every compute thread → UFS
+            // command-queue contention (§2.3.2)
+            io_threads: 4,
+            ..Default::default()
+        }
+    }
+
+    /// LLMFlash-style: predictor + bundling + cache, matrix-level overlap,
+    /// CPU-only compute (§2.4, §7.1 baseline implementation).
+    pub fn llm_flash_like() -> Self {
+        RuntimeConfig {
+            pipeline: PipelineMode::MatrixLevel,
+            xpu: XpuMode::CpuOnly,
+            bundling: true,
+            two_phase_load: false,
+            neuron_cache: true,
+            dynamic_ratio: false,
+            ..Default::default()
+        }
+    }
+
+    /// PowerInfer(-1)-style: static hot/cold split, AIO, CPU sparse.
+    pub fn powerinfer1_like() -> Self {
+        RuntimeConfig {
+            pipeline: PipelineMode::MatrixLevel,
+            xpu: XpuMode::CpuOnly,
+            bundling: false,
+            two_phase_load: false,
+            neuron_cache: true,
+            dynamic_ratio: false,
+            ..Default::default()
+        }
+    }
+
+    /// Parse overrides from a JSON object (config-file support).
+    pub fn apply_json(&mut self, j: &Json) {
+        if let Some(v) = j.get("offload_ffn_frac").as_f64() {
+            self.offload_ffn_frac = v;
+        }
+        if let Some(v) = j.get("memory_budget").as_f64() {
+            self.memory_budget = v as u64;
+        }
+        if let Some(v) = j.get("max_batch").as_usize() {
+            self.max_batch = v;
+        }
+        if let Some(v) = j.get("compute_threads").as_usize() {
+            self.compute_threads = v;
+        }
+        if let Some(v) = j.get("io_threads").as_usize() {
+            self.io_threads = v;
+        }
+        if let Some(v) = j.get("seed").as_f64() {
+            self.seed = v as u64;
+        }
+        if let Some(v) = j.get("cluster_neurons").as_usize() {
+            self.cluster_neurons = v;
+        }
+        if let Some(v) = j.get("bundling").as_bool() {
+            self.bundling = v;
+        }
+        if let Some(v) = j.get("two_phase_load").as_bool() {
+            self.two_phase_load = v;
+        }
+        if let Some(v) = j.get("neuron_cache").as_bool() {
+            self.neuron_cache = v;
+        }
+        if let Some(v) = j.get("predictor").as_bool() {
+            self.predictor = v;
+        }
+        if let Some(v) = j.get("dynamic_ratio").as_bool() {
+            self.dynamic_ratio = v;
+        }
+        match j.get("pipeline").as_str() {
+            Some("none") => self.pipeline = PipelineMode::None,
+            Some("matrix") => self.pipeline = PipelineMode::MatrixLevel,
+            Some("cluster") => self.pipeline = PipelineMode::ClusterLevel,
+            _ => {}
+        }
+        match j.get("xpu").as_str() {
+            Some("cpu") => self.xpu = XpuMode::CpuOnly,
+            Some("npu") => self.xpu = XpuMode::NpuOnly,
+            Some("gpu") => self.xpu = XpuMode::GpuOnly,
+            Some("hybrid") => self.xpu = XpuMode::Hybrid,
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_full_powerinfer2() {
+        let c = RuntimeConfig::default();
+        assert_eq!(c.pipeline, PipelineMode::ClusterLevel);
+        assert_eq!(c.xpu, XpuMode::Hybrid);
+        assert!(c.bundling && c.neuron_cache && c.dynamic_ratio);
+    }
+
+    #[test]
+    fn baselines_disable_the_right_features() {
+        let l = RuntimeConfig::llama_cpp_like();
+        assert_eq!(l.pipeline, PipelineMode::None);
+        assert!(!l.neuron_cache && !l.bundling && !l.predictor);
+        let f = RuntimeConfig::llm_flash_like();
+        assert_eq!(f.pipeline, PipelineMode::MatrixLevel);
+        assert!(f.neuron_cache && f.bundling && !f.two_phase_load);
+        assert_eq!(f.xpu, XpuMode::CpuOnly);
+    }
+
+    #[test]
+    fn json_overrides() {
+        let mut c = RuntimeConfig::default();
+        let j = Json::parse(
+            r#"{"offload_ffn_frac": 0.75, "pipeline": "matrix",
+                "xpu": "cpu", "max_batch": 2, "bundling": false}"#,
+        )
+        .unwrap();
+        c.apply_json(&j);
+        assert!((c.offload_ffn_frac - 0.75).abs() < 1e-12);
+        assert_eq!(c.pipeline, PipelineMode::MatrixLevel);
+        assert_eq!(c.xpu, XpuMode::CpuOnly);
+        assert_eq!(c.max_batch, 2);
+        assert!(!c.bundling);
+    }
+}

@@ -1,0 +1,275 @@
+//! Serving coordinator: request queue → batch groups → lockstep decode
+//! over the real PJRT engine, plus the Best-of-N controller (§2.2, §7.4).
+//!
+//! The coordinator owns process-level concerns the paper assigns to the
+//! framework around the neuron engine: admission, batch formation against
+//! the compiled graph table (only batch sizes with pre-built graphs are
+//! schedulable, §4.1.3), prompt padding for lockstep decoding, dynamic
+//! hot-ratio selection per batch, and per-request metrics.
+
+pub mod server;
+
+pub use server::Server;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Result};
+
+use crate::engine::real::{RealEngine, RealEngineOptions};
+use crate::trace::Request;
+use crate::util::stats::Samples;
+
+/// Outcome of serving one request.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: usize,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+    pub first_token_s: f64,
+    pub total_s: f64,
+    pub tokens: Vec<u32>,
+}
+
+/// Aggregate serving report (the e2e example's output).
+#[derive(Debug, Default)]
+pub struct ServeReport {
+    pub completions: Vec<Completion>,
+    pub prefill_tokens: usize,
+    pub prefill_s: f64,
+    pub decode_tokens: usize,
+    pub decode_s: f64,
+    pub step_latency_ms: Samples,
+}
+
+impl ServeReport {
+    pub fn prefill_tps(&self) -> f64 {
+        self.prefill_tokens as f64 / self.prefill_s.max(1e-12)
+    }
+
+    pub fn decode_tps(&self) -> f64 {
+        self.decode_tokens as f64 / self.decode_s.max(1e-12)
+    }
+}
+
+/// The coordinator: one engine per compiled batch size, created lazily.
+pub struct Coordinator {
+    artifacts: PathBuf,
+    weight_path: PathBuf,
+    opts: RealEngineOptions,
+    engines: BTreeMap<usize, RealEngine>,
+    batches: Vec<usize>,
+}
+
+impl Coordinator {
+    pub fn new(artifacts: &Path, weight_path: &Path, opts: RealEngineOptions) -> Result<Self> {
+        // probe the manifest once for available batch sizes
+        let probe = RealEngine::new(artifacts, weight_path, 1, opts.clone())?;
+        let batches = probe.dims.batches.clone();
+        let mut engines = BTreeMap::new();
+        engines.insert(1, probe);
+        Ok(Coordinator {
+            artifacts: artifacts.to_path_buf(),
+            weight_path: weight_path.to_path_buf(),
+            opts,
+            engines,
+            batches,
+        })
+    }
+
+    /// Largest compiled batch size ≤ n (graph-table constraint, §4.1.3).
+    pub fn schedulable_batch(&self, n: usize) -> usize {
+        self.batches
+            .iter()
+            .copied()
+            .filter(|&b| b <= n.max(1))
+            .max()
+            .unwrap_or(1)
+    }
+
+    fn engine(&mut self, batch: usize) -> Result<&mut RealEngine> {
+        if !self.engines.contains_key(&batch) {
+            let e = RealEngine::new(
+                &self.artifacts, &self.weight_path, batch, self.opts.clone())?;
+            self.engines.insert(batch, e);
+        }
+        Ok(self.engines.get_mut(&batch).unwrap())
+    }
+
+    /// Serve a set of requests FCFS in lockstep batch groups.
+    pub fn serve(&mut self, requests: &[Request]) -> Result<ServeReport> {
+        let mut report = ServeReport::default();
+        let mut queue: Vec<&Request> = requests.iter().collect();
+        while !queue.is_empty() {
+            let b = self.schedulable_batch(queue.len());
+            let group: Vec<&Request> = queue.drain(..b).collect();
+            self.serve_group(&group, &mut report)?;
+        }
+        Ok(report)
+    }
+
+    fn serve_group(&mut self, group: &[&Request], report: &mut ServeReport) -> Result<()> {
+        let batch = group.len();
+        let engine = self.engine(batch)?;
+        engine.reset();
+        let d = engine.dims.clone();
+        // pad prompts right to a common length (lockstep decoding)
+        let max_prompt = group
+            .iter()
+            .map(|r| r.prompt_tokens.clamp(1, d.prefill_chunk))
+            .max()
+            .unwrap();
+        let out_len = group
+            .iter()
+            .map(|r| r.output_tokens)
+            .max()
+            .unwrap()
+            .min(d.seq_max - max_prompt - 1)
+            .max(1);
+
+        let start = std::time::Instant::now();
+        let mut last: Vec<u32> = vec![0; batch];
+        for (row, req) in group.iter().enumerate() {
+            // synthetic prompt tokens derived from the request id
+            let len = req.prompt_tokens.clamp(1, d.prefill_chunk);
+            let mut prompt: Vec<u32> = (0..max_prompt)
+                .map(|i| ((req.id * 131 + i * 7) % d.vocab) as u32)
+                .collect();
+            prompt.truncate(max_prompt.max(len));
+            last[row] = engine.prefill(row, &prompt)?;
+            report.prefill_tokens += prompt.len();
+        }
+        let prefill_s = start.elapsed().as_secs_f64();
+        report.prefill_s += prefill_s;
+
+        let decode_start = std::time::Instant::now();
+        let mut outputs: Vec<Vec<u32>> = vec![Vec::new(); batch];
+        for _ in 0..out_len {
+            let step_start = std::time::Instant::now();
+            last = engine.decode_step(&last)?;
+            report
+                .step_latency_ms
+                .push(step_start.elapsed().as_secs_f64() * 1e3);
+            for (row, &t) in last.iter().enumerate() {
+                outputs[row].push(t);
+            }
+            report.decode_tokens += batch;
+        }
+        let decode_s = decode_start.elapsed().as_secs_f64();
+        report.decode_s += decode_s;
+
+        for (row, req) in group.iter().enumerate() {
+            report.completions.push(Completion {
+                id: req.id,
+                prompt_tokens: req.prompt_tokens,
+                output_tokens: outputs[row].len(),
+                first_token_s: prefill_s,
+                total_s: prefill_s + decode_s,
+                tokens: std::mem::take(&mut outputs[row]),
+            });
+        }
+        Ok(())
+    }
+
+    /// Best-of-N controller (§7.4): N candidates of one prompt decode in
+    /// parallel; candidates finish on a schedule and the effective batch
+    /// size decays, with the hot ratio re-planned at each transition.
+    /// Returns per-iteration (batch, tokens/s).
+    pub fn best_of_n(
+        &mut self,
+        prompt: &[u32],
+        n: usize,
+        iters_per_drop: usize,
+        dynamic_ratio: bool,
+    ) -> Result<Vec<(usize, f64)>> {
+        ensure!(n >= 1, "n must be ≥ 1");
+        let mut curve = Vec::new();
+        let mut carry_token: u32 = 0;
+        for remaining in (1..=n).rev() {
+            let b = self.schedulable_batch(remaining);
+            let engine = self.engine(b)?;
+            engine.reset();
+            if dynamic_ratio {
+                // bigger batch → bigger hot cluster on the NPU (§4.1.3)
+                let ks = engine.dims.hot_ks.clone();
+                let idx = ((b - 1).min(ks.len() - 1)).min(ks.len() - 1);
+                engine.set_hot_k(ks[idx])?;
+            }
+            let first = engine.prefill(0, prompt)?;
+            let mut tok = vec![if curve.is_empty() { first } else { carry_token }; b];
+            for _ in 0..iters_per_drop {
+                let t0 = std::time::Instant::now();
+                tok = engine.decode_step(&tok)?;
+                let dt = t0.elapsed().as_secs_f64();
+                curve.push((remaining, b as f64 / dt));
+            }
+            carry_token = tok[0];
+        }
+        Ok(curve)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TaskKind;
+
+    fn artifacts() -> Option<&'static Path> {
+        let p = Path::new("artifacts/selftest");
+        if p.join("manifest.json").exists() { Some(p) } else { None }
+    }
+
+    fn opts() -> RealEngineOptions {
+        RealEngineOptions { hot_k: 128, throttle_io: false, ..Default::default() }
+    }
+
+    fn wp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("pi2_coord_{tag}_{}", std::process::id()))
+    }
+
+    fn req(id: usize, prompt: usize, out: usize) -> Request {
+        Request { id, task: TaskKind::Dialogue, prompt_tokens: prompt, output_tokens: out }
+    }
+
+    #[test]
+    fn schedulable_batch_respects_graph_table() {
+        let Some(dir) = artifacts() else { return };
+        let path = wp("sched");
+        let c = Coordinator::new(dir, &path, opts()).unwrap();
+        assert_eq!(c.schedulable_batch(1), 1);
+        assert_eq!(c.schedulable_batch(2), 2);
+        assert_eq!(c.schedulable_batch(3), 2); // only b∈{1,2} compiled
+        assert_eq!(c.schedulable_batch(0), 1);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn serves_mixed_requests_to_completion() {
+        let Some(dir) = artifacts() else { return };
+        let path = wp("serve");
+        let mut c = Coordinator::new(dir, &path, opts()).unwrap();
+        let reqs = vec![req(0, 4, 3), req(1, 6, 3), req(2, 2, 2)];
+        let report = c.serve(&reqs).unwrap();
+        assert_eq!(report.completions.len(), 3);
+        for comp in &report.completions {
+            assert!(!comp.tokens.is_empty());
+            assert!(comp.total_s > 0.0);
+        }
+        assert!(report.decode_tps() > 0.0);
+        assert!(report.prefill_tps() > 0.0);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn best_of_n_batch_decays() {
+        let Some(dir) = artifacts() else { return };
+        let path = wp("bon");
+        let mut c = Coordinator::new(dir, &path, opts()).unwrap();
+        let curve = c.best_of_n(&[1, 2, 3], 2, 2, true).unwrap();
+        assert_eq!(curve.len(), 4);
+        assert_eq!(curve[0].0, 2);
+        assert_eq!(curve[3].0, 1);
+        assert!(curve.iter().all(|&(_, tps)| tps > 0.0));
+        std::fs::remove_file(path).ok();
+    }
+}

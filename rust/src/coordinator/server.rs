@@ -1,0 +1,221 @@
+//! Line-protocol TCP serving front-end — the launcher's network face.
+//!
+//! Protocol (one JSON object per line):
+//!   → {"prompt": "text", "max_tokens": 32}
+//!   ← {"id": 0, "text": "...", "tokens": [..], "prefill_s": .., "decode_s": ..}
+//!   → {"cmd": "stats"}   ← {"served": N, "decode_tps": ..}
+//!   → {"cmd": "shutdown"}
+//!
+//! Single-threaded accept loop over the lockstep coordinator (mobile
+//! serving is one-app-one-model; concurrency lives in the engine, not in
+//! connection handling).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Coordinator;
+use crate::engine::real::RealEngineOptions;
+use crate::tokenizer::Tokenizer;
+use crate::trace::{Request, TaskKind};
+use crate::util::json::{self, Json};
+
+pub struct Server {
+    coord: Coordinator,
+    tokenizer: Tokenizer,
+    served: usize,
+    decode_tokens: usize,
+    decode_s: f64,
+}
+
+impl Server {
+    pub fn new(artifacts: &Path, weight_path: &Path, opts: RealEngineOptions) -> Result<Server> {
+        Ok(Server {
+            coord: Coordinator::new(artifacts, weight_path, opts)?,
+            tokenizer: Tokenizer::train(
+                b"the quick brown fox jumps over the lazy dog and the \
+                  neuron cluster pipeline overlaps computation with io",
+                64,
+            ),
+            served: 0,
+            decode_tokens: 0,
+            decode_s: 0.0,
+        })
+    }
+
+    /// Bind and serve until a shutdown command arrives. Sends the bound
+    /// address through `ready` once listening (for tests / launchers).
+    pub fn run(
+        &mut self,
+        addr: &str,
+        ready: Option<std::sync::mpsc::Sender<std::net::SocketAddr>>,
+    ) -> Result<()> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("bind {addr}"))?;
+        if let Some(tx) = ready {
+            let _ = tx.send(listener.local_addr()?);
+        }
+        for stream in listener.incoming() {
+            let stream = stream?;
+            if self.handle_connection(stream)? {
+                break; // shutdown requested
+            }
+        }
+        Ok(())
+    }
+
+    /// Returns true if the client requested shutdown.
+    fn handle_connection(&mut self, stream: TcpStream) -> Result<bool> {
+        let mut writer = stream.try_clone()?;
+        let reader = BufReader::new(stream);
+        for line in reader.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let req = match Json::parse(&line) {
+                Ok(j) => j,
+                Err(e) => {
+                    writeln!(writer, "{}", json::obj(vec![
+                        ("error", json::s(&format!("bad json: {e}"))),
+                    ]))?;
+                    continue;
+                }
+            };
+            match req.get("cmd").as_str() {
+                Some("shutdown") => {
+                    writeln!(writer, "{}", json::obj(vec![("ok", Json::Bool(true))]))?;
+                    return Ok(true);
+                }
+                Some("stats") => {
+                    let tps = if self.decode_s > 0.0 {
+                        self.decode_tokens as f64 / self.decode_s
+                    } else {
+                        0.0
+                    };
+                    writeln!(writer, "{}", json::obj(vec![
+                        ("served", json::num(self.served as f64)),
+                        ("decode_tps", json::num(tps)),
+                    ]))?;
+                }
+                _ => {
+                    let response = self.complete(&req)?;
+                    writeln!(writer, "{response}")?;
+                }
+            }
+        }
+        Ok(false)
+    }
+
+    fn complete(&mut self, req: &Json) -> Result<Json> {
+        let prompt_text = req.get("prompt").as_str().unwrap_or("hello");
+        let max_tokens = req.get("max_tokens").as_usize().unwrap_or(16);
+        let dims_vocab = 4096; // clamped below by the engine's real vocab
+        let prompt_ids = self.tokenizer.encode_clamped(prompt_text, dims_vocab);
+        let r = Request {
+            id: self.served,
+            task: TaskKind::Dialogue,
+            prompt_tokens: prompt_ids.len().max(1),
+            output_tokens: max_tokens,
+        };
+        let report = self.coord.serve(&[r])?;
+        let comp = &report.completions[0];
+        self.served += 1;
+        self.decode_tokens += comp.tokens.len();
+        self.decode_s += report.decode_s;
+        Ok(json::obj(vec![
+            ("id", json::num(comp.id as f64)),
+            ("text", json::s(&self.tokenizer.decode(&comp.tokens))),
+            ("tokens", Json::Arr(
+                comp.tokens.iter().map(|&t| json::num(t as f64)).collect())),
+            ("prefill_s", json::num(comp.first_token_s)),
+            ("total_s", json::num(comp.total_s)),
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader, Write};
+
+    // The xla client is not Send, so the server runs on the TEST thread
+    // and the client drives it from a spawned thread.
+    fn run_client_server(
+        client: impl FnOnce(std::net::SocketAddr) -> Vec<Json> + Send + 'static,
+    ) -> Option<Vec<Json>> {
+        let artifacts = Path::new("artifacts/selftest");
+        if !artifacts.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        let wp = std::env::temp_dir().join(format!(
+            "pi2_server_{}_{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .subsec_nanos()
+        ));
+        let opts = RealEngineOptions {
+            hot_k: 128,
+            throttle_io: false,
+            ..Default::default()
+        };
+        let mut server = Server::new(artifacts, &wp, opts).unwrap();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let client_handle = std::thread::spawn(move || {
+            let addr = rx.recv().unwrap();
+            client(addr)
+        });
+        server.run("127.0.0.1:0", Some(tx)).unwrap();
+        let responses = client_handle.join().unwrap();
+        std::fs::remove_file(wp).ok();
+        Some(responses)
+    }
+
+    fn chat(conn: &mut std::net::TcpStream, reader: &mut BufReader<std::net::TcpStream>,
+            msg: &str) -> Json {
+        writeln!(conn, "{msg}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        Json::parse(&line).unwrap()
+    }
+
+    #[test]
+    fn server_completes_requests_over_tcp() {
+        let Some(responses) = run_client_server(|addr| {
+            let mut conn = std::net::TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let r1 = chat(&mut conn, &mut reader,
+                          r#"{"prompt": "neuron clusters", "max_tokens": 3}"#);
+            let r2 = chat(&mut conn, &mut reader, r#"{"cmd": "stats"}"#);
+            let r3 = chat(&mut conn, &mut reader, r#"{"cmd": "shutdown"}"#);
+            vec![r1, r2, r3]
+        }) else {
+            return;
+        };
+        assert_eq!(responses[0].get("tokens").as_arr().unwrap().len(), 3);
+        assert!(responses[0].get("total_s").as_f64().unwrap() > 0.0);
+        assert!(responses[0].get("text").as_str().is_some());
+        assert_eq!(responses[1].get("served").as_usize(), Some(1));
+        assert_eq!(responses[2].get("ok"), &Json::Bool(true));
+    }
+
+    #[test]
+    fn bad_json_gets_error_not_crash() {
+        let Some(responses) = run_client_server(|addr| {
+            let mut conn = std::net::TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let r1 = chat(&mut conn, &mut reader, "this is not json");
+            let r2 = chat(&mut conn, &mut reader, r#"{"cmd": "shutdown"}"#);
+            vec![r1, r2]
+        }) else {
+            return;
+        };
+        assert!(responses[0].get("error").as_str().is_some());
+        assert_eq!(responses[1].get("ok"), &Json::Bool(true));
+    }
+}

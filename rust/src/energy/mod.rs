@@ -1,0 +1,134 @@
+//! Energy accounting (Table 8): J/token = Σ (unit power × busy time),
+//! plus DRAM traffic and idle baseline, over the modeled run.
+
+use crate::config::{DeviceConfig, PowerConfig};
+use crate::metrics::RunMetrics;
+
+/// Energy meter over a run.
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    power: PowerConfig,
+    /// Cores charged when the CPU path is busy (big + mids typically).
+    pub cpu_cores_big: usize,
+    pub cpu_cores_mid: usize,
+    pub cpu_cores_little: usize,
+}
+
+/// Result of an energy evaluation.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyReport {
+    pub joules_total: f64,
+    pub joules_per_token: f64,
+    /// Mean power over the run (W).
+    pub mean_power_w: f64,
+    /// Peak instantaneous power (W) — all charged units busy at once.
+    pub peak_power_w: f64,
+}
+
+impl EnergyModel {
+    pub fn new(dev: &DeviceConfig, compute_threads: usize, io_threads: usize) -> Self {
+        // compute threads fill mids first (big core is reserved for I/O,
+        // §2.3.2 core-affinity guidance), I/O threads take the big core.
+        let mids = dev.cpu.group(crate::config::CoreClass::Mid)
+            .map(|g| g.count).unwrap_or(0);
+        let cpu_cores_mid = compute_threads.min(mids);
+        let cpu_cores_big = io_threads.min(1)
+            + compute_threads.saturating_sub(mids).min(1);
+        EnergyModel {
+            power: dev.power,
+            cpu_cores_big,
+            cpu_cores_mid,
+            cpu_cores_little: 0,
+        }
+    }
+
+    fn cpu_power_w(&self) -> f64 {
+        self.cpu_cores_big as f64 * self.power.cpu_core_big_w
+            + self.cpu_cores_mid as f64 * self.power.cpu_core_mid_w
+            + self.cpu_cores_little as f64 * self.power.cpu_core_little_w
+    }
+
+    /// Evaluate a finished run. CPU busy time is charged across the
+    /// configured cores; NPU/GPU/UFS are charged for their busy windows;
+    /// DRAM traffic is charged per GB/s·s; idle power runs the whole time.
+    pub fn evaluate(&self, run: &RunMetrics) -> EnergyReport {
+        let t = run.total_s.max(1e-12);
+        let cpu_cores = (self.cpu_cores_big + self.cpu_cores_mid
+            + self.cpu_cores_little).max(1) as f64;
+        let j_cpu = self.cpu_power_w() * (run.cpu_busy_s / cpu_cores);
+        let j_npu = self.power.npu_w * run.npu_busy_s;
+        let j_gpu = self.power.gpu_w * run.gpu_busy_s;
+        let j_ufs = self.power.ufs_w * run.io_busy_s;
+        let j_dram = self.power.dram_per_gbps_w
+            * (run.bytes_touched_dram as f64 / 1e9);
+        let j_idle = self.power.idle_w * t;
+        let total = j_cpu + j_npu + j_gpu + j_ufs + j_dram + j_idle;
+        let peak = self.power.idle_w
+            + self.cpu_power_w()
+            + if run.npu_busy_s > 0.0 { self.power.npu_w } else { 0.0 }
+            + if run.gpu_busy_s > 0.0 { self.power.gpu_w } else { 0.0 }
+            + if run.io_busy_s > 0.0 { self.power.ufs_w } else { 0.0 }
+            + self.power.dram_per_gbps_w * run.bandwidth_gbps.max().max(0.0);
+        EnergyReport {
+            joules_total: total,
+            joules_per_token: total / run.steps.max(1) as f64,
+            mean_power_w: total / t,
+            peak_power_w: peak,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::oneplus_12;
+    use crate::metrics::StepMetrics;
+
+    fn run_with(cpu_busy: f64, npu_busy: f64, steps: usize) -> RunMetrics {
+        let mut r = RunMetrics::new();
+        for _ in 0..steps {
+            r.push_step(&StepMetrics {
+                step_s: 0.1,
+                cpu_busy_s: cpu_busy,
+                npu_busy_s: npu_busy,
+                bytes_touched_dram: 4_000_000_000 / 10,
+                ..Default::default()
+            });
+        }
+        r
+    }
+
+    #[test]
+    fn faster_run_uses_less_energy_per_token() {
+        // Same busy profile per step, but one run decodes 2× the tokens in
+        // the same wall time → about half the J/token (the Table 8 effect).
+        let dev = oneplus_12();
+        let m = EnergyModel::new(&dev, 4, 1);
+        let slow = m.evaluate(&run_with(0.08, 0.0, 10));
+        let mut fast_run = run_with(0.04, 0.02, 20);
+        fast_run.total_s = 1.0; // same wall-clock, double tokens
+        let fast = m.evaluate(&fast_run);
+        assert!(fast.joules_per_token < slow.joules_per_token);
+    }
+
+    #[test]
+    fn hybrid_peak_power_close_to_paper() {
+        // Table 8: PowerInfer-2 peak ≈ 5.1W with CPU+NPU+UFS all active.
+        let dev = oneplus_12();
+        let m = EnergyModel::new(&dev, 4, 1);
+        let mut run = run_with(0.08, 0.03, 10);
+        run.io_busy_s = 0.1;
+        let rep = m.evaluate(&run);
+        assert!((3.5..6.5).contains(&rep.peak_power_w), "peak {}", rep.peak_power_w);
+    }
+
+    #[test]
+    fn idle_dominates_empty_run() {
+        let dev = oneplus_12();
+        let m = EnergyModel::new(&dev, 4, 1);
+        let mut r = RunMetrics::new();
+        r.push_step(&StepMetrics { step_s: 1.0, ..Default::default() });
+        let rep = m.evaluate(&r);
+        assert!((rep.mean_power_w - dev.power.idle_w).abs() < 0.05);
+    }
+}

@@ -1,0 +1,661 @@
+//! The adaptive neuron engine (§4.1) — simulation form.
+//!
+//! This engine drives the calibrated hardware models (xpu/, storage/)
+//! through the *real* control structures (cache/, pipeline/, planner/) to
+//! reproduce the paper's experiments. Its sibling, `engine::real`, runs
+//! the same control flow against PJRT + actual file IO for the e2e
+//! example.
+//!
+//! Per decode step (one token), for each layer:
+//!   1. attention on the NPU (hybrid/NPU modes) or CPU,
+//!   2. NPU: dense GLU over the hot cluster (the pre-built static graph
+//!      for the current (batch, hot-ratio) point; a graph switch is
+//!      overlapped with attention, §4.1.3),
+//!   3. CPU: predictor → activated cold neurons → segmented-cache lookups
+//!      → per-cluster 5-stage pipeline over misses (§4.3) with the
+//!      configured overlap mode,
+//!   4. the UMA bandwidth-sharing effect couples 2 and 3 (§2.3.1).
+
+pub mod prefill;
+pub mod real;
+pub mod speculative;
+
+use crate::cache::{Access, MemoryBudget, NeuronCache};
+use crate::config::{
+    CoreClass, DeviceConfig, ModelSpec, PipelineMode, RuntimeConfig, XpuMode,
+};
+use crate::metrics::{RunMetrics, StepMetrics};
+use crate::pipeline::{schedule, ClusterTask};
+use crate::planner::{Plan, Planner};
+use crate::sparsity::{ActivationModel, PredictorModel, N_REP};
+use crate::storage::{IoBurst, IoPattern, UfsModel};
+use crate::util::prng::Rng;
+use crate::xpu::{Unit, XpuModel};
+
+/// Simulation engine for one (device, model, config) triple.
+pub struct SimEngine {
+    pub dev: DeviceConfig,
+    pub spec: ModelSpec,
+    pub cfg: RuntimeConfig,
+    pub plan: Plan,
+    pub act: ActivationModel,
+    pub pred: PredictorModel,
+    xpu: XpuModel,
+    ufs: UfsModel,
+    cache: NeuronCache,
+    budget: MemoryBudget,
+    rng: Rng,
+    pub metrics: RunMetrics,
+    /// ids scratch to avoid per-step allocation
+    scratch_ids: Vec<u32>,
+    /// per-layer active cold set of the previous token (temporal
+    /// persistence, §7.2.4)
+    prev_active: Vec<Vec<u32>>,
+    cur_hot_frac: f64,
+    last_batch: usize,
+}
+
+impl SimEngine {
+    pub fn new(dev: DeviceConfig, spec: ModelSpec, cfg: RuntimeConfig) -> Self {
+        let act = ActivationModel::for_model(&spec, cfg.seed);
+        let planner = Planner::new(&dev, &spec, &cfg, &act);
+        let plan = planner.generate();
+        let budget = plan.budget;
+        let spec2_layers = spec.layers;
+        let neurons = spec.neurons_per_layer() as usize;
+        let cache_neurons = budget.cache_neurons(spec.bundle_bytes());
+        let hot0 = plan.hot_frac(cfg.max_batch);
+        let hot_n = (neurons as f64 * hot0) as usize;
+        let mut cold_cap = cache_neurons.saturating_sub(hot_n * spec.layers);
+        // LLMFlash-style bundle caching without hot/cold separation loads
+        // frequently-activated neurons redundantly across bundles (§4.2's
+        // critique), wasting cache capacity.
+        if cfg.bundling && hot_n == 0 {
+            cold_cap = (cold_cap as f64 * 0.6) as usize;
+        }
+        let cache = NeuronCache::new(
+            spec.layers,
+            neurons,
+            hot_n,
+            if cfg.neuron_cache { cold_cap } else { 0 },
+        );
+        let xpu = XpuModel::new(dev.clone());
+        let ufs = UfsModel::new(dev.ufs.clone());
+        let rng = Rng::new(cfg.seed.wrapping_mul(0x9E37_79B9));
+        SimEngine {
+            dev,
+            spec,
+            cfg,
+            plan,
+            act,
+            pred: PredictorModel::default(),
+            xpu,
+            ufs,
+            cache,
+            budget,
+            rng,
+            metrics: RunMetrics::new(),
+            scratch_ids: Vec::new(),
+            prev_active: vec![Vec::new(); spec2_layers],
+            cur_hot_frac: hot0,
+            last_batch: 0,
+        }
+    }
+
+    pub fn budget(&self) -> &MemoryBudget {
+        &self.budget
+    }
+
+    pub fn offloading(&self) -> bool {
+        self.budget.resident_ffn_frac() < 0.999
+    }
+
+    fn bpp(&self) -> f64 {
+        self.spec.bytes_per_param()
+    }
+
+    fn expert_frac(&self) -> f64 {
+        self.spec.active_experts as f64 / self.spec.experts as f64
+    }
+
+    /// Re-plan the hot/cold split for a new batch size (§4.1.3 / §4.2).
+    /// Returns the graph-switch overhead not hidden by attention (usually
+    /// zero — the 10KB graph load overlaps attention compute).
+    fn adjust_for_batch(&mut self, batch: usize, attn_time_s: f64) -> f64 {
+        if batch == self.last_batch {
+            return 0.0;
+        }
+        self.last_batch = batch;
+        let f = if self.cfg.dynamic_ratio {
+            self.plan.hot_frac(batch)
+        } else {
+            self.plan.hot_frac(self.cfg.max_batch)
+        };
+        if (f - self.cur_hot_frac).abs() < 1e-9 {
+            return 0.0;
+        }
+        self.cur_hot_frac = f;
+        let neurons = self.spec.neurons_per_layer() as usize;
+        let hot_n = (neurons as f64 * f) as usize;
+        let total_neurons = self.budget.cache_neurons(self.spec.bundle_bytes());
+        self.cache.set_hot_per_layer(hot_n, total_neurons);
+        (self.dev.npu.graph_switch_ms * 1e-3 - attn_time_s).max(0.0)
+    }
+
+    fn roofline(flops: f64, bytes: f64, rate_flops: f64, bw_gbps: f64) -> f64 {
+        (flops / rate_flops).max(bytes / (bw_gbps * 1e9))
+    }
+
+    /// One decode step for the whole model; returns the step metrics.
+    pub fn decode_step(&mut self, batch: usize) -> StepMetrics {
+        let spec = self.spec.clone();
+        let cfg = self.cfg.clone();
+        let h = spec.hidden as f64;
+        let bpp = self.bpp();
+        let expert_frac = self.expert_frac();
+        let neurons = spec.neurons_per_layer();
+        let use_npu = matches!(cfg.xpu, XpuMode::Hybrid | XpuMode::NpuOnly);
+        let hybrid = matches!(cfg.xpu, XpuMode::Hybrid);
+
+        // --- attention time (per layer) ---------------------------------
+        let attn_flops = 2.0 * spec.attn_params_per_layer() as f64 * batch as f64;
+        let attn_bytes = spec.attn_params_per_layer() as f64 * bpp;
+        let attn_t = match cfg.xpu {
+            XpuMode::NpuOnly | XpuMode::Hybrid => Self::roofline(
+                attn_flops, attn_bytes,
+                self.dev.npu.tops_int4 * 1e12, self.dev.npu.mem_bw_gbps),
+            XpuMode::GpuOnly => Self::roofline(
+                attn_flops, attn_bytes,
+                self.dev.gpu.gflops * self.dev.gpu.compute_utilization * 1e9,
+                self.dev.gpu.mem_bw_gbps),
+            XpuMode::CpuOnly => Self::roofline(
+                attn_flops, attn_bytes,
+                self.xpu.cpu_gflops(cfg.compute_threads.max(1)),
+                self.dev.cpu.mem_bw_gbps),
+        };
+
+        let switch_overhead = self.adjust_for_batch(batch, attn_t);
+        let hot_frac = self.cur_hot_frac;
+        let hot_n = self.cache.hot_per_layer as f64;
+
+        // --- NPU hot-cluster FFN time (per layer) ------------------------
+        let npu_bw = if hybrid {
+            self.xpu.shared_bw_gbps(Unit::Npu)
+        } else {
+            self.dev.npu.mem_bw_gbps
+        };
+        let ffn_rows_npu = match cfg.xpu {
+            XpuMode::NpuOnly => neurons as f64 * expert_frac,
+            XpuMode::Hybrid => hot_n * expert_frac,
+            _ => 0.0,
+        };
+        let npu_ffn_t = if ffn_rows_npu > 0.0 {
+            Self::roofline(
+                2.0 * 3.0 * ffn_rows_npu * h * batch as f64,
+                3.0 * ffn_rows_npu * h * bpp,
+                self.dev.npu.tops_int4 * 1e12,
+                npu_bw,
+            )
+        } else {
+            0.0
+        };
+
+        // --- GPU dense FFN (MLC-style) -----------------------------------
+        let gpu_ffn_t = if matches!(cfg.xpu, XpuMode::GpuOnly) {
+            Self::roofline(
+                2.0 * 3.0 * neurons as f64 * expert_frac * h * batch as f64,
+                3.0 * neurons as f64 * expert_frac * h * bpp,
+                self.dev.gpu.gflops * self.dev.gpu.compute_utilization * 1e9,
+                self.dev.gpu.mem_bw_gbps,
+            )
+        } else {
+            0.0
+        };
+
+        // --- CPU cold path ------------------------------------------------
+        let mut step = StepMetrics::default();
+        let mut total_s = 0.0;
+        let threads = cfg.compute_threads.max(1);
+        let cpu_bw = (if hybrid {
+            self.xpu.shared_bw_gbps(Unit::Cpu)
+        } else {
+            self.dev.cpu.mem_bw_gbps
+        }) * 0.85;
+        let cpu_rate = self.xpu.cpu_gflops(threads);
+        // a cluster task runs on ONE thread; concurrent clusters share the
+        // memory bus and the core budget
+        let thread_rate = cpu_rate / threads as f64;
+        let thread_bw = cpu_bw / threads as f64;
+        let offloading = self.offloading();
+        // temporal drift: occasionally a token shifts activation patterns,
+        // touching many cold neurons it hasn't recently (§7.2.4's P99 tail)
+        let drift = if self.rng.bool(0.06) {
+            1.0 + self.rng.exp(1.2)
+        } else {
+            1.0
+        };
+
+        let cold_runs = !matches!(cfg.xpu, XpuMode::NpuOnly | XpuMode::GpuOnly);
+        let k_rep = ((N_REP as f64) * hot_frac).round() as usize;
+        let npr = self.act.neurons_per_rep.round().max(1.0) as usize;
+
+        for layer in 0..spec.layers {
+            let mut layer_t = attn_t;
+            let mut cold_sched_makespan = 0.0;
+            if cold_runs {
+                // activated cold set: carried-over actives (token-to-token
+                // persistence, §7.2.4) + fresh temperature-bucketed draws
+                self.scratch_ids.clear();
+                let hot_n_usize = self.cache.hot_per_layer;
+                let rho = self.spec.activation_persistence / drift;
+                let first_token = self.prev_active[layer].is_empty();
+                // carry forward survivors (dropping ones now inside the
+                // hot prefix after a rebalance)
+                let prev = std::mem::take(&mut self.prev_active[layer]);
+                for &id in &prev {
+                    if (id as usize) >= hot_n_usize && self.rng.bool(rho) {
+                        self.scratch_ids.push(id);
+                    }
+                }
+                // fresh draws at rate p·(1−ρ) keep the steady-state active
+                // count at p while modeling novel-neuron arrivals
+                let fresh_scale = if first_token { 1.0 } else { 1.0 - rho };
+                for rep in k_rep..N_REP {
+                    let p_tok = self.act.probs()[rep];
+                    let p = (1.0 - (1.0 - p_tok).powi(batch as i32))
+                        * expert_frac
+                        * fresh_scale;
+                    let k = self.rng.binomial(npr, p.min(1.0));
+                    if k == 0 {
+                        continue;
+                    }
+                    let base = hot_n_usize
+                        + (rep - k_rep) * (neurons as usize - hot_n_usize)
+                            / (N_REP - k_rep);
+                    let span = ((neurons as usize - hot_n_usize)
+                        / (N_REP - k_rep))
+                        .max(1);
+                    for off in self.rng.sample_indices(span.max(k), k.min(span.max(k))) {
+                        let id = (base + off).min(neurons as usize - 1) as u32;
+                        self.scratch_ids.push(id);
+                    }
+                }
+                self.prev_active[layer] = self.scratch_ids.clone();
+                let activated = self.scratch_ids.len() as u64;
+                // hot-prefix activations always hit the (pinned) hot
+                // region; count them so miss rates are comparable to the
+                // paper's whole-cache statistics (§7.2.4)
+                if offloading {
+                    let hot_active: f64 = self.act.probs()[..k_rep]
+                        .iter()
+                        .map(|&p| 1.0 - (1.0 - p).powi(batch as i32))
+                        .sum::<f64>()
+                        * self.act.neurons_per_rep
+                        * expert_frac;
+                    step.cache_hits += hot_active as u64;
+                }
+                // predictor selects what to compute
+                let computed = if cfg.predictor {
+                    self.pred.predicted_count(activated)
+                } else {
+                    // no predictor → dense pass over the whole cold region
+                    ((neurons as usize - hot_n_usize) as f64 * expert_frac) as u64
+                };
+
+                // cache lookups for neurons whose weights we need
+                let mut misses = 0u64;
+                if offloading {
+                    let resident_frac = self.budget.resident_ffn_frac();
+                    let ids: Vec<u32> = self.scratch_ids.clone();
+                    if cfg.predictor {
+                        for &id in &ids {
+                            match self.cache.access(layer, id as usize) {
+                                Access::Hit => step.cache_hits += 1,
+                                Access::Miss { .. } => {
+                                    step.cache_misses += 1;
+                                    misses += 1;
+                                }
+                            }
+                        }
+                    } else {
+                        // dense pass: misses = non-resident share (mmap)
+                        misses = (computed as f64 * (1.0 - resident_frac)) as u64;
+                        step.cache_misses += misses;
+                        step.cache_hits += computed.saturating_sub(misses);
+                    }
+                }
+
+                // build cluster tasks over the computed neurons
+                let cluster_n = cfg.cluster_neurons.max(1) as u64;
+                let n_clusters = computed.div_ceil(cluster_n).max(1);
+                let miss_per_cluster = misses as f64 / n_clusters as f64;
+                let pred_t = if cfg.predictor {
+                    self.pred.flops(spec.hidden, spec.inter, batch)
+                        / cpu_rate
+                        / n_clusters as f64
+                } else {
+                    0.0
+                };
+                // per-cluster compute: gate = 1/3 of rows' work, ud = 2/3
+                let c_flops = 2.0 * cluster_n as f64 * h * batch as f64;
+                let c_bytes = cluster_n as f64 * h * bpp;
+                let gate_c = Self::roofline(c_flops, c_bytes, thread_rate, thread_bw);
+                let ud_c = 2.0 * gate_c;
+                // per-cluster IO (misses share, §4.4 loading strategy)
+                let range = spec.ffn_bytes_per_layer() * spec.layers as u64;
+                let (gate_io, ud_io) = if miss_per_cluster > 0.0 {
+                    if cfg.bundling {
+                        if cfg.two_phase_load {
+                            let t4k = self.ufs.burst_time_s(&IoBurst {
+                                pattern: IoPattern::Random,
+                                block_bytes: 4096,
+                                count: 1,
+                                range_bytes: range,
+                                core: CoreClass::Big,
+                                issuers: cfg.io_threads,
+                            });
+                            (
+                                miss_per_cluster * t4k,
+                                miss_per_cluster * self.act.bundle_coactivation * t4k,
+                            )
+                        } else {
+                            let tb = self.ufs.burst_time_s(&IoBurst {
+                                pattern: IoPattern::Random,
+                                block_bytes: spec.bundle_aligned_bytes(),
+                                count: 1,
+                                range_bytes: range,
+                                core: CoreClass::Big,
+                                issuers: cfg.io_threads,
+                            });
+                            (miss_per_cluster * tb, 0.0)
+                        }
+                    } else if !cfg.predictor {
+                        // mmap dense sweep: the non-resident half of the
+                        // layer faults in once, in readahead-sized chunks
+                        let fault_bytes = miss_per_cluster
+                            * (3.0 * h * bpp) // whole bundle's bytes
+                            ;
+                        let chunk = 16 * 1024u64;
+                        let t = self.ufs.burst_time_s(&IoBurst {
+                            pattern: IoPattern::Random,
+                            block_bytes: chunk,
+                            count: ((fault_bytes as u64).div_ceil(chunk)).max(1),
+                            range_bytes: range,
+                            core: CoreClass::Mid,
+                            issuers: cfg.io_threads,
+                        });
+                        (t / 3.0, 2.0 * t / 3.0)
+                    } else {
+                        // unbundled: 3 scattered row reads per neuron
+                        let row_bytes =
+                            ((h * bpp) as u64).next_multiple_of(4096);
+                        let tr = self.ufs.burst_time_s(&IoBurst {
+                            pattern: IoPattern::Random,
+                            block_bytes: row_bytes,
+                            count: 1,
+                            range_bytes: range,
+                            core: CoreClass::Big,
+                            issuers: cfg.io_threads,
+                        });
+                        (miss_per_cluster * tr, 2.0 * miss_per_cluster * tr)
+                    }
+                } else {
+                    (0.0, 0.0)
+                };
+
+                let task = ClusterTask {
+                    pred_s: pred_t,
+                    gate_io_s: gate_io,
+                    gate_c_s: gate_c,
+                    ud_io_s: ud_io,
+                    ud_c_s: ud_c,
+                };
+                let tasks: Vec<ClusterTask> =
+                    (0..n_clusters).map(|_| task).collect();
+                let sched = schedule(&tasks, cfg.pipeline, cfg.compute_threads);
+                if cfg.pipeline == PipelineMode::ClusterLevel {
+                    // the borderless pipeline (Fig.6-b) lets the IO thread
+                    // keep streaming during the attention block and the
+                    // NPU's hot-FFN window of the same layer; only IO that
+                    // outlives all of it is exposed on the critical path
+                    let compute_span =
+                        sched.compute_busy_s / cfg.compute_threads.max(1) as f64;
+                    let hidden = attn_t + npu_ffn_t.max(compute_span);
+                    let exposed = (sched.io_busy_s - hidden).max(0.0);
+                    cold_sched_makespan =
+                        npu_ffn_t.max(compute_span) + exposed;
+                    step.io_stall_s += exposed;
+                } else {
+                    cold_sched_makespan = sched.makespan_s;
+                    step.io_stall_s += sched.io_stall_s;
+                }
+                step.cpu_busy_s += sched.compute_busy_s;
+                step.io_busy_s += sched.io_busy_s;
+                step.neurons_computed += computed;
+                let io_bytes = if cfg.bundling {
+                    if cfg.two_phase_load {
+                        (misses as f64 * 4096.0 * (1.0 + self.act.bundle_coactivation)) as u64
+                    } else {
+                        misses * spec.bundle_aligned_bytes()
+                    }
+                } else if !cfg.predictor {
+                    (misses as f64 * 3.0 * h * bpp) as u64
+                } else {
+                    misses * 3 * ((h * bpp) as u64).next_multiple_of(4096)
+                };
+                step.io_bytes += io_bytes;
+                step.io_ops += if cfg.two_phase_load && cfg.bundling {
+                    (misses as f64 * 1.8) as u64
+                } else if cfg.bundling {
+                    misses
+                } else {
+                    misses * 3
+                };
+                step.bytes_touched_dram +=
+                    (3.0 * computed as f64 * h * bpp) as u64;
+            }
+
+            // compose the layer: attention, then NPU-hot ∥ CPU-cold
+            let ffn_par = npu_ffn_t.max(cold_sched_makespan).max(gpu_ffn_t);
+            layer_t += ffn_par;
+            step.npu_busy_s += if use_npu { attn_t + npu_ffn_t } else { 0.0 };
+            step.gpu_busy_s += if matches!(cfg.xpu, XpuMode::GpuOnly) {
+                attn_t + gpu_ffn_t
+            } else {
+                0.0
+            };
+            if matches!(cfg.xpu, XpuMode::CpuOnly) {
+                step.cpu_busy_s += attn_t;
+            }
+            step.bytes_touched_dram += (attn_bytes
+                + 3.0 * ffn_rows_npu * h * bpp)
+                as u64;
+            total_s += layer_t;
+        }
+
+        // lm head (dense, on the NPU-side unit or CPU)
+        let lm_flops = 2.0 * (spec.vocab * spec.hidden) as f64 * batch as f64;
+        let lm_bytes = (spec.vocab * spec.hidden) as f64 * bpp;
+        let lm_t = if use_npu {
+            Self::roofline(lm_flops, lm_bytes, self.dev.npu.tops_int4 * 1e12,
+                           self.dev.npu.mem_bw_gbps)
+        } else {
+            Self::roofline(lm_flops, lm_bytes, cpu_rate, self.dev.cpu.mem_bw_gbps)
+        };
+        total_s += lm_t + switch_overhead;
+        step.bytes_touched_dram += lm_bytes as u64;
+        step.step_s = total_s;
+        step
+    }
+
+    /// Run `tokens` decode steps at a fixed batch size.
+    pub fn decode_run(&mut self, batch: usize, tokens: usize) -> &RunMetrics {
+        for _ in 0..tokens {
+            let s = self.decode_step(batch);
+            self.metrics.push_step(&s);
+        }
+        &self.metrics
+    }
+
+    /// Run a decode with a per-step batch schedule (Best-of-N decay).
+    /// Returns per-step throughput (tokens of all sequences / second).
+    pub fn decode_schedule(&mut self, schedule: &[usize]) -> Vec<f64> {
+        schedule
+            .iter()
+            .map(|&b| {
+                let s = self.decode_step(b);
+                self.metrics.push_step(&s);
+                b as f64 / s.step_s
+            })
+            .collect()
+    }
+
+    pub fn reset_metrics(&mut self) {
+        self.metrics = RunMetrics::new();
+        self.cache.reset_stats();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{bamboo_7b, mistral_7b_silu, mixtral_47b, oneplus_12};
+
+    fn engine(cfg: RuntimeConfig) -> SimEngine {
+        SimEngine::new(oneplus_12(), bamboo_7b(), cfg)
+    }
+
+    #[test]
+    fn pi2_beats_llama_cpp_by_an_order_of_magnitude() {
+        // Fig.7's headline: ~24× over llama.cpp at 50% offload.
+        let mut pi2 = engine(RuntimeConfig::default());
+        let mut llama = engine(RuntimeConfig::llama_cpp_like());
+        let t_pi2 = pi2.decode_run(1, 40).tokens_per_s();
+        let mut llama_m = RunMetrics::new();
+        for _ in 0..8 {
+            let s = llama.decode_step(1);
+            llama_m.push_step(&s);
+        }
+        let t_llama = llama_m.tokens_per_s();
+        let ratio = t_pi2 / t_llama;
+        assert!(ratio > 8.0, "pi2 {t_pi2} vs llama {t_llama} (ratio {ratio})");
+    }
+
+    #[test]
+    fn pi2_beats_llm_flash_by_factors() {
+        // Fig.7: 3.84× average over LLMFlash on OnePlus 12.
+        let mut pi2 = engine(RuntimeConfig::default());
+        let mut flash = engine(RuntimeConfig::llm_flash_like());
+        let t_pi2 = pi2.decode_run(1, 40).tokens_per_s();
+        let t_flash = flash.decode_run(1, 40).tokens_per_s();
+        let ratio = t_pi2 / t_flash;
+        assert!(ratio > 1.8 && ratio < 12.0,
+                "pi2 {t_pi2} vs flash {t_flash} (ratio {ratio})");
+    }
+
+    #[test]
+    fn pi2_io_share_is_small_flash_io_share_is_large() {
+        // Table 4: PI2 ≈ 14% IO, LLMFlash ≈ 77% IO.
+        let mut pi2 = engine(RuntimeConfig::default());
+        pi2.decode_run(1, 40);
+        let pi2_io = pi2.metrics.io_share();
+        let mut flash = engine(RuntimeConfig::llm_flash_like());
+        flash.decode_run(1, 40);
+        let flash_io = flash.metrics.io_share();
+        assert!(pi2_io < 0.45, "pi2 io share {pi2_io}");
+        assert!(flash_io > 0.38, "flash io share {flash_io}");
+        assert!(flash_io > pi2_io + 0.15, "gap: pi2 {pi2_io} flash {flash_io}");
+    }
+
+    #[test]
+    fn silu_model_speedup_is_more_modest() {
+        // Table 6: SiLU ≈ 2.4× vs ReLU ≈ 4.6× over LLMFlash.
+        let silu_pi2 = SimEngine::new(oneplus_12(), mistral_7b_silu(),
+                                      RuntimeConfig::default())
+            .decode_run(1, 30).tokens_per_s();
+        let silu_flash = SimEngine::new(oneplus_12(), mistral_7b_silu(),
+                                        RuntimeConfig::llm_flash_like())
+            .decode_run(1, 30).tokens_per_s();
+        let relu_pi2 = engine(RuntimeConfig::default())
+            .decode_run(1, 30).tokens_per_s();
+        let relu_flash = engine(RuntimeConfig::llm_flash_like())
+            .decode_run(1, 30).tokens_per_s();
+        let silu_ratio = silu_pi2 / silu_flash;
+        let relu_ratio = relu_pi2 / relu_flash;
+        assert!(relu_ratio > silu_ratio,
+                "relu {relu_ratio} should beat silu {silu_ratio}");
+    }
+
+    #[test]
+    fn mixtral_47b_runs_at_usable_speed_with_19gb() {
+        // §7.2.3: 11.68 tok/s at 19GB.
+        let cfg = RuntimeConfig {
+            memory_budget: 19 * 1024 * 1024 * 1024,
+            ..Default::default()
+        };
+        let mut e = SimEngine::new(oneplus_12(), mixtral_47b(), cfg);
+        let tps = e.decode_run(1, 30).tokens_per_s();
+        assert!(tps > 3.0, "mixtral 19GB {tps} tok/s");
+    }
+
+    #[test]
+    fn memory_scaling_is_monotone() {
+        // Fig.10: decode speed scales with memory budget.
+        let gb = 1024 * 1024 * 1024u64;
+        let mut speeds = Vec::new();
+        for mem in [7, 11, 15, 19] {
+            let cfg = RuntimeConfig {
+                memory_budget: mem * gb,
+                ..Default::default()
+            };
+            let mut e = SimEngine::new(oneplus_12(), mixtral_47b(), cfg);
+            speeds.push(e.decode_run(1, 25).tokens_per_s());
+        }
+        for w in speeds.windows(2) {
+            assert!(w[1] > w[0] * 0.95, "speeds {speeds:?}");
+        }
+        assert!(speeds[3] > speeds[0] * 1.5, "speeds {speeds:?}");
+    }
+
+    #[test]
+    fn in_memory_beats_offloaded() {
+        let mut inmem = engine(RuntimeConfig {
+            offload_ffn_frac: 0.0,
+            ..Default::default()
+        });
+        let mut off = engine(RuntimeConfig::default());
+        let t_in = inmem.decode_run(1, 25).tokens_per_s();
+        let t_off = off.decode_run(1, 25).tokens_per_s();
+        assert!(t_in > t_off, "{t_in} vs {t_off}");
+    }
+
+    #[test]
+    fn latency_tail_exists() {
+        // Table 5: P99 latency is meaningfully above the mean.
+        let mut e = engine(RuntimeConfig::default());
+        e.decode_run(1, 400);
+        let (mean, _p50, p90, p99) = e.metrics.latency_percentiles_ms();
+        assert!(p99 > mean * 1.05, "mean {mean} p99 {p99}");
+        assert!(p99 >= p90);
+    }
+
+    #[test]
+    fn batch_increases_throughput() {
+        let mut e = engine(RuntimeConfig { offload_ffn_frac: 0.0, ..Default::default() });
+        let s1 = e.decode_step(1);
+        let s4 = e.decode_step(4);
+        let tps1 = 1.0 / s1.step_s;
+        let tps4 = 4.0 / s4.step_s;
+        assert!(tps4 > tps1 * 1.3, "b1 {tps1} b4 {tps4}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = engine(RuntimeConfig::default());
+        let mut b = engine(RuntimeConfig::default());
+        let sa = a.decode_step(1);
+        let sb = b.decode_step(1);
+        assert_eq!(sa.step_s, sb.step_s);
+        assert_eq!(sa.io_bytes, sb.io_bytes);
+    }
+}

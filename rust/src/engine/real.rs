@@ -1,0 +1,740 @@
+//! The real serving engine: PJRT executables for the NPU side, native
+//! Rust sparse kernels for the CPU side, real file IO (UFS-throttled) for
+//! offloaded neuron bundles. Python is never on this path — only the AOT
+//! artifacts are.
+//!
+//! Faithfulness map (paper → here):
+//!   NPU static graph table (§4.1.3)  → one compiled PJRT executable per
+//!                                       (kind, batch, hot_k); switching
+//!                                       ratio = switching executable
+//!   CPU NEON sparse kernels (§4.1.2) → native Rust row-gathered GLU
+//!   UFS random bundle reads (§4.4)   → pread on the bundle-layout file,
+//!                                       wrapped in ThrottledFile
+//!   neuron cache cold region (§4.2)  → NeuronCache LRU + bundle store
+//!   cluster pipeline (§4.3)          → IO thread streams missing bundles
+//!                                       over a channel while compute
+//!                                       drains hits, then arrivals
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::mpsc;
+
+use anyhow::{ensure, Result};
+
+use crate::cache::{Access, NeuronCache};
+use crate::config::CoreClass;
+use crate::metrics::{RunMetrics, StepMetrics};
+use crate::model::{ModelDims, Predictor, WeightFile, Weights};
+use crate::runtime::{Runtime, Tensor};
+use crate::storage::{FlashFile, ThrottledFile, UfsModel};
+
+/// Options for the real engine.
+#[derive(Debug, Clone)]
+pub struct RealEngineOptions {
+    /// Neurons per layer pinned hot (must be one of dims.hot_ks, or
+    /// usize::MAX to pick per batch from the table).
+    pub hot_k: usize,
+    /// Cold cache capacity in neurons (whole model).
+    pub cold_cache_neurons: usize,
+    /// Inject UFS latencies on flash reads.
+    pub throttle_io: bool,
+    /// Compute every cold neuron exactly (bypasses the predictor; used by
+    /// correctness tests to compare against the dense graph).
+    pub exact_cold: bool,
+    /// Predictor sketch rank.
+    pub predictor_rank: usize,
+    pub seed: u64,
+}
+
+impl Default for RealEngineOptions {
+    fn default() -> Self {
+        RealEngineOptions {
+            hot_k: usize::MAX,
+            cold_cache_neurons: 4096,
+            throttle_io: true,
+            exact_cold: false,
+            predictor_rank: 64,
+            seed: 42,
+        }
+    }
+}
+
+/// The engine itself: owns the PJRT runtime, resident weights, the
+/// segmented cache, and per-layer KV state for one decode batch.
+pub struct RealEngine {
+    pub rt: Runtime,
+    pub dims: ModelDims,
+    pub(crate) weights: Weights,
+    wfile: WeightFile,
+    flash: ThrottledFile,
+    predictors: Vec<Predictor>,
+    cache: NeuronCache,
+    /// Resident cold bundle data keyed by cache id.
+    cold_store: HashMap<u32, Vec<f32>>,
+    /// Pinned hot-prefix weight tensors per (layer, hot_k).
+    pub(crate) hot_tensors: HashMap<(usize, usize), [Tensor; 4]>,
+    /// Pre-encoded XLA literals for static weights (§Perf: encoding a
+    /// literal copies the buffer, so resident weights are encoded ONCE —
+    /// the analog of the paper's UMA-resident fixed/hot cache regions).
+    attn_lits: Vec<Vec<xla::Literal>>,
+    hot_lits: HashMap<(usize, usize), Vec<xla::Literal>>,
+    lm_lits: Vec<xla::Literal>,
+    /// KV caches per layer: [B, S, KVH, DH]; the host copy feeds prefill
+    /// installs, the literals feed the decode loop output→input.
+    pub(crate) kv: Vec<(Tensor, Tensor)>,
+    kv_lits: Vec<(xla::Literal, xla::Literal)>,
+    pub batch: usize,
+    pub pos: usize,
+    pub opts: RealEngineOptions,
+    pub metrics: RunMetrics,
+}
+
+impl RealEngine {
+    /// Build from artifacts + a weight file (created if absent).
+    pub fn new(
+        artifacts: &Path,
+        weight_path: &Path,
+        batch: usize,
+        opts: RealEngineOptions,
+    ) -> Result<RealEngine> {
+        let chunk_needed = |n: &str| -> bool {
+            // compile only what this batch size / prefill needs
+            n.contains(&format!("_b{batch}")) || n.starts_with("prefill")
+        };
+        let rt = Runtime::load_filtered(artifacts, chunk_needed)?;
+        let dims = rt.dims.clone();
+        ensure!(
+            dims.batches.contains(&batch),
+            "batch {batch} has no compiled graph (available: {:?})",
+            dims.batches
+        );
+        let weights = Weights::generate(&dims, opts.seed);
+        if !weight_path.exists() {
+            WeightFile::write(&weights, weight_path)?;
+        }
+        let wfile = WeightFile::open(&dims, weight_path)?;
+        let ufs = UfsModel::new(crate::config::oneplus_12().ufs);
+        let mut flash = ThrottledFile::new(
+            FlashFile::open(weight_path)?, ufs, CoreClass::Big);
+        flash.throttle = opts.throttle_io;
+
+        let predictors = (0..dims.layers)
+            .map(|l| {
+                Predictor::build(&dims, &weights.layers[l],
+                                 opts.predictor_rank, opts.seed + l as u64)
+            })
+            .collect();
+        let hot_k0 = Self::resolve_hot_k(&dims, opts.hot_k, batch);
+        let cache = NeuronCache::new(
+            dims.layers, dims.inter, hot_k0, opts.cold_cache_neurons);
+        let kv = (0..dims.layers)
+            .map(|_| {
+                let shape = vec![batch, dims.seq_max, dims.kv_heads, dims.head_dim()];
+                (Tensor::zeros(shape.clone()), Tensor::zeros(shape))
+            })
+            .collect();
+        let mut engine = RealEngine {
+            rt,
+            dims,
+            weights,
+            wfile,
+            flash,
+            predictors,
+            cache,
+            cold_store: HashMap::new(),
+            hot_tensors: HashMap::new(),
+            attn_lits: Vec::new(),
+            hot_lits: HashMap::new(),
+            lm_lits: Vec::new(),
+            kv,
+            kv_lits: Vec::new(),
+            batch,
+            pos: 0,
+            opts,
+            metrics: RunMetrics::new(),
+        };
+        engine.pin_hot_tensors(engine.cache.hot_per_layer);
+        engine.encode_static_literals()?;
+        engine.refresh_kv_literals()?;
+        Ok(engine)
+    }
+
+    fn resolve_hot_k(dims: &ModelDims, requested: usize, batch: usize) -> usize {
+        if requested != usize::MAX {
+            return requested;
+        }
+        // §4.1.3: bigger batch → bigger hot cluster on the NPU
+        let ks = &dims.hot_ks;
+        let idx = match batch {
+            0 | 1 => 0,
+            2 => ks.len().saturating_sub(2),
+            _ => ks.len() - 1,
+        };
+        ks[idx.min(ks.len() - 1)]
+    }
+
+    /// Assemble + pin the hot-prefix tensors for every layer (the hot
+    /// region of the cache, §4.2).
+    fn pin_hot_tensors(&mut self, hot_k: usize) {
+        if hot_k == 0 {
+            return;
+        }
+        let h = self.dims.hidden;
+        for l in 0..self.dims.layers {
+            if self.hot_tensors.contains_key(&(l, hot_k)) {
+                continue;
+            }
+            let lw = &self.weights.layers[l];
+            let tensors = [
+                Tensor::f32(vec![hot_k, h], lw.gate[..hot_k * h].to_vec()),
+                Tensor::f32(vec![hot_k, h], lw.up[..hot_k * h].to_vec()),
+                Tensor::f32(vec![hot_k], lw.gate_bias[..hot_k].to_vec()),
+                Tensor::f32(vec![hot_k, h], lw.down[..hot_k * h].to_vec()),
+            ];
+            self.hot_tensors.insert((l, hot_k), tensors);
+        }
+    }
+
+    /// Encode every static weight tensor to an XLA literal once.
+    /// (§Perf note: a device-resident PjRtBuffer path via execute_b was
+    /// tried and reverted — the xla 0.1.6 crate segfaults on tuple-rooted
+    /// executables under execute_b; literal reuse is the stable fast path.)
+    fn encode_static_literals(&mut self) -> Result<()> {
+        self.attn_lits = (0..self.dims.layers)
+            .map(|l| {
+                self.attn_weight_tensors(l)
+                    .iter()
+                    .map(|t| t.to_literal())
+                    .collect::<Result<Vec<_>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        for (key, tensors) in &self.hot_tensors {
+            if !self.hot_lits.contains_key(key) {
+                let lits = tensors
+                    .iter()
+                    .map(|t| t.to_literal())
+                    .collect::<Result<Vec<_>>>()?;
+                self.hot_lits.insert(*key, lits);
+            }
+        }
+        let d = &self.dims;
+        self.lm_lits = vec![
+            Tensor::f32(vec![d.hidden], self.weights.norm_f.clone()).to_literal()?,
+            Tensor::f32(vec![d.vocab, d.hidden], self.weights.w_lm.clone())
+                .to_literal()?,
+        ];
+        Ok(())
+    }
+
+    /// Rebuild KV literals from the host copies (after reset / prefill).
+    fn refresh_kv_literals(&mut self) -> Result<()> {
+        self.kv_lits = self
+            .kv
+            .iter()
+            .map(|(k, v)| Ok((k.to_literal()?, v.to_literal()?)))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(())
+    }
+
+    /// Reset sequence state (KV caches + position) for a new batch group.
+    pub fn reset(&mut self) {
+        let d = &self.dims;
+        let shape = vec![self.batch, d.seq_max, d.kv_heads, d.head_dim()];
+        for kv in self.kv.iter_mut() {
+            *kv = (Tensor::zeros(shape.clone()), Tensor::zeros(shape.clone()));
+        }
+        self.pos = 0;
+        self.refresh_kv_literals().expect("kv literal rebuild");
+    }
+
+    /// Current hot cluster size per layer.
+    pub fn hot_k(&self) -> usize {
+        self.cache.hot_per_layer
+    }
+
+    /// Switch the active NPU graph point (dynamic ratio adjustment,
+    /// §4.1.3): picks a different pre-compiled executable and rebalances
+    /// the cold region.
+    pub fn set_hot_k(&mut self, hot_k: usize) -> Result<()> {
+        ensure!(self.dims.hot_ks.contains(&hot_k), "hot_k {hot_k} not in table");
+        self.pin_hot_tensors(hot_k);
+        self.encode_static_literals()?;
+        let budget = self.opts.cold_cache_neurons
+            + self.cache.hot_per_layer * self.dims.layers;
+        self.cache.set_hot_per_layer(hot_k, budget);
+        Ok(())
+    }
+
+    pub(crate) fn attn_weight_tensors(&self, l: usize) -> Vec<Tensor> {
+        let d = &self.dims;
+        let lw = &self.weights.layers[l];
+        vec![
+            Tensor::f32(vec![d.hidden], lw.norm1.clone()),
+            Tensor::f32(vec![d.hidden, d.hidden], lw.wq.clone()),
+            Tensor::f32(vec![d.kv_dim(), d.hidden], lw.wk.clone()),
+            Tensor::f32(vec![d.kv_dim(), d.hidden], lw.wv.clone()),
+            Tensor::f32(vec![d.hidden, d.hidden], lw.wo.clone()),
+            Tensor::f32(vec![d.hidden], lw.norm2.clone()),
+        ]
+    }
+
+    /// CPU cold path for one layer: predictor → gather bundles (IO thread
+    /// streams misses while compute drains hits) → sparse GLU.
+    pub(crate) fn cold_ffn(&mut self, layer: usize, ffn_in: &[f32],
+                           step: &mut StepMetrics) -> Result<Vec<f32>> {
+        let d = &self.dims;
+        let (b, h) = (self.batch, d.hidden);
+        let hot_k = self.cache.hot_per_layer;
+        if hot_k >= d.inter {
+            return Ok(vec![0.0; b * h]);
+        }
+        // union of predicted-active cold neurons across the batch
+        let active: Vec<usize> = if self.opts.exact_cold {
+            (hot_k..d.inter).collect()
+        } else {
+            let mut set = std::collections::BTreeSet::new();
+            for row in 0..b {
+                let x = &ffn_in[row * h..(row + 1) * h];
+                for n in self.predictors[layer].predict_range(
+                    x, &self.weights.layers[layer].gate_bias, hot_k, d.inter) {
+                    set.insert(n);
+                }
+            }
+            set.into_iter().collect()
+        };
+        step.neurons_computed += active.len() as u64;
+
+        // split into resident (cache hit) and missing neurons
+        let mut y = vec![0.0f32; b * h];
+        let mut misses = Vec::new();
+        for &n in &active {
+            let id = self.cache.id(layer, n);
+            if self.cold_store.contains_key(&id) {
+                self.cache.access(layer, n);
+                step.cache_hits += 1;
+                let bundle = &self.cold_store[&id];
+                accumulate_neuron(bundle, ffn_in, b, h, &mut y);
+            } else {
+                misses.push(n);
+            }
+        }
+        // stream misses: IO thread reads bundles from flash while the
+        // compute side accumulates them as they arrive (§4.3's pipeline)
+        if !misses.is_empty() {
+            let n_f32 = 3 * h + 1;
+            let io_start = std::time::Instant::now();
+            let mut arrived: Vec<(usize, Vec<f32>)> = Vec::with_capacity(misses.len());
+            {
+                let (tx, rx) = mpsc::channel::<(usize, Vec<f32>)>();
+                let wfile = &self.wfile;
+                let flash = &self.flash;
+                let misses_ref = &misses;
+                std::thread::scope(|scope| {
+                    scope.spawn(move || {
+                        for &n in misses_ref {
+                            let off = wfile.bundle_offset(layer, n);
+                            match flash.read_f32s(off, n_f32) {
+                                Ok(data) => {
+                                    if tx.send((n, data)).is_err() {
+                                        break;
+                                    }
+                                }
+                                Err(_) => break,
+                            }
+                        }
+                    });
+                    for (n, data) in rx.iter() {
+                        accumulate_neuron(&data, ffn_in, b, h, &mut y);
+                        arrived.push((n, data));
+                    }
+                });
+            }
+            step.io_busy_s += io_start.elapsed().as_secs_f64();
+            for (n, data) in arrived {
+                let id = self.cache.id(layer, n);
+                match self.cache.access(layer, n) {
+                    Access::Miss { evicted } => {
+                        step.cache_misses += 1;
+                        step.io_bytes += (n_f32 * 4) as u64;
+                        step.io_ops += 1;
+                        if let Some(e) = evicted {
+                            self.cold_store.remove(&e);
+                        }
+                        self.cold_store.insert(id, data);
+                    }
+                    Access::Hit => step.cache_hits += 1,
+                }
+            }
+        }
+        Ok(y)
+    }
+
+    /// One decode step for the current batch; returns next token ids.
+    pub fn decode_step(&mut self, tokens: &[u32]) -> Result<Vec<u32>> {
+        ensure!(tokens.len() == self.batch, "token count != batch");
+        ensure!(self.pos < self.dims.seq_max, "KV cache full");
+        let start = std::time::Instant::now();
+        let mut step = StepMetrics::default();
+        let d = self.dims.clone();
+        let (b, h) = (self.batch, d.hidden);
+        // embedding lookup
+        let mut x = vec![0f32; b * h];
+        for (row, &tok) in tokens.iter().enumerate() {
+            let t = (tok as usize).min(d.vocab - 1);
+            x[row * h..(row + 1) * h]
+                .copy_from_slice(&self.weights.embedding[t * h..(t + 1) * h]);
+        }
+        let hot_k = self.cache.hot_per_layer;
+        let attn_name = Runtime::decode_attn_name(b);
+        let ffn_name = Runtime::decode_ffn_name(b, hot_k);
+        let pos_lit = Tensor::i32_scalar(self.pos as i32).to_literal()?;
+        for l in 0..d.layers {
+            // attention graph (NPU side): norm → qkv → rope → cache insert
+            // → GQA (Pallas kernel) → out-proj → residual + FFN input norm
+            let x_lit = Tensor::f32(vec![b, h], x.clone()).to_literal()?;
+            let mut inputs: Vec<&xla::Literal> = vec![&x_lit];
+            inputs.extend(self.attn_lits[l].iter());
+            inputs.push(&self.kv_lits[l].0);
+            inputs.push(&self.kv_lits[l].1);
+            inputs.push(&pos_lit);
+            let npu_start = std::time::Instant::now();
+            let mut out = self.rt.execute_raw(&attn_name, &inputs)?;
+            let vc = out.pop().unwrap();
+            let kc = out.pop().unwrap();
+            let ffn_in_t = Tensor::from_literal(&out.pop().unwrap())?;
+            let x_attn = Tensor::from_literal(&out.pop().unwrap())?;
+            // KV literals flow output→input with no host round-trip
+            self.kv_lits[l] = (kc, vc);
+            // NPU hot-cluster FFN (static graph for (batch, hot_k))
+            let y_hot = if hot_k > 0 {
+                let ffn_in_lit = Tensor::f32(vec![b, h], ffn_in_t.as_f32().to_vec())
+                    .to_literal()?;
+                let ht = &self.hot_lits[&(l, hot_k)];
+                let ffn_inputs: Vec<&xla::Literal> =
+                    std::iter::once(&ffn_in_lit).chain(ht.iter()).collect();
+                let r = self.rt.execute_raw(&ffn_name, &ffn_inputs)?;
+                Tensor::from_literal(&r[0])?.into_f32()
+            } else {
+                vec![0.0; b * h]
+            };
+            step.npu_busy_s += npu_start.elapsed().as_secs_f64();
+            // CPU cold path
+            let cpu_start = std::time::Instant::now();
+            let y_cold = self.cold_ffn(l, ffn_in_t.as_f32(), &mut step)?;
+            step.cpu_busy_s += cpu_start.elapsed().as_secs_f64();
+            // residual merge (CPU side, §4.1.2)
+            let xa = x_attn.as_f32();
+            for i in 0..b * h {
+                x[i] = xa[i] + y_hot[i] + y_cold[i];
+            }
+        }
+        // lm head + greedy sampling
+        let x_lit = Tensor::f32(vec![b, h], x).to_literal()?;
+        let lm_inputs: Vec<&xla::Literal> =
+            std::iter::once(&x_lit).chain(self.lm_lits.iter()).collect();
+        let logits = self.rt.execute_raw(&Runtime::lm_head_name(b), &lm_inputs)?;
+        let lv_t = Tensor::from_literal(&logits[0])?;
+        let lv = lv_t.as_f32();
+        let next: Vec<u32> = (0..b)
+            .map(|row| {
+                lv[row * d.vocab..(row + 1) * d.vocab]
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as u32)
+                    .unwrap()
+            })
+            .collect();
+        self.pos += 1;
+        step.step_s = start.elapsed().as_secs_f64();
+        self.metrics.push_step(&step);
+        Ok(next)
+    }
+
+    /// Prefill one prompt (row `row` of the batch) through the per-layer
+    /// prefill graphs, streaming offloaded weights with one sequential
+    /// read per layer (§4.1.1). Returns the first generated token.
+    pub fn prefill(&mut self, row: usize, prompt: &[u32]) -> Result<u32> {
+        let d = self.dims.clone();
+        let t = d.prefill_chunk;
+        ensure!(row < self.batch, "row out of range");
+        ensure!(!prompt.is_empty() && prompt.len() <= t,
+                "prompt must be 1..={t} tokens");
+        let h = d.hidden;
+        // right-pad: causal attention keeps positions < len exact
+        let mut x = vec![0f32; t * h];
+        for (i, &tok) in prompt.iter().enumerate() {
+            let tok = (tok as usize).min(d.vocab - 1);
+            x[i * h..(i + 1) * h]
+                .copy_from_slice(&self.weights.embedding[tok * h..(tok + 1) * h]);
+        }
+        let name = Runtime::prefill_name(t);
+        for l in 0..d.layers {
+            // stream the layer's full FFN weights: hot prefix is resident;
+            // the cold suffix arrives via one big sequential read (§4.4)
+            let hot_k = self.cache.hot_per_layer;
+            let io_start = std::time::Instant::now();
+            let (gate, up, bias, down) = {
+                let lw = &self.weights.layers[l];
+                if hot_k >= d.inter {
+                    (lw.gate.clone(), lw.up.clone(),
+                     lw.gate_bias.clone(), lw.down.clone())
+                } else {
+                    let n_f32 = (3 * h + 1) * (d.inter - hot_k);
+                    let off = self.wfile.bundle_offset(l, hot_k);
+                    let cold = self.flash.read_f32s(off, n_f32)?;
+                    let mut gate = lw.gate[..hot_k * h].to_vec();
+                    let mut up = lw.up[..hot_k * h].to_vec();
+                    let mut bias = lw.gate_bias[..hot_k].to_vec();
+                    let mut down = lw.down[..hot_k * h].to_vec();
+                    for chunk in cold.chunks_exact(3 * h + 1) {
+                        gate.extend_from_slice(&chunk[..h]);
+                        up.extend_from_slice(&chunk[h..2 * h]);
+                        bias.push(chunk[2 * h]);
+                        down.extend_from_slice(&chunk[2 * h + 1..]);
+                    }
+                    (gate, up, bias, down)
+                }
+            };
+            self.metrics.io_busy_s += io_start.elapsed().as_secs_f64();
+            let mut inputs = vec![Tensor::f32(vec![t, h], x.clone())];
+            inputs.extend(self.attn_weight_tensors(l));
+            inputs.push(Tensor::f32(vec![d.inter, h], gate));
+            inputs.push(Tensor::f32(vec![d.inter, h], up));
+            inputs.push(Tensor::f32(vec![d.inter], bias));
+            inputs.push(Tensor::f32(vec![d.inter, h], down));
+            let mut out = self.rt.execute(&name, &inputs)?;
+            let v = out.pop().unwrap();
+            let k = out.pop().unwrap();
+            x = out.pop().unwrap().into_f32();
+            // install K/V rows 0..len for this batch row
+            self.install_kv(l, row, &k, &v, prompt.len());
+        }
+        self.pos = prompt.len();
+        self.refresh_kv_literals()?;
+        let last = &x[(prompt.len() - 1) * h..prompt.len() * h];
+        Ok(self.cpu_lm_head_argmax(last))
+    }
+
+    fn install_kv(&mut self, layer: usize, row: usize, k: &Tensor, v: &Tensor,
+                  len: usize) {
+        let d = &self.dims;
+        let (s, kvh, dh) = (d.seq_max, d.kv_heads, d.head_dim());
+        let per_tok = kvh * dh;
+        let (kc, vc) = &mut self.kv[layer];
+        let kc_data = match &mut kc.data {
+            crate::runtime::TensorData::F32(a) => a,
+            _ => unreachable!(),
+        };
+        let ks = k.as_f32();
+        for tpos in 0..len {
+            let dst = row * s * per_tok + tpos * per_tok;
+            kc_data[dst..dst + per_tok]
+                .copy_from_slice(&ks[tpos * per_tok..(tpos + 1) * per_tok]);
+        }
+        let vc_data = match &mut vc.data {
+            crate::runtime::TensorData::F32(a) => a,
+            _ => unreachable!(),
+        };
+        let vs = v.as_f32();
+        for tpos in 0..len {
+            let dst = row * s * per_tok + tpos * per_tok;
+            vc_data[dst..dst + per_tok]
+                .copy_from_slice(&vs[tpos * per_tok..(tpos + 1) * per_tok]);
+        }
+    }
+
+    fn cpu_lm_head_argmax(&self, x: &[f32]) -> u32 {
+        let d = &self.dims;
+        let h = d.hidden;
+        let ms = x.iter().map(|v| v * v).sum::<f32>() / h as f32;
+        let scale = 1.0 / (ms + 1e-5).sqrt();
+        let mut best = (0u32, f32::NEG_INFINITY);
+        for v in 0..d.vocab {
+            let row = &self.weights.w_lm[v * h..(v + 1) * h];
+            let logit: f32 = x
+                .iter()
+                .zip(row)
+                .zip(&self.weights.norm_f)
+                .map(|((xi, wi), g)| xi * scale * g * wi)
+                .sum();
+            if logit > best.1 {
+                best = (v as u32, logit);
+            }
+        }
+        best.0
+    }
+}
+
+/// Accumulate one cold neuron's GLU contribution into y [B,H] — the
+/// CPU-side sparse kernel of the hybrid split (§4.1.2).
+pub fn accumulate_neuron(bundle: &[f32], ffn_in: &[f32], b: usize, h: usize,
+                     y: &mut [f32]) {
+    let gate = &bundle[..h];
+    let up = &bundle[h..2 * h];
+    let bias = bundle[2 * h];
+    let down = &bundle[2 * h + 1..];
+    for row in 0..b {
+        let x = &ffn_in[row * h..(row + 1) * h];
+        let mut pre = bias;
+        let mut uv = 0f32;
+        for i in 0..h {
+            pre += x[i] * gate[i];
+            uv += x[i] * up[i];
+        }
+        if pre > 0.0 {
+            let act = pre * uv;
+            let yr = &mut y[row * h..(row + 1) * h];
+            for i in 0..h {
+                yr[i] += act * down[i];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<&'static Path> {
+        let p = Path::new("artifacts/selftest");
+        if p.join("manifest.json").exists() {
+            Some(p)
+        } else {
+            eprintln!("skipping: run `make artifacts` first");
+            None
+        }
+    }
+
+    fn weight_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("pi2_real_{tag}_{}", std::process::id()))
+    }
+
+    fn opts(exact: bool, hot_k: usize) -> RealEngineOptions {
+        RealEngineOptions {
+            hot_k,
+            throttle_io: false,
+            exact_cold: exact,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn hybrid_split_matches_dense_graph() {
+        // NPU hot prefix + CPU cold suffix must reproduce the full dense
+        // decode layer (modulo f32 accumulation order).
+        let Some(dir) = artifacts() else { return };
+        let wp = weight_path("dense");
+        let mut e = RealEngine::new(dir, &wp, 1, opts(true, 128)).unwrap();
+        let d = e.dims.clone();
+        let x: Vec<f32> =
+            e.weights.embedding[5 * d.hidden..6 * d.hidden].to_vec();
+        // reference: dense graph on the same weights
+        let mut inputs = vec![Tensor::f32(vec![1, d.hidden], x.clone())];
+        inputs.extend(e.attn_weight_tensors(0));
+        {
+            let lw = &e.weights.layers[0];
+            inputs.push(Tensor::f32(vec![d.inter, d.hidden], lw.gate.clone()));
+            inputs.push(Tensor::f32(vec![d.inter, d.hidden], lw.up.clone()));
+            inputs.push(Tensor::f32(vec![d.inter], lw.gate_bias.clone()));
+            inputs.push(Tensor::f32(vec![d.inter, d.hidden], lw.down.clone()));
+        }
+        inputs.push(e.kv[0].0.clone());
+        inputs.push(e.kv[0].1.clone());
+        inputs.push(Tensor::i32_scalar(0));
+        let dense = e.rt.execute("decode_dense_b1", &inputs).unwrap();
+        let want = dense[0].as_f32().to_vec();
+
+        // engine path: attention graph + hot ffn graph + exact cold
+        let mut step = StepMetrics::default();
+        let mut attn_in = vec![Tensor::f32(vec![1, d.hidden], x)];
+        attn_in.extend(e.attn_weight_tensors(0));
+        attn_in.push(e.kv[0].0.clone());
+        attn_in.push(e.kv[0].1.clone());
+        attn_in.push(Tensor::i32_scalar(0));
+        let mut out = e.rt.execute("decode_attn_b1", &attn_in).unwrap();
+        let _vc = out.pop().unwrap();
+        let _kc = out.pop().unwrap();
+        let ffn_in_t = out.pop().unwrap();
+        let x_attn = out.pop().unwrap();
+        let ht = e.hot_tensors[&(0usize, 128usize)].clone();
+        let y_hot = e
+            .rt
+            .execute("decode_ffn_b1_k128", &[
+                ffn_in_t.clone(), ht[0].clone(), ht[1].clone(),
+                ht[2].clone(), ht[3].clone(),
+            ])
+            .unwrap()[0]
+            .as_f32()
+            .to_vec();
+        let y_cold = e.cold_ffn(0, ffn_in_t.as_f32(), &mut step).unwrap();
+        let mut max_err = 0f32;
+        for i in 0..d.hidden {
+            let got = x_attn.as_f32()[i] + y_hot[i] + y_cold[i];
+            max_err = max_err.max((got - want[i]).abs());
+        }
+        assert!(max_err < 2e-4, "hybrid vs dense max err {max_err}");
+        std::fs::remove_file(wp).ok();
+    }
+
+    #[test]
+    fn decode_steps_produce_tokens_and_metrics() {
+        let Some(dir) = artifacts() else { return };
+        let wp = weight_path("decode");
+        let mut e = RealEngine::new(dir, &wp, 1, opts(false, 128)).unwrap();
+        let mut tok = vec![3u32];
+        for _ in 0..4 {
+            tok = e.decode_step(&tok).unwrap();
+            assert!((tok[0] as usize) < e.dims.vocab);
+        }
+        assert_eq!(e.metrics.steps, 4);
+        assert!(e.metrics.cache_hits + e.metrics.cache_misses > 0);
+        assert_eq!(e.pos, 4);
+        std::fs::remove_file(wp).ok();
+    }
+
+    #[test]
+    fn prefill_then_decode_is_consistent() {
+        // the first generated token after prefill must equal the one from
+        // feeding the prompt token by token through decode steps.
+        let Some(dir) = artifacts() else { return };
+        let wp = weight_path("prefill");
+        let prompt = [3u32, 9, 17, 4];
+        let mut a = RealEngine::new(dir, &wp, 1, opts(true, 128)).unwrap();
+        let next_a = a.prefill(0, &prompt).unwrap();
+        let mut b = RealEngine::new(dir, &wp, 1, opts(true, 128)).unwrap();
+        let mut next_b = 0u32;
+        for (i, &t) in prompt.iter().enumerate() {
+            let out = b.decode_step(&[t]).unwrap();
+            if i == prompt.len() - 1 {
+                next_b = out[0];
+            }
+        }
+        assert_eq!(next_a, next_b, "prefill vs step-by-step first token");
+        std::fs::remove_file(wp).ok();
+    }
+
+    #[test]
+    fn dynamic_hot_k_switch_keeps_outputs_exact() {
+        // switching the NPU graph point must not change semantics when the
+        // cold path is exact.
+        let Some(dir) = artifacts() else { return };
+        let wp = weight_path("switch");
+        let mut e128 = RealEngine::new(dir, &wp, 1, opts(true, 128)).unwrap();
+        let mut e256 = RealEngine::new(dir, &wp, 1, opts(true, 256)).unwrap();
+        let t1 = e128.decode_step(&[7]).unwrap();
+        let t2 = e256.decode_step(&[7]).unwrap();
+        assert_eq!(t1, t2, "hot_k 128 vs 256 decode divergence");
+        std::fs::remove_file(wp).ok();
+    }
+
+    #[test]
+    fn batch2_decodes_all_rows() {
+        let Some(dir) = artifacts() else { return };
+        let wp = weight_path("b2");
+        let mut e = RealEngine::new(dir, &wp, 2, opts(false, 128)).unwrap();
+        let out = e.decode_step(&[1, 2]).unwrap();
+        assert_eq!(out.len(), 2);
+        std::fs::remove_file(wp).ok();
+    }
+}

@@ -1,0 +1,25 @@
+//! # PowerInfer-2 reproduction
+//!
+//! A three-layer (Rust coordinator + JAX model + Pallas kernels, AOT via
+//! PJRT) reproduction of "PowerInfer-2: Fast Large Language Model
+//! Inference on a Smartphone" (Xue et al., 2024). See DESIGN.md for the
+//! system inventory and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod cache;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod metrics;
+pub mod model;
+pub mod pipeline;
+pub mod quant;
+pub mod runtime;
+pub mod sparsity;
+pub mod storage;
+pub mod tokenizer;
+pub mod util;
+pub mod xpu;
+pub mod engine;
+pub mod planner;
+pub mod experiments;
+pub mod trace;

@@ -1,0 +1,214 @@
+//! `pi2` — the PowerInfer-2 reproduction CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   plan        print the offline execution plan for a device/model pair
+//!   experiment  regenerate a paper table/figure (`all` for the suite)
+//!   simulate    run a decode/prefill simulation with explicit knobs
+//!   graphs      list the compiled NPU graph table from artifacts/
+
+use std::path::Path;
+
+use powerinfer2::config::{
+    device_preset, model_preset, oneplus_12, RuntimeConfig,
+};
+use powerinfer2::engine::SimEngine;
+use powerinfer2::experiments;
+use powerinfer2::planner::Planner;
+use powerinfer2::sparsity::ActivationModel;
+use powerinfer2::util::cli::Args;
+use powerinfer2::util::json::Json;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let code = match cmd {
+        "experiment" => cmd_experiment(&args),
+        "plan" => cmd_plan(&args),
+        "simulate" => cmd_simulate(&args),
+        "graphs" => cmd_graphs(&args),
+        "serve" => cmd_serve(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "pi2 — PowerInfer-2 reproduction (Rust + JAX + Pallas, AOT via PJRT)
+
+USAGE:
+  pi2 experiment <id|all>                 regenerate paper tables/figures
+  pi2 plan      [--device D] [--model M]  show the offline execution plan
+  pi2 simulate  [--device D] [--model M] [--system S] [--tokens N]
+                [--batch B] [--prompt P] [--offload F] [--mem GB]
+                [--config file.json]
+  pi2 graphs    [--artifacts DIR]         list compiled NPU graphs
+  pi2 serve     [--addr HOST:PORT] [--artifacts DIR] [--throttle]
+                line-protocol TCP server over the real PJRT engine
+
+DEVICES: oneplus12 (default), ace2
+MODELS:  bamboo-7b (default), mistral-7b, qwen2-7b, llama-13b, mixtral-47b
+SYSTEMS: powerinfer2 (default), llamacpp, llmflash, powerinfer1, qnn, mlc,
+         powerinfer2-cpuonly"
+    );
+}
+
+fn base_config(args: &Args) -> RuntimeConfig {
+    let mut cfg = experiments::system_cfg(args.opt_or("system", "powerinfer2"));
+    if let Some(path) = args.opt("config") {
+        match std::fs::read_to_string(path).map_err(|e| e.to_string()).and_then(
+            |text| Json::parse(&text).map_err(|e| e.to_string()),
+        ) {
+            Ok(json) => cfg.apply_json(&json),
+            Err(e) => {
+                eprintln!("warning: could not load --config {path}: {e}");
+            }
+        }
+    }
+    if let Some(f) = args.opt("offload") {
+        cfg.offload_ffn_frac = f.parse().unwrap_or(cfg.offload_ffn_frac);
+    }
+    if let Some(m) = args.opt("mem") {
+        cfg.memory_budget = (m.parse::<f64>().unwrap_or(0.0) * 1e9) as u64;
+    }
+    cfg.seed = args.opt_u64("seed", cfg.seed);
+    cfg
+}
+
+fn cmd_experiment(args: &Args) -> i32 {
+    let id = args.positional.get(1).map(String::as_str).unwrap_or("all");
+    if experiments::run(id) {
+        0
+    } else {
+        2
+    }
+}
+
+fn cmd_plan(args: &Args) -> i32 {
+    let dev = device_preset(args.opt_or("device", "oneplus12"))
+        .unwrap_or_else(oneplus_12);
+    let Some(spec) = model_preset(args.opt_or("model", "bamboo-7b")) else {
+        eprintln!("unknown model");
+        return 2;
+    };
+    let cfg = base_config(args);
+    let act = ActivationModel::for_model(&spec, cfg.seed);
+    let plan = Planner::new(&dev, &spec, &cfg, &act).generate();
+    println!("# Offline plan: {} on {}", spec.name, dev.name);
+    println!("memory: total {:.2}GB | fixed {:.2}GB | ffn cache {:.2}GB ({:.0}% of FFN resident)",
+        plan.budget.total as f64 / 1e9,
+        plan.budget.total_fixed() as f64 / 1e9,
+        plan.budget.ffn_cache as f64 / 1e9,
+        plan.budget.resident_ffn_frac() * 100.0);
+    println!("io core: {:?} | compute threads: {} | cluster: {} neurons",
+             plan.io_core, plan.compute_threads, plan.cluster_neurons);
+    println!("\nNPU graph table (one static graph per batch point, §4.1.3):");
+    println!("{:>7}{:>10}{:>16}", "batch", "hot-frac", "layer-cost (ms)");
+    for gp in &plan.graph_table {
+        println!("{:>7}{:>10.2}{:>16.3}", gp.batch, gp.hot_frac,
+                 gp.layer_cost_s * 1e3);
+    }
+    0
+}
+
+fn cmd_simulate(args: &Args) -> i32 {
+    let dev = device_preset(args.opt_or("device", "oneplus12"))
+        .unwrap_or_else(oneplus_12);
+    let Some(spec) = model_preset(args.opt_or("model", "bamboo-7b")) else {
+        eprintln!("unknown model");
+        return 2;
+    };
+    let cfg = base_config(args);
+    let tokens = args.opt_usize("tokens", 128);
+    let batch = args.opt_usize("batch", 1);
+    let prompt = args.opt_usize("prompt", 0);
+    let mut engine = SimEngine::new(dev.clone(), spec.clone(), cfg);
+    println!("# simulate: {} on {} ({:.0}% FFN resident)",
+             spec.name, dev.name,
+             engine.budget().resident_ffn_frac() * 100.0);
+    if prompt > 0 {
+        let r = engine.prefill_run(prompt, true);
+        println!("prefill: {} tokens in {:.2}s → {:.1} tok/s",
+                 prompt, r.total_s, r.tokens_per_s);
+    }
+    engine.decode_run(batch, tokens);
+    let m = &mut engine.metrics;
+    println!("decode:  {} tokens, batch {} → {:.2} tok/s", tokens, batch,
+             m.tokens_per_s() * batch as f64);
+    let (mean, p50, p90, p99) = m.latency_percentiles_ms();
+    println!("latency: mean {mean:.1}ms p50 {p50:.1} p90 {p90:.1} p99 {p99:.1}");
+    println!("io:      {:.1}% of critical path, {:.1}MB/token, miss rate {:.2}%",
+             m.io_share() * 100.0,
+             m.io_bytes as f64 / m.steps.max(1) as f64 / 1e6,
+             m.overall_miss_rate() * 100.0);
+    println!("dram bw: {:.1} GB/s mean", m.bandwidth_gbps.mean());
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    use powerinfer2::coordinator::Server;
+    use powerinfer2::engine::real::RealEngineOptions;
+    let artifacts = std::path::PathBuf::from(args.opt_or("artifacts", "artifacts"));
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("no artifacts — run `make artifacts` first");
+        return 2;
+    }
+    let weight_path = std::path::PathBuf::from(
+        args.opt_or("weights", "/tmp/pi2_serve_weights.bin"));
+    let opts = RealEngineOptions {
+        throttle_io: args.flag("throttle"),
+        ..Default::default()
+    };
+    let addr = args.opt_or("addr", "127.0.0.1:7071").to_string();
+    println!("compiling NPU graph table…");
+    let mut server = match Server::new(&artifacts, &weight_path, opts) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("startup failed: {e:#}");
+            return 1;
+        }
+    };
+    println!("serving on {addr} — one JSON request per line; {{\"cmd\":\"shutdown\"}} to stop");
+    if let Err(e) = server.run(&addr, None) {
+        eprintln!("server error: {e:#}");
+        return 1;
+    }
+    0
+}
+
+fn cmd_graphs(args: &Args) -> i32 {
+    let dir = args.opt_or("artifacts", "artifacts");
+    let manifest = Path::new(dir).join("manifest.json");
+    let Ok(text) = std::fs::read_to_string(&manifest) else {
+        eprintln!("no manifest at {} — run `make artifacts` first",
+                  manifest.display());
+        return 2;
+    };
+    let json = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("bad manifest: {e}");
+            return 2;
+        }
+    };
+    println!("# NPU graph table in {dir}");
+    println!("{:>26}{:>18}{:>8}{:>8}", "graph", "kind", "batch", "hot_k");
+    if let Some(graphs) = json.get("graphs").as_arr() {
+        for g in graphs {
+            println!("{:>26}{:>18}{:>8}{:>8}",
+                g.get("name").as_str().unwrap_or("?"),
+                g.get("meta").get("kind").as_str().unwrap_or("?"),
+                g.get("meta").get("batch").as_usize().unwrap_or(0),
+                g.get("meta").get("hot_k").as_usize().unwrap_or(0));
+        }
+    }
+    0
+}

@@ -1,0 +1,197 @@
+//! Metrics: per-step and per-run accounting for every quantity the paper
+//! reports — token latencies (Table 5), compute/I-O shares (Table 4),
+//! bandwidth and cache statistics (§7.2), XPU busy times (energy, Table 8).
+
+use crate::util::stats::{OnlineStats, Samples};
+
+/// Accounting for one decode step (one token across the whole model).
+#[derive(Debug, Clone, Default)]
+pub struct StepMetrics {
+    /// Wall-clock of the step (modeled seconds).
+    pub step_s: f64,
+    /// Busy seconds per unit (may overlap; each ≤ step_s).
+    pub cpu_busy_s: f64,
+    pub npu_busy_s: f64,
+    pub gpu_busy_s: f64,
+    pub io_busy_s: f64,
+    /// Seconds the critical path stalled waiting on I/O.
+    pub io_stall_s: f64,
+    pub io_bytes: u64,
+    pub io_ops: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub neurons_computed: u64,
+    pub bytes_touched_dram: u64,
+}
+
+impl StepMetrics {
+    pub fn cache_accesses(&self) -> u64 {
+        self.cache_hits + self.cache_misses
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        let n = self.cache_accesses();
+        if n == 0 {
+            0.0
+        } else {
+            self.cache_misses as f64 / n as f64
+        }
+    }
+}
+
+/// Aggregated run metrics.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub steps: u64,
+    pub total_s: f64,
+    pub step_latency_ms: Samples,
+    pub miss_rate: Samples,
+    pub cpu_busy_s: f64,
+    pub npu_busy_s: f64,
+    pub gpu_busy_s: f64,
+    pub io_busy_s: f64,
+    pub io_stall_s: f64,
+    pub io_bytes: u64,
+    pub io_ops: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub neurons_computed: u64,
+    pub bytes_touched_dram: u64,
+    pub bandwidth_gbps: OnlineStats,
+}
+
+impl RunMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push_step(&mut self, s: &StepMetrics) {
+        self.steps += 1;
+        self.total_s += s.step_s;
+        self.step_latency_ms.push(s.step_s * 1e3);
+        if s.cache_accesses() > 0 {
+            self.miss_rate.push(s.miss_rate());
+        }
+        self.cpu_busy_s += s.cpu_busy_s;
+        self.npu_busy_s += s.npu_busy_s;
+        self.gpu_busy_s += s.gpu_busy_s;
+        self.io_busy_s += s.io_busy_s;
+        self.io_stall_s += s.io_stall_s;
+        self.io_bytes += s.io_bytes;
+        self.io_ops += s.io_ops;
+        self.cache_hits += s.cache_hits;
+        self.cache_misses += s.cache_misses;
+        self.neurons_computed += s.neurons_computed;
+        self.bytes_touched_dram += s.bytes_touched_dram;
+        if s.step_s > 0.0 {
+            self.bandwidth_gbps
+                .push(s.bytes_touched_dram as f64 / s.step_s / 1e9);
+        }
+    }
+
+    /// Decode throughput: tokens per wall-clock second.
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.total_s == 0.0 {
+            0.0
+        } else {
+            self.steps as f64 / self.total_s
+        }
+    }
+
+    /// Fraction of critical-path time stalled on I/O (Table 2's "I/O
+    /// Overhead", Table 4's I/O share).
+    pub fn io_share(&self) -> f64 {
+        if self.total_s == 0.0 {
+            0.0
+        } else {
+            self.io_stall_s / self.total_s
+        }
+    }
+
+    pub fn compute_share(&self) -> f64 {
+        1.0 - self.io_share()
+    }
+
+    /// Mean CPU utilization over the run (busy / wall-clock, per §2.4's
+    /// "CPU Utilization" column; can exceed 1 with multiple cores busy —
+    /// callers divide by the core count they report against).
+    pub fn cpu_utilization(&self, cores: usize) -> f64 {
+        if self.total_s == 0.0 {
+            0.0
+        } else {
+            self.cpu_busy_s / (self.total_s * cores as f64)
+        }
+    }
+
+    pub fn overall_miss_rate(&self) -> f64 {
+        let n = self.cache_hits + self.cache_misses;
+        if n == 0 {
+            0.0
+        } else {
+            self.cache_misses as f64 / n as f64
+        }
+    }
+
+    pub fn latency_percentiles_ms(&mut self) -> (f64, f64, f64, f64) {
+        (
+            self.step_latency_ms.mean(),
+            self.step_latency_ms.percentile(50.0),
+            self.step_latency_ms.percentile(90.0),
+            self.step_latency_ms.percentile(99.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step(step_s: f64, io_stall: f64) -> StepMetrics {
+        StepMetrics {
+            step_s,
+            io_stall_s: io_stall,
+            cpu_busy_s: step_s * 0.5,
+            io_bytes: 1000,
+            cache_hits: 9,
+            cache_misses: 1,
+            bytes_touched_dram: (step_s * 40e9) as u64,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn aggregation_and_throughput() {
+        let mut r = RunMetrics::new();
+        for _ in 0..10 {
+            r.push_step(&step(0.1, 0.02));
+        }
+        assert_eq!(r.steps, 10);
+        assert!((r.tokens_per_s() - 10.0).abs() < 1e-9);
+        assert!((r.io_share() - 0.2).abs() < 1e-9);
+        assert!((r.compute_share() - 0.8).abs() < 1e-9);
+        assert!((r.overall_miss_rate() - 0.1).abs() < 1e-9);
+        assert!((r.cpu_utilization(1) - 0.5).abs() < 1e-9);
+        assert!((r.bandwidth_gbps.mean() - 40.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn percentiles_from_latencies() {
+        let mut r = RunMetrics::new();
+        for i in 1..=100 {
+            r.push_step(&step(i as f64 * 0.001, 0.0));
+        }
+        let (mean, p50, p90, p99) = r.latency_percentiles_ms();
+        assert!((mean - 50.5).abs() < 0.1);
+        assert!((p50 - 50.5).abs() < 1.0);
+        assert!(p90 > p50 && p99 > p90);
+    }
+
+    #[test]
+    fn empty_run_is_safe() {
+        let mut r = RunMetrics::new();
+        assert_eq!(r.tokens_per_s(), 0.0);
+        assert_eq!(r.io_share(), 0.0);
+        assert_eq!(r.overall_miss_rate(), 0.0);
+        assert!(r.latency_percentiles_ms().0.is_nan());
+    }
+}

@@ -1,0 +1,151 @@
+//! The e2e model substrate: dims (mirroring python/compile/model.py),
+//! synthetic-but-calibrated weights, the bundle-layout weight file (§4.4),
+//! and the real low-rank activation predictor.
+
+pub mod predictor;
+pub mod weights;
+
+pub use predictor::Predictor;
+pub use weights::{LayerWeights, WeightFile, Weights};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::Json;
+
+/// Geometry of the model that actually runs through PJRT — must mirror
+/// `python/compile/model.py::ModelDims` (loaded from the manifest the AOT
+/// step wrote, never hand-duplicated).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelDims {
+    pub hidden: usize,
+    pub inter: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub vocab: usize,
+    pub seq_max: usize,
+    pub prefill_chunk: usize,
+    pub batches: Vec<usize>,
+    pub hot_ks: Vec<usize>,
+}
+
+impl ModelDims {
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.kv_heads * self.head_dim()
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let field = |k: &str| -> Result<usize> {
+            j.get(k)
+                .as_usize()
+                .with_context(|| format!("model_config missing field {k}"))
+        };
+        let list = |k: &str| -> Result<Vec<usize>> {
+            j.get(k)
+                .to_usize_vec()
+                .with_context(|| format!("model_config missing list {k}"))
+        };
+        let dims = ModelDims {
+            hidden: field("hidden")?,
+            inter: field("inter")?,
+            layers: field("layers")?,
+            heads: field("heads")?,
+            kv_heads: field("kv_heads")?,
+            vocab: field("vocab")?,
+            seq_max: field("seq_max")?,
+            prefill_chunk: field("prefill_chunk")?,
+            batches: list("batches")?,
+            hot_ks: list("hot_ks")?,
+        };
+        ensure!(dims.hidden % dims.heads == 0, "hidden % heads != 0");
+        ensure!(dims.heads % dims.kv_heads == 0, "heads % kv_heads != 0");
+        Ok(dims)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// Inverse standard-normal CDF (Acklam's approximation, |err| < 1.15e-9).
+/// Used to place per-neuron gate biases so neuron i fires with its target
+/// probability.
+pub fn inv_norm_cdf(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "p out of range: {p}");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01, 2.209460984245205e+02, -2.759285104469687e+02,
+        1.383577518672690e+02, -3.066479806614716e+01, 2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01, 1.615858368580409e+02, -1.556989798598866e+02,
+        6.680131188771972e+01, -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e+00,
+        -2.549732539343734e+00, 4.374664141464968e+00, 2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let p_low = 0.02425;
+    if p < p_low {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - p_low {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        -inv_norm_cdf(1.0 - p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inv_norm_cdf_known_values() {
+        assert!(inv_norm_cdf(0.5).abs() < 1e-9);
+        assert!((inv_norm_cdf(0.975) - 1.959964).abs() < 1e-4);
+        assert!((inv_norm_cdf(0.025) + 1.959964).abs() < 1e-4);
+        assert!((inv_norm_cdf(0.99) - 2.326348).abs() < 1e-4);
+        assert!((inv_norm_cdf(0.001) + 3.090232).abs() < 1e-4);
+    }
+
+    #[test]
+    fn dims_from_json() {
+        let j = Json::parse(
+            r#"{"hidden": 32, "inter": 128, "layers": 2, "heads": 4,
+                "kv_heads": 2, "vocab": 64, "seq_max": 16,
+                "prefill_chunk": 8, "batches": [1, 2], "hot_ks": [128],
+                "rope_theta": 10000.0, "norm_eps": 1e-5}"#,
+        )
+        .unwrap();
+        let d = ModelDims::from_json(&j).unwrap();
+        assert_eq!(d.hidden, 32);
+        assert_eq!(d.head_dim(), 8);
+        assert_eq!(d.kv_dim(), 16);
+        assert_eq!(d.batches, vec![1, 2]);
+    }
+
+    #[test]
+    fn dims_reject_bad_geometry() {
+        let j = Json::parse(
+            r#"{"hidden": 33, "inter": 128, "layers": 2, "heads": 4,
+                "kv_heads": 2, "vocab": 64, "seq_max": 16,
+                "prefill_chunk": 8, "batches": [1], "hot_ks": [128]}"#,
+        )
+        .unwrap();
+        assert!(ModelDims::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,276 @@
+//! The online activation predictor — the real thing, not a model of one.
+//!
+//! PowerInfer-2 (like PowerInfer/LLMFlash) runs a small per-layer
+//! predictor on the CPU before each FFN to decide which cold neurons to
+//! compute (§3.2). Trained gate matrices are approximately low-rank —
+//! that compressibility is why DejaVu-style predictors work — so the
+//! predictor here is a randomized-subspace-iteration sketch of the gate
+//! matrix, built offline like the paper's trained predictors:
+//!
+//!   Q  = orth(Gᵀ(G Ω))          (one power iteration, Q ∈ ℝ^{H×r})
+//!   GQ = G·Q                     (predictor weights, I×r)
+//!   scores(x) = (GQ)(Qᵀx) ≈ G x  (runtime cost O(Hr + Ir) ≪ O(HI))
+//!
+//! Neurons whose approximated pre-activation clears a margin-adjusted
+//! threshold are predicted active.
+
+use crate::model::weights::LayerWeights;
+use crate::model::ModelDims;
+use crate::util::prng::Rng;
+
+/// Per-layer low-rank predictor.
+#[derive(Debug, Clone)]
+pub struct Predictor {
+    /// Sketch projection R [H, r] (shared across layers).
+    pub r_proj: Vec<f32>,
+    /// Sketched gate rows, one [r] row per neuron: (G R) [I, r].
+    pub gr: Vec<Vec<f32>>,
+    pub rank: usize,
+    pub hidden: usize,
+    /// Margin subtracted from the decision threshold — negative margins
+    /// trade false positives (wasted compute) for recall (accuracy).
+    pub margin: f32,
+}
+
+impl Predictor {
+    /// Build from the layer's gate weights via randomized subspace
+    /// iteration. Memory cost = (H + I)·r f32 — the per-layer "predictor
+    /// weights" line item of §7.2.3.
+    pub fn build(
+        dims: &ModelDims,
+        lw: &LayerWeights,
+        rank: usize,
+        seed: u64,
+    ) -> Predictor {
+        let h = dims.hidden;
+        let i = dims.inter;
+        let gate = &lw.gate;
+        let mut rng = Rng::new(seed ^ 0x5052_4544);
+
+        // Ω ∈ ℝ^{H×r};  Z = G·Ω ∈ ℝ^{I×r};  Y = Gᵀ·Z ∈ ℝ^{H×r}
+        let mut omega = vec![0f32; h * rank];
+        rng.fill_normal(&mut omega, 1.0);
+        let mut z = vec![0f32; i * rank];
+        for n in 0..i {
+            let row = &gate[n * h..(n + 1) * h];
+            let zrow = &mut z[n * rank..(n + 1) * rank];
+            for (c, &g) in row.iter().enumerate() {
+                if g == 0.0 {
+                    continue;
+                }
+                let orow = &omega[c * rank..(c + 1) * rank];
+                for (zv, &ov) in zrow.iter_mut().zip(orow) {
+                    *zv += g * ov;
+                }
+            }
+        }
+        let mut y = vec![0f32; h * rank];
+        for n in 0..i {
+            let row = &gate[n * h..(n + 1) * h];
+            let zrow = &z[n * rank..(n + 1) * rank];
+            for (c, &g) in row.iter().enumerate() {
+                if g == 0.0 {
+                    continue;
+                }
+                let yrow = &mut y[c * rank..(c + 1) * rank];
+                for (yv, &zv) in yrow.iter_mut().zip(zrow) {
+                    *yv += g * zv;
+                }
+            }
+        }
+        // Orthonormalize Y's columns (modified Gram–Schmidt) → Q [H×r].
+        let mut q = y;
+        for j in 0..rank {
+            for k in 0..j {
+                let mut dot = 0f32;
+                for c in 0..h {
+                    dot += q[c * rank + j] * q[c * rank + k];
+                }
+                for c in 0..h {
+                    q[c * rank + j] -= dot * q[c * rank + k];
+                }
+            }
+            let norm: f32 = (0..h)
+                .map(|c| q[c * rank + j] * q[c * rank + j])
+                .sum::<f32>()
+                .sqrt()
+                .max(1e-12);
+            for c in 0..h {
+                q[c * rank + j] /= norm;
+            }
+        }
+        // Predictor weights: GQ [I×r].
+        let gr = (0..i)
+            .map(|n| {
+                let row = &gate[n * h..(n + 1) * h];
+                let mut out = vec![0f32; rank];
+                for (c, &g) in row.iter().enumerate() {
+                    if g == 0.0 {
+                        continue;
+                    }
+                    let qrow = &q[c * rank..(c + 1) * rank];
+                    for (ov, &qv) in out.iter_mut().zip(qrow) {
+                        *ov += g * qv;
+                    }
+                }
+                out
+            })
+            .collect();
+        Predictor { r_proj: q, gr, rank, hidden: h, margin: -0.25 }
+    }
+
+    pub fn param_bytes(&self) -> usize {
+        (self.r_proj.len() + self.gr.len() * self.rank) * 4
+    }
+
+    /// Sketch the input: v = x R, [r].
+    pub fn sketch(&self, x: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(x.len(), self.hidden);
+        let mut v = vec![0f32; self.rank];
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &self.r_proj[i * self.rank..(i + 1) * self.rank];
+            for (j, &r) in row.iter().enumerate() {
+                v[j] += xi * r;
+            }
+        }
+        v
+    }
+
+    /// Predicted pre-activation score of neuron n given a sketch.
+    pub fn score(&self, sketch: &[f32], n: usize, bias: f32) -> f32 {
+        self.gr[n]
+            .iter()
+            .zip(sketch)
+            .map(|(a, b)| a * b)
+            .sum::<f32>()
+            + bias
+    }
+
+    /// Predict the active set among neurons [lo, hi) for input x.
+    pub fn predict_range(
+        &self,
+        x: &[f32],
+        bias: &[f32],
+        lo: usize,
+        hi: usize,
+    ) -> Vec<usize> {
+        let v = self.sketch(x);
+        (lo..hi)
+            .filter(|&n| self.score(&v, n, bias[n]) > self.margin)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::Weights;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            hidden: 64,
+            inter: 256,
+            layers: 1,
+            heads: 4,
+            kv_heads: 2,
+            vocab: 32,
+            seq_max: 8,
+            prefill_chunk: 4,
+            batches: vec![1],
+            hot_ks: vec![64],
+        }
+    }
+
+    /// ground truth: neurons with x·g + b > 0
+    fn true_active(lw: &LayerWeights, x: &[f32], h: usize) -> Vec<usize> {
+        (0..lw.gate_bias.len())
+            .filter(|&n| {
+                let pre: f32 = x
+                    .iter()
+                    .zip(&lw.gate[n * h..(n + 1) * h])
+                    .map(|(a, b)| a * b)
+                    .sum::<f32>()
+                    + lw.gate_bias[n];
+                pre > 0.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn predictor_has_high_recall_and_bounded_overhead() {
+        let d = dims();
+        let w = Weights::generate(&d, 11);
+        let lw = &w.layers[0];
+        let p = Predictor::build(&d, lw, 32, 1);
+        let mut rng = Rng::new(5);
+        let (mut hit, mut truth, mut predicted) = (0usize, 0usize, 0usize);
+        for _ in 0..200 {
+            let mut x = vec![0f32; d.hidden];
+            rng.fill_normal(&mut x, 1.0);
+            let t = true_active(lw, &x, d.hidden);
+            let pred = p.predict_range(&x, &lw.gate_bias, 0, d.inter);
+            let pset: std::collections::HashSet<_> = pred.iter().copied().collect();
+            hit += t.iter().filter(|n| pset.contains(n)).count();
+            truth += t.len();
+            predicted += pred.len();
+        }
+        let recall = hit as f64 / truth as f64;
+        let overhead = predicted as f64 / truth as f64;
+        assert!(recall > 0.90, "recall {recall}");
+        assert!(overhead < 2.2, "overhead {overhead}");
+    }
+
+    #[test]
+    fn rank_improves_recall() {
+        let d = dims();
+        let w = Weights::generate(&d, 12);
+        let lw = &w.layers[0];
+        let mut rng = Rng::new(6);
+        let recall_at = |rank: usize, rng: &mut Rng| {
+            let p = Predictor::build(&d, lw, rank, 1);
+            let (mut hit, mut truth) = (0usize, 0usize);
+            for _ in 0..150 {
+                let mut x = vec![0f32; d.hidden];
+                rng.fill_normal(&mut x, 1.0);
+                let t = true_active(lw, &x, d.hidden);
+                let pred: std::collections::HashSet<_> =
+                    p.predict_range(&x, &lw.gate_bias, 0, d.inter)
+                        .into_iter()
+                        .collect();
+                hit += t.iter().filter(|n| pred.contains(n)).count();
+                truth += t.len();
+            }
+            hit as f64 / truth as f64
+        };
+        let r4 = recall_at(4, &mut rng);
+        let r64 = recall_at(64, &mut rng);
+        assert!(r64 > r4, "r64 {r64} vs r4 {r4}");
+        assert!(r64 > 0.95, "r64 {r64}");
+    }
+
+    #[test]
+    fn sketch_cost_is_rank_bounded() {
+        let d = dims();
+        let w = Weights::generate(&d, 13);
+        let p = Predictor::build(&d, &w.layers[0], 16, 2);
+        assert_eq!(p.sketch(&vec![0.5; d.hidden]).len(), 16);
+        assert_eq!(
+            p.param_bytes(),
+            (d.hidden * 16 + d.inter * 16) * 4
+        );
+    }
+
+    #[test]
+    fn predict_range_respects_bounds() {
+        let d = dims();
+        let w = Weights::generate(&d, 14);
+        let lw = &w.layers[0];
+        let p = Predictor::build(&d, lw, 16, 3);
+        let x = vec![0.3f32; d.hidden];
+        let pred = p.predict_range(&x, &lw.gate_bias, 100, 200);
+        assert!(pred.iter().all(|&n| (100..200).contains(&n)));
+    }
+}

@@ -1,0 +1,400 @@
+//! Synthetic-but-calibrated weights + the bundle-layout weight file.
+//!
+//! Weight *values* are seeded Gaussians (no pretrained checkpoint exists
+//! offline), but two properties the system depends on are engineered in:
+//!
+//!   1. **Calibrated activation sparsity** — each FFN neuron i gets a gate
+//!      bias `b_i = Φ⁻¹(p_i)`-placed so it fires with probability `p_i`
+//!      under unit-RMS inputs; `p_i` decays with i, so *neuron index order
+//!      is temperature order* (hottest first). A hot cluster is therefore
+//!      a prefix of the neuron axis — exactly the contiguous hot cluster
+//!      the AOT `decode_ffn_*` graphs take.
+//!   2. **Bundle storage layout (§4.4)** — on flash, neuron i's gate row,
+//!      up row, bias, and down row are stored contiguously as one bundle,
+//!      so activating a neuron costs one (or two, §4.4 two-phase) small
+//!      reads instead of three scattered ones.
+
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::model::{inv_norm_cdf, ModelDims};
+use crate::util::prng::Rng;
+
+/// Per-layer dense weights (row-major).
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub norm1: Vec<f32>,        // [H]
+    pub wq: Vec<f32>,           // [H, H]
+    pub wk: Vec<f32>,           // [KVD, H]
+    pub wv: Vec<f32>,           // [KVD, H]
+    pub wo: Vec<f32>,           // [H, H]
+    pub norm2: Vec<f32>,        // [H]
+    pub gate: Vec<f32>,         // [I, H]
+    pub up: Vec<f32>,           // [I, H]
+    pub gate_bias: Vec<f32>,    // [I]
+    pub down: Vec<f32>,         // [I, H] (output = act @ down)
+    /// Target activation probability of each neuron (descending).
+    pub neuron_p: Vec<f64>,     // [I]
+}
+
+/// Whole-model weights.
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub dims: ModelDims,
+    pub embedding: Vec<f32>, // [V, H]
+    pub layers: Vec<LayerWeights>,
+    pub norm_f: Vec<f32>,    // [H]
+    pub w_lm: Vec<f32>,      // [V, H]
+}
+
+fn mat(rng: &mut Rng, rows: usize, cols: usize) -> Vec<f32> {
+    let std = 1.0 / (cols as f32).sqrt();
+    let mut m = vec![0f32; rows * cols];
+    rng.fill_normal(&mut m, std);
+    m
+}
+
+/// Low-rank-plus-noise matrix: M = A·B + ε·E, unit row-variance like
+/// `mat`. Trained LLM gate matrices are approximately low-rank — that
+/// compressibility is exactly what makes DejaVu-style activation
+/// predictors work — so the synthetic gates must reproduce it or the
+/// (real) low-rank predictor in predictor.rs would be facing an
+/// information-theoretically impossible task.
+fn low_rank_mat(rng: &mut Rng, rows: usize, cols: usize, rank: usize, eps: f32) -> Vec<f32> {
+    let mut a = vec![0f32; rows * rank];
+    rng.fill_normal(&mut a, 1.0 / (rank as f32).sqrt());
+    let mut b = vec![0f32; rank * cols];
+    rng.fill_normal(&mut b, 1.0 / (cols as f32).sqrt());
+    let mut m = vec![0f32; rows * cols];
+    rng.fill_normal(&mut m, eps / (cols as f32).sqrt());
+    for i in 0..rows {
+        for k in 0..rank {
+            let aik = a[i * rank + k];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[k * cols..(k + 1) * cols];
+            let mrow = &mut m[i * cols..(i + 1) * cols];
+            for (mv, &bv) in mrow.iter_mut().zip(brow) {
+                *mv += aik * bv;
+            }
+        }
+    }
+    // renormalize to unit expected row norm (var = (1 + eps²)/cols)
+    let scale = 1.0 / (1.0 + eps * eps).sqrt();
+    for v in m.iter_mut() {
+        *v *= scale;
+    }
+    m
+}
+
+impl Weights {
+    /// Generate seeded weights with the calibrated neuron temperature
+    /// profile: p_i interpolates log-linearly from `p_hot` (neuron 0)
+    /// down to `p_cold` (last neuron).
+    pub fn generate(dims: &ModelDims, seed: u64) -> Weights {
+        Self::generate_with_profile(dims, seed, 0.9, 0.02)
+    }
+
+    pub fn generate_with_profile(
+        dims: &ModelDims,
+        seed: u64,
+        p_hot: f64,
+        p_cold: f64,
+    ) -> Weights {
+        let mut rng = Rng::new(seed);
+        let h = dims.hidden;
+        let kvd = dims.kv_dim();
+        let i = dims.inter;
+        let layers = (0..dims.layers)
+            .map(|l| {
+                let mut lr = rng.fork(l as u64 + 1);
+                let gate = low_rank_mat(&mut lr, i, h, (h / 4).max(4), 0.12);
+                let mut neuron_p = Vec::with_capacity(i);
+                let mut gate_bias = Vec::with_capacity(i);
+                for n in 0..i {
+                    let t = n as f64 / (i - 1).max(1) as f64;
+                    let p = p_hot * (p_cold / p_hot).powf(t);
+                    neuron_p.push(p);
+                    // x·g_n ~ N(0, ‖g_n‖²); for unit-RMS x and our init,
+                    // ‖g_n‖ ≈ 1, so bias = Φ⁻¹(p) hits P(pre-act > 0) = p.
+                    let norm: f32 = gate[n * h..(n + 1) * h]
+                        .iter()
+                        .map(|v| v * v)
+                        .sum::<f32>()
+                        .sqrt();
+                    gate_bias.push(inv_norm_cdf(p) as f32 * norm);
+                }
+                LayerWeights {
+                    norm1: vec![1.0; h],
+                    wq: mat(&mut lr, h, h),
+                    wk: mat(&mut lr, kvd, h),
+                    wv: mat(&mut lr, kvd, h),
+                    wo: mat(&mut lr, h, h),
+                    norm2: vec![1.0; h],
+                    gate,
+                    up: mat(&mut lr, i, h),
+                    gate_bias,
+                    // scale down residual contributions for stability
+                    down: mat(&mut lr, i, h)
+                        .into_iter()
+                        .map(|v| v * 0.5)
+                        .collect(),
+                    neuron_p,
+                }
+            })
+            .collect();
+        Weights {
+            dims: dims.clone(),
+            embedding: mat(&mut rng, dims.vocab, h),
+            layers,
+            norm_f: vec![1.0; h],
+            w_lm: mat(&mut rng, dims.vocab, h),
+        }
+    }
+
+    /// Bundle of neuron `n` in layer `l`: [gate row | up row | bias | down row].
+    pub fn bundle(&self, l: usize, n: usize) -> Vec<f32> {
+        let h = self.dims.hidden;
+        let lw = &self.layers[l];
+        let mut b = Vec::with_capacity(3 * h + 1);
+        b.extend_from_slice(&lw.gate[n * h..(n + 1) * h]);
+        b.extend_from_slice(&lw.up[n * h..(n + 1) * h]);
+        b.push(lw.gate_bias[n]);
+        b.extend_from_slice(&lw.down[n * h..(n + 1) * h]);
+        b
+    }
+}
+
+/// The on-flash weight file: attention/embedding sections plus per-neuron
+/// Gate-Up-Down bundles ordered (layer, neuron) — neuron-position order,
+/// not matrix order (§4.4).
+#[derive(Debug)]
+pub struct WeightFile {
+    pub dims: ModelDims,
+    /// Byte offset of layer l's first bundle.
+    layer_bundle_base: Vec<u64>,
+    bundle_bytes: u64,
+}
+
+pub const WEIGHT_FILE_MAGIC: &[u8; 8] = b"PI2WGT01";
+
+impl WeightFile {
+    /// Bundle size in bytes: (3H + 1) f32s.
+    pub fn bundle_bytes_for(dims: &ModelDims) -> u64 {
+        (3 * dims.hidden as u64 + 1) * 4
+    }
+
+    /// Write the flash-resident section of `w` (all FFN bundles) plus a
+    /// small header. Attention/embedding weights live in DRAM for the
+    /// whole run (the cache's "fixed region"), so they are not written.
+    pub fn write(w: &Weights, path: &Path) -> Result<WeightFile> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        let mut out = BufWriter::with_capacity(1 << 20, f);
+        out.write_all(WEIGHT_FILE_MAGIC)?;
+        let dims = &w.dims;
+        let header = [
+            dims.hidden as u64,
+            dims.inter as u64,
+            dims.layers as u64,
+        ];
+        for v in header {
+            out.write_all(&v.to_le_bytes())?;
+        }
+        let base = (8 + 24) as u64;
+        let bundle_bytes = Self::bundle_bytes_for(dims);
+        let mut layer_bundle_base = Vec::with_capacity(dims.layers);
+        let mut offset = base;
+        for l in 0..dims.layers {
+            layer_bundle_base.push(offset);
+            for n in 0..dims.inter {
+                let bundle = w.bundle(l, n);
+                for v in &bundle {
+                    out.write_all(&v.to_le_bytes())?;
+                }
+                offset += bundle_bytes;
+            }
+        }
+        out.flush()?;
+        Ok(WeightFile {
+            dims: dims.clone(),
+            layer_bundle_base,
+            bundle_bytes,
+        })
+    }
+
+    /// Open an existing weight file and validate its header against dims.
+    pub fn open(dims: &ModelDims, path: &Path) -> Result<WeightFile> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        use std::io::Read;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        ensure!(&magic == WEIGHT_FILE_MAGIC, "bad weight file magic");
+        let mut buf = [0u8; 8];
+        let mut header = [0u64; 3];
+        for h in header.iter_mut() {
+            f.read_exact(&mut buf)?;
+            *h = u64::from_le_bytes(buf);
+        }
+        ensure!(
+            header == [dims.hidden as u64, dims.inter as u64, dims.layers as u64],
+            "weight file geometry {:?} != model dims", header
+        );
+        let bundle_bytes = Self::bundle_bytes_for(dims);
+        let per_layer = bundle_bytes * dims.inter as u64;
+        let base = 32u64;
+        let layer_bundle_base =
+            (0..dims.layers).map(|l| base + l as u64 * per_layer).collect();
+        Ok(WeightFile { dims: dims.clone(), layer_bundle_base, bundle_bytes })
+    }
+
+    pub fn bundle_bytes(&self) -> u64 {
+        self.bundle_bytes
+    }
+
+    /// Byte offset of (layer, neuron)'s bundle.
+    pub fn bundle_offset(&self, layer: usize, neuron: usize) -> u64 {
+        self.layer_bundle_base[layer] + neuron as u64 * self.bundle_bytes
+    }
+
+    /// Total file length in bytes.
+    pub fn file_len(&self) -> u64 {
+        32 + self.bundle_bytes * (self.dims.inter * self.dims.layers) as u64
+    }
+
+    /// Split a raw bundle back into (gate, up, bias, down).
+    pub fn split_bundle<'a>(
+        &self,
+        bundle: &'a [f32],
+    ) -> (&'a [f32], &'a [f32], f32, &'a [f32]) {
+        let h = self.dims.hidden;
+        debug_assert_eq!(bundle.len(), 3 * h + 1);
+        (
+            &bundle[..h],
+            &bundle[h..2 * h],
+            bundle[2 * h],
+            &bundle[2 * h + 1..],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::FlashFile;
+
+    fn tiny_dims() -> ModelDims {
+        ModelDims {
+            hidden: 16,
+            inter: 32,
+            layers: 2,
+            heads: 4,
+            kv_heads: 2,
+            vocab: 32,
+            seq_max: 8,
+            prefill_chunk: 4,
+            batches: vec![1],
+            hot_ks: vec![16],
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let d = tiny_dims();
+        let a = Weights::generate(&d, 5);
+        let b = Weights::generate(&d, 5);
+        assert_eq!(a.layers[0].gate, b.layers[0].gate);
+        assert_ne!(a.layers[0].gate, Weights::generate(&d, 6).layers[0].gate);
+    }
+
+    #[test]
+    fn neuron_temperature_is_descending() {
+        let w = Weights::generate(&tiny_dims(), 1);
+        for lw in &w.layers {
+            for n in 1..lw.neuron_p.len() {
+                assert!(lw.neuron_p[n] <= lw.neuron_p[n - 1]);
+            }
+            assert!(lw.neuron_p[0] > 0.8);
+            assert!(*lw.neuron_p.last().unwrap() < 0.05);
+        }
+    }
+
+    #[test]
+    fn gate_bias_calibrates_activation_rate() {
+        // Empirically check P(x·g + b > 0) ≈ p for unit-RMS random x.
+        let d = ModelDims { inter: 64, ..tiny_dims() };
+        let w = Weights::generate(&d, 2);
+        let lw = &w.layers[0];
+        let mut rng = Rng::new(77);
+        let trials = 3000;
+        for n in [0usize, 32, 63] {
+            let mut fired = 0;
+            for _ in 0..trials {
+                let mut x = vec![0f32; d.hidden];
+                rng.fill_normal(&mut x, 1.0);
+                let rms = (x.iter().map(|v| v * v).sum::<f32>()
+                    / d.hidden as f32)
+                    .sqrt();
+                let pre: f32 = x
+                    .iter()
+                    .zip(&lw.gate[n * d.hidden..(n + 1) * d.hidden])
+                    .map(|(a, b)| a / rms * b)
+                    .sum::<f32>()
+                    + lw.gate_bias[n];
+                if pre > 0.0 {
+                    fired += 1;
+                }
+            }
+            let rate = fired as f64 / trials as f64;
+            let target = lw.neuron_p[n];
+            assert!(
+                (rate - target).abs() < 0.05 + 0.2 * target,
+                "neuron {n}: rate {rate} vs target {target}"
+            );
+        }
+    }
+
+    #[test]
+    fn weight_file_roundtrip() {
+        let d = tiny_dims();
+        let w = Weights::generate(&d, 3);
+        let path = std::env::temp_dir()
+            .join(format!("pi2_wf_test_{}", std::process::id()));
+        let wf = WeightFile::write(&w, &path).unwrap();
+        assert_eq!(
+            wf.file_len(),
+            std::fs::metadata(&path).unwrap().len()
+        );
+        let wf2 = WeightFile::open(&d, &path).unwrap();
+        let flash = FlashFile::open(&path).unwrap();
+        for (l, n) in [(0usize, 0usize), (0, 31), (1, 7)] {
+            let off = wf2.bundle_offset(l, n);
+            let got = flash
+                .read_f32s(off, (3 * d.hidden + 1) as usize)
+                .unwrap();
+            assert_eq!(got, w.bundle(l, n), "bundle ({l},{n})");
+            let (g, u, b, dn) = wf2.split_bundle(&got);
+            assert_eq!(g, &w.layers[l].gate[n * d.hidden..(n + 1) * d.hidden]);
+            assert_eq!(u, &w.layers[l].up[n * d.hidden..(n + 1) * d.hidden]);
+            assert_eq!(b, w.layers[l].gate_bias[n]);
+            assert_eq!(dn, &w.layers[l].down[n * d.hidden..(n + 1) * d.hidden]);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn open_rejects_wrong_dims() {
+        let d = tiny_dims();
+        let w = Weights::generate(&d, 4);
+        let path = std::env::temp_dir()
+            .join(format!("pi2_wf_test2_{}", std::process::id()));
+        WeightFile::write(&w, &path).unwrap();
+        let wrong = ModelDims { inter: 64, ..d };
+        assert!(WeightFile::open(&wrong, &path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,386 @@
+//! The neuron-cluster-level pipeline (§4.3, Fig.6) as a discrete-event
+//! scheduler, plus the matrix-level and no-overlap baselines it is
+//! compared against (Fig.6-a vs 6-b, Fig.14 ablation).
+//!
+//! Each neuron cluster runs a 5-stage chain:
+//! `Pred → GateIO → GateCompute → UpDownIO → UpDownCompute`
+//!
+//! Compute stages need one of `compute_threads` CPU workers; IO stages
+//! queue on the single UFS command thread (§2.3.2). The three modes
+//! differ only in the dependency graph:
+//!
+//!   * `None`        — the step is fully serialized: all IO first, then
+//!                     all compute (llama.cpp-style synchronous faults).
+//!   * `MatrixLevel` — Gate work of every cluster must finish before any
+//!                     UpDown work starts (a barrier per matrix); IO and
+//!                     compute overlap only within the current matrix.
+//!   * `ClusterLevel`— no barriers: as soon as a cluster's GateIO lands
+//!                     its GateCompute can run while other clusters' IO
+//!                     is still in flight, and UpDown work interleaves
+//!                     freely with Gate work of later clusters.
+//!
+//! The scheduler returns the makespan plus per-resource busy time and the
+//! IO-stall share of the critical path — the quantities behind Table 2,
+//! Table 4 and Fig.9.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::config::PipelineMode;
+
+/// One neuron cluster's stage durations (seconds; 0 = stage skipped).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClusterTask {
+    pub pred_s: f64,
+    pub gate_io_s: f64,
+    pub gate_c_s: f64,
+    pub ud_io_s: f64,
+    pub ud_c_s: f64,
+}
+
+impl ClusterTask {
+    pub fn total_io(&self) -> f64 {
+        self.gate_io_s + self.ud_io_s
+    }
+
+    pub fn total_compute(&self) -> f64 {
+        self.pred_s + self.gate_c_s + self.ud_c_s
+    }
+}
+
+/// Result of scheduling one step's cluster set.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Schedule {
+    pub makespan_s: f64,
+    pub compute_busy_s: f64,
+    pub io_busy_s: f64,
+    /// Time the compute side spent with nothing runnable while IO was in
+    /// flight — the "bubbles" of Fig.6-a.
+    pub io_stall_s: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Stage {
+    Pred,
+    GateIo,
+    GateC,
+    UdIo,
+    UdC,
+}
+
+impl Stage {
+    fn is_io(self) -> bool {
+        matches!(self, Stage::GateIo | Stage::UdIo)
+    }
+
+    fn next(self) -> Option<Stage> {
+        match self {
+            Stage::Pred => Some(Stage::GateIo),
+            Stage::GateIo => Some(Stage::GateC),
+            Stage::GateC => Some(Stage::UdIo),
+            Stage::UdIo => Some(Stage::UdC),
+            Stage::UdC => None,
+        }
+    }
+}
+
+fn duration(t: &ClusterTask, s: Stage) -> f64 {
+    match s {
+        Stage::Pred => t.pred_s,
+        Stage::GateIo => t.gate_io_s,
+        Stage::GateC => t.gate_c_s,
+        Stage::UdIo => t.ud_io_s,
+        Stage::UdC => t.ud_c_s,
+    }
+}
+
+/// Schedule a set of cluster tasks under the given mode.
+pub fn schedule(
+    tasks: &[ClusterTask],
+    mode: PipelineMode,
+    compute_threads: usize,
+) -> Schedule {
+    match mode {
+        PipelineMode::None => schedule_serial(tasks, compute_threads),
+        PipelineMode::MatrixLevel => schedule_des(tasks, compute_threads, true),
+        PipelineMode::ClusterLevel => schedule_des(tasks, compute_threads, false),
+    }
+}
+
+/// Fully serialized: one IO burst, then parallel compute, no overlap.
+fn schedule_serial(tasks: &[ClusterTask], compute_threads: usize) -> Schedule {
+    let io: f64 = tasks.iter().map(|t| t.total_io()).sum();
+    let compute: f64 = tasks.iter().map(|t| t.total_compute()).sum();
+    let compute_span = compute / compute_threads.max(1) as f64;
+    Schedule {
+        makespan_s: io + compute_span,
+        compute_busy_s: compute,
+        io_busy_s: io,
+        io_stall_s: io,
+    }
+}
+
+/// Event-driven list scheduler with one IO thread + N compute threads.
+/// `matrix_barrier` inserts the Fig.6-a barrier: no UpDown stage may start
+/// until every cluster's Gate stages are done.
+fn schedule_des(
+    tasks: &[ClusterTask],
+    compute_threads: usize,
+    matrix_barrier: bool,
+) -> Schedule {
+    if tasks.is_empty() {
+        return Schedule::default();
+    }
+    let n = tasks.len();
+    let threads = compute_threads.max(1);
+
+    // ready queues (FIFO within a queue; compute prefers earlier stages
+    // of earlier clusters, which keeps the pipeline draining in order)
+    let mut ready_c: std::collections::VecDeque<(usize, Stage)> = Default::default();
+    let mut ready_io: std::collections::VecDeque<(usize, Stage)> = Default::default();
+
+    // event heap: (time, cluster, stage) completions
+    #[derive(PartialEq)]
+    struct Ev(f64, usize, Stage, bool); // bool: is_io resource release
+    impl Eq for Ev {}
+    impl PartialOrd for Ev {
+        fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl Ord for Ev {
+        fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+            self.0.partial_cmp(&o.0).unwrap_or(std::cmp::Ordering::Equal)
+                .then(self.1.cmp(&o.1))
+        }
+    }
+    let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
+
+    let mut gate_done = 0usize; // clusters past GateC (for the barrier)
+    let mut free_c = threads;
+    let mut io_free = true;
+    let mut now = 0.0f64;
+    let mut compute_busy = 0.0;
+    let mut io_busy = 0.0;
+    let mut done = 0usize;
+    // stall tracking: time intervals where free_c == threads (all compute
+    // idle) while io in flight
+    let mut all_idle_since: Option<f64> = Some(0.0);
+    let mut io_stall = 0.0;
+
+    // seed: every cluster's Pred is ready
+    for (i, _) in tasks.iter().enumerate() {
+        ready_c.push_back((i, Stage::Pred));
+    }
+
+    let barrier_ok = |stage: Stage, gate_done: usize| -> bool {
+        if !matrix_barrier {
+            return true;
+        }
+        // UpDown stages wait for ALL clusters to clear GateC
+        !matches!(stage, Stage::UdIo | Stage::UdC) || gate_done == n
+    };
+
+    loop {
+        // dispatch as much as possible
+        let mut dispatched = true;
+        while dispatched {
+            dispatched = false;
+            // IO thread
+            if io_free {
+                if let Some(pos) = ready_io
+                    .iter()
+                    .position(|&(_, s)| barrier_ok(s, gate_done))
+                {
+                    let (i, s) = ready_io.remove(pos).unwrap();
+                    let d = duration(&tasks[i], s);
+                    io_free = false;
+                    io_busy += d;
+                    heap.push(Reverse(Ev(now + d, i, s, true)));
+                    dispatched = true;
+                }
+            }
+            // compute threads
+            while free_c > 0 {
+                let Some(pos) = ready_c
+                    .iter()
+                    .position(|&(_, s)| barrier_ok(s, gate_done))
+                else {
+                    break;
+                };
+                let (i, s) = ready_c.remove(pos).unwrap();
+                let d = duration(&tasks[i], s);
+                if free_c == threads {
+                    // compute was fully idle until now
+                    if let Some(since) = all_idle_since.take() {
+                        if !io_free {
+                            io_stall += now - since;
+                        }
+                    }
+                }
+                free_c -= 1;
+                compute_busy += d;
+                heap.push(Reverse(Ev(now + d, i, s, false)));
+                dispatched = true;
+            }
+        }
+
+        let Some(Reverse(Ev(t, i, s, was_io))) = heap.pop() else {
+            break;
+        };
+        now = t;
+        if was_io {
+            io_free = true;
+        } else {
+            free_c += 1;
+            if free_c == threads {
+                all_idle_since = Some(now);
+            }
+        }
+        if s == Stage::GateC {
+            gate_done += 1;
+        }
+        match s.next() {
+            Some(next) => {
+                // skip zero-duration stages immediately
+                let mut stage = next;
+                loop {
+                    if duration(&tasks[i], stage) > 0.0 {
+                        if stage.is_io() {
+                            ready_io.push_back((i, stage));
+                        } else {
+                            ready_c.push_back((i, stage));
+                        }
+                        break;
+                    }
+                    if stage == Stage::GateC {
+                        gate_done += 1;
+                    }
+                    match stage.next() {
+                        Some(nn) => stage = nn,
+                        None => {
+                            done += 1;
+                            break;
+                        }
+                    }
+                }
+            }
+            None => done += 1,
+        }
+    }
+    debug_assert_eq!(done, n, "all clusters must finish");
+    // trailing idle-while-io can't happen (nothing left in flight)
+    Schedule {
+        makespan_s: now,
+        compute_busy_s: compute_busy,
+        io_busy_s: io_busy,
+        io_stall_s: io_stall,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(pred: f64, gio: f64, gc: f64, udio: f64, udc: f64) -> ClusterTask {
+        ClusterTask { pred_s: pred, gate_io_s: gio, gate_c_s: gc, ud_io_s: udio, ud_c_s: udc }
+    }
+
+    /// The Fig.6 scenario: 8 clusters, 4 cached (no IO), 4 in flash.
+    fn fig6_tasks() -> Vec<ClusterTask> {
+        let mut v = Vec::new();
+        for i in 0..8 {
+            let io = if i % 2 == 0 { 0.0 } else { 1.0 };
+            v.push(task(0.1, io, 0.5, io, 0.5));
+        }
+        v
+    }
+
+    #[test]
+    fn cluster_level_beats_matrix_level_beats_none() {
+        // Fig.6's whole point, and Fig.14's Pipeline bar.
+        let tasks = fig6_tasks();
+        let none = schedule(&tasks, PipelineMode::None, 4);
+        let matrix = schedule(&tasks, PipelineMode::MatrixLevel, 4);
+        let cluster = schedule(&tasks, PipelineMode::ClusterLevel, 4);
+        assert!(matrix.makespan_s < none.makespan_s,
+                "matrix {} vs none {}", matrix.makespan_s, none.makespan_s);
+        assert!(cluster.makespan_s < matrix.makespan_s,
+                "cluster {} vs matrix {}", cluster.makespan_s, matrix.makespan_s);
+    }
+
+    #[test]
+    fn work_conservation() {
+        // busy totals must be identical across modes (same work).
+        let tasks = fig6_tasks();
+        let total_io: f64 = tasks.iter().map(|t| t.total_io()).sum();
+        let total_c: f64 = tasks.iter().map(|t| t.total_compute()).sum();
+        for mode in [PipelineMode::None, PipelineMode::MatrixLevel, PipelineMode::ClusterLevel] {
+            let s = schedule(&tasks, mode, 4);
+            assert!((s.io_busy_s - total_io).abs() < 1e-9, "{mode:?}");
+            assert!((s.compute_busy_s - total_c).abs() < 1e-9, "{mode:?}");
+            // makespan can never beat either resource's serial bound
+            assert!(s.makespan_s >= total_io - 1e-9, "{mode:?}");
+            assert!(s.makespan_s >= total_c / 4.0 - 1e-9, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn all_cached_has_no_stall() {
+        let tasks: Vec<_> = (0..6).map(|_| task(0.1, 0.0, 0.5, 0.0, 0.5)).collect();
+        let s = schedule(&tasks, PipelineMode::ClusterLevel, 2);
+        assert_eq!(s.io_busy_s, 0.0);
+        assert_eq!(s.io_stall_s, 0.0);
+        // 6 clusters × 1.1s compute over 2 threads = 3.3s
+        assert!((s.makespan_s - 3.3).abs() < 1e-9, "{}", s.makespan_s);
+    }
+
+    #[test]
+    fn io_bound_step_is_io_limited() {
+        let tasks: Vec<_> = (0..4).map(|_| task(0.01, 2.0, 0.05, 2.0, 0.05)).collect();
+        let s = schedule(&tasks, PipelineMode::ClusterLevel, 4);
+        let total_io = 16.0;
+        assert!(s.makespan_s >= total_io);
+        assert!(s.makespan_s < total_io * 1.05, "{}", s.makespan_s);
+        // nearly all of it is stall
+        assert!(s.io_stall_s > total_io * 0.7, "stall {}", s.io_stall_s);
+    }
+
+    #[test]
+    fn single_cluster_is_its_chain() {
+        let t = task(0.1, 0.2, 0.3, 0.4, 0.5);
+        for mode in [PipelineMode::MatrixLevel, PipelineMode::ClusterLevel] {
+            let s = schedule(&[t], mode, 4);
+            assert!((s.makespan_s - 1.5).abs() < 1e-9, "{mode:?} {}", s.makespan_s);
+        }
+    }
+
+    #[test]
+    fn empty_task_list() {
+        let s = schedule(&[], PipelineMode::ClusterLevel, 4);
+        assert_eq!(s.makespan_s, 0.0);
+    }
+
+    #[test]
+    fn matrix_barrier_blocks_ud_until_all_gates_done() {
+        // one slow gate IO holds back every cluster's UpDown under
+        // MatrixLevel but not under ClusterLevel.
+        let mut tasks: Vec<_> = (0..4).map(|_| task(0.0, 0.0, 0.1, 0.0, 0.1)).collect();
+        tasks.push(task(0.0, 5.0, 0.1, 0.0, 0.1));
+        let matrix = schedule(&tasks, PipelineMode::MatrixLevel, 2);
+        let cluster = schedule(&tasks, PipelineMode::ClusterLevel, 2);
+        // matrix: UD work waits for the 5s gate IO → makespan > 5.2
+        assert!(matrix.makespan_s > 5.19, "{}", matrix.makespan_s);
+        // cluster: the fast clusters finish entirely during the slow IO
+        assert!(cluster.makespan_s < 5.3, "{}", cluster.makespan_s);
+        assert!(cluster.makespan_s < matrix.makespan_s);
+    }
+
+    #[test]
+    fn more_compute_threads_reduce_makespan_when_compute_bound() {
+        let tasks: Vec<_> = (0..16).map(|_| task(0.05, 0.01, 0.5, 0.01, 0.5)).collect();
+        let s2 = schedule(&tasks, PipelineMode::ClusterLevel, 2);
+        let s8 = schedule(&tasks, PipelineMode::ClusterLevel, 8);
+        assert!(s8.makespan_s < s2.makespan_s * 0.5);
+    }
+}

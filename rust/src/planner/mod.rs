@@ -1,0 +1,313 @@
+//! Offline execution planner (§5): neuron classification across batch
+//! sizes, hot-ratio selection under the device's compute/IO balance, the
+//! static NPU graph table, and the hardware plan (core assignments).
+//!
+//! The planner is a cost-model search, exactly as in the paper: for every
+//! batch size it evaluates candidate hot fractions against the modeled
+//! NPU time (dense hot cluster), CPU time (predictor + sparse cold
+//! compute), and expected IO time (steady-state LRU misses via Che's
+//! approximation), and keeps the argmin. The chosen points become the
+//! pre-built NPU graph table that the engine switches between at runtime
+//! (§4.1.3).
+
+use crate::cache::MemoryBudget;
+use crate::config::{
+    CoreClass, DeviceConfig, ModelSpec, RuntimeConfig, XpuMode,
+};
+use crate::sparsity::{lru_hit_rate, ActivationModel, PredictorModel, N_REP};
+use crate::storage::{IoBurst, IoPattern, UfsModel};
+use crate::xpu::XpuModel;
+
+/// One pre-built NPU graph operating point.
+#[derive(Debug, Clone, Copy)]
+pub struct GraphPoint {
+    pub batch: usize,
+    pub hot_frac: f64,
+    /// Modeled per-layer decode cost at this point (seconds).
+    pub layer_cost_s: f64,
+}
+
+/// The execution plan the offline phase hands to the online engine.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// hot fraction per batch size (index = batch − 1).
+    pub hot_frac_by_batch: Vec<f64>,
+    pub graph_table: Vec<GraphPoint>,
+    /// Core driving UFS IO (§2.3.2: the big core).
+    pub io_core: CoreClass,
+    pub compute_threads: usize,
+    pub io_threads: usize,
+    pub cluster_neurons: usize,
+    /// Memory plan the hot/cold split was solved under.
+    pub budget: MemoryBudget,
+}
+
+impl Plan {
+    pub fn hot_frac(&self, batch: usize) -> f64 {
+        let i = batch.clamp(1, self.hot_frac_by_batch.len()) - 1;
+        self.hot_frac_by_batch[i]
+    }
+}
+
+/// The planner itself.
+pub struct Planner<'a> {
+    pub dev: &'a DeviceConfig,
+    pub spec: &'a ModelSpec,
+    pub cfg: &'a RuntimeConfig,
+    pub act: &'a ActivationModel,
+    pub pred: PredictorModel,
+}
+
+impl<'a> Planner<'a> {
+    pub fn new(
+        dev: &'a DeviceConfig,
+        spec: &'a ModelSpec,
+        cfg: &'a RuntimeConfig,
+        act: &'a ActivationModel,
+    ) -> Self {
+        Planner { dev, spec, cfg, act, pred: PredictorModel::default() }
+    }
+
+    /// Modeled cost of one decode layer at (batch, hot_frac) given the
+    /// cold cache capacity implied by the memory budget.
+    pub fn layer_cost(
+        &self,
+        batch: usize,
+        hot_frac: f64,
+        budget: &MemoryBudget,
+    ) -> f64 {
+        let xpu = XpuModel::new(self.dev.clone());
+        let ufs = UfsModel::new(self.dev.ufs.clone());
+        let spec = self.spec;
+        let h = spec.hidden as f64;
+        let bpp = spec.bytes_per_param();
+        let neurons = spec.neurons_per_layer() as f64;
+        let expert_frac = spec.active_experts as f64 / spec.experts as f64;
+
+        // memory feasibility: hot region must fit
+        let hot_n = neurons * hot_frac;
+        let hot_bytes =
+            (hot_n * spec.params_per_neuron() as f64 * bpp) * spec.layers as f64;
+        if hot_bytes > budget.ffn_cache as f64 {
+            return f64::INFINITY;
+        }
+
+        // NPU side: dense GLU over the hot cluster (3 matmuls), per layer
+        let use_npu = matches!(self.cfg.xpu, XpuMode::Hybrid | XpuMode::NpuOnly);
+        let npu_t = if use_npu && hot_n > 0.0 {
+            let flops = 2.0 * 3.0 * hot_n * h * batch as f64 * expert_frac;
+            let bytes = 3.0 * hot_n * h * bpp * expert_frac;
+            let bw = if matches!(self.cfg.xpu, XpuMode::Hybrid) {
+                xpu.shared_bw_gbps(crate::xpu::Unit::Npu)
+            } else {
+                self.dev.npu.mem_bw_gbps
+            };
+            (flops / (self.dev.npu.tops_int4 * 1e12)).max(bytes / (bw * 1e9))
+        } else {
+            0.0
+        };
+
+        // CPU side: predictor + sparse cold compute
+        let cold_active = self.act.cold_active_frac(hot_frac, batch)
+            * neurons
+            * (1.0 - hot_frac)
+            * expert_frac;
+        let computed = self.pred.predicted_count(cold_active as u64) as f64;
+        let pred_flops = self.pred.flops(spec.hidden, spec.inter, batch);
+        let cpu_flops = 2.0 * 3.0 * computed * h * batch as f64 + pred_flops;
+        let cpu_bytes = 3.0 * computed * h * bpp;
+        let cpu_bw = if matches!(self.cfg.xpu, XpuMode::Hybrid) {
+            xpu.shared_bw_gbps(crate::xpu::Unit::Cpu)
+        } else {
+            self.dev.cpu.mem_bw_gbps
+        } * 0.85;
+        let cpu_t = (cpu_flops / xpu.cpu_gflops(self.cfg.compute_threads))
+            .max(cpu_bytes / (cpu_bw * 1e9));
+
+        // IO side: expected misses at the steady-state LRU hit rate
+        let io_t = if self.cfg.offload_ffn_frac > 0.0 || budget.resident_ffn_frac() < 1.0 {
+            let cold_cap = budget
+                .cache_neurons(spec.bundle_bytes())
+                .saturating_sub((hot_n * spec.layers as f64) as usize);
+            let hit = self.cold_hit_rate(hot_frac, batch, cold_cap);
+            let misses = cold_active * (1.0 - hit);
+            let reads = if self.cfg.two_phase_load {
+                misses * (1.0 + self.act.bundle_coactivation)
+            } else {
+                misses
+            };
+            let block = if self.cfg.two_phase_load { 4096 } else { spec.bundle_aligned_bytes() };
+            ufs.burst_time_s(&IoBurst {
+                pattern: IoPattern::Random,
+                block_bytes: block,
+                count: reads.round() as u64,
+                range_bytes: (spec.ffn_bytes_per_layer() * spec.layers as u64) as u64,
+                core: CoreClass::Big,
+                issuers: self.cfg.io_threads,
+            })
+        } else {
+            0.0
+        };
+
+        // attention (always on the batch's best unit under this mode)
+        let attn_flops = 2.0 * spec.attn_params_per_layer() as f64 * batch as f64;
+        let attn_bytes = spec.attn_params_per_layer() as f64 * bpp;
+        let attn_t = if use_npu {
+            (attn_flops / (self.dev.npu.tops_int4 * 1e12))
+                .max(attn_bytes / (self.dev.npu.mem_bw_gbps * 1e9))
+        } else {
+            (attn_flops / xpu.cpu_gflops(self.cfg.compute_threads))
+                .max(attn_bytes / (self.dev.cpu.mem_bw_gbps * 1e9))
+        };
+
+        // hybrid: NPU & CPU run concurrently; IO overlaps via the pipeline
+        attn_t + npu_t.max(cpu_t).max(io_t)
+    }
+
+    /// Steady-state cold-region LRU hit rate via Che's approximation.
+    pub fn cold_hit_rate(&self, hot_frac: f64, batch: usize, cold_cap: usize) -> f64 {
+        if !self.cfg.neuron_cache || cold_cap == 0 {
+            return 0.0;
+        }
+        let k = ((N_REP as f64) * hot_frac).round() as usize;
+        let expert_frac = self.spec.active_experts as f64 / self.spec.experts as f64;
+        let q: Vec<(f64, f64)> = self.act.probs()[k.min(N_REP)..]
+            .iter()
+            .map(|&p| {
+                let pb = 1.0 - (1.0 - p).powi(batch as i32);
+                (pb * expert_frac, self.act.neurons_per_rep * self.spec.layers as f64)
+            })
+            .collect();
+        let base = lru_hit_rate(&q, cold_cap as f64);
+        // token-to-token persistence: carried-over actives hit as long as
+        // the cold region can actually hold the per-step working set —
+        // below that, even just-used neurons are evicted before reuse.
+        let working_set: f64 = q.iter().map(|(qi, w)| qi * w).sum();
+        let rho = self.spec.activation_persistence
+            * (cold_cap as f64 / (2.0 * working_set).max(1.0)).min(1.0);
+        rho + (1.0 - rho) * base
+    }
+
+    /// Generate the full plan.
+    pub fn generate(&self) -> Plan {
+        let budget = if self.cfg.memory_budget > 0 {
+            MemoryBudget::plan(self.spec, self.cfg, self.cfg.memory_budget)
+        } else {
+            MemoryBudget::for_offload_frac(self.spec, self.cfg, self.cfg.offload_ffn_frac)
+        };
+        let candidates: Vec<f64> =
+            (0..=20).map(|i| i as f64 * 0.05).collect();
+        let mut hot_frac_by_batch = Vec::new();
+        let mut graph_table = Vec::new();
+        for batch in 1..=self.cfg.max_batch {
+            let (mut best_f, mut best_c) = (0.0, f64::INFINITY);
+            for &f in &candidates {
+                if f > 0.0 && !matches!(self.cfg.xpu, XpuMode::Hybrid | XpuMode::NpuOnly) {
+                    continue; // no NPU → no hot region
+                }
+                let c = self.layer_cost(batch, f, &budget);
+                if c < best_c {
+                    best_c = c;
+                    best_f = f;
+                }
+            }
+            hot_frac_by_batch.push(best_f);
+            graph_table.push(GraphPoint { batch, hot_frac: best_f, layer_cost_s: best_c });
+        }
+        Plan {
+            hot_frac_by_batch,
+            graph_table,
+            io_core: CoreClass::Big,
+            compute_threads: self.cfg.compute_threads,
+            io_threads: self.cfg.io_threads,
+            cluster_neurons: self.cfg.cluster_neurons,
+            budget,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{bamboo_7b, oneplus_12};
+
+    fn mk_plan(cfg: &RuntimeConfig) -> Plan {
+        let dev = oneplus_12();
+        let spec = bamboo_7b();
+        let act = ActivationModel::for_model(&spec, 1);
+        Planner::new(&dev, &spec, cfg, &act).generate()
+    }
+
+    #[test]
+    fn hybrid_plan_uses_npu_more_at_larger_batch() {
+        // §4.1.3: larger batches → denser activations → more neurons to
+        // the NPU. (The paper's dynamic-ratio scenario is the in-memory
+        // Best-of-N run; under heavy offload the planner instead protects
+        // the cold cache.)
+        let cfg = RuntimeConfig {
+            max_batch: 4,
+            offload_ffn_frac: 0.0,
+            ..Default::default()
+        };
+        let plan = mk_plan(&cfg);
+        assert_eq!(plan.hot_frac_by_batch.len(), 4);
+        let f1 = plan.hot_frac(1);
+        let f4 = plan.hot_frac(4);
+        assert!(f4 >= f1, "f1 {f1} f4 {f4}");
+        assert!(f4 > 0.0, "batch-4 plan must engage the NPU");
+    }
+
+    #[test]
+    fn cpu_only_plan_has_no_hot_region() {
+        let cfg = RuntimeConfig {
+            xpu: XpuMode::CpuOnly,
+            ..RuntimeConfig::llm_flash_like()
+        };
+        let plan = mk_plan(&cfg);
+        assert!(plan.hot_frac_by_batch.iter().all(|&f| f == 0.0));
+    }
+
+    #[test]
+    fn graph_table_has_one_point_per_batch() {
+        let cfg = RuntimeConfig { max_batch: 3, ..Default::default() };
+        let plan = mk_plan(&cfg);
+        assert_eq!(plan.graph_table.len(), 3);
+        for (i, gp) in plan.graph_table.iter().enumerate() {
+            assert_eq!(gp.batch, i + 1);
+            assert!(gp.layer_cost_s.is_finite());
+        }
+    }
+
+    #[test]
+    fn io_core_is_big_core() {
+        let plan = mk_plan(&RuntimeConfig::default());
+        assert_eq!(plan.io_core, CoreClass::Big);
+    }
+
+    #[test]
+    fn more_cache_raises_hit_rate() {
+        let dev = oneplus_12();
+        let spec = bamboo_7b();
+        let cfg = RuntimeConfig::default();
+        let act = ActivationModel::for_model(&spec, 1);
+        let p = Planner::new(&dev, &spec, &cfg, &act);
+        let small = p.cold_hit_rate(0.2, 1, 50_000);
+        let large = p.cold_hit_rate(0.2, 1, 300_000);
+        assert!(large > small, "{small} → {large}");
+    }
+
+    #[test]
+    fn infeasible_hot_region_is_rejected() {
+        let dev = oneplus_12();
+        let spec = bamboo_7b();
+        // tiny memory: a huge hot region cannot fit
+        let cfg = RuntimeConfig {
+            memory_budget: 3 * 1024 * 1024 * 1024,
+            ..Default::default()
+        };
+        let act = ActivationModel::for_model(&spec, 1);
+        let p = Planner::new(&dev, &spec, &cfg, &act);
+        let budget = MemoryBudget::plan(&spec, &cfg, cfg.memory_budget);
+        assert!(p.layer_cost(1, 0.7, &budget).is_infinite());
+    }
+}

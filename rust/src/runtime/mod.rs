@@ -1,0 +1,326 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text) and serves them as
+//! compiled executables — the rust-side half of the NPU-graph table.
+//!
+//! The paper's engine pre-builds one static NPU graph per (batch size,
+//! hot-ratio) point and switches among them at runtime (§4.1.3). Here each
+//! graph is one `artifacts/*.hlo.txt` produced by `python -m compile.aot`,
+//! compiled ONCE on the PJRT CPU client at startup; "activating" a graph
+//! is a HashMap lookup. Python is never on the request path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::model::ModelDims;
+use crate::util::json::Json;
+
+/// Host-side tensor (f32 or i32), row-major.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Debug, Clone)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::F32(data) }
+    }
+
+    pub fn i32_scalar(v: i32) -> Tensor {
+        Tensor { shape: vec![], data: TensorData::I32(vec![v]) }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::f32(shape, vec![0.0; n])
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            TensorData::I32(_) => panic!("tensor is i32, not f32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Vec<f32> {
+        match self.data {
+            TensorData::F32(v) => v,
+            TensorData::I32(_) => panic!("tensor is i32, not f32"),
+        }
+    }
+
+    /// Encode as an XLA literal (cacheable: weights that do not
+    /// change between calls should be encoded once and reused).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+            TensorData::I32(v) => {
+                if dims.is_empty() {
+                    xla::Literal::scalar(v[0])
+                } else {
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+            }
+        })
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::f32(dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(Tensor {
+                shape: dims,
+                data: TensorData::I32(lit.to_vec::<i32>()?),
+            }),
+            other => bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+/// Manifest-declared argument of a graph.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One compiled NPU graph.
+pub struct Graph {
+    pub name: String,
+    pub kind: String,
+    pub batch: usize,
+    pub hot_k: usize,
+    pub args: Vec<ArgSpec>,
+    pub n_outputs: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl std::fmt::Debug for Graph {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Graph")
+            .field("name", &self.name)
+            .field("kind", &self.kind)
+            .field("batch", &self.batch)
+            .field("hot_k", &self.hot_k)
+            .finish()
+    }
+}
+
+/// The runtime: PJRT CPU client + compiled graph table.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    graphs: HashMap<String, Graph>,
+    pub dims: ModelDims,
+    pub artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load and compile every graph in the manifest. `filter` can restrict
+    /// compilation (e.g. only batch-1 graphs) to cut startup time.
+    pub fn load_filtered(
+        dir: &Path,
+        filter: impl Fn(&str) -> bool,
+    ) -> Result<Runtime> {
+        let manifest_path = dir.join("manifest.json");
+        let manifest = Json::parse(
+            &std::fs::read_to_string(&manifest_path)
+                .with_context(|| format!("read {}", manifest_path.display()))?,
+        )?;
+        let dims = ModelDims::from_json(manifest.get("dims"))
+            .context("manifest dims")?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut graphs = HashMap::new();
+        let entries = manifest
+            .get("graphs")
+            .as_arr()
+            .context("manifest.graphs missing")?;
+        for entry in entries {
+            let name = entry.get("name").as_str().context("graph name")?;
+            if !filter(name) {
+                continue;
+            }
+            let file = entry.get("file").as_str().context("graph file")?;
+            let proto =
+                xla::HloModuleProto::from_text_file(dir.join(file).to_str().unwrap())?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            let args = entry
+                .get("args")
+                .as_arr()
+                .context("graph args")?
+                .iter()
+                .map(|a| {
+                    Ok(ArgSpec {
+                        name: a.get("name").as_str().context("arg name")?.to_string(),
+                        shape: a.get("shape").to_usize_vec().context("arg shape")?,
+                        dtype: a.get("dtype").as_str().unwrap_or("float32").to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let meta = entry.get("meta");
+            graphs.insert(
+                name.to_string(),
+                Graph {
+                    name: name.to_string(),
+                    kind: meta.get("kind").as_str().unwrap_or("").to_string(),
+                    batch: meta.get("batch").as_usize().unwrap_or(0),
+                    hot_k: meta.get("hot_k").as_usize().unwrap_or(0),
+                    args,
+                    n_outputs: entry.get("outputs").as_arr().map(|o| o.len()).unwrap_or(1),
+                    exe,
+                },
+            );
+        }
+        Ok(Runtime { client, graphs, dims, artifacts_dir: dir.to_path_buf() })
+    }
+
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        Self::load_filtered(dir, |_| true)
+    }
+
+    pub fn graph_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.graphs.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&Graph> {
+        self.graphs
+            .get(name)
+            .with_context(|| format!("graph {name} not compiled"))
+    }
+
+    pub fn has_graph(&self, name: &str) -> bool {
+        self.graphs.contains_key(name)
+    }
+
+    /// Execute a graph with host tensors; returns the tuple elements.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let graph = self.graph(name)?;
+        ensure!(
+            inputs.len() == graph.args.len(),
+            "graph {name}: {} inputs given, {} expected",
+            inputs.len(),
+            graph.args.len()
+        );
+        for (t, spec) in inputs.iter().zip(&graph.args) {
+            ensure!(
+                t.shape == spec.shape,
+                "graph {name} arg {}: shape {:?} != {:?}",
+                spec.name,
+                t.shape,
+                spec.shape
+            );
+        }
+        let literals = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        let parts = self.execute_raw(name, &refs)?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Execute with pre-encoded literals (static weight literals are
+    /// encoded once at startup and passed by reference). Returns the raw
+    /// tuple elements so outputs like KV caches can be fed back into the
+    /// next step without a host round-trip.
+    pub fn execute_raw(
+        &self,
+        name: &str,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let graph = self.graph(name)?;
+        ensure!(
+            inputs.len() == graph.args.len(),
+            "graph {name}: {} inputs given, {} expected",
+            inputs.len(),
+            graph.args.len()
+        );
+        let result = graph.exe.execute::<&xla::Literal>(inputs)?;
+        let root = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → root is always a tuple.
+        let parts = root.to_tuple()?;
+        ensure!(
+            parts.len() == graph.n_outputs,
+            "graph {name}: {} outputs, expected {}",
+            parts.len(),
+            graph.n_outputs
+        );
+        Ok(parts)
+    }
+
+
+    // ---- graph-table naming scheme (must match model.graph_table) ------
+
+    pub fn decode_attn_name(batch: usize) -> String {
+        format!("decode_attn_b{batch}")
+    }
+
+    pub fn decode_ffn_name(batch: usize, hot_k: usize) -> String {
+        format!("decode_ffn_b{batch}_k{hot_k}")
+    }
+
+    pub fn decode_dense_name(batch: usize) -> String {
+        format!("decode_dense_b{batch}")
+    }
+
+    pub fn lm_head_name(batch: usize) -> String {
+        format!("lm_head_b{batch}")
+    }
+
+    pub fn prefill_name(chunk: usize) -> String {
+        format!("prefill_layer_t{chunk}")
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("dims", &self.dims)
+            .field("graphs", &self.graphs.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_product_checks() {
+        let t = Tensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        let z = Tensor::zeros(vec![4, 5]);
+        assert_eq!(z.as_f32().len(), 20);
+    }
+
+    #[test]
+    fn graph_names_match_python_table() {
+        assert_eq!(Runtime::decode_attn_name(2), "decode_attn_b2");
+        assert_eq!(Runtime::decode_ffn_name(1, 512), "decode_ffn_b1_k512");
+        assert_eq!(Runtime::prefill_name(64), "prefill_layer_t64");
+        assert_eq!(Runtime::lm_head_name(4), "lm_head_b4");
+        assert_eq!(Runtime::decode_dense_name(1), "decode_dense_b1");
+    }
+}

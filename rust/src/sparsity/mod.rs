@@ -1,0 +1,358 @@
+//! Activation-sparsity substrate: neuron temperature distributions,
+//! batch-aggregated activation statistics (Fig.2), the online activation
+//! predictor's quality model, and LRU cache-hit analysis (Che's
+//! approximation) used by the cache and planner.
+//!
+//! The paper derives these statistics by tracing 10M+ tokens of Wikipedia/
+//! RefinedWeb through each model (§5). That trace is not available here, so
+//! [`ActivationModel`] generates a calibrated temperature distribution
+//! with the same macroscopic properties the paper reports:
+//!
+//!   * a tiny hot set (<1% of neurons at batch 1) carrying most accesses,
+//!   * batch aggregation: a neuron is "activated" if at least one token in
+//!     the batch fires it, so the highly-activated share grows from <1%
+//!     (B=1) to ~75% (B=32) — Fig.2,
+//!   * 80% Gate/Up/Down bundle co-activation; <20% residual co-activation
+//!     among cold neurons after hot removal (§4.2, §4.4).
+
+use crate::config::ModelSpec;
+use crate::util::prng::Rng;
+
+/// Number of representative neurons used to model a layer's temperature
+/// distribution (each represents `inter·experts / N_REP` real neurons).
+pub const N_REP: usize = 2048;
+
+/// Per-model neuron temperature model.
+#[derive(Debug, Clone)]
+pub struct ActivationModel {
+    /// Per-token activation probability of each representative neuron,
+    /// sorted descending (index 0 = hottest).
+    probs: Vec<f64>,
+    /// How many real neurons each representative stands for.
+    pub neurons_per_rep: f64,
+    /// Gate/Up/Down cross-matrix co-activation probability.
+    pub bundle_coactivation: f64,
+}
+
+impl ActivationModel {
+    /// Build the calibrated distribution for a model spec.
+    pub fn for_model(spec: &ModelSpec, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x5041_4253);
+        let hot_frac = spec.hot_frac_b1;
+        let s = spec.sparsity_active_frac;
+        // Hot set: p ∈ [0.85, 0.98]. Cold set: lognormal with σ=0.42 and
+        // mean chosen so the whole distribution averages to `s`. The σ is
+        // fitted so that most neurons clear the "highly activated"
+        // threshold at batch 32 when s ≈ 0.11 (Fig.2's Bamboo-7B panel).
+        let hot_n = ((N_REP as f64) * hot_frac).round() as usize;
+        let cold_mean = ((s - hot_frac * 0.92) / (1.0 - hot_frac)).max(1e-4);
+        let sigma = 0.70;
+        let mu = cold_mean.ln() - sigma * sigma / 2.0;
+        let mut probs = Vec::with_capacity(N_REP);
+        for i in 0..N_REP {
+            let p = if i < hot_n {
+                0.85 + 0.13 * rng.f64()
+            } else {
+                (mu + sigma * rng.normal()).exp().clamp(1e-4, 0.80)
+            };
+            probs.push(p);
+        }
+        probs.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let total = spec.neurons_per_layer() as f64;
+        ActivationModel {
+            probs,
+            neurons_per_rep: total / N_REP as f64,
+            bundle_coactivation: spec.bundle_coactivation,
+        }
+    }
+
+    /// Representative per-token activation probabilities (descending).
+    pub fn probs(&self) -> &[f64] {
+        &self.probs
+    }
+
+    /// P(neuron rep i activated by ≥1 token of a size-`batch` batch).
+    pub fn batch_prob(&self, i: usize, batch: usize) -> f64 {
+        1.0 - (1.0 - self.probs[i]).powi(batch as i32)
+    }
+
+    /// Mean fraction of neurons activated under a batch (Fig.2 aggregate).
+    pub fn active_frac(&self, batch: usize) -> f64 {
+        self.probs
+            .iter()
+            .map(|p| 1.0 - (1.0 - p).powi(batch as i32))
+            .sum::<f64>()
+            / N_REP as f64
+    }
+
+    /// Fraction of neurons that are "highly activated" (batch-aggregated
+    /// activation probability above `thresh`) — the white region of Fig.2.
+    pub fn hot_share(&self, batch: usize, thresh: f64) -> f64 {
+        self.probs
+            .iter()
+            .filter(|&&p| 1.0 - (1.0 - p).powi(batch as i32) > thresh)
+            .count() as f64
+            / N_REP as f64
+    }
+
+    /// Fraction of all *activations* covered by the hottest `frac` of
+    /// neurons at the given batch size (planner coverage curve, §5).
+    pub fn coverage_of_top(&self, frac: f64, batch: usize) -> f64 {
+        let k = ((N_REP as f64) * frac).round() as usize;
+        let total: f64 = (0..N_REP).map(|i| self.batch_prob(i, batch)).sum();
+        if total == 0.0 {
+            return 0.0;
+        }
+        (0..k.min(N_REP)).map(|i| self.batch_prob(i, batch)).sum::<f64>() / total
+    }
+
+    /// Mean per-step activation probability of the *cold* region when the
+    /// hottest `hot_frac` of neurons are pinned hot.
+    pub fn cold_active_frac(&self, hot_frac: f64, batch: usize) -> f64 {
+        let k = ((N_REP as f64) * hot_frac).round() as usize;
+        if k >= N_REP {
+            return 0.0;
+        }
+        (k..N_REP)
+            .map(|i| self.batch_prob(i, batch))
+            .sum::<f64>()
+            / (N_REP - k) as f64
+    }
+
+    /// Sample the number of activated cold neurons for one decode step in
+    /// one layer (real-neuron units).
+    pub fn sample_cold_active(
+        &self,
+        hot_frac: f64,
+        batch: usize,
+        rng: &mut Rng,
+    ) -> u64 {
+        let k = ((N_REP as f64) * hot_frac).round() as usize;
+        let mut count = 0.0;
+        for i in k..N_REP {
+            let p = self.batch_prob(i, batch);
+            // each representative stands for neurons_per_rep neurons
+            count += rng.binomial(self.neurons_per_rep.round() as usize, p) as f64;
+        }
+        count as u64
+    }
+
+    /// Fig.2 heat grid: rows = batch sizes, cols = neuron deciles (hottest
+    /// first), value = mean batch-aggregated activation frequency.
+    pub fn heat_grid(&self, batches: &[usize], deciles: usize) -> Vec<Vec<f64>> {
+        let per = N_REP / deciles;
+        batches
+            .iter()
+            .map(|&b| {
+                (0..deciles)
+                    .map(|d| {
+                        let lo = d * per;
+                        let hi = (lo + per).min(N_REP);
+                        (lo..hi).map(|i| self.batch_prob(i, b)).sum::<f64>()
+                            / (hi - lo) as f64
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+/// Quality model of the online activation predictor (§3.2: PowerInfer-2
+/// reuses PowerInfer/LLMFlash-style low-rank MLP predictors on the CPU
+/// side).
+#[derive(Debug, Clone, Copy)]
+pub struct PredictorModel {
+    /// P(active neuron is predicted active) — misses cost accuracy, and
+    /// the paper reports negligible degradation, so recall is high.
+    pub recall: f64,
+    /// Extra inactive neurons predicted active, as a fraction of the true
+    /// active count (wasted compute + I/O).
+    pub false_positive_overhead: f64,
+    /// Low-rank dimension (drives predictor FLOPs).
+    pub rank: usize,
+}
+
+impl Default for PredictorModel {
+    fn default() -> Self {
+        PredictorModel { recall: 0.97, false_positive_overhead: 0.12, rank: 256 }
+    }
+}
+
+impl PredictorModel {
+    /// Neurons the CPU will actually *compute* given `active` truly-active
+    /// cold neurons.
+    pub fn predicted_count(&self, active: u64) -> u64 {
+        (active as f64 * self.recall * (1.0 + self.false_positive_overhead))
+            .round() as u64
+    }
+
+    /// FLOPs per token per layer for running the predictor.
+    pub fn flops(&self, hidden: usize, inter: usize, batch: usize) -> f64 {
+        2.0 * batch as f64 * (hidden * self.rank + self.rank * inter) as f64
+    }
+}
+
+/// Che's approximation for LRU hit rates: given per-step access
+/// probabilities `q` (each representing `weight` objects) and a capacity,
+/// solve Σ 1-(1-q_i)^T = C for the characteristic time T, then
+/// hit_i = 1-(1-q_i)^T.
+pub fn lru_hit_rate(q: &[(f64, f64)], capacity: f64) -> f64 {
+    let total_objects: f64 = q.iter().map(|(_, w)| w).sum();
+    if capacity >= total_objects {
+        return 1.0;
+    }
+    if capacity <= 0.0 {
+        return 0.0;
+    }
+    // binary search on T (steps)
+    let occupancy = |t: f64| -> f64 {
+        q.iter()
+            .map(|(qi, w)| w * (1.0 - (1.0 - qi).powf(t)))
+            .sum::<f64>()
+    };
+    let (mut lo, mut hi) = (0.0f64, 1.0f64);
+    while occupancy(hi) < capacity && hi < 1e12 {
+        hi *= 2.0;
+    }
+    for _ in 0..64 {
+        let mid = 0.5 * (lo + hi);
+        if occupancy(mid) < capacity {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let t = 0.5 * (lo + hi);
+    let access_total: f64 = q.iter().map(|(qi, w)| qi * w).sum();
+    if access_total == 0.0 {
+        return 1.0;
+    }
+    q.iter()
+        .map(|(qi, w)| qi * w * (1.0 - (1.0 - qi).powf(t)))
+        .sum::<f64>()
+        / access_total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{bamboo_7b, mistral_7b_silu};
+
+    fn bamboo_model() -> ActivationModel {
+        ActivationModel::for_model(&bamboo_7b(), 1)
+    }
+
+    #[test]
+    fn batch1_activation_matches_model_sparsity() {
+        let m = bamboo_model();
+        let f = m.active_frac(1);
+        assert!((f - 0.11).abs() < 0.02, "active frac {f}");
+    }
+
+    #[test]
+    fn fig2_hot_share_grows_from_under_1pct_to_about_75pct() {
+        // Fig.2: highly-activated share <1% at batch 1, ~75% at batch 32.
+        let m = bamboo_model();
+        let b1 = m.hot_share(1, 0.85);
+        let b32 = m.hot_share(32, 0.90);
+        assert!(b1 < 0.02, "b1 hot share {b1}");
+        assert!((0.55..0.92).contains(&b32), "b32 hot share {b32}");
+    }
+
+    #[test]
+    fn heat_grid_is_monotone_in_batch_and_rank() {
+        let m = bamboo_model();
+        let grid = m.heat_grid(&[1, 4, 16, 32], 10);
+        // monotone in batch (column-wise)
+        for c in 0..10 {
+            for r in 1..4 {
+                assert!(grid[r][c] >= grid[r - 1][c] - 1e-12);
+            }
+        }
+        // monotone in neuron rank (row-wise, hottest decile first)
+        for row in &grid {
+            for c in 1..10 {
+                assert!(row[c] <= row[c - 1] + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn silu_model_is_much_denser() {
+        let relu = bamboo_model();
+        let silu = ActivationModel::for_model(&mistral_7b_silu(), 1);
+        assert!(silu.active_frac(1) > 2.5 * relu.active_frac(1));
+        assert!((silu.active_frac(1) - 0.5).abs() < 0.06);
+    }
+
+    #[test]
+    fn top_neurons_cover_most_activations() {
+        // skewed temperature: the hottest 20% must cover well over 20%
+        // of activations at batch 1.
+        let m = bamboo_model();
+        let cov = m.coverage_of_top(0.2, 1);
+        assert!(cov > 0.45, "coverage {cov}");
+        // and coverage is monotone in the fraction
+        assert!(m.coverage_of_top(0.5, 1) > cov);
+        assert!((m.coverage_of_top(1.0, 1) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cold_region_is_sparser_than_whole() {
+        let m = bamboo_model();
+        let whole = m.active_frac(1);
+        let cold = m.cold_active_frac(0.3, 1);
+        assert!(cold < whole, "cold {cold} vs whole {whole}");
+    }
+
+    #[test]
+    fn sampled_cold_count_matches_expectation() {
+        let m = bamboo_model();
+        let mut rng = Rng::new(9);
+        let hot_frac = 0.3;
+        let n: u64 = 200;
+        let total: u64 = (0..n).map(|_| m.sample_cold_active(hot_frac, 1, &mut rng)).sum();
+        let mean = total as f64 / n as f64;
+        let cold_neurons = (1.0 - hot_frac) * m.neurons_per_rep * N_REP as f64;
+        let expected = m.cold_active_frac(hot_frac, 1) * cold_neurons;
+        assert!((mean - expected).abs() / expected < 0.05,
+                "mean {mean} vs expected {expected}");
+    }
+
+    #[test]
+    fn predictor_counts() {
+        let p = PredictorModel::default();
+        let n = p.predicted_count(1000);
+        assert!((1000..1200).contains(&n), "{n}");
+        assert!(p.flops(4096, 14336, 1) > 0.0);
+    }
+
+    #[test]
+    fn lru_hit_rate_limits() {
+        let q: Vec<(f64, f64)> = (0..100).map(|i| (0.5 / (i as f64 + 1.0), 10.0)).collect();
+        assert_eq!(lru_hit_rate(&q, 1000.0), 1.0); // cache ≥ universe
+        assert_eq!(lru_hit_rate(&q, 0.0), 0.0);
+        let half = lru_hit_rate(&q, 500.0);
+        assert!(half > 0.5 && half < 1.0, "{half}");
+        // monotone in capacity
+        assert!(lru_hit_rate(&q, 700.0) > half);
+    }
+
+    #[test]
+    fn lru_prefers_hot_objects() {
+        // a cache holding exactly the hot half should hit far more often
+        // than uniform popularity would suggest
+        let mut q: Vec<(f64, f64)> = vec![(0.9, 50.0), (0.01, 50.0)];
+        let hit = lru_hit_rate(&q, 50.0);
+        assert!(hit > 0.9, "{hit}");
+        q.reverse(); // order must not matter
+        assert!((lru_hit_rate(&q, 50.0) - hit).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = ActivationModel::for_model(&bamboo_7b(), 7);
+        let b = ActivationModel::for_model(&bamboo_7b(), 7);
+        assert_eq!(a.probs()[..16], b.probs()[..16]);
+    }
+}

@@ -1,0 +1,195 @@
+//! Real-file storage backend for the end-to-end example.
+//!
+//! `FlashFile` does positioned reads (pread) against the bundle-layout
+//! weight file produced by `model::weights`. `ThrottledFile` wraps it and
+//! sleeps the difference between real NVMe latency and the UFS model's
+//! predicted latency, so the e2e example experiences phone-like storage.
+
+use std::fs::File;
+use std::os::unix::io::AsRawFd;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::CoreClass;
+use crate::storage::{IoPattern, UfsModel};
+
+/// Positioned-read file handle (thread-safe: pread carries its own offset).
+#[derive(Debug)]
+pub struct FlashFile {
+    file: File,
+    len: u64,
+}
+
+impl FlashFile {
+    pub fn open(path: &Path) -> Result<Self> {
+        let file = File::open(path)
+            .with_context(|| format!("open flash file {}", path.display()))?;
+        let len = file.metadata()?.len();
+        Ok(FlashFile { file, len })
+    }
+
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Read exactly `buf.len()` bytes at `offset`.
+    pub fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        ensure!(
+            offset + buf.len() as u64 <= self.len,
+            "read past EOF: offset {offset} + {} > {}",
+            buf.len(),
+            self.len
+        );
+        let mut done = 0usize;
+        while done < buf.len() {
+            let n = unsafe {
+                libc::pread(
+                    self.file.as_raw_fd(),
+                    buf[done..].as_mut_ptr() as *mut libc::c_void,
+                    buf.len() - done,
+                    (offset + done as u64) as libc::off_t,
+                )
+            };
+            ensure!(n > 0, "pread failed or hit EOF at {}", offset + done as u64);
+            done += n as usize;
+        }
+        Ok(())
+    }
+
+    /// Read `len` bytes at `offset` as f32s (offset/len in bytes; len must
+    /// be a multiple of 4).
+    pub fn read_f32s(&self, offset: u64, count: usize) -> Result<Vec<f32>> {
+        let mut bytes = vec![0u8; count * 4];
+        self.read_at(offset, &mut bytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// UFS-latency-injecting wrapper: every read takes at least what the UFS
+/// model says it would take on the phone.
+#[derive(Debug)]
+pub struct ThrottledFile {
+    inner: FlashFile,
+    model: UfsModel,
+    core: CoreClass,
+    /// Set false to disable throttling (raw NVMe speed).
+    pub throttle: bool,
+}
+
+impl ThrottledFile {
+    pub fn new(inner: FlashFile, model: UfsModel, core: CoreClass) -> Self {
+        ThrottledFile { inner, model, core, throttle: true }
+    }
+
+    pub fn len(&self) -> u64 {
+        self.inner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    /// Random-pattern positioned read with injected UFS latency.
+    pub fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        let start = Instant::now();
+        self.inner.read_at(offset, buf)?;
+        if self.throttle {
+            let modeled = self.model.single_read_s(
+                IoPattern::Random,
+                buf.len() as u64,
+                self.inner.len(),
+                self.core,
+            );
+            let elapsed = start.elapsed().as_secs_f64();
+            if modeled > elapsed {
+                std::thread::sleep(Duration::from_secs_f64(modeled - elapsed));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn read_f32s(&self, offset: u64, count: usize) -> Result<Vec<f32>> {
+        let mut bytes = vec![0u8; count * 4];
+        self.read_at(offset, &mut bytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::oneplus_12;
+    use std::io::Write;
+
+    fn tmpfile(data: &[u8]) -> std::path::PathBuf {
+        let path = std::env::temp_dir().join(format!(
+            "pi2_flash_test_{}_{}",
+            std::process::id(),
+            data.len()
+        ));
+        let mut f = File::create(&path).unwrap();
+        f.write_all(data).unwrap();
+        path
+    }
+
+    #[test]
+    fn read_at_roundtrip() {
+        let data: Vec<u8> = (0..=255).collect();
+        let path = tmpfile(&data);
+        let f = FlashFile::open(&path).unwrap();
+        assert_eq!(f.len(), 256);
+        let mut buf = [0u8; 16];
+        f.read_at(100, &mut buf).unwrap();
+        assert_eq!(&buf[..], &data[100..116]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn read_f32s_decodes_le() {
+        let values = [1.5f32, -2.25, 3.0];
+        let bytes: Vec<u8> = values.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let path = tmpfile(&bytes);
+        let f = FlashFile::open(&path).unwrap();
+        assert_eq!(f.read_f32s(4, 2).unwrap(), vec![-2.25, 3.0]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn read_past_eof_errors() {
+        let path = tmpfile(&[0u8; 8]);
+        let f = FlashFile::open(&path).unwrap();
+        let mut buf = [0u8; 16];
+        assert!(f.read_at(0, &mut buf).is_err());
+        assert!(f.read_at(9, &mut buf[..1]).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn throttled_read_is_slower_than_model_floor() {
+        let data = vec![7u8; 64 * 1024];
+        let path = tmpfile(&data);
+        let model = UfsModel::new(oneplus_12().ufs);
+        let modeled = model.single_read_s(
+            IoPattern::Random, 4096, 64 * 1024, CoreClass::Big);
+        let t = ThrottledFile::new(
+            FlashFile::open(&path).unwrap(), model, CoreClass::Big);
+        let start = Instant::now();
+        let mut buf = [0u8; 4096];
+        t.read_at(0, &mut buf).unwrap();
+        assert!(start.elapsed().as_secs_f64() >= modeled * 0.9);
+        assert!(buf.iter().all(|&b| b == 7));
+        std::fs::remove_file(path).ok();
+    }
+}

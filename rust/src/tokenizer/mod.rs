@@ -1,0 +1,222 @@
+//! Byte-level BPE tokenizer — the text front-end of the serving stack.
+//!
+//! A deployable serving framework takes text, not token ids. This is a
+//! self-contained byte-level BPE: the base alphabet is the 256 bytes, and
+//! a merge table (trained on a corpus with [`train`] or loaded from JSON)
+//! defines the vocabulary above them. Round-trip loss-free on arbitrary
+//! UTF-8 / binary input.
+
+use std::collections::HashMap;
+
+use crate::util::json::{self, Json};
+
+/// A trained byte-level BPE vocabulary.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    /// merge list in priority order: (left id, right id) → new id 256+i
+    merges: Vec<(u32, u32)>,
+    /// lookup: pair → merged id
+    merge_map: HashMap<(u32, u32), u32>,
+    /// id → byte expansion
+    decode_table: Vec<Vec<u8>>,
+}
+
+impl Tokenizer {
+    /// Vocabulary size (256 base bytes + merges).
+    pub fn vocab_size(&self) -> usize {
+        256 + self.merges.len()
+    }
+
+    /// Byte-level identity tokenizer (no merges).
+    pub fn byte_level() -> Tokenizer {
+        Self::from_merges(Vec::new())
+    }
+
+    pub fn from_merges(merges: Vec<(u32, u32)>) -> Tokenizer {
+        let mut decode_table: Vec<Vec<u8>> =
+            (0..=255u8).map(|b| vec![b]).collect();
+        let mut merge_map = HashMap::new();
+        for (i, &(a, b)) in merges.iter().enumerate() {
+            let id = 256 + i as u32;
+            let mut bytes = decode_table[a as usize].clone();
+            bytes.extend_from_slice(&decode_table[b as usize]);
+            decode_table.push(bytes);
+            merge_map.insert((a, b), id);
+        }
+        Tokenizer { merges, merge_map, decode_table }
+    }
+
+    /// Train `n_merges` BPE merges on a corpus.
+    pub fn train(corpus: &[u8], n_merges: usize) -> Tokenizer {
+        let mut ids: Vec<u32> = corpus.iter().map(|&b| b as u32).collect();
+        let mut merges = Vec::with_capacity(n_merges);
+        for _ in 0..n_merges {
+            // count adjacent pairs
+            let mut counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for w in ids.windows(2) {
+                *counts.entry((w[0], w[1])).or_default() += 1;
+            }
+            // deterministic argmax: highest count, ties by smallest pair
+            let Some((&pair, &count)) = counts
+                .iter()
+                .max_by_key(|(&(a, b), &c)| (c, std::cmp::Reverse((a, b))))
+            else {
+                break;
+            };
+            if count < 2 {
+                break;
+            }
+            let new_id = 256 + merges.len() as u32;
+            merges.push(pair);
+            // apply the merge in place
+            let mut out = Vec::with_capacity(ids.len());
+            let mut i = 0;
+            while i < ids.len() {
+                if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+                    out.push(new_id);
+                    i += 2;
+                } else {
+                    out.push(ids[i]);
+                    i += 1;
+                }
+            }
+            ids = out;
+        }
+        Self::from_merges(merges)
+    }
+
+    /// Encode text to token ids (greedy highest-priority-merge-first,
+    /// the standard BPE procedure).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids: Vec<u32> = text.bytes().map(|b| b as u32).collect();
+        loop {
+            // find the applicable merge with the lowest id (= earliest
+            // trained = highest priority)
+            let mut best: Option<(usize, u32)> = None; // (pos, merged id)
+            for i in 0..ids.len().saturating_sub(1) {
+                if let Some(&m) = self.merge_map.get(&(ids[i], ids[i + 1])) {
+                    if best.map(|(_, b)| m < b).unwrap_or(true) {
+                        best = Some((i, m));
+                    }
+                }
+            }
+            let Some((_, id)) = best else { break };
+            // apply every occurrence of this merge
+            let pair = self.merges[(id - 256) as usize];
+            let mut out = Vec::with_capacity(ids.len());
+            let mut i = 0;
+            while i < ids.len() {
+                if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+                    out.push(id);
+                    i += 2;
+                } else {
+                    out.push(ids[i]);
+                    i += 1;
+                }
+            }
+            ids = out;
+        }
+        ids
+    }
+
+    /// Decode token ids back to (lossless) bytes → string.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if let Some(b) = self.decode_table.get(id as usize) {
+                bytes.extend_from_slice(b);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Serialize the merge table to JSON.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![(
+            "merges",
+            Json::Arr(
+                self.merges
+                    .iter()
+                    .map(|&(a, b)| {
+                        Json::Arr(vec![json::num(a as f64), json::num(b as f64)])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Tokenizer> {
+        let merges = j
+            .get("merges")
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Some((p.idx(0).as_f64()? as u32, p.idx(1).as_f64()? as u32))
+            })
+            .collect::<Option<Vec<_>>>()?;
+        Some(Self::from_merges(merges))
+    }
+
+    /// Clamp ids into a model's vocabulary (the e2e model's vocab is
+    /// smaller than a full BPE table).
+    pub fn encode_clamped(&self, text: &str, vocab: usize) -> Vec<u32> {
+        self.encode(text)
+            .into_iter()
+            .map(|t| t % vocab as u32)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CORPUS: &str = "the neuron cluster pipeline overlaps the neuron \
+        cluster computation with the neuron cluster io, and the hot neuron \
+        cluster stays resident while the cold neuron cluster streams.";
+
+    #[test]
+    fn byte_level_roundtrip_any_utf8() {
+        let t = Tokenizer::byte_level();
+        for s in ["hello", "héllo wörld", "日本語テスト", ""] {
+            assert_eq!(t.decode(&t.encode(s)), s);
+            assert_eq!(t.encode(s).len(), s.len()); // bytes
+        }
+    }
+
+    #[test]
+    fn trained_merges_compress_and_roundtrip() {
+        let t = Tokenizer::train(CORPUS.as_bytes(), 64);
+        assert!(t.vocab_size() > 256);
+        let ids = t.encode(CORPUS);
+        assert!(ids.len() < CORPUS.len() / 2, "no compression: {}", ids.len());
+        assert_eq!(t.decode(&ids), CORPUS);
+        // generalizes to unseen text containing trained substrings
+        let unseen = "the neuron pipeline streams";
+        assert_eq!(t.decode(&t.encode(unseen)), unseen);
+        assert!(t.encode(unseen).len() < unseen.len());
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let a = Tokenizer::train(CORPUS.as_bytes(), 32);
+        let b = Tokenizer::train(CORPUS.as_bytes(), 32);
+        assert_eq!(a.encode(CORPUS), b.encode(CORPUS));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = Tokenizer::train(CORPUS.as_bytes(), 16);
+        let j = t.to_json();
+        let t2 = Tokenizer::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(t.encode(CORPUS), t2.encode(CORPUS));
+    }
+
+    #[test]
+    fn clamped_ids_fit_model_vocab() {
+        let t = Tokenizer::train(CORPUS.as_bytes(), 64);
+        for id in t.encode_clamped(CORPUS, 100) {
+            assert!(id < 100);
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! Workload traces (§7.1): the four representative task families the
+//! paper evaluates (multi-turn dialogue, code generation, math solving,
+//! role play) and the Best-of-N decode schedule of Fig.13.
+
+use crate::config::ModelSpec;
+use crate::util::prng::Rng;
+
+/// Task family; each shifts activation statistics slightly (Fig.11's
+/// "minor speed variations occur due to task-dependent differences in
+/// model activation sparsity").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    RolePlay,
+    Dialogue,
+    Math,
+    Code,
+}
+
+impl TaskKind {
+    pub fn all() -> [TaskKind; 4] {
+        [TaskKind::RolePlay, TaskKind::Dialogue, TaskKind::Math, TaskKind::Code]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TaskKind::RolePlay => "role-play",
+            TaskKind::Dialogue => "dialogue",
+            TaskKind::Math => "math",
+            TaskKind::Code => "code",
+        }
+    }
+
+    /// Multiplier on the model's mean activation rate for this task.
+    pub fn sparsity_scale(self) -> f64 {
+        match self {
+            TaskKind::RolePlay => 0.97,
+            TaskKind::Dialogue => 1.00,
+            TaskKind::Math => 1.04,
+            TaskKind::Code => 1.06,
+        }
+    }
+
+    /// Multiplier on token-to-token activation persistence (code is more
+    /// repetitive; math jumps around).
+    pub fn persistence_scale(self) -> f64 {
+        match self {
+            TaskKind::RolePlay => 1.01,
+            TaskKind::Dialogue => 1.00,
+            TaskKind::Math => 0.98,
+            TaskKind::Code => 1.02,
+        }
+    }
+
+    /// Derive a task-conditioned model spec.
+    pub fn condition(self, spec: &ModelSpec) -> ModelSpec {
+        let mut s = spec.clone();
+        s.sparsity_active_frac =
+            (s.sparsity_active_frac * self.sparsity_scale()).min(0.95);
+        s.activation_persistence =
+            (s.activation_persistence * self.persistence_scale()).min(0.97);
+        s
+    }
+
+    /// Typical prompt/output lengths (tokens) for workload generation.
+    pub fn lengths(self, rng: &mut Rng) -> (usize, usize) {
+        let (p_lo, p_hi, o_lo, o_hi) = match self {
+            TaskKind::RolePlay => (32, 128, 64, 512),
+            TaskKind::Dialogue => (16, 96, 32, 256),
+            TaskKind::Math => (24, 64, 64, 384),
+            TaskKind::Code => (32, 128, 96, 768),
+        };
+        (rng.range(p_lo, p_hi + 1), rng.range(o_lo, o_hi + 1))
+    }
+}
+
+/// Best-of-N schedule (Fig.13): N candidates decode in parallel, and the
+/// effective batch size decays as candidates hit EOS — the paper's test
+/// drops one candidate every `iters_per_drop` iterations.
+pub fn bon_schedule(n: usize, iters_per_drop: usize) -> Vec<usize> {
+    let mut sched = Vec::new();
+    for remaining in (1..=n).rev() {
+        for _ in 0..iters_per_drop {
+            sched.push(remaining);
+        }
+    }
+    sched
+}
+
+/// A generated request for the serving examples.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: usize,
+    pub task: TaskKind,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+}
+
+/// Sample a batch of mixed-task requests.
+pub fn request_mix(n: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|id| {
+            let task = TaskKind::all()[rng.below(4)];
+            let (p, o) = task.lengths(&mut rng);
+            Request { id, task, prompt_tokens: p, output_tokens: o }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::bamboo_7b;
+
+    #[test]
+    fn bon_schedule_shape() {
+        let s = bon_schedule(4, 4);
+        assert_eq!(s.len(), 16);
+        assert_eq!(s[0], 4);
+        assert_eq!(s[15], 1);
+        for w in s.windows(2) {
+            assert!(w[1] <= w[0]);
+        }
+    }
+
+    #[test]
+    fn task_conditioning_shifts_sparsity() {
+        let spec = bamboo_7b();
+        let code = TaskKind::Code.condition(&spec);
+        let rp = TaskKind::RolePlay.condition(&spec);
+        assert!(code.sparsity_active_frac > rp.sparsity_active_frac);
+        assert_eq!(spec.sparsity_active_frac, 0.11); // original untouched
+    }
+
+    #[test]
+    fn request_mix_is_deterministic_and_bounded() {
+        let a = request_mix(20, 7);
+        let b = request_mix(20, 7);
+        assert_eq!(a.len(), 20);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt_tokens, y.prompt_tokens);
+            assert_eq!(x.task, y.task);
+            assert!(x.prompt_tokens >= 16 && x.output_tokens <= 768);
+        }
+    }
+}

