@@ -7,7 +7,7 @@
 
 use std::path::Path;
 
-use powerinfer2::coordinator::Coordinator;
+use powerinfer2::coordinator::RealEnginePool;
 use powerinfer2::engine::real::RealEngineOptions;
 use powerinfer2::util::cli::Args;
 
@@ -22,7 +22,7 @@ fn main() -> anyhow::Result<()> {
     }
     let weight_path = std::env::temp_dir().join("pi2_bon_weights.bin");
     println!("# best-of-{n} sampling, {iters} iterations per candidate drop");
-    let mut coord = Coordinator::new(
+    let mut coord = RealEnginePool::new(
         artifacts,
         &weight_path,
         RealEngineOptions { throttle_io: false, ..Default::default() },

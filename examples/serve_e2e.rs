@@ -1,27 +1,94 @@
-//! End-to-end serving driver (DESIGN.md §5): load the AOT-compiled model,
-//! serve a batch of mixed-task requests through the coordinator (router →
-//! batcher → hybrid engine), and report prefill/decode throughput and
-//! latency percentiles. All layers compose here: L1 Pallas kernels inside
-//! the L2 graphs, compiled ONCE to PJRT executables, driven by the L3
-//! coordinator with real file IO for offloaded neuron bundles.
+//! End-to-end serving driver over the unified [`Engine`] trait.
 //!
+//! `serve_trace` below is generic: it cannot tell the simulation engine
+//! and the real PJRT engine apart, which is the point of the serving API
+//! redesign. The example first compares the two schedulers (lockstep
+//! groups vs continuous batching) on the simulation engine over a
+//! mixed-length trace — the workload where slot reuse pays — then, when
+//! AOT artifacts are present, pushes the same trace through the same
+//! generic path on the real engine (PJRT graphs + native sparse CPU +
+//! real file IO).
+//!
+//!     cargo run --release --example serve_e2e
 //!     make artifacts && cargo run --release --example serve_e2e
 //!     # flags: --requests N --throttle --cold-cache N
 
 use std::path::Path;
 
-use powerinfer2::coordinator::Coordinator;
+use powerinfer2::config::{bamboo_7b, oneplus_12, RuntimeConfig};
+use powerinfer2::coordinator::{
+    Coordinator, RealEnginePool, ScheduleMode, ServeReport,
+};
 use powerinfer2::engine::real::RealEngineOptions;
-use powerinfer2::trace::request_mix;
+use powerinfer2::engine::SimEngine;
+use powerinfer2::serve::{Engine, InferenceRequest};
+use powerinfer2::trace::{mixed_length_mix, Request};
 use powerinfer2::util::cli::Args;
+
+/// Serve a workload trace through ANY engine under the given scheduler.
+fn serve_trace<E: Engine>(
+    engine: E,
+    requests: &[Request],
+    mode: ScheduleMode,
+) -> anyhow::Result<ServeReport> {
+    let vocab = engine.vocab();
+    let reqs: Vec<InferenceRequest> = requests
+        .iter()
+        .map(|r| InferenceRequest::from_trace(r, vocab, 64))
+        .collect();
+    let mut coord = Coordinator::with_mode(engine, mode);
+    coord.serve_collect(&reqs)
+}
+
+fn print_report(label: &str, report: &mut ServeReport) {
+    println!(
+        "{label:<12} {:>5} tokens  {:>9.1} tok/s decode  \
+         ttft p50 {:>7.2}ms p99 {:>7.2}ms",
+        report.decode_tokens,
+        report.decode_tps(),
+        report.serving.ttft_ms.percentile(50.0),
+        report.serving.ttft_ms.percentile(99.0),
+    );
+}
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
-    let n_requests = args.opt_usize("requests", 8);
+    let n_requests = args.opt_usize("requests", 16);
+
+    // ---- 1. scheduler comparison on the simulation engine -------------
+    let mut requests = mixed_length_mix(n_requests, 7);
+    println!(
+        "# serve_e2e: {} mixed-length requests (short dialogue turns + \
+         long code generations)",
+        requests.len()
+    );
+    let cfg = RuntimeConfig { max_batch: 4, ..Default::default() };
+    let mut tps = Vec::new();
+    for mode in [ScheduleMode::Lockstep, ScheduleMode::Continuous] {
+        let engine = SimEngine::new(oneplus_12(), bamboo_7b(), cfg.clone());
+        let mut report = serve_trace(engine, &requests, mode)?;
+        print_report(mode.as_str(), &mut report);
+        tps.push(report.decode_tps());
+    }
+    println!(
+        "continuous batching speedup over lockstep: {:.2}× \
+         (engine-seconds of decode per useful token)",
+        tps[1] / tps[0].max(1e-12)
+    );
+
+    // ---- 2. the same generic path over the real PJRT engine -----------
     let artifacts = Path::new("artifacts");
     if !artifacts.join("manifest.json").exists() {
-        eprintln!("run `make artifacts` first");
-        std::process::exit(2);
+        println!(
+            "\n(run `make artifacts` to serve the same trace through the \
+             real PJRT engine)"
+        );
+        return Ok(());
+    }
+    for r in requests.iter_mut() {
+        // clamp to the e2e model's windows
+        r.prompt_tokens = r.prompt_tokens.clamp(4, 16);
+        r.output_tokens = r.output_tokens.clamp(2, 8);
     }
     let weight_path = std::env::temp_dir().join("pi2_serve_e2e_weights.bin");
     let opts = RealEngineOptions {
@@ -31,44 +98,23 @@ fn main() -> anyhow::Result<()> {
         cold_cache_neurons: args.opt_usize("cold-cache", 4096),
         ..Default::default()
     };
-    println!("# serve_e2e: compiling NPU graph table…");
+    println!("\n## real engine: compiling NPU graph table…");
     let t0 = std::time::Instant::now();
-    let mut coord = Coordinator::new(artifacts, &weight_path, opts)?;
-    println!("ready in {:.1}s", t0.elapsed().as_secs_f64());
-
-    let mut requests = request_mix(n_requests, 7);
-    for r in requests.iter_mut() {
-        // clamp to the e2e model's windows
-        r.prompt_tokens = r.prompt_tokens.clamp(4, 64);
-        r.output_tokens = r.output_tokens.clamp(8, 48);
+    let pool = RealEnginePool::new(artifacts, &weight_path, opts)?;
+    let batch = pool.max_batch();
+    let engine = pool.take(batch)?;
+    println!("ready in {:.1}s ({batch} slots)", t0.elapsed().as_secs_f64());
+    let n_real = requests.len().min(8);
+    let mut report =
+        serve_trace(engine, &requests[..n_real], ScheduleMode::Continuous)?;
+    println!("{:>5}{:>9}{:>7}{:>12}{:>12}", "id", "prompt", "out",
+             "TTFT (ms)", "decode (ms)");
+    for s in &report.sessions {
+        println!("{:>5}{:>9}{:>7}{:>12.1}{:>12.1}",
+                 s.id, s.prompt_tokens, s.tokens.len(),
+                 s.metrics.ttft_s * 1e3, s.metrics.decode_s * 1e3);
     }
-    println!("serving {} requests (mixed dialogue/code/math/role-play)…",
-             requests.len());
-    let t1 = std::time::Instant::now();
-    let mut report = coord.serve(&requests)?;
-    let wall = t1.elapsed().as_secs_f64();
-
-    println!("\n## results");
-    println!("{:>5}{:>12}{:>9}{:>9}{:>12}{:>12}",
-             "id", "task", "prompt", "out", "TTFT (s)", "total (s)");
-    for c in &report.completions {
-        let task = requests.iter().find(|r| r.id == c.id).unwrap().task;
-        println!("{:>5}{:>12}{:>9}{:>9}{:>12.3}{:>12.3}",
-                 c.id, task.name(), c.prompt_tokens, c.output_tokens,
-                 c.first_token_s, c.total_s);
-    }
-    println!("\nprefill: {} tokens @ {:.1} tok/s", report.prefill_tokens,
-             report.prefill_tps());
-    println!("decode:  {} tokens @ {:.1} tok/s", report.decode_tokens,
-             report.decode_tps());
-    let (mean, p50, p90, p99) = (
-        report.step_latency_ms.mean(),
-        report.step_latency_ms.percentile(50.0),
-        report.step_latency_ms.percentile(90.0),
-        report.step_latency_ms.percentile(99.0),
-    );
-    println!("step latency (ms): mean {mean:.1} p50 {p50:.1} p90 {p90:.1} p99 {p99:.1}");
-    println!("wall clock: {wall:.2}s for {} requests", requests.len());
+    print_report("real/cont", &mut report);
     std::fs::remove_file(weight_path).ok();
     Ok(())
 }

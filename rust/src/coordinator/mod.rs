@@ -1,45 +1,94 @@
-//! Serving coordinator: request queue → batch groups → lockstep decode
-//! over the real PJRT engine, plus the Best-of-N controller (§2.2, §7.4).
+//! Serving coordinator: request queue → slot scheduling over any
+//! [`Engine`] — the scheduling half of the serving API.
 //!
 //! The coordinator owns process-level concerns the paper assigns to the
-//! framework around the neuron engine: admission, batch formation against
-//! the compiled graph table (only batch sizes with pre-built graphs are
-//! schedulable, §4.1.3), prompt padding for lockstep decoding, dynamic
-//! hot-ratio selection per batch, and per-request metrics.
+//! framework around the neuron engine: admission, group formation,
+//! per-request lifecycle metrics, and token streaming. It is generic over
+//! the [`Engine`] trait, so every policy below applies to the simulation
+//! engine and the real PJRT engine alike:
+//!
+//! - [`ScheduleMode::Lockstep`]: requests are admitted in groups and the
+//!   whole group decodes until its *longest* member finishes — the
+//!   pre-redesign behavior, kept as the baseline scheduler.
+//! - [`ScheduleMode::Continuous`]: admission and eviction happen at
+//!   decode-step granularity; the moment a sequence finishes its slot is
+//!   retired and the next queued request takes it (continuous batching).
+//!
+//! [`RealEnginePool`] holds the real-engine-specific machinery that is
+//! *not* part of the serving API: one compiled engine per batch point of
+//! the NPU graph table (§4.1.3) and the Best-of-N controller (§7.4).
 
 pub mod server;
 
 pub use server::Server;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::path::{Path, PathBuf};
+use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
 use crate::engine::real::{RealEngine, RealEngineOptions};
-use crate::trace::Request;
+use crate::metrics::ServingMetrics;
+use crate::model::ModelDims;
+use crate::serve::{
+    Engine, FinishReason, InferenceRequest, NullSink, RequestMetrics, Session,
+    SlotId, TokenEvent, TokenSink,
+};
 use crate::util::stats::Samples;
 
-/// Outcome of serving one request.
-#[derive(Debug, Clone)]
-pub struct Completion {
-    pub id: usize,
-    pub prompt_tokens: usize,
-    pub output_tokens: usize,
-    pub first_token_s: f64,
-    pub total_s: f64,
-    pub tokens: Vec<u32>,
+/// Scheduling policy for [`Coordinator::serve`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleMode {
+    /// Fixed groups; a group's slots are held until its last member
+    /// finishes.
+    Lockstep,
+    /// Continuous batching: slots are retired and refilled per decode
+    /// step.
+    Continuous,
 }
 
-/// Aggregate serving report (the e2e example's output).
+impl ScheduleMode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ScheduleMode::Lockstep => "lockstep",
+            ScheduleMode::Continuous => "continuous",
+        }
+    }
+
+    pub fn parse(name: &str) -> Option<ScheduleMode> {
+        match name {
+            "lockstep" => Some(ScheduleMode::Lockstep),
+            "continuous" => Some(ScheduleMode::Continuous),
+            _ => None,
+        }
+    }
+}
+
+/// Aggregate serving report: one [`Session`] per completed request plus
+/// scheduler-level counters.
+///
+/// `prefill_s`/`decode_s` are *engine seconds* (wall-clock for the real
+/// engine, modeled device seconds for the simulation engine), so
+/// [`ServeReport::decode_tps`] compares schedulers on the quantity that
+/// matters: useful tokens per second of engine time. The engine may emit
+/// more tokens than `decode_tokens` under lockstep — tokens decoded for
+/// already-finished group members are discarded, which is exactly the
+/// waste continuous batching removes.
 #[derive(Debug, Default)]
 pub struct ServeReport {
-    pub completions: Vec<Completion>,
+    pub sessions: Vec<Session>,
     pub prefill_tokens: usize,
-    pub prefill_s: f64,
+    /// Useful decode tokens delivered to sequences.
     pub decode_tokens: usize,
+    /// Engine seconds spent in prefill across the run.
+    pub prefill_s: f64,
+    /// Engine seconds spent in decode steps across the run.
     pub decode_s: f64,
+    /// Wall-clock of the whole serve call.
+    pub wall_s: f64,
     pub step_latency_ms: Samples,
+    pub serving: ServingMetrics,
 }
 
 impl ServeReport {
@@ -47,13 +96,334 @@ impl ServeReport {
         self.prefill_tokens as f64 / self.prefill_s.max(1e-12)
     }
 
+    /// Useful decode throughput in tokens per engine-second.
     pub fn decode_tps(&self) -> f64 {
         self.decode_tokens as f64 / self.decode_s.max(1e-12)
     }
+
+    pub fn session(&self, id: u64) -> Option<&Session> {
+        self.sessions.iter().find(|s| s.id == id)
+    }
 }
 
-/// The coordinator: one engine per compiled batch size, created lazily.
-pub struct Coordinator {
+/// One in-flight sequence from the scheduler's point of view.
+struct ActiveSeq {
+    id: u64,
+    prompt_tokens: usize,
+    max_tokens: usize,
+    tokens: Vec<u32>,
+    queue_s: f64,
+    prefill_s: f64,
+    ttft_s: f64,
+    decode_started: Instant,
+    /// Set the moment the sequence finishes, so a lockstep member's
+    /// decode latency excludes time spent idling for the rest of its
+    /// group.
+    decode_done_s: Option<f64>,
+    /// Lockstep only: finished but still holding its slot.
+    finished: bool,
+}
+
+impl ActiveSeq {
+    /// `budget`: the engine's remaining decode steps — max_tokens is
+    /// clamped so the sequence truncates instead of overrunning the
+    /// context window (the engine errors on a zero-budget step).
+    fn new(
+        req: &InferenceRequest,
+        queue_s: f64,
+        prefill_s: f64,
+        budget: Option<usize>,
+    ) -> ActiveSeq {
+        let mut max_tokens = req.params.max_tokens.max(1);
+        if let Some(b) = budget {
+            // the first token comes from prefill; decode supplies the rest
+            max_tokens = max_tokens.min(1 + b);
+        }
+        ActiveSeq {
+            id: req.id,
+            prompt_tokens: req.prompt.len(),
+            max_tokens,
+            tokens: Vec::new(),
+            queue_s,
+            prefill_s,
+            ttft_s: 0.0,
+            decode_started: Instant::now(),
+            decode_done_s: None,
+            finished: false,
+        }
+    }
+
+    fn mark_done(&mut self) {
+        self.finished = true;
+        if self.decode_done_s.is_none() {
+            self.decode_done_s =
+                Some(self.decode_started.elapsed().as_secs_f64());
+        }
+    }
+}
+
+fn emit<S: TokenSink>(
+    sink: &mut S,
+    seq: &ActiveSeq,
+    token: u32,
+    index: usize,
+    finish: Option<FinishReason>,
+) -> Result<()> {
+    sink.on_token(&TokenEvent { request_id: seq.id, token, index, finish })
+}
+
+fn close_session(report: &mut ServeReport, seq: ActiveSeq, finish: FinishReason) {
+    let metrics = RequestMetrics {
+        queue_s: seq.queue_s,
+        prefill_s: seq.prefill_s,
+        decode_s: seq
+            .decode_done_s
+            .unwrap_or_else(|| seq.decode_started.elapsed().as_secs_f64()),
+        ttft_s: seq.ttft_s,
+    };
+    report.serving.record(&metrics);
+    report.sessions.push(Session {
+        id: seq.id,
+        prompt_tokens: seq.prompt_tokens,
+        tokens: seq.tokens,
+        finish,
+        metrics,
+    });
+}
+
+/// The scheduler: one engine, one policy, a queue of requests in, a
+/// stream of [`TokenEvent`]s and completed [`Session`]s out.
+pub struct Coordinator<E: Engine> {
+    pub engine: E,
+    pub mode: ScheduleMode,
+}
+
+impl<E: Engine> Coordinator<E> {
+    /// Continuous batching by default — the redesign's reason to exist.
+    pub fn new(engine: E) -> Self {
+        Coordinator { engine, mode: ScheduleMode::Continuous }
+    }
+
+    pub fn with_mode(engine: E, mode: ScheduleMode) -> Self {
+        Coordinator { engine, mode }
+    }
+
+    /// Serve every request to completion, streaming tokens to `sink`.
+    /// Requests are considered submitted simultaneously at call time (the
+    /// queue latency a request sees is time spent waiting for a slot).
+    pub fn serve<S: TokenSink>(
+        &mut self,
+        requests: &[InferenceRequest],
+        sink: &mut S,
+    ) -> Result<ServeReport> {
+        let result = match self.mode {
+            ScheduleMode::Lockstep => self.serve_lockstep(requests, sink),
+            ScheduleMode::Continuous => self.serve_continuous(requests, sink),
+        };
+        if result.is_err() {
+            // an aborted serve (sink hung up, engine error) must not leak
+            // occupied slots into the next serve call
+            for slot in 0..self.engine.capacity() {
+                let _ = self.engine.retire(slot);
+            }
+        }
+        result
+    }
+
+    /// Non-streaming convenience: serve and return only the report.
+    pub fn serve_collect(
+        &mut self,
+        requests: &[InferenceRequest],
+    ) -> Result<ServeReport> {
+        self.serve(requests, &mut NullSink)
+    }
+
+    fn serve_continuous<S: TokenSink>(
+        &mut self,
+        requests: &[InferenceRequest],
+        sink: &mut S,
+    ) -> Result<ServeReport> {
+        let t0 = Instant::now();
+        let s0 = self.engine.stats();
+        let mut report = ServeReport::default();
+        let cap = self.engine.capacity().max(1);
+        let mut queue: VecDeque<&InferenceRequest> = requests.iter().collect();
+        let mut active: Vec<Option<ActiveSeq>> = (0..cap).map(|_| None).collect();
+        let mut live = 0usize;
+        let mut idle_steps = 0usize;
+        while live > 0 || !queue.is_empty() {
+            // admission at decode-step granularity: refill every free slot
+            while live < cap {
+                let Some(req) = queue.pop_front() else { break };
+                let queue_s = t0.elapsed().as_secs_f64();
+                let admit_t0 = Instant::now();
+                let adm = self.engine.admit(req)?;
+                let prefill_s = admit_t0.elapsed().as_secs_f64();
+                report.prefill_tokens += req.prompt.len();
+                let mut seq = ActiveSeq::new(
+                    req, queue_s, prefill_s, self.engine.decode_budget());
+                if let Some(tok) = adm.first_token {
+                    seq.tokens.push(tok);
+                    seq.ttft_s = t0.elapsed().as_secs_f64();
+                    let done = seq.tokens.len() >= seq.max_tokens;
+                    emit(sink, &seq, tok, 0, done.then_some(FinishReason::Length))?;
+                    if done {
+                        seq.mark_done();
+                        self.engine.retire(adm.slot)?;
+                        close_session(&mut report, seq, FinishReason::Length);
+                        continue;
+                    }
+                }
+                active[adm.slot] = Some(seq);
+                live += 1;
+            }
+            if live == 0 {
+                continue; // every admitted request finished at prefill
+            }
+            let st = Instant::now();
+            let toks = self.engine.step()?;
+            report.step_latency_ms.push(st.elapsed().as_secs_f64() * 1e3);
+            // the trait allows slots with in-flight (deferred) prefill to
+            // be absent from a step; only a persistent stall is an error
+            if toks.is_empty() {
+                idle_steps += 1;
+                ensure!(
+                    idle_steps < 10_000,
+                    "engine stalled: {live} active sequences produced no \
+                     tokens for {idle_steps} consecutive steps"
+                );
+                continue;
+            }
+            idle_steps = 0;
+            // context window exhausted → every in-flight sequence ends on
+            // the token it just received (the old lockstep seq_max clamp,
+            // now at decode-step granularity)
+            let exhausted = self.engine.decode_budget() == Some(0);
+            for (slot, tok) in toks {
+                let Some(seq) = active.get_mut(slot).and_then(|s| s.as_mut())
+                else {
+                    continue;
+                };
+                seq.tokens.push(tok);
+                if seq.ttft_s == 0.0 {
+                    seq.ttft_s = t0.elapsed().as_secs_f64();
+                }
+                report.decode_tokens += 1;
+                let index = seq.tokens.len() - 1;
+                let done = seq.tokens.len() >= seq.max_tokens || exhausted;
+                emit(sink, seq, tok, index, done.then_some(FinishReason::Length))?;
+                if done {
+                    let mut seq = active[slot].take().expect("active slot");
+                    seq.mark_done();
+                    live -= 1;
+                    self.engine.retire(slot)?;
+                    close_session(&mut report, seq, FinishReason::Length);
+                }
+            }
+        }
+        let s1 = self.engine.stats();
+        report.prefill_s = s1.prefill_s - s0.prefill_s;
+        report.decode_s = s1.decode_s - s0.decode_s;
+        report.wall_s = t0.elapsed().as_secs_f64();
+        Ok(report)
+    }
+
+    fn serve_lockstep<S: TokenSink>(
+        &mut self,
+        requests: &[InferenceRequest],
+        sink: &mut S,
+    ) -> Result<ServeReport> {
+        let t0 = Instant::now();
+        let s0 = self.engine.stats();
+        let mut report = ServeReport::default();
+        let cap = self.engine.capacity().max(1);
+        let mut idx = 0;
+        while idx < requests.len() {
+            let group: Vec<&InferenceRequest> =
+                requests[idx..].iter().take(cap).collect();
+            idx += group.len();
+            let queue_s = t0.elapsed().as_secs_f64();
+            let admit_t0 = Instant::now();
+            let admissions = self.engine.admit_group(&group)?;
+            let prefill_s = admit_t0.elapsed().as_secs_f64();
+            let mut seqs: Vec<(SlotId, ActiveSeq)> =
+                Vec::with_capacity(group.len());
+            for (req, adm) in group.iter().zip(&admissions) {
+                report.prefill_tokens += req.prompt.len();
+                let mut seq = ActiveSeq::new(
+                    req, queue_s, prefill_s, self.engine.decode_budget());
+                if let Some(tok) = adm.first_token {
+                    seq.tokens.push(tok);
+                    seq.ttft_s = t0.elapsed().as_secs_f64();
+                    let done = seq.tokens.len() >= seq.max_tokens;
+                    emit(sink, &seq, tok, 0,
+                         done.then_some(FinishReason::Length))?;
+                    if done {
+                        seq.mark_done();
+                    }
+                }
+                seqs.push((adm.slot, seq));
+            }
+            // decode until the whole group is done; finished members hold
+            // their slots and their tokens are discarded (lockstep waste)
+            let mut idle_steps = 0usize;
+            while seqs.iter().any(|(_, s)| !s.finished) {
+                let st = Instant::now();
+                let toks = self.engine.step()?;
+                report.step_latency_ms.push(st.elapsed().as_secs_f64() * 1e3);
+                if toks.is_empty() {
+                    idle_steps += 1;
+                    ensure!(
+                        idle_steps < 10_000,
+                        "engine stalled: active group produced no tokens \
+                         for {idle_steps} consecutive steps"
+                    );
+                    continue;
+                }
+                idle_steps = 0;
+                let exhausted = self.engine.decode_budget() == Some(0);
+                for (slot, tok) in toks {
+                    let Some((_, seq)) =
+                        seqs.iter_mut().find(|(s, _)| *s == slot)
+                    else {
+                        continue;
+                    };
+                    if seq.finished {
+                        continue;
+                    }
+                    seq.tokens.push(tok);
+                    if seq.ttft_s == 0.0 {
+                        seq.ttft_s = t0.elapsed().as_secs_f64();
+                    }
+                    report.decode_tokens += 1;
+                    let index = seq.tokens.len() - 1;
+                    let done = seq.tokens.len() >= seq.max_tokens || exhausted;
+                    emit(sink, seq, tok, index,
+                         done.then_some(FinishReason::Length))?;
+                    if done {
+                        seq.mark_done();
+                    }
+                }
+            }
+            for (slot, seq) in seqs {
+                self.engine.retire(slot)?;
+                close_session(&mut report, seq, FinishReason::Length);
+            }
+        }
+        let s1 = self.engine.stats();
+        report.prefill_s = s1.prefill_s - s0.prefill_s;
+        report.decode_s = s1.decode_s - s0.decode_s;
+        report.wall_s = t0.elapsed().as_secs_f64();
+        Ok(report)
+    }
+}
+
+/// Real-engine pool: one compiled engine per batch point of the NPU
+/// graph table (only batch sizes with pre-built graphs are schedulable,
+/// §4.1.3), created lazily, plus the Best-of-N controller. This is
+/// engine construction and graph-table policy — everything *serving*
+/// lives in the generic [`Coordinator`].
+pub struct RealEnginePool {
     artifacts: PathBuf,
     weight_path: PathBuf,
     opts: RealEngineOptions,
@@ -61,20 +431,27 @@ pub struct Coordinator {
     batches: Vec<usize>,
 }
 
-impl Coordinator {
-    pub fn new(artifacts: &Path, weight_path: &Path, opts: RealEngineOptions) -> Result<Self> {
-        // probe the manifest once for available batch sizes
-        let probe = RealEngine::new(artifacts, weight_path, 1, opts.clone())?;
-        let batches = probe.dims.batches.clone();
-        let mut engines = BTreeMap::new();
-        engines.insert(1, probe);
-        Ok(Coordinator {
+impl RealEnginePool {
+    pub fn new(
+        artifacts: &Path,
+        weight_path: &Path,
+        opts: RealEngineOptions,
+    ) -> Result<Self> {
+        // read the batch table straight from the manifest — building a
+        // probe engine just for this would double the startup cost
+        let dims = ModelDims::load_dir(artifacts)?;
+        Ok(RealEnginePool {
             artifacts: artifacts.to_path_buf(),
             weight_path: weight_path.to_path_buf(),
             opts,
-            engines,
-            batches,
+            engines: BTreeMap::new(),
+            batches: dims.batches,
         })
+    }
+
+    /// Compiled batch points, ascending.
+    pub fn batches(&self) -> &[usize] {
+        &self.batches
     }
 
     /// Largest compiled batch size ≤ n (graph-table constraint, §4.1.3).
@@ -87,7 +464,12 @@ impl Coordinator {
             .unwrap_or(1)
     }
 
-    fn engine(&mut self, batch: usize) -> Result<&mut RealEngine> {
+    /// Largest compiled batch point (the widest serving capacity).
+    pub fn max_batch(&self) -> usize {
+        self.batches.iter().copied().max().unwrap_or(1)
+    }
+
+    pub fn engine(&mut self, batch: usize) -> Result<&mut RealEngine> {
         if !self.engines.contains_key(&batch) {
             let e = RealEngine::new(
                 &self.artifacts, &self.weight_path, batch, self.opts.clone())?;
@@ -96,79 +478,14 @@ impl Coordinator {
         Ok(self.engines.get_mut(&batch).unwrap())
     }
 
-    /// Serve a set of requests FCFS in lockstep batch groups.
-    pub fn serve(&mut self, requests: &[Request]) -> Result<ServeReport> {
-        let mut report = ServeReport::default();
-        let mut queue: Vec<&Request> = requests.iter().collect();
-        while !queue.is_empty() {
-            let b = self.schedulable_batch(queue.len());
-            let group: Vec<&Request> = queue.drain(..b).collect();
-            self.serve_group(&group, &mut report)?;
+    /// Give up the pool for one owned engine at the given batch point
+    /// (what [`Coordinator`] and [`Server`] take ownership of).
+    pub fn take(mut self, batch: usize) -> Result<RealEngine> {
+        match self.engines.remove(&batch) {
+            Some(e) => Ok(e),
+            None => RealEngine::new(
+                &self.artifacts, &self.weight_path, batch, self.opts.clone()),
         }
-        Ok(report)
-    }
-
-    fn serve_group(&mut self, group: &[&Request], report: &mut ServeReport) -> Result<()> {
-        let batch = group.len();
-        let engine = self.engine(batch)?;
-        engine.reset();
-        let d = engine.dims.clone();
-        // pad prompts right to a common length (lockstep decoding)
-        let max_prompt = group
-            .iter()
-            .map(|r| r.prompt_tokens.clamp(1, d.prefill_chunk))
-            .max()
-            .unwrap();
-        let out_len = group
-            .iter()
-            .map(|r| r.output_tokens)
-            .max()
-            .unwrap()
-            .min(d.seq_max - max_prompt - 1)
-            .max(1);
-
-        let start = std::time::Instant::now();
-        let mut last: Vec<u32> = vec![0; batch];
-        for (row, req) in group.iter().enumerate() {
-            // synthetic prompt tokens derived from the request id
-            let len = req.prompt_tokens.clamp(1, d.prefill_chunk);
-            let mut prompt: Vec<u32> = (0..max_prompt)
-                .map(|i| ((req.id * 131 + i * 7) % d.vocab) as u32)
-                .collect();
-            prompt.truncate(max_prompt.max(len));
-            last[row] = engine.prefill(row, &prompt)?;
-            report.prefill_tokens += prompt.len();
-        }
-        let prefill_s = start.elapsed().as_secs_f64();
-        report.prefill_s += prefill_s;
-
-        let decode_start = std::time::Instant::now();
-        let mut outputs: Vec<Vec<u32>> = vec![Vec::new(); batch];
-        for _ in 0..out_len {
-            let step_start = std::time::Instant::now();
-            last = engine.decode_step(&last)?;
-            report
-                .step_latency_ms
-                .push(step_start.elapsed().as_secs_f64() * 1e3);
-            for (row, &t) in last.iter().enumerate() {
-                outputs[row].push(t);
-            }
-            report.decode_tokens += batch;
-        }
-        let decode_s = decode_start.elapsed().as_secs_f64();
-        report.decode_s += decode_s;
-
-        for (row, req) in group.iter().enumerate() {
-            report.completions.push(Completion {
-                id: req.id,
-                prompt_tokens: req.prompt_tokens,
-                output_tokens: outputs[row].len(),
-                first_token_s: prefill_s,
-                total_s: prefill_s + decode_s,
-                tokens: std::mem::take(&mut outputs[row]),
-            });
-        }
-        Ok(())
     }
 
     /// Best-of-N controller (§7.4): N candidates of one prompt decode in
@@ -212,64 +529,93 @@ impl Coordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::trace::TaskKind;
+    use crate::config::{bamboo_7b, oneplus_12, RuntimeConfig};
+    use crate::engine::SimEngine;
+    use crate::serve::CollectSink;
 
-    fn artifacts() -> Option<&'static Path> {
-        let p = Path::new("artifacts/selftest");
-        if p.join("manifest.json").exists() { Some(p) } else { None }
+    fn sim(max_batch: usize) -> SimEngine {
+        let cfg = RuntimeConfig { max_batch, ..Default::default() };
+        SimEngine::new(oneplus_12(), bamboo_7b(), cfg)
     }
 
-    fn opts() -> RealEngineOptions {
-        RealEngineOptions { hot_k: 128, throttle_io: false, ..Default::default() }
-    }
-
-    fn wp(tag: &str) -> PathBuf {
-        std::env::temp_dir().join(format!("pi2_coord_{tag}_{}", std::process::id()))
-    }
-
-    fn req(id: usize, prompt: usize, out: usize) -> Request {
-        Request { id, task: TaskKind::Dialogue, prompt_tokens: prompt, output_tokens: out }
+    fn reqs(lens: &[usize]) -> Vec<InferenceRequest> {
+        lens.iter()
+            .enumerate()
+            .map(|(id, &n)| InferenceRequest::new(id as u64, vec![1, 2, 3], n))
+            .collect()
     }
 
     #[test]
-    fn schedulable_batch_respects_graph_table() {
-        let Some(dir) = artifacts() else { return };
-        let path = wp("sched");
-        let c = Coordinator::new(dir, &path, opts()).unwrap();
-        assert_eq!(c.schedulable_batch(1), 1);
-        assert_eq!(c.schedulable_batch(2), 2);
-        assert_eq!(c.schedulable_batch(3), 2); // only b∈{1,2} compiled
-        assert_eq!(c.schedulable_batch(0), 1);
-        std::fs::remove_file(path).ok();
-    }
-
-    #[test]
-    fn serves_mixed_requests_to_completion() {
-        let Some(dir) = artifacts() else { return };
-        let path = wp("serve");
-        let mut c = Coordinator::new(dir, &path, opts()).unwrap();
-        let reqs = vec![req(0, 4, 3), req(1, 6, 3), req(2, 2, 2)];
-        let report = c.serve(&reqs).unwrap();
-        assert_eq!(report.completions.len(), 3);
-        for comp in &report.completions {
-            assert!(!comp.tokens.is_empty());
-            assert!(comp.total_s > 0.0);
+    fn continuous_serves_all_requests_and_streams_in_order() {
+        let mut c = Coordinator::new(sim(2));
+        let requests = reqs(&[3, 6, 2, 4]);
+        let mut sink = CollectSink::default();
+        let report = c.serve(&requests, &mut sink).unwrap();
+        assert_eq!(report.sessions.len(), 4);
+        for req in &requests {
+            let s = report.session(req.id).unwrap();
+            assert_eq!(s.tokens.len(), req.params.max_tokens);
+            assert_eq!(s.finish, FinishReason::Length);
         }
-        assert!(report.decode_tps() > 0.0);
-        assert!(report.prefill_tps() > 0.0);
-        std::fs::remove_file(path).ok();
+        // per-request event indexes are contiguous and end with a finish
+        for req in &requests {
+            let evs: Vec<_> = sink
+                .events
+                .iter()
+                .filter(|e| e.request_id == req.id)
+                .collect();
+            assert_eq!(evs.len(), req.params.max_tokens);
+            for (i, ev) in evs.iter().enumerate() {
+                assert_eq!(ev.index, i);
+                assert_eq!(
+                    ev.finish.is_some(),
+                    i + 1 == req.params.max_tokens
+                );
+            }
+        }
+        // engine drained
+        assert_eq!(c.engine.active(), 0);
+        assert!(report.decode_s > 0.0 && report.prefill_s > 0.0);
     }
 
     #[test]
-    fn best_of_n_batch_decays() {
-        let Some(dir) = artifacts() else { return };
-        let path = wp("bon");
-        let mut c = Coordinator::new(dir, &path, opts()).unwrap();
-        let curve = c.best_of_n(&[1, 2, 3], 2, 2, true).unwrap();
-        assert_eq!(curve.len(), 4);
-        assert_eq!(curve[0].0, 2);
-        assert_eq!(curve[3].0, 1);
-        assert!(curve.iter().all(|&(_, tps)| tps > 0.0));
-        std::fs::remove_file(path).ok();
+    fn lockstep_discards_overrun_tokens() {
+        let mut c = Coordinator::with_mode(sim(2), ScheduleMode::Lockstep);
+        // one short + one long rider in the same group
+        let report = c.serve_collect(&reqs(&[2, 8])).unwrap();
+        assert_eq!(report.session(0).unwrap().tokens.len(), 2);
+        assert_eq!(report.session(1).unwrap().tokens.len(), 8);
+        // useful decode tokens: (2-1) + (8-1); the engine emitted 7+7
+        assert_eq!(report.decode_tokens, 8);
+        assert_eq!(c.engine.stats().decode_tokens, 14);
+        // the short member's decode latency must not include the time it
+        // idled waiting for the group's long rider
+        let short = &report.session(0).unwrap().metrics;
+        let long = &report.session(1).unwrap().metrics;
+        assert!(short.decode_s <= long.decode_s,
+                "short {} vs long {}", short.decode_s, long.decode_s);
+    }
+
+    #[test]
+    fn single_token_requests_finish_at_prefill() {
+        let mut c = Coordinator::new(sim(2));
+        let report = c.serve_collect(&reqs(&[1, 1, 1])).unwrap();
+        assert_eq!(report.sessions.len(), 3);
+        for s in &report.sessions {
+            assert_eq!(s.tokens.len(), 1);
+        }
+        assert_eq!(report.decode_tokens, 0);
+        assert_eq!(c.engine.stats().steps, 0);
+    }
+
+    #[test]
+    fn serving_metrics_cover_every_request() {
+        let mut c = Coordinator::new(sim(2));
+        let report = c.serve_collect(&reqs(&[4, 4, 4])).unwrap();
+        assert_eq!(report.serving.requests(), 3);
+        let mut q = report.serving;
+        // the third request queued behind a full engine
+        assert!(q.queue_ms.percentile(100.0) >= q.queue_ms.percentile(0.0));
+        assert!(q.ttft_ms.percentile(50.0) > 0.0);
     }
 }

@@ -20,6 +20,8 @@ pub mod prefill;
 pub mod real;
 pub mod speculative;
 
+use anyhow::{anyhow, ensure, Result};
+
 use crate::cache::{Access, MemoryBudget, NeuronCache};
 use crate::config::{
     CoreClass, DeviceConfig, ModelSpec, PipelineMode, RuntimeConfig, XpuMode,
@@ -27,6 +29,7 @@ use crate::config::{
 use crate::metrics::{RunMetrics, StepMetrics};
 use crate::pipeline::{schedule, ClusterTask};
 use crate::planner::{Plan, Planner};
+use crate::serve::{Admission, Engine, EngineStats, InferenceRequest, SlotId};
 use crate::sparsity::{ActivationModel, PredictorModel, N_REP};
 use crate::storage::{IoBurst, IoPattern, UfsModel};
 use crate::util::prng::Rng;
@@ -53,6 +56,21 @@ pub struct SimEngine {
     prev_active: Vec<Vec<u32>>,
     cur_hot_frac: f64,
     last_batch: usize,
+    /// serving slots for the [`Engine`] trait (one per concurrent
+    /// sequence, capacity = cfg.max_batch)
+    slots: Vec<Option<SimSlot>>,
+    sv_prefill_s: f64,
+    sv_decode_s: f64,
+    sv_decode_tokens: u64,
+}
+
+/// Per-slot state of an admitted sequence on the simulation engine: a
+/// deterministic token stream keyed by (request id, sampling seed), so
+/// the synthesized output is independent of batch composition and
+/// scheduler — which makes continuous-vs-lockstep equivalence testable.
+#[derive(Debug, Clone)]
+struct SimSlot {
+    rng: Rng,
 }
 
 impl SimEngine {
@@ -82,6 +100,7 @@ impl SimEngine {
         let xpu = XpuModel::new(dev.clone());
         let ufs = UfsModel::new(dev.ufs.clone());
         let rng = Rng::new(cfg.seed.wrapping_mul(0x9E37_79B9));
+        let capacity = cfg.max_batch.max(1);
         SimEngine {
             dev,
             spec,
@@ -99,6 +118,10 @@ impl SimEngine {
             prev_active: vec![Vec::new(); spec2_layers],
             cur_hot_frac: hot0,
             last_batch: 0,
+            slots: vec![None; capacity],
+            sv_prefill_s: 0.0,
+            sv_decode_s: 0.0,
+            sv_decode_tokens: 0,
         }
     }
 
@@ -514,6 +537,97 @@ impl SimEngine {
         self.metrics = RunMetrics::new();
         self.cache.reset_stats();
     }
+
+    /// Deterministic token stream for one admitted request, keyed only by
+    /// (request id, sampling seed, engine seed) — never by slot index or
+    /// batch composition, so lockstep and continuous scheduling produce
+    /// identical per-request outputs.
+    fn slot_stream(&self, req: &InferenceRequest) -> Rng {
+        Rng::new(
+            req.id
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ req.params.seed.rotate_left(17)
+                ^ self.cfg.seed.wrapping_mul(0xD1B5_4A32_D192_ED03),
+        )
+    }
+}
+
+impl Engine for SimEngine {
+    fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    fn vocab(&self) -> usize {
+        self.spec.vocab
+    }
+
+    fn admit(&mut self, req: &InferenceRequest) -> Result<Admission> {
+        let slot = self
+            .slots
+            .iter()
+            .position(Option::is_none)
+            .ok_or_else(|| {
+                anyhow!("engine full: all {} slots occupied", self.slots.len())
+            })?;
+        // modeled prefill cost (NPU-centric, async prefetch, §4.1.1)
+        let pre = self.prefill_run(req.prompt.len().max(1), true);
+        self.sv_prefill_s += pre.total_s;
+        let mut rng = self.slot_stream(req);
+        let first = rng.below(self.spec.vocab) as u32;
+        self.slots[slot] = Some(SimSlot { rng });
+        Ok(Admission { slot, first_token: Some(first) })
+    }
+
+    fn step(&mut self) -> Result<Vec<(SlotId, u32)>> {
+        let occupied: Vec<SlotId> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.is_some().then_some(i))
+            .collect();
+        if occupied.is_empty() {
+            return Ok(Vec::new());
+        }
+        let sm = self.decode_step(occupied.len());
+        self.metrics.push_step(&sm);
+        self.sv_decode_s += sm.step_s;
+        self.sv_decode_tokens += occupied.len() as u64;
+        let vocab = self.spec.vocab;
+        Ok(occupied
+            .into_iter()
+            .map(|slot| {
+                let s = self.slots[slot].as_mut().expect("occupied slot");
+                (slot, s.rng.below(vocab) as u32)
+            })
+            .collect())
+    }
+
+    fn retire(&mut self, slot: SlotId) -> Result<()> {
+        ensure!(
+            slot < self.slots.len(),
+            "slot {slot} out of range (capacity {})",
+            self.slots.len()
+        );
+        self.slots[slot] = None;
+        Ok(())
+    }
+
+    fn stats(&self) -> EngineStats {
+        EngineStats {
+            capacity: self.slots.len(),
+            active: self.active(),
+            steps: self.metrics.steps,
+            decode_tokens: self.sv_decode_tokens,
+            prefill_s: self.sv_prefill_s,
+            decode_s: self.sv_decode_s,
+            cache_hits: self.metrics.cache_hits,
+            cache_misses: self.metrics.cache_misses,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -657,5 +771,54 @@ mod tests {
         let sb = b.decode_step(1);
         assert_eq!(sa.step_s, sb.step_s);
         assert_eq!(sa.io_bytes, sb.io_bytes);
+    }
+
+    #[test]
+    fn engine_trait_admit_step_retire() {
+        use crate::serve::InferenceRequest;
+        let mut e = engine(RuntimeConfig { max_batch: 2, ..Default::default() });
+        assert_eq!(e.capacity(), 2);
+        let a0 = e.admit(&InferenceRequest::new(0, vec![1, 2, 3], 4)).unwrap();
+        let a1 = e.admit(&InferenceRequest::new(1, vec![4], 4)).unwrap();
+        assert_ne!(a0.slot, a1.slot);
+        assert!(a0.first_token.is_some());
+        assert_eq!(e.active(), 2);
+        // full: third admission must be rejected, not silently queued
+        assert!(e.admit(&InferenceRequest::new(2, vec![1], 2)).is_err());
+        let toks = e.step().unwrap();
+        assert_eq!(toks.len(), 2);
+        assert!(toks.iter().all(|&(_, t)| (t as usize) < e.vocab()));
+        e.retire(a0.slot).unwrap();
+        assert_eq!(e.step().unwrap().len(), 1);
+        let st = e.stats();
+        assert_eq!(st.steps, 2);
+        assert_eq!(st.decode_tokens, 3);
+        assert!(st.decode_s > 0.0 && st.prefill_s > 0.0);
+        assert!(e.retire(9).is_err());
+    }
+
+    #[test]
+    fn slot_streams_are_batch_independent() {
+        use crate::serve::InferenceRequest;
+        let req = InferenceRequest::new(7, vec![1, 2, 3, 4], 6);
+        // alone
+        let mut a = engine(RuntimeConfig { max_batch: 2, ..Default::default() });
+        let adm = a.admit(&req).unwrap();
+        let mut alone = vec![adm.first_token.unwrap()];
+        for _ in 0..5 {
+            alone.push(a.step().unwrap()[0].1);
+        }
+        // sharing the engine with a neighbour admitted first
+        let mut b = engine(RuntimeConfig { max_batch: 2, ..Default::default() });
+        b.admit(&InferenceRequest::new(3, vec![9, 9], 6)).unwrap();
+        let adm = b.admit(&req).unwrap();
+        let mut shared = vec![adm.first_token.unwrap()];
+        for _ in 0..5 {
+            let toks = b.step().unwrap();
+            shared.push(
+                toks.iter().find(|&&(s, _)| s == adm.slot).unwrap().1,
+            );
+        }
+        assert_eq!(alone, shared, "stream depends on batch composition");
     }
 }

@@ -19,13 +19,14 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::sync::mpsc;
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::cache::{Access, NeuronCache};
 use crate::config::CoreClass;
 use crate::metrics::{RunMetrics, StepMetrics};
 use crate::model::{ModelDims, Predictor, WeightFile, Weights};
-use crate::runtime::{Runtime, Tensor};
+use crate::runtime::{Runtime, Tensor, TensorData};
+use crate::serve::{Admission, Engine, EngineStats, InferenceRequest, SlotId};
 use crate::storage::{FlashFile, ThrottledFile, UfsModel};
 
 /// Options for the real engine.
@@ -87,6 +88,12 @@ pub struct RealEngine {
     pub pos: usize,
     pub opts: RealEngineOptions,
     pub metrics: RunMetrics,
+    /// Serving slots for the [`Engine`] trait: one per batch row, holding
+    /// the row's last generated token while a sequence occupies it.
+    serve_slots: Vec<Option<u32>>,
+    sv_prefill_s: f64,
+    sv_decode_s: f64,
+    sv_decode_tokens: u64,
 }
 
 impl RealEngine {
@@ -152,6 +159,10 @@ impl RealEngine {
             pos: 0,
             opts,
             metrics: RunMetrics::new(),
+            serve_slots: vec![None; batch],
+            sv_prefill_s: 0.0,
+            sv_decode_s: 0.0,
+            sv_decode_tokens: 0,
         };
         engine.pin_hot_tensors(engine.cache.hot_per_layer);
         engine.encode_static_literals()?;
@@ -544,6 +555,45 @@ impl RealEngine {
         }
     }
 
+    /// Longest prompt suffix the compiled prefill graph accepts.
+    fn prompt_tail<'a>(&self, p: &'a [u32]) -> &'a [u32] {
+        let chunk = self.dims.prefill_chunk;
+        if p.len() > chunk {
+            &p[p.len() - chunk..]
+        } else {
+            p
+        }
+    }
+
+    /// Download the live KV literals into the host copies. The decode
+    /// loop flows KV output→input through literals without touching the
+    /// host tensors, so anything that *rebuilds* literals from host state
+    /// (prefill does, at its end) must sync first or in-flight rows lose
+    /// their decoded positions.
+    fn sync_kv_host(&mut self) -> Result<()> {
+        for (l, (k_lit, v_lit)) in self.kv_lits.iter().enumerate() {
+            self.kv[l] =
+                (Tensor::from_literal(k_lit)?, Tensor::from_literal(v_lit)?);
+        }
+        Ok(())
+    }
+
+    /// Zero one batch row's KV history — required before a retired slot
+    /// is reused mid-flight, or the new sequence would attend to the
+    /// previous occupant's keys at positions beyond its own prompt.
+    fn clear_kv_row(&mut self, row: usize) {
+        let d = self.dims.clone();
+        let per_row = d.seq_max * d.kv_heads * d.head_dim();
+        for (kc, vc) in self.kv.iter_mut() {
+            if let TensorData::F32(a) = &mut kc.data {
+                a[row * per_row..(row + 1) * per_row].fill(0.0);
+            }
+            if let TensorData::F32(a) = &mut vc.data {
+                a[row * per_row..(row + 1) * per_row].fill(0.0);
+            }
+        }
+    }
+
     fn cpu_lm_head_argmax(&self, x: &[f32]) -> u32 {
         let d = &self.dims;
         let h = d.hidden;
@@ -563,6 +613,150 @@ impl RealEngine {
             }
         }
         best.0
+    }
+}
+
+impl Engine for RealEngine {
+    fn capacity(&self) -> usize {
+        self.batch
+    }
+
+    fn active(&self) -> usize {
+        self.serve_slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    fn vocab(&self) -> usize {
+        self.dims.vocab
+    }
+
+    /// Admit into a free batch row. When the engine is idle the KV state
+    /// is reset first; a mid-flight admission (continuous batching) keeps
+    /// the shared decode position and pads the new row's unwritten KV
+    /// positions with zeros — an approximation the lockstep path avoids
+    /// by admitting whole groups into an idle engine.
+    fn admit(&mut self, req: &InferenceRequest) -> Result<Admission> {
+        let slot = self
+            .serve_slots
+            .iter()
+            .position(Option::is_none)
+            .ok_or_else(|| {
+                anyhow!("engine full: all {} rows occupied", self.batch)
+            })?;
+        let t0 = std::time::Instant::now();
+        let mid_flight = self.serve_slots.iter().any(Option::is_some);
+        if mid_flight {
+            // prefill rebuilds literals from host state at its end; pull
+            // the in-flight rows' decoded KV down first
+            self.sync_kv_host()?;
+        } else if self.pos > 0 {
+            self.reset();
+        }
+        // the prefill graph is compiled for a fixed chunk: keep the tail
+        let prompt = self.prompt_tail(&req.prompt);
+        // a mid-flight admission must not move the shared decode position
+        // in either direction — sequences in flight have no KV beyond it —
+        // so a longer prompt is capped to its last `pos` tokens
+        let prompt = if mid_flight && prompt.len() > self.pos {
+            &prompt[prompt.len() - self.pos..]
+        } else {
+            prompt
+        };
+        ensure!(!prompt.is_empty(), "empty prompt");
+        let pos_before = self.pos;
+        self.clear_kv_row(slot);
+        let first = self.prefill(slot, prompt)?;
+        self.pos = self.pos.max(pos_before);
+        self.sv_prefill_s += t0.elapsed().as_secs_f64();
+        self.serve_slots[slot] = Some(first);
+        Ok(Admission { slot, first_token: Some(first) })
+    }
+
+    /// Group admission into an idle engine: prompts are right-padded to a
+    /// shared length (repeating their last token) so every row carries
+    /// real KV up to the common decode position — the lockstep path has
+    /// no zero-padded KV gaps, unlike mid-flight single admissions.
+    fn admit_group(&mut self, reqs: &[&InferenceRequest]) -> Result<Vec<Admission>> {
+        ensure!(
+            self.serve_slots.iter().all(Option::is_none),
+            "admit_group requires an idle engine"
+        );
+        ensure!(
+            reqs.len() <= self.batch,
+            "group of {} exceeds {} rows",
+            reqs.len(),
+            self.batch
+        );
+        if self.pos > 0 {
+            self.reset();
+        }
+        let max_prompt = reqs
+            .iter()
+            .map(|r| self.prompt_tail(&r.prompt).len().max(1))
+            .max()
+            .unwrap_or(1);
+        let t0 = std::time::Instant::now();
+        let mut out = Vec::with_capacity(reqs.len());
+        for (row, req) in reqs.iter().enumerate() {
+            let mut prompt = self.prompt_tail(&req.prompt).to_vec();
+            ensure!(!prompt.is_empty(), "empty prompt");
+            let last = *prompt.last().expect("non-empty prompt");
+            prompt.resize(max_prompt, last);
+            let first = self.prefill(row, &prompt)?;
+            self.serve_slots[row] = Some(first);
+            out.push(Admission { slot: row, first_token: Some(first) });
+        }
+        self.sv_prefill_s += t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    fn step(&mut self) -> Result<Vec<(SlotId, u32)>> {
+        if self.serve_slots.iter().all(Option::is_none) {
+            return Ok(Vec::new());
+        }
+        let tokens: Vec<u32> =
+            self.serve_slots.iter().map(|s| s.unwrap_or(0)).collect();
+        let t0 = std::time::Instant::now();
+        let next = self.decode_step(&tokens)?;
+        self.sv_decode_s += t0.elapsed().as_secs_f64();
+        let mut out = Vec::with_capacity(self.batch);
+        for (slot, state) in self.serve_slots.iter_mut().enumerate() {
+            if state.is_some() {
+                *state = Some(next[slot]);
+                out.push((slot, next[slot]));
+            }
+        }
+        self.sv_decode_tokens += out.len() as u64;
+        Ok(out)
+    }
+
+    fn retire(&mut self, slot: SlotId) -> Result<()> {
+        ensure!(
+            slot < self.serve_slots.len(),
+            "slot {slot} out of range (capacity {})",
+            self.serve_slots.len()
+        );
+        self.serve_slots[slot] = None;
+        if self.serve_slots.iter().all(Option::is_none) {
+            self.reset(); // reclaim KV positions for the next group
+        }
+        Ok(())
+    }
+
+    fn decode_budget(&self) -> Option<usize> {
+        Some(self.dims.seq_max.saturating_sub(self.pos))
+    }
+
+    fn stats(&self) -> EngineStats {
+        EngineStats {
+            capacity: self.batch,
+            active: self.active(),
+            steps: self.metrics.steps,
+            decode_tokens: self.sv_decode_tokens,
+            prefill_s: self.sv_prefill_s,
+            decode_s: self.sv_decode_s,
+            cache_hits: self.metrics.cache_hits,
+            cache_misses: self.metrics.cache_misses,
+        }
     }
 }
 
@@ -735,6 +929,30 @@ mod tests {
         let mut e = RealEngine::new(dir, &wp, 2, opts(false, 128)).unwrap();
         let out = e.decode_step(&[1, 2]).unwrap();
         assert_eq!(out.len(), 2);
+        std::fs::remove_file(wp).ok();
+    }
+
+    #[test]
+    fn engine_trait_slot_lifecycle() {
+        let Some(dir) = artifacts() else { return };
+        let wp = weight_path("trait");
+        let mut e = RealEngine::new(dir, &wp, 2, opts(false, 128)).unwrap();
+        assert_eq!(e.capacity(), 2);
+        let r0 = InferenceRequest::new(0, vec![3, 9, 17], 4);
+        let r1 = InferenceRequest::new(1, vec![4, 2], 4);
+        let a0 = e.admit(&r0).unwrap();
+        let a1 = e.admit(&r1).unwrap();
+        assert_ne!(a0.slot, a1.slot);
+        assert!(e.admit(&r0).is_err(), "third admission on 2 rows");
+        assert_eq!(e.step().unwrap().len(), 2);
+        e.retire(a0.slot).unwrap();
+        assert_eq!(e.step().unwrap().len(), 1);
+        // slot reuse mid-flight: the freed row takes a new sequence
+        let a2 = e.admit(&InferenceRequest::new(2, vec![8, 1], 3)).unwrap();
+        assert_eq!(a2.slot, a0.slot);
+        assert_eq!(e.step().unwrap().len(), 2);
+        let st = e.stats();
+        assert!(st.decode_tokens >= 5 && st.decode_s > 0.0);
         std::fs::remove_file(wp).ok();
     }
 }

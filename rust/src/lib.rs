@@ -14,6 +14,7 @@ pub mod model;
 pub mod pipeline;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod sparsity;
 pub mod storage;
 pub mod tokenizer;

@@ -51,8 +51,12 @@ USAGE:
                 [--batch B] [--prompt P] [--offload F] [--mem GB]
                 [--config file.json]
   pi2 graphs    [--artifacts DIR]         list compiled NPU graphs
-  pi2 serve     [--addr HOST:PORT] [--artifacts DIR] [--throttle]
-                line-protocol TCP server over the real PJRT engine
+  pi2 serve     [--addr HOST:PORT] [--engine real|sim] [--artifacts DIR]
+                [--mode continuous|lockstep] [--slots N] [--device D]
+                [--model M] [--throttle]
+                line-protocol TCP server; streams tokens with
+                {{\"stream\": true}}. --engine real runs the PJRT engine
+                (needs artifacts), --engine sim the simulation engine
 
 DEVICES: oneplus12 (default), ace2
 MODELS:  bamboo-7b (default), mistral-7b, qwen2-7b, llama-13b, mixtral-47b
@@ -154,32 +158,87 @@ fn cmd_simulate(args: &Args) -> i32 {
 }
 
 fn cmd_serve(args: &Args) -> i32 {
-    use powerinfer2::coordinator::Server;
-    use powerinfer2::engine::real::RealEngineOptions;
+    use powerinfer2::coordinator::{ScheduleMode, Server};
+    use powerinfer2::engine::real::{RealEngine, RealEngineOptions};
+
     let artifacts = std::path::PathBuf::from(args.opt_or("artifacts", "artifacts"));
-    if !artifacts.join("manifest.json").exists() {
-        eprintln!("no artifacts — run `make artifacts` first");
+    let have_artifacts = artifacts.join("manifest.json").exists();
+    let default_engine = if have_artifacts { "real" } else { "sim" };
+    let engine_kind = args.opt_or("engine", default_engine);
+    let Some(mode) = ScheduleMode::parse(args.opt_or("mode", "continuous"))
+    else {
+        eprintln!("unknown --mode (expected lockstep|continuous)");
         return 2;
-    }
-    let weight_path = std::path::PathBuf::from(
-        args.opt_or("weights", "/tmp/pi2_serve_weights.bin"));
-    let opts = RealEngineOptions {
-        throttle_io: args.flag("throttle"),
-        ..Default::default()
     };
     let addr = args.opt_or("addr", "127.0.0.1:7071").to_string();
-    println!("compiling NPU graph table…");
-    let mut server = match Server::new(&artifacts, &weight_path, opts) {
-        Ok(s) => s,
-        Err(e) => {
-            eprintln!("startup failed: {e:#}");
-            return 1;
-        }
+    let run = |err: anyhow::Error| -> i32 {
+        eprintln!("server error: {err:#}");
+        1
     };
-    println!("serving on {addr} — one JSON request per line; {{\"cmd\":\"shutdown\"}} to stop");
-    if let Err(e) = server.run(&addr, None) {
-        eprintln!("server error: {e:#}");
-        return 1;
+    match engine_kind {
+        "real" => {
+            if !have_artifacts {
+                eprintln!("no artifacts — run `make artifacts` first, \
+                           or use --engine sim");
+                return 2;
+            }
+            let weight_path = std::path::PathBuf::from(
+                args.opt_or("weights", "/tmp/pi2_serve_weights.bin"));
+            let opts = RealEngineOptions {
+                throttle_io: args.flag("throttle"),
+                ..Default::default()
+            };
+            println!("compiling NPU graph table…");
+            let slots = match args.opt("slots") {
+                Some(s) => match s.parse::<usize>() {
+                    Ok(n) if n >= 1 => Some(n),
+                    _ => {
+                        eprintln!("invalid --slots '{s}' (expected a \
+                                   positive integer)");
+                        return 2;
+                    }
+                },
+                None => None,
+            };
+            let mut server = match Server::<RealEngine>::real_with_slots(
+                &artifacts, &weight_path, opts, slots,
+            ) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("startup failed: {e:#}");
+                    return 1;
+                }
+            };
+            server.set_mode(mode);
+            println!("serving (real engine, {} scheduling) on {addr} — one \
+                      JSON request per line; {{\"cmd\":\"shutdown\"}} to stop",
+                     mode.as_str());
+            if let Err(e) = server.run(&addr, None) {
+                return run(e);
+            }
+        }
+        "sim" => {
+            let dev = device_preset(args.opt_or("device", "oneplus12"))
+                .unwrap_or_else(oneplus_12);
+            let Some(spec) = model_preset(args.opt_or("model", "bamboo-7b"))
+            else {
+                eprintln!("unknown model");
+                return 2;
+            };
+            let cfg = base_config(args);
+            let mut server = Server::<SimEngine>::sim(dev, spec, cfg);
+            server.set_mode(mode);
+            println!("serving (sim engine, {} scheduling) on {addr} — one \
+                      JSON request per line; {{\"cmd\":\"shutdown\"}} to stop",
+                     mode.as_str());
+            if let Err(e) = server.run(&addr, None) {
+                return run(e);
+            }
+        }
+        other => {
+            eprintln!("unknown --engine '{other}' (expected real|sim)");
+            return 2;
+        }
     }
     0
 }

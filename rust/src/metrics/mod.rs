@@ -2,6 +2,7 @@
 //! reports — token latencies (Table 5), compute/I-O shares (Table 4),
 //! bandwidth and cache statistics (§7.2), XPU busy times (energy, Table 8).
 
+use crate::serve::RequestMetrics;
 use crate::util::stats::{OnlineStats, Samples};
 
 /// Accounting for one decode step (one token across the whole model).
@@ -142,6 +143,36 @@ impl RunMetrics {
     }
 }
 
+/// Serving-layer latency distributions, one sample per completed request:
+/// the request-lifecycle analog of the per-step [`RunMetrics`]. All
+/// values are milliseconds of wall-clock (the serving process's own
+/// latencies, regardless of backend).
+#[derive(Debug, Clone, Default)]
+pub struct ServingMetrics {
+    /// Submit → admitted into an engine slot.
+    pub queue_ms: Samples,
+    /// Admission (prefill) duration.
+    pub prefill_ms: Samples,
+    /// Admission → last token.
+    pub decode_ms: Samples,
+    /// Submit → first token.
+    pub ttft_ms: Samples,
+}
+
+impl ServingMetrics {
+    pub fn record(&mut self, m: &RequestMetrics) {
+        self.queue_ms.push(m.queue_s * 1e3);
+        self.prefill_ms.push(m.prefill_s * 1e3);
+        self.decode_ms.push(m.decode_s * 1e3);
+        self.ttft_ms.push(m.ttft_s * 1e3);
+    }
+
+    /// Completed requests recorded so far.
+    pub fn requests(&self) -> usize {
+        self.queue_ms.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,6 +215,22 @@ mod tests {
         assert!((mean - 50.5).abs() < 0.1);
         assert!((p50 - 50.5).abs() < 1.0);
         assert!(p90 > p50 && p99 > p90);
+    }
+
+    #[test]
+    fn serving_metrics_record_requests() {
+        let mut s = ServingMetrics::default();
+        for i in 1..=4 {
+            s.record(&RequestMetrics {
+                queue_s: 0.001 * i as f64,
+                prefill_s: 0.010,
+                decode_s: 0.100,
+                ttft_s: 0.011 * i as f64,
+            });
+        }
+        assert_eq!(s.requests(), 4);
+        assert!((s.prefill_ms.percentile(50.0) - 10.0).abs() < 1e-9);
+        assert!(s.queue_ms.percentile(99.0) <= 4.0 + 1e-9);
     }
 
     #[test]

@@ -71,6 +71,16 @@ impl ModelDims {
             .with_context(|| format!("read {}", path.display()))?;
         Self::from_json(&Json::parse(&text)?)
     }
+
+    /// Load dims from an artifacts directory's `manifest.json` (its
+    /// `dims` key) — the cheap probe for batch/graph geometry that does
+    /// not construct an engine.
+    pub fn load_dir(dir: &std::path::Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::from_json(Json::parse(&text)?.get("dims")).context("manifest dims")
+    }
 }
 
 /// Inverse standard-normal CDF (Acklam's approximation, |err| < 1.15e-9).

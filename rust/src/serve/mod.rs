@@ -1,0 +1,374 @@
+//! Request-lifecycle serving API: the one interface every engine speaks.
+//!
+//! PowerInfer-2's neuron-cluster decomposition exists to make scheduling
+//! flexible (§4.1); this module is the serving-side half of that claim.
+//! It defines the request lifecycle —
+//!
+//! ```text
+//!   InferenceRequest ──admit──▶ slot ──step*──▶ TokenEvent… ──retire──▶ Session
+//!        (queued)              (prefill)        (streamed)              (record)
+//! ```
+//!
+//! — and the [`Engine`] trait (`admit` / `step` / `retire` / `capacity`
+//! / `stats`) that both the simulation engine ([`crate::engine::SimEngine`])
+//! and the real PJRT engine ([`crate::engine::real::RealEngine`])
+//! implement. The coordinator, the TCP server, the experiments, benches
+//! and examples are all generic over this trait, so scheduling policies
+//! (lockstep vs. continuous batching) apply to every backend uniformly.
+
+use anyhow::Result;
+
+use crate::trace;
+
+/// Index of an engine decode slot (one concurrent sequence). Slots are
+/// dense in `0..capacity()`.
+pub type SlotId = usize;
+
+/// Per-request sampling parameters.
+///
+/// `temperature == 0.0` means greedy decoding. The real engine currently
+/// decodes greedily regardless (its graphs return only the argmax); the
+/// simulation engine uses `seed` to synthesize a deterministic token
+/// stream that is independent of batch composition — which is what makes
+/// scheduler equivalence testable.
+#[derive(Debug, Clone)]
+pub struct SamplingParams {
+    /// Maximum tokens to generate (including the prefill's first token).
+    pub max_tokens: usize,
+    pub temperature: f64,
+    pub top_k: usize,
+    /// Seed for any stochastic sampling.
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { max_tokens: 16, temperature: 0.0, top_k: 40, seed: 0 }
+    }
+}
+
+/// One queued generation request.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: u64,
+    /// Prompt token ids (must be non-empty; engines clamp ids to vocab).
+    pub prompt: Vec<u32>,
+    pub params: SamplingParams,
+}
+
+impl InferenceRequest {
+    pub fn new(id: u64, prompt: Vec<u32>, max_tokens: usize) -> Self {
+        let prompt = if prompt.is_empty() { vec![0] } else { prompt };
+        InferenceRequest {
+            id,
+            prompt,
+            params: SamplingParams { max_tokens: max_tokens.max(1), ..Default::default() },
+        }
+    }
+
+    /// Build from a workload-trace request: synthesizes a deterministic
+    /// prompt from the request id (the traces carry lengths, not text).
+    pub fn from_trace(req: &trace::Request, vocab: usize, max_prompt: usize) -> Self {
+        let len = req.prompt_tokens.clamp(1, max_prompt.max(1));
+        let prompt = (0..len)
+            .map(|i| ((req.id * 131 + i * 7) % vocab.max(1)) as u32)
+            .collect();
+        InferenceRequest::new(req.id as u64, prompt, req.output_tokens.max(1))
+    }
+}
+
+/// Why a sequence stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit `max_tokens`.
+    Length,
+    /// Hit a stop condition (reserved: no EOS in the synthetic vocab yet).
+    Stop,
+    /// Evicted / aborted before completion.
+    Cancelled,
+}
+
+impl FinishReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Stop => "stop",
+            FinishReason::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// One generated token, streamed as it is produced.
+#[derive(Debug, Clone)]
+pub struct TokenEvent {
+    pub request_id: u64,
+    pub token: u32,
+    /// 0-based index of this token within the generation.
+    pub index: usize,
+    /// Set on the final token of the sequence.
+    pub finish: Option<FinishReason>,
+}
+
+/// Receiver for streamed tokens. An error from the sink aborts the serve
+/// call (e.g. the client hung up mid-stream).
+pub trait TokenSink {
+    fn on_token(&mut self, ev: &TokenEvent) -> Result<()>;
+}
+
+/// Sink that discards events (non-streaming callers).
+#[derive(Debug, Default)]
+pub struct NullSink;
+
+impl TokenSink for NullSink {
+    fn on_token(&mut self, _ev: &TokenEvent) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Adapter: any `FnMut(&TokenEvent) -> Result<()>` as a sink.
+pub struct FnSink<F>(pub F);
+
+impl<F: FnMut(&TokenEvent) -> Result<()>> TokenSink for FnSink<F> {
+    fn on_token(&mut self, ev: &TokenEvent) -> Result<()> {
+        (self.0)(ev)
+    }
+}
+
+/// Sink that collects every event (tests / batch callers).
+#[derive(Debug, Default)]
+pub struct CollectSink {
+    pub events: Vec<TokenEvent>,
+}
+
+impl TokenSink for CollectSink {
+    fn on_token(&mut self, ev: &TokenEvent) -> Result<()> {
+        self.events.push(ev.clone());
+        Ok(())
+    }
+}
+
+/// Per-request latency breakdown (wall-clock seconds).
+#[derive(Debug, Clone, Default)]
+pub struct RequestMetrics {
+    /// Submit → admitted into a slot.
+    pub queue_s: f64,
+    /// Admission (prefill) duration.
+    pub prefill_s: f64,
+    /// Admission → finish (decode phase).
+    pub decode_s: f64,
+    /// Submit → first token.
+    pub ttft_s: f64,
+}
+
+/// The completed-request record the serving layer hands back: identity,
+/// generated tokens, finish reason, and the lifecycle latency breakdown.
+#[derive(Debug, Clone)]
+pub struct Session {
+    pub id: u64,
+    pub prompt_tokens: usize,
+    pub tokens: Vec<u32>,
+    pub finish: FinishReason,
+    pub metrics: RequestMetrics,
+}
+
+/// Cumulative engine-side counters, uniform across backends.
+///
+/// `decode_s`/`prefill_s` are *engine seconds*: wall-clock for the real
+/// engine, modeled device seconds for the simulation engine — which is
+/// exactly what throughput comparisons between schedulers should use.
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    pub capacity: usize,
+    pub active: usize,
+    /// Decode steps executed (one step covers every active slot).
+    pub steps: u64,
+    /// Tokens emitted to sequences (excludes padded / discarded rows).
+    pub decode_tokens: u64,
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl EngineStats {
+    pub fn cache_hit_rate(&self) -> f64 {
+        let n = self.cache_hits + self.cache_misses;
+        if n == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / n as f64
+        }
+    }
+
+    /// Decode throughput in tokens per engine-second.
+    pub fn decode_tps(&self) -> f64 {
+        if self.decode_s <= 0.0 {
+            0.0
+        } else {
+            self.decode_tokens as f64 / self.decode_s
+        }
+    }
+}
+
+/// Result of admitting one request.
+#[derive(Debug, Clone, Copy)]
+pub struct Admission {
+    pub slot: SlotId,
+    /// First generated token, when prefill produced one synchronously.
+    /// `None` means the engine defers prefill into subsequent [`Engine::step`]
+    /// calls (the real engine's mid-flight admission path) and the first
+    /// token will surface from `step` later.
+    pub first_token: Option<u32>,
+}
+
+/// The unified serving interface over every inference backend.
+///
+/// Lifecycle contract:
+/// - `admit` places a request into a free slot (error when full) and runs
+///   or schedules its prefill.
+/// - `step` decodes one token for every occupied slot and returns
+///   `(slot, token)` pairs; slots whose prefill is still catching up may
+///   be absent from one or more steps.
+/// - `retire` frees a slot at any time; it is idempotent.
+/// - The caller owns stop conditions (`max_tokens` etc.) — the engine
+///   only produces tokens.
+pub trait Engine {
+    /// Maximum concurrent sequences (decode slots).
+    fn capacity(&self) -> usize;
+
+    /// Currently occupied slots.
+    fn active(&self) -> usize;
+
+    /// Vocabulary size; generated ids are in `0..vocab()`.
+    fn vocab(&self) -> usize;
+
+    /// Admit one request into a free slot.
+    fn admit(&mut self, req: &InferenceRequest) -> Result<Admission>;
+
+    /// Admit a whole group into an idle engine (lockstep group
+    /// formation). Engines may override to prefill the group jointly
+    /// (the real engine right-pads prompts to a shared position).
+    fn admit_group(&mut self, reqs: &[&InferenceRequest]) -> Result<Vec<Admission>> {
+        reqs.iter().map(|r| self.admit(r)).collect()
+    }
+
+    /// One decode step over all occupied slots.
+    fn step(&mut self) -> Result<Vec<(SlotId, u32)>>;
+
+    /// Free a slot (finished or cancelled sequence).
+    fn retire(&mut self, slot: SlotId) -> Result<()>;
+
+    /// Decode steps still available before the engine's context window
+    /// is exhausted (`None` = unbounded, e.g. the simulation engine).
+    /// Schedulers truncate sequences rather than step a zero-budget
+    /// engine.
+    fn decode_budget(&self) -> Option<usize> {
+        None
+    }
+
+    /// Cumulative counters (monotone within an engine's lifetime).
+    fn stats(&self) -> EngineStats;
+}
+
+/// Forwarding impl so a backend can be chosen at runtime
+/// (`Box<dyn Engine>`) while schedulers stay generic.
+impl<E: Engine + ?Sized> Engine for Box<E> {
+    fn capacity(&self) -> usize {
+        (**self).capacity()
+    }
+
+    fn active(&self) -> usize {
+        (**self).active()
+    }
+
+    fn vocab(&self) -> usize {
+        (**self).vocab()
+    }
+
+    fn admit(&mut self, req: &InferenceRequest) -> Result<Admission> {
+        (**self).admit(req)
+    }
+
+    fn admit_group(&mut self, reqs: &[&InferenceRequest]) -> Result<Vec<Admission>> {
+        (**self).admit_group(reqs)
+    }
+
+    fn step(&mut self) -> Result<Vec<(SlotId, u32)>> {
+        (**self).step()
+    }
+
+    fn retire(&mut self, slot: SlotId) -> Result<()> {
+        (**self).retire(slot)
+    }
+
+    fn decode_budget(&self) -> Option<usize> {
+        (**self).decode_budget()
+    }
+
+    fn stats(&self) -> EngineStats {
+        (**self).stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TaskKind;
+
+    #[test]
+    fn request_from_trace_is_deterministic_and_clamped() {
+        let tr = trace::Request {
+            id: 3,
+            task: TaskKind::Code,
+            prompt_tokens: 500,
+            output_tokens: 12,
+        };
+        let a = InferenceRequest::from_trace(&tr, 64, 16);
+        let b = InferenceRequest::from_trace(&tr, 64, 16);
+        assert_eq!(a.prompt, b.prompt);
+        assert_eq!(a.prompt.len(), 16); // clamped to max_prompt
+        assert!(a.prompt.iter().all(|&t| t < 64));
+        assert_eq!(a.params.max_tokens, 12);
+        assert_eq!(a.id, 3);
+    }
+
+    #[test]
+    fn empty_prompt_is_padded() {
+        let r = InferenceRequest::new(0, Vec::new(), 0);
+        assert_eq!(r.prompt, vec![0]);
+        assert_eq!(r.params.max_tokens, 1);
+    }
+
+    #[test]
+    fn engine_stats_rates() {
+        let s = EngineStats {
+            cache_hits: 9,
+            cache_misses: 1,
+            decode_tokens: 50,
+            decode_s: 2.0,
+            ..Default::default()
+        };
+        assert!((s.cache_hit_rate() - 0.9).abs() < 1e-12);
+        assert!((s.decode_tps() - 25.0).abs() < 1e-12);
+        assert_eq!(EngineStats::default().cache_hit_rate(), 0.0);
+        assert_eq!(EngineStats::default().decode_tps(), 0.0);
+    }
+
+    #[test]
+    fn collect_sink_collects() {
+        let mut sink = CollectSink::default();
+        let ev = TokenEvent { request_id: 1, token: 5, index: 0, finish: None };
+        sink.on_token(&ev).unwrap();
+        sink.on_token(&TokenEvent { finish: Some(FinishReason::Length), ..ev })
+            .unwrap();
+        assert_eq!(sink.events.len(), 2);
+        assert_eq!(sink.events[1].finish, Some(FinishReason::Length));
+    }
+
+    #[test]
+    fn finish_reason_names() {
+        assert_eq!(FinishReason::Length.as_str(), "length");
+        assert_eq!(FinishReason::Stop.as_str(), "stop");
+        assert_eq!(FinishReason::Cancelled.as_str(), "cancelled");
+    }
+}

@@ -165,6 +165,14 @@ impl Tokenizer {
             .map(|t| t % vocab as u32)
             .collect()
     }
+
+    /// Load `tokenizer.json` (the [`Tokenizer::to_json`] format) from an
+    /// artifacts directory. `None` when the file is absent or malformed —
+    /// callers fall back to training on an inline corpus.
+    pub fn load_dir(dir: &std::path::Path) -> Option<Tokenizer> {
+        let text = std::fs::read_to_string(dir.join("tokenizer.json")).ok()?;
+        Self::from_json(&Json::parse(&text).ok()?)
+    }
 }
 
 #[cfg(test)]
@@ -210,6 +218,21 @@ mod tests {
         let j = t.to_json();
         let t2 = Tokenizer::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(t.encode(CORPUS), t2.encode(CORPUS));
+    }
+
+    #[test]
+    fn load_dir_roundtrip_and_absent() {
+        let dir = std::env::temp_dir()
+            .join(format!("pi2_tok_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::remove_file(dir.join("tokenizer.json")).ok();
+        assert!(Tokenizer::load_dir(&dir).is_none());
+        let t = Tokenizer::train(CORPUS.as_bytes(), 16);
+        std::fs::write(dir.join("tokenizer.json"), t.to_json().to_string())
+            .unwrap();
+        let l = Tokenizer::load_dir(&dir).unwrap();
+        assert_eq!(l.encode(CORPUS), t.encode(CORPUS));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -107,6 +107,25 @@ pub fn request_mix(n: usize, seed: u64) -> Vec<Request> {
         .collect()
 }
 
+/// Bimodal request mix for scheduler comparisons: short dialogue turns
+/// interleaved with long code generations. Lockstep groups stall on the
+/// long members while the short members' slots sit finished — exactly
+/// the workload where continuous batching wins.
+pub fn mixed_length_mix(n: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|id| {
+            let long = id % 2 == 1;
+            let (task, p, o) = if long {
+                (TaskKind::Code, rng.range(24, 48), rng.range(48, 97))
+            } else {
+                (TaskKind::Dialogue, rng.range(8, 24), rng.range(3, 9))
+            };
+            Request { id, task, prompt_tokens: p, output_tokens: o }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,6 +149,21 @@ mod tests {
         let rp = TaskKind::RolePlay.condition(&spec);
         assert!(code.sparsity_active_frac > rp.sparsity_active_frac);
         assert_eq!(spec.sparsity_active_frac, 0.11); // original untouched
+    }
+
+    #[test]
+    fn mixed_length_mix_is_bimodal() {
+        let reqs = mixed_length_mix(10, 3);
+        assert_eq!(reqs.len(), 10);
+        for (i, r) in reqs.iter().enumerate() {
+            if i % 2 == 1 {
+                assert!(r.output_tokens >= 48, "long rider too short");
+            } else {
+                assert!(r.output_tokens <= 8, "short turn too long");
+            }
+        }
+        assert_eq!(mixed_length_mix(10, 3)[3].output_tokens,
+                   reqs[3].output_tokens);
     }
 
     #[test]

@@ -1,0 +1,135 @@
+//! Scheduler-level tests of the unified serving API: slot reuse,
+//! admission under pressure, scheduler equivalence (identical per-request
+//! token streams under lockstep and continuous batching), and the
+//! continuous-batching throughput win on a mixed-length trace.
+
+use powerinfer2::config::{bamboo_7b, oneplus_12, RuntimeConfig};
+use powerinfer2::coordinator::{Coordinator, ScheduleMode};
+use powerinfer2::engine::SimEngine;
+use powerinfer2::serve::{CollectSink, Engine, FinishReason, InferenceRequest};
+use powerinfer2::trace::mixed_length_mix;
+
+fn sim(max_batch: usize) -> SimEngine {
+    let cfg = RuntimeConfig { max_batch, ..Default::default() };
+    SimEngine::new(oneplus_12(), bamboo_7b(), cfg)
+}
+
+fn reqs(lens: &[usize]) -> Vec<InferenceRequest> {
+    lens.iter()
+        .enumerate()
+        .map(|(id, &n)| InferenceRequest::new(id as u64, vec![1, 2, 3, 4], n))
+        .collect()
+}
+
+fn trace_requests(n: usize, seed: u64) -> Vec<InferenceRequest> {
+    let vocab = bamboo_7b().vocab;
+    mixed_length_mix(n, seed)
+        .iter()
+        .map(|r| InferenceRequest::from_trace(r, vocab, 32))
+        .collect()
+}
+
+#[test]
+fn slot_is_reused_after_early_finish() {
+    let mut e = sim(2);
+    let short = e.admit(&InferenceRequest::new(0, vec![1], 2)).unwrap();
+    let long = e.admit(&InferenceRequest::new(1, vec![1], 50)).unwrap();
+    e.step().unwrap(); // the short request reaches its 2-token budget
+    e.retire(short.slot).unwrap();
+    let next = e.admit(&InferenceRequest::new(2, vec![1], 4)).unwrap();
+    assert_eq!(next.slot, short.slot, "freed slot must be reused");
+    assert_ne!(next.slot, long.slot);
+    assert_eq!(e.active(), 2);
+}
+
+#[test]
+fn admission_is_rejected_at_full_capacity() {
+    let mut e = sim(1);
+    let adm = e.admit(&InferenceRequest::new(0, vec![1], 4)).unwrap();
+    let err = e.admit(&InferenceRequest::new(1, vec![1], 4)).unwrap_err();
+    assert!(format!("{err}").contains("full"), "unexpected error: {err}");
+    e.retire(adm.slot).unwrap();
+    assert!(e.admit(&InferenceRequest::new(1, vec![1], 4)).is_ok());
+}
+
+#[test]
+fn continuous_scheduler_needs_fewer_steps_than_lockstep() {
+    // one long rider + short turns: lockstep holds a full group until the
+    // rider finishes; continuous refills the freed slots mid-flight
+    let lens = [40, 4, 4, 4];
+    let mut lock = Coordinator::with_mode(sim(2), ScheduleMode::Lockstep);
+    lock.serve_collect(&reqs(&lens)).unwrap();
+    let lock_steps = lock.engine.stats().steps;
+    let mut cont = Coordinator::with_mode(sim(2), ScheduleMode::Continuous);
+    cont.serve_collect(&reqs(&lens)).unwrap();
+    let cont_steps = cont.engine.stats().steps;
+    assert!(
+        cont_steps < lock_steps,
+        "continuous {cont_steps} vs lockstep {lock_steps} steps"
+    );
+    assert_eq!(cont.engine.active(), 0, "slots must drain");
+}
+
+#[test]
+fn single_request_stream_is_deterministic_across_schedulers_and_runs() {
+    let req = vec![InferenceRequest::new(5, vec![7, 8, 9], 12)];
+    let mut outs = Vec::new();
+    for mode in [
+        ScheduleMode::Lockstep,
+        ScheduleMode::Continuous,
+        ScheduleMode::Continuous,
+    ] {
+        let mut c = Coordinator::with_mode(sim(4), mode);
+        let mut sink = CollectSink::default();
+        let report = c.serve(&req, &mut sink).unwrap();
+        assert_eq!(sink.events.len(), 12);
+        assert_eq!(sink.events.last().unwrap().finish, Some(FinishReason::Length));
+        outs.push(report.sessions[0].tokens.clone());
+    }
+    assert_eq!(outs[0], outs[1], "lockstep vs continuous");
+    assert_eq!(outs[1], outs[2], "continuous is not reproducible");
+}
+
+#[test]
+fn mixed_traffic_token_streams_match_across_schedulers() {
+    // stronger than the single-request guarantee: per-request outputs are
+    // independent of batch composition, so the two schedulers must agree
+    // on every request of a mixed trace
+    let requests = trace_requests(10, 11);
+    let mut lock = Coordinator::with_mode(sim(4), ScheduleMode::Lockstep);
+    let rl = lock.serve_collect(&requests).unwrap();
+    let mut cont = Coordinator::with_mode(sim(4), ScheduleMode::Continuous);
+    let rc = cont.serve_collect(&requests).unwrap();
+    assert_eq!(rl.sessions.len(), requests.len());
+    assert_eq!(rc.sessions.len(), requests.len());
+    for req in &requests {
+        let a = rl.session(req.id).unwrap();
+        let b = rc.session(req.id).unwrap();
+        assert_eq!(a.tokens.len(), req.params.max_tokens);
+        assert_eq!(a.tokens, b.tokens, "request {} diverged", req.id);
+    }
+}
+
+#[test]
+fn continuous_beats_lockstep_throughput_on_mixed_lengths() {
+    let requests = trace_requests(16, 7);
+    let mut lock = Coordinator::with_mode(sim(4), ScheduleMode::Lockstep);
+    let rl = lock.serve_collect(&requests).unwrap();
+    let mut cont = Coordinator::with_mode(sim(4), ScheduleMode::Continuous);
+    let rc = cont.serve_collect(&requests).unwrap();
+    // both deliver the same useful tokens…
+    assert_eq!(rl.decode_tokens, rc.decode_tokens);
+    // …but continuous spends fewer engine-seconds to do it
+    assert!(
+        rc.decode_tps() > rl.decode_tps() * 1.1,
+        "continuous {:.1} tok/s vs lockstep {:.1} tok/s",
+        rc.decode_tps(),
+        rl.decode_tps()
+    );
+    // and the engine wasted no decode work on finished sequences
+    assert_eq!(
+        cont.engine.stats().decode_tokens as usize,
+        rc.decode_tokens,
+        "continuous must not decode discarded tokens"
+    );
+}

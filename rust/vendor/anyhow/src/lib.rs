@@ -1,0 +1,247 @@
+//! Vendored, dependency-free subset of the `anyhow` API.
+//!
+//! The offline toolchain has no registry access, so the repo carries the
+//! small slice of `anyhow` it actually uses: an opaque [`Error`] with a
+//! context chain, the [`Result`] alias, the [`Context`] extension trait
+//! for `Result`/`Option`, and the `anyhow!` / `bail!` / `ensure!`
+//! macros. Semantics match upstream for this subset: `{:#}` prints the
+//! full cause chain, `?` converts any `std::error::Error`.
+
+use std::fmt;
+
+/// Opaque error: a message plus an optional cause chain.
+///
+/// Like upstream `anyhow::Error`, this type deliberately does NOT
+/// implement `std::error::Error`, so the blanket `From<E>` conversion
+/// below never overlaps with `From<Error>`.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Iterate the cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut items = vec![self.msg.as_str()];
+        let mut cur = self.source.as_deref();
+        while let Some(e) = cur {
+            items.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        items.into_iter()
+    }
+
+    /// The innermost (root) cause message.
+    pub fn root_cause(&self) -> &str {
+        let mut cur = self;
+        while let Some(src) = cur.source.as_deref() {
+            cur = src;
+        }
+        &cur.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` prints the whole chain, upstream-style.
+            write!(f, "{}", self.chain().collect::<Vec<_>>().join(": "))
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let rest: Vec<&str> = self.chain().skip(1).collect();
+        if !rest.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in rest.iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Preserve the std cause chain as context layers.
+        let mut msgs = vec![e.to_string()];
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(s) = cur {
+            msgs.push(s.to_string());
+            cur = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for msg in msgs.into_iter().rev() {
+            err = Some(Error { msg, source: err.map(Box::new) });
+        }
+        err.expect("at least one message")
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T>;
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T>
+    for std::result::Result<T, E>
+{
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e: Error = Error::from(io_err()).context("open weights");
+        assert_eq!(format!("{e}"), "open weights");
+        assert_eq!(format!("{e:#}"), "open weights: gone");
+        assert_eq!(e.root_cause(), "gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let r: Result<u32> = v.context("missing field");
+        assert_eq!(format!("{}", r.unwrap_err()), "missing field");
+        let r: Result<u32> = Some(7).context("unused");
+        assert_eq!(r.unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_work() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(format!("{}", f(3).unwrap_err()), "three is right out");
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+        let e = anyhow!("plain {}", 5);
+        assert_eq!(format!("{e}"), "plain 5");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}

@@ -1,0 +1,50 @@
+//! Vendored minimal `libc` surface: just the positioned-read FFI the
+//! storage backend uses. The declarations bind the host C library
+//! directly, so behaviour matches the real crate for this subset.
+
+#![allow(non_camel_case_types)]
+
+pub type c_int = i32;
+pub type c_void = std::ffi::c_void;
+pub type size_t = usize;
+pub type ssize_t = isize;
+pub type off_t = i64;
+
+extern "C" {
+    /// Positioned read: does not move the file offset, safe to call from
+    /// many threads on one fd.
+    pub fn pread(
+        fd: c_int,
+        buf: *mut c_void,
+        count: size_t,
+        offset: off_t,
+    ) -> ssize_t;
+}
+
+#[cfg(test)]
+mod tests {
+    use std::io::Write;
+    use std::os::unix::io::AsRawFd;
+
+    #[test]
+    fn pread_reads_at_offset() {
+        let path = std::env::temp_dir()
+            .join(format!("pi2_vendored_libc_{}", std::process::id()));
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(b"0123456789").unwrap();
+        drop(f);
+        let f = std::fs::File::open(&path).unwrap();
+        let mut buf = [0u8; 4];
+        let n = unsafe {
+            super::pread(
+                f.as_raw_fd(),
+                buf.as_mut_ptr() as *mut super::c_void,
+                buf.len(),
+                3,
+            )
+        };
+        assert_eq!(n, 4);
+        assert_eq!(&buf, b"3456");
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,298 @@
+//! API-compatible stub of the `xla` crate (v0.1.6 surface used by this
+//! repo). The offline toolchain cannot build the real crate (it links
+//! native XLA/PJRT libraries), so this stub keeps the whole real-engine
+//! path compiling:
+//!
+//! - [`Literal`] is fully functional as a host-side tensor container
+//!   (create / reshape / read back / tuples), so literal round-trip code
+//!   and its tests behave exactly like the real crate.
+//! - [`PjRtClient::cpu`] returns an error: without native PJRT there is
+//!   nothing to compile graphs on. Every caller already treats missing
+//!   artifacts / engines as a skip condition, so the serving stack
+//!   degrades to the simulation engine cleanly.
+//!
+//! Swap this path dependency for the real `xla` crate to light up the
+//! PJRT path; no source changes are needed.
+
+use std::fmt;
+
+/// Stub error type; interops with `anyhow` like the real crate's error.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_unavailable() -> Error {
+    Error(
+        "PJRT is unavailable: this build links the vendored xla stub \
+         (no native XLA). Use the simulation engine, or build with the \
+         real xla crate for the PJRT path"
+            .to_string(),
+    )
+}
+
+/// Element types the repo's graphs use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Shape of an array literal: dimensions + element type.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Element marker trait for [`Literal`] constructors/readers.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn wrap(data: Vec<Self>) -> LiteralData;
+    fn unwrap(data: &LiteralData) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn wrap(data: Vec<f32>) -> LiteralData {
+        LiteralData::F32(data)
+    }
+    fn unwrap(data: &LiteralData) -> Option<Vec<f32>> {
+        match data {
+            LiteralData::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn wrap(data: Vec<i32>) -> LiteralData {
+        LiteralData::I32(data)
+    }
+    fn unwrap(data: &LiteralData) -> Option<Vec<i32>> {
+        match data {
+            LiteralData::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Backing storage of a literal.
+#[derive(Debug, Clone)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host-side literal: a shaped array or a tuple of literals. Fully
+/// functional (this part of the real crate is host-only too).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: LiteralData,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(values: &[T]) -> Literal {
+        Literal {
+            dims: vec![values.len() as i64],
+            data: T::wrap(values.to_vec()),
+        }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: NativeType>(value: T) -> Literal {
+        Literal { dims: Vec::new(), data: T::wrap(vec![value]) }
+    }
+
+    /// Tuple literal.
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal { dims: Vec::new(), data: LiteralData::Tuple(elements) }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if matches!(self.data, LiteralData::Tuple(_)) {
+            return Err(Error("cannot reshape a tuple literal".to_string()));
+        }
+        if n as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.dims, dims
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Array shape (errors on tuples, like the real crate).
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.data {
+            LiteralData::F32(_) => ElementType::F32,
+            LiteralData::I32(_) => ElementType::S32,
+            LiteralData::Tuple(_) => {
+                return Err(Error("tuple literal has no array shape".to_string()))
+            }
+        };
+        Ok(ArrayShape { dims: self.dims.clone(), ty })
+    }
+
+    /// Copy the elements out as `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .ok_or_else(|| Error("literal element type mismatch".to_string()))
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            LiteralData::Tuple(v) => Ok(v),
+            _ => Err(Error("literal is not a tuple".to_string())),
+        }
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO text file. Parsing/compiling requires native XLA, so
+    /// the stub only checks the file is readable.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("read {path}: {e}")))?;
+        Ok(HloModuleProto { _text: text })
+    }
+}
+
+/// A computation ready to compile (opaque in the stub).
+#[derive(Debug)]
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// PJRT client handle. Unconstructible in the stub: [`PjRtClient::cpu`]
+/// always errors, which upstream code surfaces as "real engine
+/// unavailable".
+#[derive(Debug)]
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(stub_unavailable())
+    }
+
+    pub fn compile(
+        &self,
+        _computation: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        Err(stub_unavailable())
+    }
+}
+
+/// Compiled executable handle (never produced by the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_unavailable())
+    }
+}
+
+/// Device buffer handle (never produced by the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(stub_unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        let shape = r.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_and_tuple() {
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.array_shape().unwrap().dims().len(), 0);
+        let t = Literal::tuple(vec![s.clone(), Literal::vec1(&[1.0f32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].to_vec::<i32>().unwrap(), vec![7]);
+        assert!(s.to_tuple().is_err());
+    }
+
+    #[test]
+    fn reshape_validates_count() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0]);
+        assert!(l.reshape(&[2, 2]).is_err());
+        assert!(l.reshape(&[3, 1]).is_ok());
+    }
+
+    #[test]
+    fn pjrt_is_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("PJRT is unavailable"));
+    }
+}
