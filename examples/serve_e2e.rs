@@ -11,7 +11,7 @@
 //!
 //!     cargo run --release --example serve_e2e
 //!     make artifacts && cargo run --release --example serve_e2e
-//!     # flags: --requests N --throttle --cold-cache N
+//!     # flags: --requests N --throttle --cold-cache N --poisson RATE
 
 use std::path::Path;
 
@@ -22,7 +22,7 @@ use powerinfer2::coordinator::{
 use powerinfer2::engine::real::RealEngineOptions;
 use powerinfer2::engine::SimEngine;
 use powerinfer2::serve::{Engine, InferenceRequest};
-use powerinfer2::trace::{mixed_length_mix, Request};
+use powerinfer2::trace::{mixed_length_mix, with_poisson_arrivals, Request};
 use powerinfer2::util::cli::Args;
 
 /// Serve a workload trace through ANY engine under the given scheduler.
@@ -57,10 +57,21 @@ fn main() -> anyhow::Result<()> {
 
     // ---- 1. scheduler comparison on the simulation engine -------------
     let mut requests = mixed_length_mix(n_requests, 7);
+    // --poisson RATE: stagger submits with Poisson arrivals so queue
+    // latency percentiles reflect a real arrival process
+    let poisson_rps = args.opt_usize("poisson", 0);
+    if poisson_rps > 0 {
+        requests = with_poisson_arrivals(requests, poisson_rps as f64, 11);
+    }
     println!(
         "# serve_e2e: {} mixed-length requests (short dialogue turns + \
-         long code generations)",
-        requests.len()
+         long code generations{})",
+        requests.len(),
+        if poisson_rps > 0 {
+            format!(", Poisson arrivals at {poisson_rps} req/s")
+        } else {
+            String::new()
+        }
     );
     let cfg = RuntimeConfig { max_batch: 4, ..Default::default() };
     let mut tps = Vec::new();

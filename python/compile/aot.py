@@ -94,9 +94,10 @@ def emit_table(dims: ModelDims, out_dir: str) -> dict:
 
 def _rand_for_spec(rng, spec):
     if spec.dtype == jnp.int32:
-        # the only int32 input is `pos`; keep it small and valid
-        return np.int32(3) if spec.shape == () else rng.integers(
-            0, 4, size=spec.shape, dtype=np.int32)
+        # the only int32 input is the [B] per-row `pos` vector; keep every
+        # row's position small and valid (distinct rows exercise the
+        # per-row cache insert / mask paths)
+        return rng.integers(0, 4, size=spec.shape, dtype=np.int32)
     scale = 0.25
     return (rng.standard_normal(spec.shape) * scale).astype(np.float32)
 

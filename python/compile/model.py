@@ -117,7 +117,10 @@ def decode_attn(dims: ModelDims, x, norm1, wq, wk, wv, wo, norm2,
       norm1/2:  [H] RMSNorm gains (pre-attn / pre-FFN).
       wq:       [H, H]; wk, wv: [KVD, H]; wo: [H, H].
       k_cache:  [B, S, NKV, DH]; v_cache likewise.
-      pos:      [] int32 — index of the new token (cache insert slot).
+      pos:      [B] int32 — per-row index of the new token (cache insert
+                slot / RoPE offset). Rows are independent sequences, so a
+                row admitted mid-flight attends only over its own real
+                history (continuous batching, no zero-padded KV).
 
     Returns:
       (x_attn [B,H], ffn_in [B,H], k_cache', v_cache')
@@ -128,14 +131,14 @@ def decode_attn(dims: ModelDims, x, norm1, wq, wk, wv, wo, norm2,
     q = (h @ wq.T).reshape(b, nh, dh)
     k = (h @ wk.T).reshape(b, nkv, dh)
     v = (h @ wv.T).reshape(b, nkv, dh)
-    posv = jnp.full((b,), pos, dtype=jnp.int32)
-    q = rope(q, posv, dims.rope_theta)
-    k = rope(k, posv, dims.rope_theta)
-    k_cache = jax.lax.dynamic_update_slice(
-        k_cache, k[:, None, :, :], (0, pos, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(
-        v_cache, v[:, None, :, :], (0, pos, 0, 0))
-    valid = posv + 1
+    q = rope(q, pos, dims.rope_theta)
+    k = rope(k, pos, dims.rope_theta)
+    # per-row cache insert: row i writes its new K/V at its own pos[i]
+    # (one batched scatter per cache — constant graph size in B)
+    rows = jnp.arange(b)
+    k_cache = k_cache.at[rows, pos].set(k)
+    v_cache = v_cache.at[rows, pos].set(v)
+    valid = pos + 1
     attn = decode_attention(q, k_cache, v_cache, valid)
     y = attn.reshape(b, nh * dh) @ wo.T
     x_attn = x + y
@@ -150,7 +153,10 @@ def decode_hot_ffn(dims: ModelDims, ffn_in, gate, up, gate_bias, down):
 
 def decode_layer_dense(dims: ModelDims, x, norm1, wq, wk, wv, wo, norm2,
                        gate, up, gate_bias, down, k_cache, v_cache, pos):
-    """Full dense decode layer (attention + full-I FFN + residuals)."""
+    """Full dense decode layer (attention + full-I FFN + residuals).
+
+    `pos` is a [B] int32 per-row position vector, as in `decode_attn`.
+    """
     x_attn, ffn_in, k_cache, v_cache = decode_attn(
         dims, x, norm1, wq, wk, wv, wo, norm2, k_cache, v_cache, pos)
     y = hot_ffn(ffn_in, gate, up, gate_bias, down, block_k=BLOCK_K)
@@ -242,7 +248,7 @@ def graph_table(d: ModelDims):
     for b in d.batches:
         cache = _s(b, d.seq_max, d.kv_heads, d.head_dim)
         args = ([("x", _s(b, d.hidden))] + attn_weight_specs(d)
-                + [("k_cache", cache), ("v_cache", cache), ("pos", _si())])
+                + [("k_cache", cache), ("v_cache", cache), ("pos", _si(b))])
         graphs.append((
             f"decode_attn_b{b}",
             lambda *a, _d=d: decode_attn(_d, *a),
@@ -261,7 +267,7 @@ def graph_table(d: ModelDims):
 
         args = ([("x", _s(b, d.hidden))] + attn_weight_specs(d)
                 + ffn_weight_specs(d, d.inter)
-                + [("k_cache", cache), ("v_cache", cache), ("pos", _si())])
+                + [("k_cache", cache), ("v_cache", cache), ("pos", _si(b))])
         graphs.append((
             f"decode_dense_b{b}",
             lambda *a, _d=d: decode_layer_dense(_d, *a),

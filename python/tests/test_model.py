@@ -72,7 +72,7 @@ class TestRmsNormAndRope:
 
 
 class TestDecodeAttnGraph:
-    def test_shapes_and_cache_insert(self):
+    def test_shapes_and_per_row_cache_insert(self):
         d = DIMS
         rng = _rng(3)
         w = _attn_weights(rng, d)
@@ -80,17 +80,42 @@ class TestDecodeAttnGraph:
         x = jnp.asarray(rng.standard_normal((b, d.hidden)), jnp.float32)
         kc = jnp.zeros((b, d.seq_max, d.kv_heads, d.head_dim), jnp.float32)
         vc = jnp.zeros_like(kc)
-        pos = jnp.int32(5)
+        # per-row positions: row 0 writes slot 5, row 1 writes slot 2
+        pos = jnp.asarray([5, 2], jnp.int32)
         x_attn, ffn_in, kc2, vc2 = model.decode_attn(
             d, x, w["norm1"], w["wq"], w["wk"], w["wv"], w["wo"], w["norm2"],
             kc, vc, pos)
         assert x_attn.shape == (b, d.hidden)
         assert ffn_in.shape == (b, d.hidden)
-        # only row `pos` of the caches may change
-        assert not jnp.allclose(kc2[:, 5], 0.0)
-        np.testing.assert_array_equal(kc2[:, :5], 0.0)
-        np.testing.assert_array_equal(kc2[:, 6:], 0.0)
-        np.testing.assert_array_equal(vc2[:, :5], 0.0)
+        # each row changes only its own position's cache slot
+        assert not jnp.allclose(kc2[0, 5], 0.0)
+        assert not jnp.allclose(kc2[1, 2], 0.0)
+        np.testing.assert_array_equal(kc2[0, :5], 0.0)
+        np.testing.assert_array_equal(kc2[0, 6:], 0.0)
+        np.testing.assert_array_equal(kc2[1, :2], 0.0)
+        np.testing.assert_array_equal(kc2[1, 3:], 0.0)
+        np.testing.assert_array_equal(vc2[0, :5], 0.0)
+        np.testing.assert_array_equal(vc2[1, :2], 0.0)
+
+    def test_row_output_independent_of_neighbour_position(self):
+        """A row's attention output must depend only on its own history —
+        the invariant that makes mid-flight admission exact."""
+        d = DIMS
+        rng = _rng(9)
+        w = _attn_weights(rng, d)
+        x = jnp.asarray(rng.standard_normal((2, d.hidden)), jnp.float32)
+        kc = jnp.asarray(
+            rng.standard_normal((2, d.seq_max, d.kv_heads, d.head_dim)) * 0.3,
+            jnp.float32)
+        vc = jnp.asarray(
+            rng.standard_normal((2, d.seq_max, d.kv_heads, d.head_dim)) * 0.3,
+            jnp.float32)
+        args = [x, w["norm1"], w["wq"], w["wk"], w["wv"], w["wo"], w["norm2"]]
+        a, _, _, _ = model.decode_attn(
+            d, *args, kc, vc, jnp.asarray([4, 1], jnp.int32))
+        b, _, _, _ = model.decode_attn(
+            d, *args, kc, vc, jnp.asarray([4, 9], jnp.int32))
+        np.testing.assert_allclose(a[0], b[0], rtol=1e-6, atol=1e-6)
 
     def test_ffn_in_is_normed_x_attn(self):
         d = DIMS
@@ -100,7 +125,7 @@ class TestDecodeAttnGraph:
         kc = jnp.zeros((1, d.seq_max, d.kv_heads, d.head_dim), jnp.float32)
         x_attn, ffn_in, _, _ = model.decode_attn(
             d, x, w["norm1"], w["wq"], w["wk"], w["wv"], w["wo"], w["norm2"],
-            kc, jnp.zeros_like(kc), jnp.int32(0))
+            kc, jnp.zeros_like(kc), jnp.zeros((1,), jnp.int32))
         np.testing.assert_allclose(
             ffn_in, ref.ref_rmsnorm(x_attn, w["norm2"]), rtol=1e-5, atol=1e-6)
 
@@ -118,7 +143,7 @@ class TestDenseLayerEquivalence:
         x = jnp.asarray(rng.standard_normal((2, d.hidden)), jnp.float32)
         kc = jnp.zeros((2, d.seq_max, d.kv_heads, d.head_dim), jnp.float32)
         vc = jnp.zeros_like(kc)
-        pos = jnp.int32(2)
+        pos = jnp.asarray([2, 3], jnp.int32)
         args = [x, aw["norm1"], aw["wq"], aw["wk"], aw["wv"], aw["wo"],
                 aw["norm2"]]
         y_dense, kc_d, vc_d = model.decode_layer_dense(
@@ -171,7 +196,8 @@ class TestPrefillDecodeConsistency:
         vc = vc.at[0, :t - 1].set(v_pre)
         x_attn, ffn_in, kc2, vc2 = model.decode_attn(
             d, x_full[t - 1:t], aw["norm1"], aw["wq"], aw["wk"], aw["wv"],
-            aw["wo"], aw["norm2"], kc, vc, jnp.int32(t - 1))
+            aw["wo"], aw["norm2"], kc, vc,
+            jnp.full((1,), t - 1, jnp.int32))
         y_dec = x_attn + model.decode_hot_ffn(
             d, ffn_in, fw["gate"], fw["up"], fw["gate_bias"], fw["down"])
         np.testing.assert_allclose(y_dec[0], y_full[t - 1], rtol=2e-3,

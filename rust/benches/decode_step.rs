@@ -28,8 +28,8 @@ fn main() {
         tok = e.decode_step(&tok).unwrap();
         let r = common::bench("real_decode_step/pjrt_b1", || {
             tok = e.decode_step(&tok).unwrap();
-            if e.pos >= e.dims.seq_max - 2 {
-                e.reset();
+            if e.row_pos[0] >= e.dims.seq_max - 2 {
+                e.reset().unwrap();
             }
         });
         println!("    → {:.1} tok/s real engine", 1e9 / r.mean_ns);

@@ -24,9 +24,9 @@ pub use server::Server;
 
 use std::collections::{BTreeMap, VecDeque};
 use std::path::{Path, PathBuf};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::engine::real::{RealEngine, RealEngineOptions};
 use crate::metrics::ServingMetrics;
@@ -112,6 +112,9 @@ struct ActiveSeq {
     prompt_tokens: usize,
     max_tokens: usize,
     tokens: Vec<u32>,
+    /// Submit time on the serve clock — queue latency and TTFT are
+    /// measured from here, not from the serve call.
+    submit_s: f64,
     queue_s: f64,
     prefill_s: f64,
     ttft_s: f64,
@@ -125,9 +128,10 @@ struct ActiveSeq {
 }
 
 impl ActiveSeq {
-    /// `budget`: the engine's remaining decode steps — max_tokens is
-    /// clamped so the sequence truncates instead of overrunning the
-    /// context window (the engine errors on a zero-budget step).
+    /// `budget`: the admitted slot's remaining decode steps — max_tokens
+    /// is clamped so the sequence truncates instead of overrunning its
+    /// row of the context window (the engine errors on a zero-budget
+    /// step).
     fn new(
         req: &InferenceRequest,
         queue_s: f64,
@@ -144,12 +148,19 @@ impl ActiveSeq {
             prompt_tokens: req.prompt.len(),
             max_tokens,
             tokens: Vec::new(),
+            submit_s: req.submit_s,
             queue_s,
             prefill_s,
             ttft_s: 0.0,
             decode_started: Instant::now(),
             decode_done_s: None,
             finished: false,
+        }
+    }
+
+    fn mark_first_token(&mut self, now_s: f64) {
+        if self.ttft_s == 0.0 {
+            self.ttft_s = (now_s - self.submit_s).max(0.0);
         }
     }
 
@@ -209,13 +220,22 @@ impl<E: Engine> Coordinator<E> {
     }
 
     /// Serve every request to completion, streaming tokens to `sink`.
-    /// Requests are considered submitted simultaneously at call time (the
-    /// queue latency a request sees is time spent waiting for a slot).
+    /// Each request is considered submitted `submit_s` seconds after
+    /// call time (0 = immediately); it is not admitted before that
+    /// instant, and its queue latency / TTFT are measured from it —
+    /// which is what makes percentiles under Poisson arrival traces
+    /// (`trace::with_poisson_arrivals`) meaningful. Requests must be
+    /// ordered by `submit_s`.
     pub fn serve<S: TokenSink>(
         &mut self,
         requests: &[InferenceRequest],
         sink: &mut S,
     ) -> Result<ServeReport> {
+        ensure!(
+            requests.windows(2).all(|w| w[0].submit_s <= w[1].submit_s),
+            "requests must be ordered by submit_s (sort arrival traces \
+             before serving)"
+        );
         let result = match self.mode {
             ScheduleMode::Lockstep => self.serve_lockstep(requests, sink),
             ScheduleMode::Continuous => self.serve_continuous(requests, sink),
@@ -253,18 +273,27 @@ impl<E: Engine> Coordinator<E> {
         let mut idle_steps = 0usize;
         while live > 0 || !queue.is_empty() {
             // admission at decode-step granularity: refill every free slot
+            // with requests that have arrived (queue is in submit order)
             while live < cap {
+                let arrived = queue
+                    .front()
+                    .is_some_and(|r| r.submit_s <= t0.elapsed().as_secs_f64());
+                if !arrived {
+                    break;
+                }
                 let Some(req) = queue.pop_front() else { break };
-                let queue_s = t0.elapsed().as_secs_f64();
+                let queue_s =
+                    (t0.elapsed().as_secs_f64() - req.submit_s).max(0.0);
                 let admit_t0 = Instant::now();
                 let adm = self.engine.admit(req)?;
                 let prefill_s = admit_t0.elapsed().as_secs_f64();
                 report.prefill_tokens += req.prompt.len();
                 let mut seq = ActiveSeq::new(
-                    req, queue_s, prefill_s, self.engine.decode_budget());
+                    req, queue_s, prefill_s,
+                    self.engine.decode_budget(adm.slot));
                 if let Some(tok) = adm.first_token {
                     seq.tokens.push(tok);
-                    seq.ttft_s = t0.elapsed().as_secs_f64();
+                    seq.mark_first_token(t0.elapsed().as_secs_f64());
                     let done = seq.tokens.len() >= seq.max_tokens;
                     emit(sink, &seq, tok, 0, done.then_some(FinishReason::Length))?;
                     if done {
@@ -278,7 +307,17 @@ impl<E: Engine> Coordinator<E> {
                 live += 1;
             }
             if live == 0 {
-                continue; // every admitted request finished at prefill
+                // nothing in flight: sleep toward the next arrival
+                // instead of spinning on the clock
+                if let Some(req) = queue.front() {
+                    let wait = req.submit_s - t0.elapsed().as_secs_f64();
+                    if wait > 0.0 {
+                        std::thread::sleep(Duration::from_secs_f64(
+                            wait.min(0.05),
+                        ));
+                    }
+                }
+                continue;
             }
             let st = Instant::now();
             let toks = self.engine.step()?;
@@ -295,25 +334,26 @@ impl<E: Engine> Coordinator<E> {
                 continue;
             }
             idle_steps = 0;
-            // context window exhausted → every in-flight sequence ends on
-            // the token it just received (the old lockstep seq_max clamp,
-            // now at decode-step granularity)
-            let exhausted = self.engine.decode_budget() == Some(0);
             for (slot, tok) in toks {
+                // a slot whose row of the context window is exhausted ends
+                // its sequence on the token it just received; other slots
+                // keep decoding (budgets are per-slot, and retiring this
+                // one reclaims its row for the next admission)
+                let exhausted = self.engine.decode_budget(slot) == Some(0);
                 let Some(seq) = active.get_mut(slot).and_then(|s| s.as_mut())
                 else {
                     continue;
                 };
                 seq.tokens.push(tok);
-                if seq.ttft_s == 0.0 {
-                    seq.ttft_s = t0.elapsed().as_secs_f64();
-                }
+                seq.mark_first_token(t0.elapsed().as_secs_f64());
                 report.decode_tokens += 1;
                 let index = seq.tokens.len() - 1;
                 let done = seq.tokens.len() >= seq.max_tokens || exhausted;
                 emit(sink, seq, tok, index, done.then_some(FinishReason::Length))?;
                 if done {
-                    let mut seq = active[slot].take().expect("active slot");
+                    let Some(mut seq) = active[slot].take() else {
+                        continue;
+                    };
                     seq.mark_done();
                     live -= 1;
                     self.engine.retire(slot)?;
@@ -339,10 +379,24 @@ impl<E: Engine> Coordinator<E> {
         let cap = self.engine.capacity().max(1);
         let mut idx = 0;
         while idx < requests.len() {
-            let group: Vec<&InferenceRequest> =
-                requests[idx..].iter().take(cap).collect();
+            // wait for the head request's arrival (requests are in submit
+            // order), then group every already-arrived request up to cap
+            loop {
+                let wait =
+                    requests[idx].submit_s - t0.elapsed().as_secs_f64();
+                if wait <= 0.0 {
+                    break;
+                }
+                std::thread::sleep(Duration::from_secs_f64(wait.min(0.05)));
+            }
+            let now = t0.elapsed().as_secs_f64();
+            let group: Vec<&InferenceRequest> = requests[idx..]
+                .iter()
+                .take(cap)
+                .take_while(|r| r.submit_s <= now)
+                .collect();
             idx += group.len();
-            let queue_s = t0.elapsed().as_secs_f64();
+            let queue_t = t0.elapsed().as_secs_f64();
             let admit_t0 = Instant::now();
             let admissions = self.engine.admit_group(&group)?;
             let prefill_s = admit_t0.elapsed().as_secs_f64();
@@ -350,11 +404,13 @@ impl<E: Engine> Coordinator<E> {
                 Vec::with_capacity(group.len());
             for (req, adm) in group.iter().zip(&admissions) {
                 report.prefill_tokens += req.prompt.len();
+                let queue_s = (queue_t - req.submit_s).max(0.0);
                 let mut seq = ActiveSeq::new(
-                    req, queue_s, prefill_s, self.engine.decode_budget());
+                    req, queue_s, prefill_s,
+                    self.engine.decode_budget(adm.slot));
                 if let Some(tok) = adm.first_token {
                     seq.tokens.push(tok);
-                    seq.ttft_s = t0.elapsed().as_secs_f64();
+                    seq.mark_first_token(t0.elapsed().as_secs_f64());
                     let done = seq.tokens.len() >= seq.max_tokens;
                     emit(sink, &seq, tok, 0,
                          done.then_some(FinishReason::Length))?;
@@ -381,7 +437,14 @@ impl<E: Engine> Coordinator<E> {
                     continue;
                 }
                 idle_steps = 0;
-                let exhausted = self.engine.decode_budget() == Some(0);
+                // lockstep holds finished members' slots, and those rows
+                // keep advancing with the group — so the group ends when
+                // ANY held row exhausts its context window (the shared
+                // wall of the pre-per-row scheduler), or the next step
+                // would error on the full row
+                let wall = toks.iter().any(|&(slot, _)| {
+                    self.engine.decode_budget(slot) == Some(0)
+                });
                 for (slot, tok) in toks {
                     let Some((_, seq)) =
                         seqs.iter_mut().find(|(s, _)| *s == slot)
@@ -392,18 +455,20 @@ impl<E: Engine> Coordinator<E> {
                         continue;
                     }
                     seq.tokens.push(tok);
-                    if seq.ttft_s == 0.0 {
-                        seq.ttft_s = t0.elapsed().as_secs_f64();
-                    }
+                    seq.mark_first_token(t0.elapsed().as_secs_f64());
                     report.decode_tokens += 1;
                     let index = seq.tokens.len() - 1;
-                    let done = seq.tokens.len() >= seq.max_tokens || exhausted;
+                    let done = seq.tokens.len() >= seq.max_tokens || wall;
                     emit(sink, seq, tok, index,
                          done.then_some(FinishReason::Length))?;
                     if done {
                         seq.mark_done();
                     }
                 }
+                // every slot the engine reported this step got its finish
+                // event above when `wall` is set; a slot absent from the
+                // step (deferred prefill) keeps its sequence open and the
+                // engine surfaces the wall as an error on the next step
             }
             for (slot, seq) in seqs {
                 self.engine.retire(slot)?;
@@ -475,7 +540,9 @@ impl RealEnginePool {
                 &self.artifacts, &self.weight_path, batch, self.opts.clone())?;
             self.engines.insert(batch, e);
         }
-        Ok(self.engines.get_mut(&batch).unwrap())
+        self.engines
+            .get_mut(&batch)
+            .ok_or_else(|| anyhow!("engine for batch {batch} vanished"))
     }
 
     /// Give up the pool for one owned engine at the given batch point
@@ -505,7 +572,7 @@ impl RealEnginePool {
         for remaining in (1..=n).rev() {
             let b = self.schedulable_batch(remaining);
             let engine = self.engine(b)?;
-            engine.reset();
+            engine.reset()?;
             if dynamic_ratio {
                 // bigger batch → bigger hot cluster on the NPU (§4.1.3)
                 let ks = engine.dims.hot_ks.clone();

@@ -597,13 +597,13 @@ impl Engine for SimEngine {
         self.sv_decode_s += sm.step_s;
         self.sv_decode_tokens += occupied.len() as u64;
         let vocab = self.spec.vocab;
-        Ok(occupied
-            .into_iter()
-            .map(|slot| {
-                let s = self.slots[slot].as_mut().expect("occupied slot");
-                (slot, s.rng.below(vocab) as u32)
-            })
-            .collect())
+        let mut out = Vec::with_capacity(occupied.len());
+        for slot in occupied {
+            if let Some(s) = self.slots[slot].as_mut() {
+                out.push((slot, s.rng.below(vocab) as u32));
+            }
+        }
+        Ok(out)
     }
 
     fn retire(&mut self, slot: SlotId) -> Result<()> {

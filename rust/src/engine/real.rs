@@ -19,7 +19,7 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::sync::mpsc;
 
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::cache::{Access, NeuronCache};
 use crate::config::CoreClass;
@@ -60,6 +60,31 @@ impl Default for RealEngineOptions {
     }
 }
 
+/// Typed error for KV-cache capacity violations: a prefill install or a
+/// decode step asked for more positions than one row of the cache holds.
+/// It converts into `anyhow::Error` at the engine surface, so callers that
+/// care (schedulers, tests) can still match on the structured form where
+/// it is produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvCapacityError {
+    /// Positions the operation needed.
+    pub requested: usize,
+    /// Positions one cache row actually holds.
+    pub capacity: usize,
+}
+
+impl std::fmt::Display for KvCapacityError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "KV cache full: {} positions requested, {} available",
+            self.requested, self.capacity
+        )
+    }
+}
+
+impl std::error::Error for KvCapacityError {}
+
 /// The engine itself: owns the PJRT runtime, resident weights, the
 /// segmented cache, and per-layer KV state for one decode batch.
 pub struct RealEngine {
@@ -85,7 +110,12 @@ pub struct RealEngine {
     pub(crate) kv: Vec<(Tensor, Tensor)>,
     kv_lits: Vec<(xla::Literal, xla::Literal)>,
     pub batch: usize,
-    pub pos: usize,
+    /// Per-row KV position: how many cache entries row `r` has written.
+    /// Rows are independent sequences — the decode graphs take the whole
+    /// vector, so each row ropes, inserts and masks at its own position
+    /// (no shared decode clock, no zero-padded history for rows admitted
+    /// mid-flight).
+    pub row_pos: Vec<usize>,
     pub opts: RealEngineOptions,
     pub metrics: RunMetrics,
     /// Serving slots for the [`Engine`] trait: one per batch row, holding
@@ -114,6 +144,20 @@ impl RealEngine {
             dims.batches.contains(&batch),
             "batch {batch} has no compiled graph (available: {:?})",
             dims.batches
+        );
+        // artifact-ABI guard: the decode graphs take a [B] per-row `pos`
+        // vector; artifacts emitted by an older compiler declare a scalar
+        // and would fail opaquely mid-serve — catch that at load time
+        let attn = rt.graph(&Runtime::decode_attn_name(batch))?;
+        let pos_ok = attn
+            .args
+            .last()
+            .is_some_and(|a| a.shape.len() == 1 && a.shape[0] == batch);
+        ensure!(
+            pos_ok,
+            "artifacts are stale: decode graphs predate per-row KV \
+             positions (expected pos arg of shape [{batch}]) — regenerate \
+             with `python -m compile.aot`"
         );
         let weights = Weights::generate(&dims, opts.seed);
         if !weight_path.exists() {
@@ -156,7 +200,7 @@ impl RealEngine {
             kv,
             kv_lits: Vec::new(),
             batch,
-            pos: 0,
+            row_pos: vec![0; batch],
             opts,
             metrics: RunMetrics::new(),
             serve_slots: vec![None; batch],
@@ -247,15 +291,17 @@ impl RealEngine {
         Ok(())
     }
 
-    /// Reset sequence state (KV caches + position) for a new batch group.
-    pub fn reset(&mut self) {
+    /// Reset sequence state (KV caches + every row position) for a new
+    /// batch group. Errors propagate (literal re-encoding can fail) —
+    /// this sits on the serve path, so it must not panic.
+    pub fn reset(&mut self) -> Result<()> {
         let d = &self.dims;
         let shape = vec![self.batch, d.seq_max, d.kv_heads, d.head_dim()];
         for kv in self.kv.iter_mut() {
             *kv = (Tensor::zeros(shape.clone()), Tensor::zeros(shape.clone()));
         }
-        self.pos = 0;
-        self.refresh_kv_literals().expect("kv literal rebuild");
+        self.row_pos = vec![0; self.batch];
+        self.refresh_kv_literals()
     }
 
     /// Current hot cluster size per layer.
@@ -381,9 +427,18 @@ impl RealEngine {
     }
 
     /// One decode step for the current batch; returns next token ids.
+    /// Every row decodes at (and then advances) its own KV position.
     pub fn decode_step(&mut self, tokens: &[u32]) -> Result<Vec<u32>> {
         ensure!(tokens.len() == self.batch, "token count != batch");
-        ensure!(self.pos < self.dims.seq_max, "KV cache full");
+        for &p in &self.row_pos {
+            if p >= self.dims.seq_max {
+                return Err(KvCapacityError {
+                    requested: p + 1,
+                    capacity: self.dims.seq_max,
+                }
+                .into());
+            }
+        }
         let start = std::time::Instant::now();
         let mut step = StepMetrics::default();
         let d = self.dims.clone();
@@ -398,7 +453,12 @@ impl RealEngine {
         let hot_k = self.cache.hot_per_layer;
         let attn_name = Runtime::decode_attn_name(b);
         let ffn_name = Runtime::decode_ffn_name(b, hot_k);
-        let pos_lit = Tensor::i32_scalar(self.pos as i32).to_literal()?;
+        // the [B] per-row position vector the attention graphs consume
+        let pos_lit = Tensor::i32(
+            vec![b],
+            self.row_pos.iter().map(|&p| p as i32).collect(),
+        )
+        .to_literal()?;
         for l in 0..d.layers {
             // attention graph (NPU side): norm → qkv → rope → cache insert
             // → GQA (Pallas kernel) → out-proj → residual + FFN input norm
@@ -410,17 +470,23 @@ impl RealEngine {
             inputs.push(&pos_lit);
             let npu_start = std::time::Instant::now();
             let mut out = self.rt.execute_raw(&attn_name, &inputs)?;
-            let vc = out.pop().unwrap();
-            let kc = out.pop().unwrap();
-            let ffn_in_t = Tensor::from_literal(&out.pop().unwrap())?;
-            let x_attn = Tensor::from_literal(&out.pop().unwrap())?;
+            let (vc, kc, ffn_in_l, x_attn_l) =
+                match (out.pop(), out.pop(), out.pop(), out.pop()) {
+                    (Some(vc), Some(kc), Some(f), Some(x)) => (vc, kc, f, x),
+                    _ => bail!("graph {attn_name}: expected 4 outputs"),
+                };
+            let ffn_in_t = Tensor::from_literal(&ffn_in_l)?;
+            let x_attn = Tensor::from_literal(&x_attn_l)?;
             // KV literals flow output→input with no host round-trip
             self.kv_lits[l] = (kc, vc);
             // NPU hot-cluster FFN (static graph for (batch, hot_k))
             let y_hot = if hot_k > 0 {
                 let ffn_in_lit = Tensor::f32(vec![b, h], ffn_in_t.as_f32().to_vec())
                     .to_literal()?;
-                let ht = &self.hot_lits[&(l, hot_k)];
+                let ht = self.hot_lits.get(&(l, hot_k)).ok_or_else(|| {
+                    anyhow!("hot literals for (layer {l}, hot_k {hot_k}) \
+                             not encoded")
+                })?;
                 let ffn_inputs: Vec<&xla::Literal> =
                     std::iter::once(&ffn_in_lit).chain(ht.iter()).collect();
                 let r = self.rt.execute_raw(&ffn_name, &ffn_inputs)?;
@@ -446,17 +512,24 @@ impl RealEngine {
         let logits = self.rt.execute_raw(&Runtime::lm_head_name(b), &lm_inputs)?;
         let lv_t = Tensor::from_literal(&logits[0])?;
         let lv = lv_t.as_f32();
+        // greedy argmax, NaN-tolerant (a NaN logit must not panic the
+        // serve loop; it simply never wins the comparison)
         let next: Vec<u32> = (0..b)
             .map(|row| {
-                lv[row * d.vocab..(row + 1) * d.vocab]
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i as u32)
-                    .unwrap()
+                let mut best = (0usize, f32::NEG_INFINITY);
+                for (i, &v) in
+                    lv[row * d.vocab..(row + 1) * d.vocab].iter().enumerate()
+                {
+                    if v > best.1 {
+                        best = (i, v);
+                    }
+                }
+                best.0 as u32
             })
             .collect();
-        self.pos += 1;
+        for p in self.row_pos.iter_mut() {
+            *p += 1;
+        }
         step.step_s = start.elapsed().as_secs_f64();
         self.metrics.push_step(&step);
         Ok(next)
@@ -464,8 +537,19 @@ impl RealEngine {
 
     /// Prefill one prompt (row `row` of the batch) through the per-layer
     /// prefill graphs, streaming offloaded weights with one sequential
-    /// read per layer (§4.1.1). Returns the first generated token.
+    /// read per layer (§4.1.1). Returns the first generated token and
+    /// leaves the engine ready to decode (KV literals rebuilt).
     pub fn prefill(&mut self, row: usize, prompt: &[u32]) -> Result<u32> {
+        let first = self.prefill_no_refresh(row, prompt)?;
+        self.refresh_kv_literals()?;
+        Ok(first)
+    }
+
+    /// Prefill without the trailing KV-literal rebuild — group admission
+    /// installs several rows and rebuilds the literals once at the end
+    /// (the rebuild re-encodes the whole cache, so per-row rebuilds in a
+    /// group are O(B²) wasted encoding).
+    fn prefill_no_refresh(&mut self, row: usize, prompt: &[u32]) -> Result<u32> {
         let d = self.dims.clone();
         let t = d.prefill_chunk;
         ensure!(row < self.batch, "row out of range");
@@ -515,44 +599,55 @@ impl RealEngine {
             inputs.push(Tensor::f32(vec![d.inter], bias));
             inputs.push(Tensor::f32(vec![d.inter, h], down));
             let mut out = self.rt.execute(&name, &inputs)?;
-            let v = out.pop().unwrap();
-            let k = out.pop().unwrap();
-            x = out.pop().unwrap().into_f32();
+            let (v, k, xo) = match (out.pop(), out.pop(), out.pop()) {
+                (Some(v), Some(k), Some(x)) => (v, k, x),
+                _ => bail!("graph {name}: expected 3 outputs"),
+            };
+            x = xo.into_f32();
             // install K/V rows 0..len for this batch row
-            self.install_kv(l, row, &k, &v, prompt.len());
+            self.install_kv(l, row, &k, &v, prompt.len())?;
         }
-        self.pos = prompt.len();
-        self.refresh_kv_literals()?;
+        self.row_pos[row] = prompt.len();
         let last = &x[(prompt.len() - 1) * h..prompt.len() * h];
         Ok(self.cpu_lm_head_argmax(last))
     }
 
-    fn install_kv(&mut self, layer: usize, row: usize, k: &Tensor, v: &Tensor,
-                  len: usize) {
+    /// Copy `len` freshly-prefilled K/V token rows into batch row `row`
+    /// of the layer cache. Bounds are checked against both the cache row
+    /// (`seq_max`) and the prefill output itself, with a typed
+    /// [`KvCapacityError`] instead of silent truncation or a slice panic.
+    fn install_kv(
+        &mut self,
+        layer: usize,
+        row: usize,
+        k: &Tensor,
+        v: &Tensor,
+        len: usize,
+    ) -> std::result::Result<(), KvCapacityError> {
         let d = &self.dims;
         let (s, kvh, dh) = (d.seq_max, d.kv_heads, d.head_dim());
         let per_tok = kvh * dh;
+        // two distinct bounds, reported with the one that actually binds:
+        // the cache row (`seq_max`) and the prefill output's token rows
+        if len > s {
+            return Err(KvCapacityError { requested: len, capacity: s });
+        }
+        let emitted = (k.len() / per_tok).min(v.len() / per_tok);
+        if len > emitted {
+            return Err(KvCapacityError { requested: len, capacity: emitted });
+        }
         let (kc, vc) = &mut self.kv[layer];
-        let kc_data = match &mut kc.data {
-            crate::runtime::TensorData::F32(a) => a,
-            _ => unreachable!(),
-        };
-        let ks = k.as_f32();
-        for tpos in 0..len {
-            let dst = row * s * per_tok + tpos * per_tok;
-            kc_data[dst..dst + per_tok]
-                .copy_from_slice(&ks[tpos * per_tok..(tpos + 1) * per_tok]);
+        for (cache, fresh) in [(kc, k), (vc, v)] {
+            let data = match &mut cache.data {
+                TensorData::F32(a) => a,
+                _ => unreachable!(),
+            };
+            let src = fresh.as_f32();
+            let dst = row * s * per_tok;
+            data[dst..dst + len * per_tok]
+                .copy_from_slice(&src[..len * per_tok]);
         }
-        let vc_data = match &mut vc.data {
-            crate::runtime::TensorData::F32(a) => a,
-            _ => unreachable!(),
-        };
-        let vs = v.as_f32();
-        for tpos in 0..len {
-            let dst = row * s * per_tok + tpos * per_tok;
-            vc_data[dst..dst + per_tok]
-                .copy_from_slice(&vs[tpos * per_tok..(tpos + 1) * per_tok]);
-        }
+        Ok(())
     }
 
     /// Longest prompt suffix the compiled prefill graph accepts.
@@ -578,10 +673,11 @@ impl RealEngine {
         Ok(())
     }
 
-    /// Zero one batch row's KV history — required before a retired slot
-    /// is reused mid-flight, or the new sequence would attend to the
-    /// previous occupant's keys at positions beyond its own prompt.
-    fn clear_kv_row(&mut self, row: usize) {
+    /// Zero one batch row's KV history (host copies) and rewind its
+    /// position — the rolling-reclamation primitive. Called when a slot
+    /// retires and again right before a slot is refilled, so a new
+    /// sequence can never attend to a previous occupant's keys.
+    fn reclaim_row(&mut self, row: usize) {
         let d = self.dims.clone();
         let per_row = d.seq_max * d.kv_heads * d.head_dim();
         for (kc, vc) in self.kv.iter_mut() {
@@ -592,6 +688,7 @@ impl RealEngine {
                 a[row * per_row..(row + 1) * per_row].fill(0.0);
             }
         }
+        self.row_pos[row] = 0;
     }
 
     fn cpu_lm_head_argmax(&self, x: &[f32]) -> u32 {
@@ -629,11 +726,11 @@ impl Engine for RealEngine {
         self.dims.vocab
     }
 
-    /// Admit into a free batch row. When the engine is idle the KV state
-    /// is reset first; a mid-flight admission (continuous batching) keeps
-    /// the shared decode position and pads the new row's unwritten KV
-    /// positions with zeros — an approximation the lockstep path avoids
-    /// by admitting whole groups into an idle engine.
+    /// Admit into a free batch row. The row prefills at its own KV
+    /// positions `0..len` and decodes from there: with per-row positions
+    /// in the attention graphs, a mid-flight admission (continuous
+    /// batching) is exact — the new row attends only over its own real
+    /// history, and the prompt is never capped to a shared decode clock.
     fn admit(&mut self, req: &InferenceRequest) -> Result<Admission> {
         let slot = self
             .serve_slots
@@ -648,33 +745,24 @@ impl Engine for RealEngine {
             // prefill rebuilds literals from host state at its end; pull
             // the in-flight rows' decoded KV down first
             self.sync_kv_host()?;
-        } else if self.pos > 0 {
-            self.reset();
+        } else if self.row_pos.iter().any(|&p| p > 0) {
+            // idle engine with stale direct-use state: full reset
+            self.reset()?;
         }
         // the prefill graph is compiled for a fixed chunk: keep the tail
         let prompt = self.prompt_tail(&req.prompt);
-        // a mid-flight admission must not move the shared decode position
-        // in either direction — sequences in flight have no KV beyond it —
-        // so a longer prompt is capped to its last `pos` tokens
-        let prompt = if mid_flight && prompt.len() > self.pos {
-            &prompt[prompt.len() - self.pos..]
-        } else {
-            prompt
-        };
         ensure!(!prompt.is_empty(), "empty prompt");
-        let pos_before = self.pos;
-        self.clear_kv_row(slot);
+        self.reclaim_row(slot);
         let first = self.prefill(slot, prompt)?;
-        self.pos = self.pos.max(pos_before);
         self.sv_prefill_s += t0.elapsed().as_secs_f64();
         self.serve_slots[slot] = Some(first);
         Ok(Admission { slot, first_token: Some(first) })
     }
 
-    /// Group admission into an idle engine: prompts are right-padded to a
-    /// shared length (repeating their last token) so every row carries
-    /// real KV up to the common decode position — the lockstep path has
-    /// no zero-padded KV gaps, unlike mid-flight single admissions.
+    /// Group admission into an idle engine. Each row prefills its own
+    /// prompt at its own length — per-row positions make right-padding
+    /// to a shared decode position unnecessary, so group admission is as
+    /// exact as serving each request alone.
     fn admit_group(&mut self, reqs: &[&InferenceRequest]) -> Result<Vec<Admission>> {
         ensure!(
             self.serve_slots.iter().all(Option::is_none),
@@ -686,25 +774,20 @@ impl Engine for RealEngine {
             reqs.len(),
             self.batch
         );
-        if self.pos > 0 {
-            self.reset();
+        if self.row_pos.iter().any(|&p| p > 0) {
+            self.reset()?;
         }
-        let max_prompt = reqs
-            .iter()
-            .map(|r| self.prompt_tail(&r.prompt).len().max(1))
-            .max()
-            .unwrap_or(1);
         let t0 = std::time::Instant::now();
         let mut out = Vec::with_capacity(reqs.len());
         for (row, req) in reqs.iter().enumerate() {
-            let mut prompt = self.prompt_tail(&req.prompt).to_vec();
+            let prompt = self.prompt_tail(&req.prompt);
             ensure!(!prompt.is_empty(), "empty prompt");
-            let last = *prompt.last().expect("non-empty prompt");
-            prompt.resize(max_prompt, last);
-            let first = self.prefill(row, &prompt)?;
+            let first = self.prefill_no_refresh(row, prompt)?;
             self.serve_slots[row] = Some(first);
             out.push(Admission { slot: row, first_token: Some(first) });
         }
+        // one KV-literal rebuild for the whole group, not one per row
+        self.refresh_kv_literals()?;
         self.sv_prefill_s += t0.elapsed().as_secs_f64();
         Ok(out)
     }
@@ -718,6 +801,18 @@ impl Engine for RealEngine {
         let t0 = std::time::Instant::now();
         let next = self.decode_step(&tokens)?;
         self.sv_decode_s += t0.elapsed().as_secs_f64();
+        // vacant rows rode along in the static graph and advanced with
+        // everyone else; pin them back to 0 so an unbounded retire/refill
+        // stream never walks them into the seq_max wall, and a drained
+        // engine is left with every position at 0 (no spurious reset on
+        // the next idle admission). Their KV scribbles land in a row
+        // that is reclaimed again at the next admission.
+        for (state, pos) in self.serve_slots.iter().zip(self.row_pos.iter_mut())
+        {
+            if state.is_none() {
+                *pos = 0;
+            }
+        }
         let mut out = Vec::with_capacity(self.batch);
         for (slot, state) in self.serve_slots.iter_mut().enumerate() {
             if state.is_some() {
@@ -729,21 +824,25 @@ impl Engine for RealEngine {
         Ok(out)
     }
 
+    /// Free a slot. Rolling KV reclamation happens here: the row's host
+    /// KV region is zeroed and its position rewound immediately, so
+    /// continuous batching sustains unbounded request streams — the
+    /// engine never needs to drain to recover positions.
     fn retire(&mut self, slot: SlotId) -> Result<()> {
         ensure!(
             slot < self.serve_slots.len(),
             "slot {slot} out of range (capacity {})",
             self.serve_slots.len()
         );
-        self.serve_slots[slot] = None;
-        if self.serve_slots.iter().all(Option::is_none) {
-            self.reset(); // reclaim KV positions for the next group
+        if self.serve_slots[slot].take().is_some() {
+            self.reclaim_row(slot);
         }
         Ok(())
     }
 
-    fn decode_budget(&self) -> Option<usize> {
-        Some(self.dims.seq_max.saturating_sub(self.pos))
+    fn decode_budget(&self, slot: SlotId) -> Option<usize> {
+        let pos = self.row_pos.get(slot).copied().unwrap_or(self.dims.seq_max);
+        Some(self.dims.seq_max.saturating_sub(pos))
     }
 
     fn stats(&self) -> EngineStats {
@@ -835,7 +934,7 @@ mod tests {
         }
         inputs.push(e.kv[0].0.clone());
         inputs.push(e.kv[0].1.clone());
-        inputs.push(Tensor::i32_scalar(0));
+        inputs.push(Tensor::i32(vec![1], vec![0]));
         let dense = e.rt.execute("decode_dense_b1", &inputs).unwrap();
         let want = dense[0].as_f32().to_vec();
 
@@ -845,7 +944,7 @@ mod tests {
         attn_in.extend(e.attn_weight_tensors(0));
         attn_in.push(e.kv[0].0.clone());
         attn_in.push(e.kv[0].1.clone());
-        attn_in.push(Tensor::i32_scalar(0));
+        attn_in.push(Tensor::i32(vec![1], vec![0]));
         let mut out = e.rt.execute("decode_attn_b1", &attn_in).unwrap();
         let _vc = out.pop().unwrap();
         let _kc = out.pop().unwrap();
@@ -883,7 +982,7 @@ mod tests {
         }
         assert_eq!(e.metrics.steps, 4);
         assert!(e.metrics.cache_hits + e.metrics.cache_misses > 0);
-        assert_eq!(e.pos, 4);
+        assert_eq!(e.row_pos, vec![4]);
         std::fs::remove_file(wp).ok();
     }
 
@@ -953,6 +1052,102 @@ mod tests {
         assert_eq!(e.step().unwrap().len(), 2);
         let st = e.stats();
         assert!(st.decode_tokens >= 5 && st.decode_s > 0.0);
+        std::fs::remove_file(wp).ok();
+    }
+
+    #[test]
+    fn kv_capacity_error_is_typed_and_formats() {
+        let e = KvCapacityError { requested: 17, capacity: 16 };
+        assert!(e.to_string().contains("KV cache full"));
+        let any: anyhow::Error = e.into();
+        assert!(format!("{any}").contains("17"));
+    }
+
+    #[test]
+    fn install_kv_rejects_over_capacity_prompts() {
+        let Some(dir) = artifacts() else { return };
+        let wp = weight_path("kvbounds");
+        let mut e = RealEngine::new(dir, &wp, 1, opts(true, 128)).unwrap();
+        let d = e.dims.clone();
+        let over = d.seq_max + 1;
+        let k = Tensor::zeros(vec![over, d.kv_heads, d.head_dim()]);
+        let v = Tensor::zeros(vec![over, d.kv_heads, d.head_dim()]);
+        let err = e.install_kv(0, 0, &k, &v, over).unwrap_err();
+        assert_eq!(
+            err,
+            KvCapacityError { requested: over, capacity: d.seq_max }
+        );
+        // shorter K/V tensors bound the install too (no silent truncation
+        // and no slice panic)
+        let small = Tensor::zeros(vec![2, d.kv_heads, d.head_dim()]);
+        let err = e.install_kv(0, 0, &small, &small, 4).unwrap_err();
+        assert_eq!(err, KvCapacityError { requested: 4, capacity: 2 });
+        std::fs::remove_file(wp).ok();
+    }
+
+    #[test]
+    fn mid_flight_admission_matches_solo_run() {
+        // acceptance: a request admitted at decode step k produces the
+        // same token stream as the same request served alone. Per-row KV
+        // positions make this exact (greedy decode, exact cold path).
+        let Some(dir) = artifacts() else { return };
+        let wp = weight_path("midflight");
+        let req = InferenceRequest::new(7, vec![5, 12, 3], 6);
+        let want = req.params.max_tokens;
+        let solo = {
+            let mut e = RealEngine::new(dir, &wp, 2, opts(true, 128)).unwrap();
+            let adm = e.admit(&req).unwrap();
+            let mut toks = vec![adm.first_token.unwrap()];
+            while toks.len() < want {
+                let out = e.step().unwrap();
+                toks.push(
+                    out.iter().find(|(s, _)| *s == adm.slot).unwrap().1,
+                );
+            }
+            toks
+        };
+        let mut e = RealEngine::new(dir, &wp, 2, opts(true, 128)).unwrap();
+        let neighbour = InferenceRequest::new(1, vec![9, 2, 2, 8], 16);
+        let a0 = e.admit(&neighbour).unwrap();
+        for _ in 0..3 {
+            e.step().unwrap(); // the neighbour decodes alone for k steps
+        }
+        let adm = e.admit(&req).unwrap();
+        assert_ne!(adm.slot, a0.slot);
+        let mut shared = vec![adm.first_token.unwrap()];
+        while shared.len() < want {
+            let out = e.step().unwrap();
+            shared
+                .push(out.iter().find(|(s, _)| *s == adm.slot).unwrap().1);
+        }
+        assert_eq!(solo, shared, "mid-flight admission diverged from solo");
+        std::fs::remove_file(wp).ok();
+    }
+
+    #[test]
+    fn continuous_batching_outlives_seq_max() {
+        // acceptance: cumulative retired tokens exceed seq_max and the
+        // run completes — rolling per-row reclamation removes the old
+        // "KV cache full" wall that required draining the engine.
+        let Some(dir) = artifacts() else { return };
+        let wp = weight_path("longrun");
+        let e = RealEngine::new(dir, &wp, 2, opts(false, 128)).unwrap();
+        let seq_max = e.dims.seq_max;
+        let mut c = crate::coordinator::Coordinator::new(e);
+        let requests: Vec<InferenceRequest> = (0..12)
+            .map(|id| {
+                InferenceRequest::new(id, vec![3 + id as u32, 9, 17], 4)
+            })
+            .collect();
+        let total: usize =
+            requests.iter().map(|r| r.params.max_tokens).sum();
+        assert!(total > seq_max, "trace too small to cross the wall");
+        let report = c.serve_collect(&requests).unwrap();
+        assert_eq!(report.sessions.len(), requests.len());
+        for s in &report.sessions {
+            assert_eq!(s.tokens.len(), 4, "request {} truncated", s.id);
+        }
+        assert_eq!(c.engine.active(), 0);
         std::fs::remove_file(wp).ok();
     }
 }

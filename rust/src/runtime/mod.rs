@@ -34,8 +34,11 @@ impl Tensor {
         Tensor { shape, data: TensorData::F32(data) }
     }
 
-    pub fn i32_scalar(v: i32) -> Tensor {
-        Tensor { shape: vec![], data: TensorData::I32(vec![v]) }
+    /// Shaped i32 tensor (e.g. the per-row `pos` vector of the decode
+    /// graphs). An empty `shape` makes a rank-0 scalar.
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::I32(data) }
     }
 
     pub fn zeros(shape: Vec<usize>) -> Tensor {

@@ -54,6 +54,13 @@ pub struct InferenceRequest {
     /// Prompt token ids (must be non-empty; engines clamp ids to vocab).
     pub prompt: Vec<u32>,
     pub params: SamplingParams,
+    /// Submit time in seconds on the serve call's clock (0.0 = already
+    /// queued when serving begins). [`crate::coordinator::Coordinator`]
+    /// will not admit the request earlier and measures queue latency and
+    /// TTFT from this instant, so Poisson arrival traces yield meaningful
+    /// percentiles. Batches passed to `serve` must be ordered by
+    /// `submit_s`.
+    pub submit_s: f64,
 }
 
 impl InferenceRequest {
@@ -63,17 +70,26 @@ impl InferenceRequest {
             id,
             prompt,
             params: SamplingParams { max_tokens: max_tokens.max(1), ..Default::default() },
+            submit_s: 0.0,
         }
     }
 
+    /// Set the submit timestamp (seconds after the serve clock starts).
+    pub fn at(mut self, submit_s: f64) -> Self {
+        self.submit_s = submit_s.max(0.0);
+        self
+    }
+
     /// Build from a workload-trace request: synthesizes a deterministic
-    /// prompt from the request id (the traces carry lengths, not text).
+    /// prompt from the request id (the traces carry lengths, not text)
+    /// and carries the trace's arrival time through as the submit time.
     pub fn from_trace(req: &trace::Request, vocab: usize, max_prompt: usize) -> Self {
         let len = req.prompt_tokens.clamp(1, max_prompt.max(1));
         let prompt = (0..len)
             .map(|i| ((req.id * 131 + i * 7) % vocab.max(1)) as u32)
             .collect();
         InferenceRequest::new(req.id as u64, prompt, req.output_tokens.max(1))
+            .at(req.arrival_s)
     }
 }
 
@@ -225,11 +241,17 @@ pub struct Admission {
 ///
 /// Lifecycle contract:
 /// - `admit` places a request into a free slot (error when full) and runs
-///   or schedules its prefill.
+///   or schedules its prefill at that slot's own sequence positions.
 /// - `step` decodes one token for every occupied slot and returns
 ///   `(slot, token)` pairs; slots whose prefill is still catching up may
 ///   be absent from one or more steps.
-/// - `retire` frees a slot at any time; it is idempotent.
+/// - `retire` frees a slot at any time; it is idempotent, and engines
+///   with per-slot KV state reclaim the slot's cache region immediately
+///   (no drain barrier), so `decode_budget(slot)` is restored for the
+///   next occupant.
+/// - Capacity and context budget are per-slot: `capacity()` counts the
+///   independent slots, and `decode_budget(slot)` tracks one slot's
+///   remaining context window.
 /// - The caller owns stop conditions (`max_tokens` etc.) — the engine
 ///   only produces tokens.
 pub trait Engine {
@@ -246,8 +268,9 @@ pub trait Engine {
     fn admit(&mut self, req: &InferenceRequest) -> Result<Admission>;
 
     /// Admit a whole group into an idle engine (lockstep group
-    /// formation). Engines may override to prefill the group jointly
-    /// (the real engine right-pads prompts to a shared position).
+    /// formation). Engines may override to prefill the group jointly;
+    /// with per-slot KV positions each member keeps its own prompt
+    /// length — no shared-position padding.
     fn admit_group(&mut self, reqs: &[&InferenceRequest]) -> Result<Vec<Admission>> {
         reqs.iter().map(|r| self.admit(r)).collect()
     }
@@ -255,14 +278,18 @@ pub trait Engine {
     /// One decode step over all occupied slots.
     fn step(&mut self) -> Result<Vec<(SlotId, u32)>>;
 
-    /// Free a slot (finished or cancelled sequence).
+    /// Free a slot (finished or cancelled sequence). Engines with
+    /// per-slot KV state reclaim the slot's cache region and position
+    /// here, so long continuous-batching runs never exhaust the context
+    /// window by accumulation.
     fn retire(&mut self, slot: SlotId) -> Result<()>;
 
-    /// Decode steps still available before the engine's context window
-    /// is exhausted (`None` = unbounded, e.g. the simulation engine).
-    /// Schedulers truncate sequences rather than step a zero-budget
-    /// engine.
-    fn decode_budget(&self) -> Option<usize> {
+    /// Decode steps still available to `slot` before that slot's row of
+    /// the context window is exhausted (`None` = unbounded, e.g. the
+    /// simulation engine). Budgets are per-slot: rows fill — and are
+    /// reclaimed on retire — independently. Schedulers truncate a
+    /// sequence rather than step a zero-budget slot.
+    fn decode_budget(&self, _slot: SlotId) -> Option<usize> {
         None
     }
 
@@ -301,8 +328,8 @@ impl<E: Engine + ?Sized> Engine for Box<E> {
         (**self).retire(slot)
     }
 
-    fn decode_budget(&self) -> Option<usize> {
-        (**self).decode_budget()
+    fn decode_budget(&self, slot: SlotId) -> Option<usize> {
+        (**self).decode_budget(slot)
     }
 
     fn stats(&self) -> EngineStats {
@@ -322,6 +349,7 @@ mod tests {
             task: TaskKind::Code,
             prompt_tokens: 500,
             output_tokens: 12,
+            arrival_s: 1.25,
         };
         let a = InferenceRequest::from_trace(&tr, 64, 16);
         let b = InferenceRequest::from_trace(&tr, 64, 16);
@@ -330,6 +358,9 @@ mod tests {
         assert!(a.prompt.iter().all(|&t| t < 64));
         assert_eq!(a.params.max_tokens, 12);
         assert_eq!(a.id, 3);
+        assert_eq!(a.submit_s, 1.25); // arrival time carried through
+        assert_eq!(InferenceRequest::new(0, vec![1], 1).submit_s, 0.0);
+        assert_eq!(InferenceRequest::new(0, vec![1], 1).at(-3.0).submit_s, 0.0);
     }
 
     #[test]

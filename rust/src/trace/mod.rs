@@ -93,18 +93,45 @@ pub struct Request {
     pub task: TaskKind,
     pub prompt_tokens: usize,
     pub output_tokens: usize,
+    /// Arrival time in seconds from trace start (0.0 = submitted at t0).
+    /// Attach realistic arrivals with [`with_poisson_arrivals`].
+    pub arrival_s: f64,
 }
 
-/// Sample a batch of mixed-task requests.
+/// Sample a batch of mixed-task requests (all submitted at t0).
 pub fn request_mix(n: usize, seed: u64) -> Vec<Request> {
     let mut rng = Rng::new(seed);
     (0..n)
         .map(|id| {
             let task = TaskKind::all()[rng.below(4)];
             let (p, o) = task.lengths(&mut rng);
-            Request { id, task, prompt_tokens: p, output_tokens: o }
+            Request { id, task, prompt_tokens: p, output_tokens: o,
+                      arrival_s: 0.0 }
         })
         .collect()
+}
+
+/// Assign Poisson arrival times to a trace: exponential inter-arrival
+/// gaps at `rate_rps` requests/second, cumulative and therefore monotone
+/// in trace order — the ordering `Coordinator::serve` expects. Returns
+/// the same requests with `arrival_s` filled in.
+pub fn with_poisson_arrivals(
+    mut requests: Vec<Request>,
+    rate_rps: f64,
+    seed: u64,
+) -> Vec<Request> {
+    assert!(
+        rate_rps > 0.0,
+        "poisson arrival rate must be positive, got {rate_rps}"
+    );
+    let mut rng = Rng::new(seed ^ 0xA5A5_5A5A_0F0F_F0F0);
+    let mean_gap_s = 1.0 / rate_rps;
+    let mut t = 0.0;
+    for r in requests.iter_mut() {
+        t += rng.exp(mean_gap_s);
+        r.arrival_s = t;
+    }
+    requests
 }
 
 /// Bimodal request mix for scheduler comparisons: short dialogue turns
@@ -121,7 +148,8 @@ pub fn mixed_length_mix(n: usize, seed: u64) -> Vec<Request> {
             } else {
                 (TaskKind::Dialogue, rng.range(8, 24), rng.range(3, 9))
             };
-            Request { id, task, prompt_tokens: p, output_tokens: o }
+            Request { id, task, prompt_tokens: p, output_tokens: o,
+                      arrival_s: 0.0 }
         })
         .collect()
 }
@@ -164,6 +192,22 @@ mod tests {
         }
         assert_eq!(mixed_length_mix(10, 3)[3].output_tokens,
                    reqs[3].output_tokens);
+    }
+
+    #[test]
+    fn poisson_arrivals_are_monotone_and_deterministic() {
+        let a = with_poisson_arrivals(request_mix(50, 3), 100.0, 9);
+        let b = with_poisson_arrivals(request_mix(50, 3), 100.0, 9);
+        assert!(a[0].arrival_s > 0.0);
+        for w in a.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s, "arrivals not sorted");
+        }
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+        }
+        // mean inter-arrival gap ≈ 1/rate (loose: 50 samples)
+        let mean = a.last().unwrap().arrival_s / a.len() as f64;
+        assert!((0.002..0.05).contains(&mean), "mean gap {mean}");
     }
 
     #[test]

@@ -1,13 +1,19 @@
 //! Scheduler-level tests of the unified serving API: slot reuse,
 //! admission under pressure, scheduler equivalence (identical per-request
-//! token streams under lockstep and continuous batching), and the
+//! token streams under lockstep and continuous batching), mid-flight
+//! admission equivalence, per-slot context budgets (rolling KV
+//! reclamation past the window), arrival-clock queueing, and the
 //! continuous-batching throughput win on a mixed-length trace.
 
+use anyhow::{anyhow, ensure, Result};
 use powerinfer2::config::{bamboo_7b, oneplus_12, RuntimeConfig};
 use powerinfer2::coordinator::{Coordinator, ScheduleMode};
 use powerinfer2::engine::SimEngine;
-use powerinfer2::serve::{CollectSink, Engine, FinishReason, InferenceRequest};
-use powerinfer2::trace::mixed_length_mix;
+use powerinfer2::serve::{
+    Admission, CollectSink, Engine, EngineStats, FinishReason,
+    InferenceRequest, SlotId,
+};
+use powerinfer2::trace::{mixed_length_mix, with_poisson_arrivals};
 
 fn sim(max_batch: usize) -> SimEngine {
     let cfg = RuntimeConfig { max_batch, ..Default::default() };
@@ -107,6 +113,196 @@ fn mixed_traffic_token_streams_match_across_schedulers() {
         let b = rc.session(req.id).unwrap();
         assert_eq!(a.tokens.len(), req.params.max_tokens);
         assert_eq!(a.tokens, b.tokens, "request {} diverged", req.id);
+    }
+}
+
+/// Minimal deterministic engine with a per-slot context window and
+/// rolling reclamation — the slot mechanics of the real engine without
+/// PJRT, so the scheduler's per-slot budget handling runs in CI.
+struct WindowedEngine {
+    seq_max: usize,
+    /// (request id, KV position) per occupied slot.
+    slots: Vec<Option<(u64, usize)>>,
+    decode_tokens: u64,
+    steps: u64,
+}
+
+impl WindowedEngine {
+    fn new(cap: usize, seq_max: usize) -> Self {
+        WindowedEngine {
+            seq_max,
+            slots: vec![None; cap],
+            decode_tokens: 0,
+            steps: 0,
+        }
+    }
+
+    fn token(id: u64, pos: usize) -> u32 {
+        ((id as usize * 31 + pos * 7) % 64) as u32
+    }
+}
+
+impl Engine for WindowedEngine {
+    fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    fn vocab(&self) -> usize {
+        64
+    }
+
+    fn admit(&mut self, req: &InferenceRequest) -> Result<Admission> {
+        let slot = self
+            .slots
+            .iter()
+            .position(Option::is_none)
+            .ok_or_else(|| anyhow!("engine full"))?;
+        ensure!(req.prompt.len() < self.seq_max, "prompt exceeds window");
+        let pos = req.prompt.len();
+        self.slots[slot] = Some((req.id, pos));
+        Ok(Admission { slot, first_token: Some(Self::token(req.id, pos)) })
+    }
+
+    fn step(&mut self) -> Result<Vec<(SlotId, u32)>> {
+        let mut out = Vec::new();
+        for (slot, state) in self.slots.iter_mut().enumerate() {
+            if let Some((id, pos)) = state {
+                ensure!(*pos < self.seq_max, "KV cache full");
+                *pos += 1;
+                out.push((slot, Self::token(*id, *pos)));
+            }
+        }
+        if !out.is_empty() {
+            self.steps += 1;
+            self.decode_tokens += out.len() as u64;
+        }
+        Ok(out)
+    }
+
+    fn retire(&mut self, slot: SlotId) -> Result<()> {
+        ensure!(slot < self.slots.len(), "slot out of range");
+        self.slots[slot] = None; // position reclaimed with the slot
+        Ok(())
+    }
+
+    fn decode_budget(&self, slot: SlotId) -> Option<usize> {
+        let pos = self
+            .slots
+            .get(slot)
+            .and_then(|s| s.as_ref())
+            .map(|&(_, p)| p)
+            .unwrap_or(0);
+        Some(self.seq_max.saturating_sub(pos))
+    }
+
+    fn stats(&self) -> EngineStats {
+        EngineStats {
+            capacity: self.slots.len(),
+            active: self.active(),
+            steps: self.steps,
+            decode_tokens: self.decode_tokens,
+            decode_s: self.steps as f64 * 1e-6,
+            prefill_s: 1e-6,
+            ..Default::default()
+        }
+    }
+}
+
+#[test]
+fn request_admitted_at_step_k_matches_solo_stream() {
+    // mid-flight admission must not perturb a request's token stream:
+    // serve it alone, then again into an engine whose neighbour has
+    // already decoded k steps, and compare.
+    let req = InferenceRequest::new(42, vec![5, 6, 7], 8);
+    let want = req.params.max_tokens;
+    let mut e = sim(2);
+    let adm = e.admit(&req).unwrap();
+    let mut solo = vec![adm.first_token.unwrap()];
+    while solo.len() < want {
+        let out = e.step().unwrap();
+        solo.push(out.iter().find(|&&(s, _)| s == adm.slot).unwrap().1);
+    }
+    let mut e = sim(2);
+    e.admit(&InferenceRequest::new(1, vec![2, 2], 32)).unwrap();
+    for _ in 0..3 {
+        e.step().unwrap(); // the neighbour decodes alone for k steps
+    }
+    let adm = e.admit(&req).unwrap();
+    let mut shared = vec![adm.first_token.unwrap()];
+    while shared.len() < want {
+        let out = e.step().unwrap();
+        shared.push(out.iter().find(|&&(s, _)| s == adm.slot).unwrap().1);
+    }
+    assert_eq!(solo, shared, "mid-flight admission changed the stream");
+}
+
+#[test]
+fn per_slot_budgets_sustain_streams_past_the_window() {
+    // 10 requests through a 2-slot, 8-position window: cumulative decode
+    // tokens far exceed one window, so this only completes if the
+    // scheduler clamps to per-slot budgets and retire reclaims the slot.
+    let mut c = Coordinator::new(WindowedEngine::new(2, 8));
+    let requests: Vec<InferenceRequest> = (0..10)
+        .map(|id| InferenceRequest::new(id, vec![1, 2, 3], 20))
+        .collect();
+    let report = c.serve_collect(&requests).unwrap();
+    assert_eq!(report.sessions.len(), 10);
+    for s in &report.sessions {
+        // prompt fills 3 of 8 positions → 1 prefill + 5 decode tokens
+        assert_eq!(s.tokens.len(), 6, "request {} not truncated", s.id);
+        assert_eq!(s.finish, FinishReason::Length);
+    }
+    assert!(c.engine.stats().decode_tokens as usize > 8,
+            "run never crossed the window");
+    assert_eq!(c.engine.active(), 0);
+}
+
+#[test]
+fn arrival_clock_defers_admission_and_queue_latency() {
+    // the third request arrives 30ms into the run on an idle engine: the
+    // coordinator must wait for it, and its latencies are measured from
+    // its own submit instant rather than the serve call.
+    let mut c = Coordinator::new(sim(2));
+    let requests = vec![
+        InferenceRequest::new(0, vec![1, 2], 4),
+        InferenceRequest::new(1, vec![1, 2], 4),
+        InferenceRequest::new(2, vec![1, 2], 4).at(0.03),
+    ];
+    let t0 = std::time::Instant::now();
+    let report = c.serve_collect(&requests).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    assert!(wall >= 0.03, "serve returned before the last arrival");
+    assert_eq!(report.sessions.len(), 3);
+    let late = report.session(2).unwrap();
+    assert!(
+        late.metrics.queue_s <= wall - 0.03 + 1e-3,
+        "late request accrued queue time before its arrival: {} of {wall}",
+        late.metrics.queue_s
+    );
+    for s in &report.sessions {
+        assert!(s.metrics.queue_s >= 0.0 && s.metrics.ttft_s >= 0.0);
+    }
+}
+
+#[test]
+fn poisson_trace_completes_under_both_schedulers() {
+    let vocab = bamboo_7b().vocab;
+    let trace = with_poisson_arrivals(mixed_length_mix(8, 5), 400.0, 3);
+    let requests: Vec<InferenceRequest> = trace
+        .iter()
+        .map(|r| InferenceRequest::from_trace(r, vocab, 16))
+        .collect();
+    for mode in [ScheduleMode::Continuous, ScheduleMode::Lockstep] {
+        let mut c = Coordinator::with_mode(sim(2), mode);
+        let report = c.serve_collect(&requests).unwrap();
+        assert_eq!(report.sessions.len(), 8, "{}", mode.as_str());
+        let mut q = report.serving;
+        assert!(q.queue_ms.percentile(99.0) >= 0.0);
+        assert!(q.ttft_ms.percentile(50.0) >= 0.0);
     }
 }
 

@@ -183,9 +183,15 @@ macro_rules! bail {
 
 #[macro_export]
 macro_rules! ensure {
+    // Error::msg directly (not bail! → anyhow! → format!): a stringified
+    // condition may contain braces, which format! would misparse as
+    // format specs — upstream treats it as a plain string
     ($cond:expr $(,)?) => {
         if !($cond) {
-            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
         }
     };
     ($cond:expr, $($arg:tt)*) => {
