@@ -37,7 +37,19 @@ fn serve_trace<E: Engine>(
         .map(|r| InferenceRequest::from_trace(r, vocab, 64))
         .collect();
     let mut coord = Coordinator::with_mode(engine, mode);
-    coord.serve_collect(&reqs)
+    let report = coord.serve_collect(&reqs)?;
+    if let Some(p) = coord.engine.kv_pool() {
+        println!(
+            "  kv pool: {} × {}-token blocks ({} free after drain), \
+             prefix-share rate {:.1}%, {} deferred admissions",
+            p.total_blocks,
+            p.block_tokens,
+            p.free_blocks,
+            p.share_rate() * 100.0,
+            report.kv_admission_stalls,
+        );
+    }
+    Ok(report)
 }
 
 fn print_report(label: &str, report: &mut ServeReport) {

@@ -44,6 +44,10 @@ SELFTEST_DIMS = ModelDims(
     prefill_chunk=8,
     batches=(1, 2),
     hot_ks=(128, 256),
+    # paged KV: 4-token blocks; 8 leasable blocks + 1 reserved scratch
+    # (the dense equivalent of 2 batch rows × 4 blocks per sequence)
+    kv_block=4,
+    kv_blocks=9,
 )
 
 
@@ -92,11 +96,17 @@ def emit_table(dims: ModelDims, out_dir: str) -> dict:
     }
 
 
-def _rand_for_spec(rng, spec):
+def _rand_for_spec(rng, name, spec, dims):
     if spec.dtype == jnp.int32:
-        # the only int32 input is the [B] per-row `pos` vector; keep every
-        # row's position small and valid (distinct rows exercise the
-        # per-row cache insert / mask paths)
+        if name == "block_table":
+            # disjoint, valid physical blocks per row (never the reserved
+            # scratch block 0, never out of pool range) — deterministic so
+            # the per-row scatter/gather paths replay bit-exactly in rust
+            b, m = spec.shape
+            vals = 1 + np.arange(b * m, dtype=np.int32) % (dims.kv_blocks - 1)
+            return vals.reshape(b, m)
+        # the [B] per-row `pos` vector; keep every row's position small
+        # and valid (distinct rows exercise the per-row insert/mask paths)
         return rng.integers(0, 4, size=spec.shape, dtype=np.int32)
     scale = 0.25
     return (rng.standard_normal(spec.shape) * scale).astype(np.float32)
@@ -112,7 +122,7 @@ def emit_selftest(out_dir: str) -> None:
     for name, fn, arg_specs, _meta in graph_table(dims):
         if not ("_b1" in name or name.startswith("prefill")):
             continue
-        inputs = [_rand_for_spec(rng, spec) for _, spec in arg_specs]
+        inputs = [_rand_for_spec(rng, an, spec, dims) for an, spec in arg_specs]
         outputs = jax.tree_util.tree_leaves(fn(*[jnp.asarray(v) for v in inputs]))
         cases.append({
             "graph": name,

@@ -15,10 +15,14 @@ Graph inventory (kind → role in the paper):
                      layer output plus the K/V rows to install in the
                      cache.
   decode_attn        decode-phase attention (§4.1.2): RMSNorm → QKV →
-                     RoPE → cache insert → GQA attention (Pallas kernel)
-                     → output proj → residual; also emits the FFN-normed
-                     hidden state that both the NPU hot path and the CPU
-                     cold path consume.
+                     RoPE → paged cache insert through a per-row block
+                     table into the shared KV pool → gather → GQA
+                     attention (Pallas kernel) → output proj → residual;
+                     also emits the FFN-normed hidden state that both the
+                     NPU hot path and the CPU cold path consume. KV is
+                     paged: one [kv_blocks, kv_block, NKV, DH] pool per
+                     layer, a [B, seq_max/kv_block] int32 block table,
+                     and the [B] per-row position vector.
   decode_hot_ffn     the NPU side of the hybrid FFN: dense GLU over the
                      hot neuron cluster (Pallas hot_ffn kernel). The cold
                      (sparse, predictor-gated) side is NOT an HLO graph —
@@ -62,11 +66,17 @@ class ModelDims:
     heads: int = 8
     kv_heads: int = 2
     vocab: int = 4096
-    seq_max: int = 256         # KV cache length (S)
+    seq_max: int = 256         # logical KV window per sequence (S)
     prefill_chunk: int = 64    # T
     batches: tuple = (1, 2, 4)
     # hot-cluster sizes (rows) the planner may pick; all multiples of BLOCK_K
     hot_ks: tuple = (512, 1024, 1536, 2048)
+    # paged KV: the cache is one shared pool of kv_blocks physical blocks
+    # of kv_block tokens each (block 0 is the reserved scratch block that
+    # vacant batch rows write into); each sequence maps up to
+    # seq_max/kv_block blocks through its row of the block table
+    kv_block: int = 16
+    kv_blocks: int = 65
     rope_theta: float = 10000.0
     norm_eps: float = 1e-5
 
@@ -78,12 +88,19 @@ class ModelDims:
     def kv_dim(self) -> int:
         return self.kv_heads * self.head_dim
 
+    @property
+    def max_blocks(self) -> int:
+        """Block-table width: pool blocks one sequence may map."""
+        return self.seq_max // self.kv_block
+
     def validate(self) -> None:
         assert self.hidden % self.heads == 0
         assert self.heads % self.kv_heads == 0
         for k in self.hot_ks:
             assert k % BLOCK_K == 0 and k <= self.inter
         assert self.inter % BLOCK_K == 0
+        assert self.seq_max % self.kv_block == 0
+        assert self.kv_blocks >= 2
 
 
 def rmsnorm(x, gamma, eps=1e-5):
@@ -109,41 +126,54 @@ def rope(x, positions, theta=10000.0):
 
 
 def decode_attn(dims: ModelDims, x, norm1, wq, wk, wv, wo, norm2,
-                k_cache, v_cache, pos):
-    """Attention block for one decode step.
+                k_pool, v_pool, block_table, pos):
+    """Attention block for one decode step over the paged KV pool.
 
     Args:
-      x:        [B, H] residual stream.
-      norm1/2:  [H] RMSNorm gains (pre-attn / pre-FFN).
-      wq:       [H, H]; wk, wv: [KVD, H]; wo: [H, H].
-      k_cache:  [B, S, NKV, DH]; v_cache likewise.
-      pos:      [B] int32 — per-row index of the new token (cache insert
-                slot / RoPE offset). Rows are independent sequences, so a
-                row admitted mid-flight attends only over its own real
-                history (continuous batching, no zero-padded KV).
+      x:           [B, H] residual stream.
+      norm1/2:     [H] RMSNorm gains (pre-attn / pre-FFN).
+      wq:          [H, H]; wk, wv: [KVD, H]; wo: [H, H].
+      k_pool:      [NB, BS, NKV, DH] shared block pool; v_pool likewise.
+      block_table: [B, M] int32 — row i's logical→physical block mapping
+                   (M = seq_max/kv_block). Unused entries point at the
+                   reserved scratch block 0.
+      pos:         [B] int32 — per-row index of the new token (cache
+                   insert slot / RoPE offset). Rows are independent
+                   sequences, so a row admitted mid-flight attends only
+                   over its own blocks (continuous batching), and rows
+                   with identical prompt prefixes may map the same
+                   physical blocks (prefix sharing).
 
     Returns:
-      (x_attn [B,H], ffn_in [B,H], k_cache', v_cache')
+      (x_attn [B,H], ffn_in [B,H], k_pool', v_pool')
     """
     b = x.shape[0]
     nh, nkv, dh = dims.heads, dims.kv_heads, dims.head_dim
+    bs = dims.kv_block
     h = rmsnorm(x, norm1, dims.norm_eps)
     q = (h @ wq.T).reshape(b, nh, dh)
     k = (h @ wk.T).reshape(b, nkv, dh)
     v = (h @ wv.T).reshape(b, nkv, dh)
     q = rope(q, pos, dims.rope_theta)
     k = rope(k, pos, dims.rope_theta)
-    # per-row cache insert: row i writes its new K/V at its own pos[i]
-    # (one batched scatter per cache — constant graph size in B)
+    # paged cache insert: row i writes its new K/V into physical block
+    # table[i, pos//BS] at offset pos%BS (one batched scatter per pool —
+    # constant graph size in B)
     rows = jnp.arange(b)
-    k_cache = k_cache.at[rows, pos].set(k)
-    v_cache = v_cache.at[rows, pos].set(v)
+    blk = block_table[rows, pos // bs]
+    off = pos % bs
+    k_pool = k_pool.at[blk, off].set(k)
+    v_pool = v_pool.at[blk, off].set(v)
+    # gather each row's logical window through its block table:
+    # [NB, BS, ...][B, M] → [B, M, BS, ...] → [B, S, ...]
+    k_cache = k_pool[block_table].reshape(b, dims.seq_max, nkv, dh)
+    v_cache = v_pool[block_table].reshape(b, dims.seq_max, nkv, dh)
     valid = pos + 1
     attn = decode_attention(q, k_cache, v_cache, valid)
     y = attn.reshape(b, nh * dh) @ wo.T
     x_attn = x + y
     ffn_in = rmsnorm(x_attn, norm2, dims.norm_eps)
-    return x_attn, ffn_in, k_cache, v_cache
+    return x_attn, ffn_in, k_pool, v_pool
 
 
 def decode_hot_ffn(dims: ModelDims, ffn_in, gate, up, gate_bias, down):
@@ -152,15 +182,17 @@ def decode_hot_ffn(dims: ModelDims, ffn_in, gate, up, gate_bias, down):
 
 
 def decode_layer_dense(dims: ModelDims, x, norm1, wq, wk, wv, wo, norm2,
-                       gate, up, gate_bias, down, k_cache, v_cache, pos):
+                       gate, up, gate_bias, down, k_pool, v_pool,
+                       block_table, pos):
     """Full dense decode layer (attention + full-I FFN + residuals).
 
-    `pos` is a [B] int32 per-row position vector, as in `decode_attn`.
+    `block_table`/`pos` are the paged-KV args, as in `decode_attn`.
     """
-    x_attn, ffn_in, k_cache, v_cache = decode_attn(
-        dims, x, norm1, wq, wk, wv, wo, norm2, k_cache, v_cache, pos)
+    x_attn, ffn_in, k_pool, v_pool = decode_attn(
+        dims, x, norm1, wq, wk, wv, wo, norm2, k_pool, v_pool,
+        block_table, pos)
     y = hot_ffn(ffn_in, gate, up, gate_bias, down, block_k=BLOCK_K)
-    return x_attn + y, k_cache, v_cache
+    return x_attn + y, k_pool, v_pool
 
 
 def lm_head(dims: ModelDims, x, norm_f, w_lm):
@@ -245,10 +277,11 @@ def graph_table(d: ModelDims):
     d.validate()
     graphs = []
 
+    pool = _s(d.kv_blocks, d.kv_block, d.kv_heads, d.head_dim)
     for b in d.batches:
-        cache = _s(b, d.seq_max, d.kv_heads, d.head_dim)
-        args = ([("x", _s(b, d.hidden))] + attn_weight_specs(d)
-                + [("k_cache", cache), ("v_cache", cache), ("pos", _si(b))])
+        paged = [("k_pool", pool), ("v_pool", pool),
+                 ("block_table", _si(b, d.max_blocks)), ("pos", _si(b))]
+        args = ([("x", _s(b, d.hidden))] + attn_weight_specs(d) + paged)
         graphs.append((
             f"decode_attn_b{b}",
             lambda *a, _d=d: decode_attn(_d, *a),
@@ -266,8 +299,7 @@ def graph_table(d: ModelDims):
             ))
 
         args = ([("x", _s(b, d.hidden))] + attn_weight_specs(d)
-                + ffn_weight_specs(d, d.inter)
-                + [("k_cache", cache), ("v_cache", cache), ("pos", _si(b))])
+                + ffn_weight_specs(d, d.inter) + paged)
         graphs.append((
             f"decode_dense_b{b}",
             lambda *a, _d=d: decode_layer_dense(_d, *a),

@@ -14,11 +14,25 @@ from compile.kernels import ref
 DIMS = model.ModelDims(
     hidden=32, inter=128, layers=2, heads=4, kv_heads=2,
     vocab=64, seq_max=16, prefill_chunk=8, batches=(1, 2), hot_ks=(128,),
+    kv_block=4, kv_blocks=16,
 )
 
 
 def _rng(seed=0):
     return np.random.default_rng(seed)
+
+
+def _pool(d):
+    """Zeroed KV pool pair [NB, BS, NKV, DH]."""
+    shape = (d.kv_blocks, d.kv_block, d.kv_heads, d.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def _tables(d, b):
+    """Disjoint per-row block tables [b, M] avoiding the scratch block."""
+    m = d.max_blocks
+    return jnp.asarray(
+        1 + np.arange(b * m, dtype=np.int32).reshape(b, m))
 
 
 def _attn_weights(rng, d):
@@ -72,60 +86,125 @@ class TestRmsNormAndRope:
 
 
 class TestDecodeAttnGraph:
-    def test_shapes_and_per_row_cache_insert(self):
+    def test_shapes_and_paged_cache_insert(self):
         d = DIMS
         rng = _rng(3)
         w = _attn_weights(rng, d)
         b = 2
         x = jnp.asarray(rng.standard_normal((b, d.hidden)), jnp.float32)
-        kc = jnp.zeros((b, d.seq_max, d.kv_heads, d.head_dim), jnp.float32)
-        vc = jnp.zeros_like(kc)
-        # per-row positions: row 0 writes slot 5, row 1 writes slot 2
+        kp, vp = _pool(d)
+        table = _tables(d, b)  # row 0 → blocks 1..4, row 1 → blocks 5..8
+        # per-row positions: row 0 writes logical slot 5 (block 2, off 1),
+        # row 1 writes logical slot 2 (block 5, off 2)
         pos = jnp.asarray([5, 2], jnp.int32)
-        x_attn, ffn_in, kc2, vc2 = model.decode_attn(
+        x_attn, ffn_in, kp2, vp2 = model.decode_attn(
             d, x, w["norm1"], w["wq"], w["wk"], w["wv"], w["wo"], w["norm2"],
-            kc, vc, pos)
+            kp, vp, table, pos)
         assert x_attn.shape == (b, d.hidden)
         assert ffn_in.shape == (b, d.hidden)
-        # each row changes only its own position's cache slot
-        assert not jnp.allclose(kc2[0, 5], 0.0)
-        assert not jnp.allclose(kc2[1, 2], 0.0)
-        np.testing.assert_array_equal(kc2[0, :5], 0.0)
-        np.testing.assert_array_equal(kc2[0, 6:], 0.0)
-        np.testing.assert_array_equal(kc2[1, :2], 0.0)
-        np.testing.assert_array_equal(kc2[1, 3:], 0.0)
-        np.testing.assert_array_equal(vc2[0, :5], 0.0)
-        np.testing.assert_array_equal(vc2[1, :2], 0.0)
+        assert kp2.shape == kp.shape
+        # each row touches exactly one slot of its own physical block
+        assert not jnp.allclose(kp2[2, 1], 0.0)
+        assert not jnp.allclose(kp2[5, 2], 0.0)
+        assert not jnp.allclose(vp2[2, 1], 0.0)
+        touched = np.zeros((d.kv_blocks, d.kv_block), bool)
+        touched[2, 1] = touched[5, 2] = True
+        flat = np.asarray(kp2).reshape(d.kv_blocks, d.kv_block, -1)
+        for nb in range(d.kv_blocks):
+            for s in range(d.kv_block):
+                if not touched[nb, s]:
+                    np.testing.assert_array_equal(flat[nb, s], 0.0)
 
     def test_row_output_independent_of_neighbour_position(self):
-        """A row's attention output must depend only on its own history —
+        """A row's attention output must depend only on its own blocks —
         the invariant that makes mid-flight admission exact."""
         d = DIMS
         rng = _rng(9)
         w = _attn_weights(rng, d)
         x = jnp.asarray(rng.standard_normal((2, d.hidden)), jnp.float32)
-        kc = jnp.asarray(
-            rng.standard_normal((2, d.seq_max, d.kv_heads, d.head_dim)) * 0.3,
-            jnp.float32)
-        vc = jnp.asarray(
-            rng.standard_normal((2, d.seq_max, d.kv_heads, d.head_dim)) * 0.3,
-            jnp.float32)
+        shape = (d.kv_blocks, d.kv_block, d.kv_heads, d.head_dim)
+        kp = jnp.asarray(rng.standard_normal(shape) * 0.3, jnp.float32)
+        vp = jnp.asarray(rng.standard_normal(shape) * 0.3, jnp.float32)
+        table = _tables(d, 2)
         args = [x, w["norm1"], w["wq"], w["wk"], w["wv"], w["wo"], w["norm2"]]
         a, _, _, _ = model.decode_attn(
-            d, *args, kc, vc, jnp.asarray([4, 1], jnp.int32))
+            d, *args, kp, vp, table, jnp.asarray([4, 1], jnp.int32))
         b, _, _, _ = model.decode_attn(
-            d, *args, kc, vc, jnp.asarray([4, 9], jnp.int32))
+            d, *args, kp, vp, table, jnp.asarray([4, 9], jnp.int32))
         np.testing.assert_allclose(a[0], b[0], rtol=1e-6, atol=1e-6)
+
+    def test_paged_layout_equals_contiguous_layout(self):
+        """Scattering a row's logical window across arbitrary pool blocks
+        must attend identically to the contiguous (identity-table) layout
+        — the invariant that makes block reuse and prefix sharing safe."""
+        d = DIMS
+        rng = _rng(12)
+        w = _attn_weights(rng, d)
+        b, m, bs = 2, d.max_blocks, d.kv_block
+        x = jnp.asarray(rng.standard_normal((b, d.hidden)), jnp.float32)
+        logical_k = rng.standard_normal(
+            (b, d.seq_max, d.kv_heads, d.head_dim)).astype(np.float32) * 0.3
+        logical_v = rng.standard_normal(
+            (b, d.seq_max, d.kv_heads, d.head_dim)).astype(np.float32) * 0.3
+        pos = jnp.asarray([9, 6], jnp.int32)
+        args = [x, w["norm1"], w["wq"], w["wk"], w["wv"], w["wo"], w["norm2"]]
+
+        def run(table_rows):
+            kp, vp = _pool(d)
+            table = jnp.asarray(np.asarray(table_rows, np.int32))
+            for r in range(b):
+                for j in range(m):
+                    blk = int(table_rows[r][j])
+                    kp = kp.at[blk].set(logical_k[r, j * bs:(j + 1) * bs])
+                    vp = vp.at[blk].set(logical_v[r, j * bs:(j + 1) * bs])
+            out, _, _, _ = model.decode_attn(d, *args, kp, vp, table, pos)
+            return out
+
+        contiguous = run([[1, 2, 3, 4], [5, 6, 7, 8]])
+        scattered = run([[11, 3, 14, 7], [2, 9, 4, 13]])
+        np.testing.assert_allclose(contiguous, scattered, rtol=1e-5,
+                                   atol=1e-6)
+
+    def test_shared_prefix_blocks_attend_identically(self):
+        """Two rows mapping the same physical prefix block (prefix
+        sharing) must each attend as if they owned a private copy."""
+        d = DIMS
+        rng = _rng(13)
+        w = _attn_weights(rng, d)
+        x0 = jnp.asarray(rng.standard_normal((1, d.hidden)), jnp.float32)
+        x = jnp.concatenate([x0, x0], axis=0)
+        kp, vp = _pool(d)
+        prefix_k = rng.standard_normal(
+            (d.kv_block, d.kv_heads, d.head_dim)).astype(np.float32)
+        prefix_v = rng.standard_normal(
+            (d.kv_block, d.kv_heads, d.head_dim)).astype(np.float32)
+        kp = kp.at[3].set(prefix_k)
+        vp = vp.at[3].set(prefix_v)
+        # row 0 and row 1 share physical block 3 as their first block but
+        # have private (distinct) tail blocks
+        shared = jnp.asarray([[3, 4, 5, 6], [3, 7, 8, 9]], jnp.int32)
+        # private copy of the prefix for the reference row
+        kp_ref = kp.at[10].set(prefix_k)
+        vp_ref = vp.at[10].set(prefix_v)
+        private = jnp.asarray([[3, 4, 5, 6], [10, 7, 8, 9]], jnp.int32)
+        pos = jnp.asarray([4, 4], jnp.int32)
+        args = [x, w["norm1"], w["wq"], w["wk"], w["wv"], w["wo"], w["norm2"]]
+        a, _, _, _ = model.decode_attn(d, *args, kp, vp, shared, pos)
+        bref, _, _, _ = model.decode_attn(d, *args, kp_ref, vp_ref, private,
+                                          pos)
+        np.testing.assert_allclose(a[1], bref[1], rtol=1e-6, atol=1e-6)
+        # both rows see the same history → identical outputs for same x
+        np.testing.assert_allclose(a[0], a[1], rtol=1e-5, atol=1e-6)
 
     def test_ffn_in_is_normed_x_attn(self):
         d = DIMS
         rng = _rng(4)
         w = _attn_weights(rng, d)
         x = jnp.asarray(rng.standard_normal((1, d.hidden)), jnp.float32)
-        kc = jnp.zeros((1, d.seq_max, d.kv_heads, d.head_dim), jnp.float32)
+        kp, vp = _pool(d)
         x_attn, ffn_in, _, _ = model.decode_attn(
             d, x, w["norm1"], w["wq"], w["wk"], w["wv"], w["wo"], w["norm2"],
-            kc, jnp.zeros_like(kc), jnp.zeros((1,), jnp.int32))
+            kp, vp, _tables(d, 1), jnp.zeros((1,), jnp.int32))
         np.testing.assert_allclose(
             ffn_in, ref.ref_rmsnorm(x_attn, w["norm2"]), rtol=1e-5, atol=1e-6)
 
@@ -141,20 +220,21 @@ class TestDenseLayerEquivalence:
         rng = _rng(5)
         aw, fw = _attn_weights(rng, d), _ffn_weights(rng, d)
         x = jnp.asarray(rng.standard_normal((2, d.hidden)), jnp.float32)
-        kc = jnp.zeros((2, d.seq_max, d.kv_heads, d.head_dim), jnp.float32)
-        vc = jnp.zeros_like(kc)
+        kp, vp = _pool(d)
+        table = _tables(d, 2)
         pos = jnp.asarray([2, 3], jnp.int32)
         args = [x, aw["norm1"], aw["wq"], aw["wk"], aw["wv"], aw["wo"],
                 aw["norm2"]]
-        y_dense, kc_d, vc_d = model.decode_layer_dense(
+        y_dense, kp_d, vp_d = model.decode_layer_dense(
             d, *args, fw["gate"], fw["up"], fw["gate_bias"], fw["down"],
-            kc, vc, pos)
-        x_attn, ffn_in, kc_a, vc_a = model.decode_attn(d, *args, kc, vc, pos)
+            kp, vp, table, pos)
+        x_attn, ffn_in, kp_a, vp_a = model.decode_attn(
+            d, *args, kp, vp, table, pos)
         y_split = x_attn + model.decode_hot_ffn(
             d, ffn_in, fw["gate"], fw["up"], fw["gate_bias"], fw["down"])
         np.testing.assert_allclose(y_dense, y_split, rtol=1e-4, atol=1e-5)
-        np.testing.assert_allclose(kc_d, kc_a, rtol=1e-6)
-        np.testing.assert_allclose(vc_d, vc_a, rtol=1e-6)
+        np.testing.assert_allclose(kp_d, kp_a, rtol=1e-6)
+        np.testing.assert_allclose(vp_d, vp_a, rtol=1e-6)
 
     def test_hot_plus_cold_partials_sum_to_full_ffn(self):
         """Splitting I into hot[0:k] on NPU + cold[k:] on CPU is exact."""
@@ -188,21 +268,26 @@ class TestPrefillDecodeConsistency:
                   fw["down"]]
         y_full, k_full, v_full = model.prefill_layer(d, x_full, *args_w)
 
-        # prefill the first t-1 tokens, then decode token t-1
+        # prefill the first t-1 tokens into the row's leased pool blocks,
+        # then decode token t-1 through the block table
         y_pre, k_pre, v_pre = model.prefill_layer(d, x_full[:t - 1], *args_w)
-        kc = jnp.zeros((1, d.seq_max, d.kv_heads, d.head_dim), jnp.float32)
-        vc = jnp.zeros_like(kc)
-        kc = kc.at[0, :t - 1].set(k_pre)
-        vc = vc.at[0, :t - 1].set(v_pre)
-        x_attn, ffn_in, kc2, vc2 = model.decode_attn(
+        kp, vp = _pool(d)
+        table = _tables(d, 1)  # row 0 → blocks 1..4
+        bs = d.kv_block
+        for p in range(t - 1):
+            blk = 1 + p // bs
+            kp = kp.at[blk, p % bs].set(k_pre[p])
+            vp = vp.at[blk, p % bs].set(v_pre[p])
+        x_attn, ffn_in, kp2, vp2 = model.decode_attn(
             d, x_full[t - 1:t], aw["norm1"], aw["wq"], aw["wk"], aw["wv"],
-            aw["wo"], aw["norm2"], kc, vc,
+            aw["wo"], aw["norm2"], kp, vp, table,
             jnp.full((1,), t - 1, jnp.int32))
         y_dec = x_attn + model.decode_hot_ffn(
             d, ffn_in, fw["gate"], fw["up"], fw["gate_bias"], fw["down"])
         np.testing.assert_allclose(y_dec[0], y_full[t - 1], rtol=2e-3,
                                    atol=2e-4)
-        np.testing.assert_allclose(kc2[0, t - 1], k_full[t - 1], rtol=1e-4,
+        blk, off = 1 + (t - 1) // bs, (t - 1) % bs
+        np.testing.assert_allclose(kp2[blk, off], k_full[t - 1], rtol=1e-4,
                                    atol=1e-5)
 
 
@@ -240,8 +325,28 @@ class TestGraphTable:
             out = jax.eval_shape(fn, *[s for _, s in arg_specs])
             assert jax.tree_util.tree_leaves(out), name
 
+    def test_decode_graphs_declare_paged_kv_abi(self):
+        """The ABI the rust engine guards on: decode graphs end with
+        (k_pool, v_pool, block_table [B, M], pos [B])."""
+        d = DIMS
+        pool_shape = (d.kv_blocks, d.kv_block, d.kv_heads, d.head_dim)
+        for name, _fn, arg_specs, meta in model.graph_table(d):
+            if meta["kind"] not in ("decode_attn", "decode_layer_dense"):
+                continue
+            b = meta["batch"]
+            names = [an for an, _ in arg_specs]
+            assert names[-4:] == ["k_pool", "v_pool", "block_table", "pos"], \
+                name
+            assert arg_specs[-4][1].shape == pool_shape
+            assert arg_specs[-3][1].shape == pool_shape
+            assert arg_specs[-2][1].shape == (b, d.max_blocks)
+            assert arg_specs[-1][1].shape == (b,)
+
     def test_validate_rejects_bad_dims(self):
         with pytest.raises(AssertionError):
             model.graph_table(dataclasses.replace(DIMS, hot_ks=(100,)))
         with pytest.raises(AssertionError):
             model.graph_table(dataclasses.replace(DIMS, heads=3))
+        with pytest.raises(AssertionError):
+            # block size must divide the logical window
+            model.graph_table(dataclasses.replace(DIMS, kv_block=5))

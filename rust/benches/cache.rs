@@ -1,8 +1,10 @@
 //! Bench: neuron cache LRU — touched tens of thousands of times per
-//! simulated token.
+//! simulated token — and the paged KV pool's lease churn, which sits on
+//! every admit/step/retire of the serving path.
 mod common;
 
 use powerinfer2::cache::NeuronLru;
+use powerinfer2::kv::KvPool;
 use powerinfer2::util::prng::Rng;
 
 fn main() {
@@ -17,5 +19,26 @@ fn main() {
             }
         });
         println!("    → {:.1} M accesses/s", 4096.0 / r.min_ns * 1e3);
+    }
+
+    println!("# bench: paged KV pool (admit + decode appends + release)");
+    for (blocks, prompt, decode) in
+        [(1024usize, 64usize, 128usize), (8192, 512, 1024)]
+    {
+        let mut pool = KvPool::new(blocks, 16, 0);
+        let r = common::bench(
+            &format!("kv_pool_lifecycle/b{blocks}_p{prompt}_d{decode}"),
+            || {
+                let prompt_ids: Vec<u32> = (0..prompt as u32).collect();
+                let mut lease = pool.admit(&prompt_ids, 0).unwrap();
+                for _ in 0..decode {
+                    pool.append(&mut lease).unwrap();
+                }
+                std::hint::black_box(pool.free_blocks());
+                pool.release(lease);
+            },
+        );
+        let ops = (prompt / 16 + decode) as f64;
+        println!("    → {:.1} M block-ops/s", ops / r.min_ns * 1e3);
     }
 }

@@ -23,12 +23,26 @@ pub struct MemoryBudget {
 pub const RUNTIME_MISC_BYTES: u64 = 300 * 1024 * 1024; // §7.2.3: ~300MB
 
 impl MemoryBudget {
-    /// Plan for a given total budget. `seq_max`/`max_batch` size the KV
-    /// region (INT8 KV at 2 heads-worth per token is close enough for the
-    /// class of models here; the paper folds KV into "non-FFN").
+    /// Plan for a given total budget (INT8 KV at 2 heads-worth per token
+    /// is close enough for the class of models here; the paper folds KV
+    /// into "non-FFN"). With a paged pool configured
+    /// (`cfg.kv_pool_blocks > 0`) the KV region is the pool's actual
+    /// footprint — `blocks × block_tokens`, *shared* across sequences —
+    /// instead of a dense 2048-token region per batch slot; what the
+    /// pool saves goes straight to the FFN neuron cache. (The default,
+    /// unconfigured case keeps the paper's §7.2.3 2048-token assumption:
+    /// the simulation engine's auto pool
+    /// ([`RuntimeConfig::kv_pool_blocks_effective`]) is scheduler
+    /// bookkeeping sized for the server's request cap, not a modeled
+    /// byte budget.)
     pub fn plan(spec: &ModelSpec, cfg: &RuntimeConfig, total: u64) -> MemoryBudget {
         let kv_per_tok = (2 * spec.kv_heads * (spec.hidden / spec.heads)) as u64 * 2;
-        let kv_cache = kv_per_tok * 2048 * cfg.max_batch as u64 * spec.layers as u64 / 2;
+        let kv_tokens = if cfg.kv_pool_blocks > 0 {
+            (cfg.kv_pool_blocks * cfg.kv_block_tokens.max(1)) as u64
+        } else {
+            2048 * cfg.max_batch as u64
+        };
+        let kv_cache = kv_per_tok * kv_tokens * spec.layers as u64 / 2;
         let non_ffn = spec.non_ffn_bytes();
         let predictor = spec.predictor_bytes();
         let scales = spec.scales_bytes();
@@ -110,6 +124,25 @@ mod tests {
         let b75 = MemoryBudget::for_offload_frac(&spec, &cfg, 0.75);
         assert!((b75.resident_ffn_frac() - 0.25).abs() < 0.02);
         assert!(b75.total < b.total);
+    }
+
+    #[test]
+    fn paged_pool_shrinks_kv_and_grows_neuron_cache() {
+        // a shared pool half the dense per-slot footprint frees bytes
+        // for the hot/cold neuron cache at the same total budget
+        let spec = bamboo_7b();
+        let dense = RuntimeConfig::default(); // kv_pool_blocks = 0
+        let paged = RuntimeConfig {
+            kv_block_tokens: 16,
+            // dense equivalent would be 2048 × max_batch / 16 blocks
+            kv_pool_blocks: 2048 * dense.max_batch / 16 / 2,
+            ..dense.clone()
+        };
+        let bd = MemoryBudget::plan(&spec, &dense, 8 * GB);
+        let bp = MemoryBudget::plan(&spec, &paged, 8 * GB);
+        assert_eq!(bp.kv_cache * 2, bd.kv_cache);
+        assert!(bp.ffn_cache > bd.ffn_cache);
+        assert_eq!(bp.total, bd.total);
     }
 
     #[test]

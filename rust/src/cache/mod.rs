@@ -278,6 +278,67 @@ mod tests {
     }
 
     #[test]
+    fn capacity_equal_to_universe_never_evicts() {
+        let mut lru = NeuronLru::new(8, 8);
+        for id in 0..8 {
+            assert!(matches!(lru.access(id), Access::Miss { evicted: None }));
+        }
+        assert_eq!(lru.len(), 8);
+        // every further access is a hit, never an eviction
+        for id in (0..8).rev() {
+            assert_eq!(lru.access(id), Access::Hit);
+        }
+        assert_eq!(lru.len(), 8);
+        assert_eq!(lru.iter_mru().collect::<Vec<_>>(),
+                   (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn retouching_head_is_a_noop_on_order() {
+        let mut lru = NeuronLru::new(8, 3);
+        for id in [1, 2, 3] {
+            lru.access(id);
+        }
+        // 3 is MRU (head); touching it again must not corrupt the list
+        assert_eq!(lru.access(3), Access::Hit);
+        assert_eq!(lru.iter_mru().collect::<Vec<_>>(), vec![3, 2, 1]);
+        assert_eq!(lru.len(), 3);
+    }
+
+    #[test]
+    fn retouching_tail_moves_it_to_head() {
+        let mut lru = NeuronLru::new(8, 3);
+        for id in [1, 2, 3] {
+            lru.access(id);
+        }
+        // 1 is LRU (tail); touching it must relink both ends
+        assert_eq!(lru.access(1), Access::Hit);
+        assert_eq!(lru.iter_mru().collect::<Vec<_>>(), vec![1, 3, 2]);
+        // the new tail (2) is now the eviction victim
+        assert!(matches!(lru.access(7), Access::Miss { evicted: Some(2) }));
+    }
+
+    #[test]
+    fn single_element_list_survives_retouch_and_evict() {
+        let mut lru = NeuronLru::new(4, 1);
+        lru.access(0);
+        assert_eq!(lru.access(0), Access::Hit); // head == tail retouch
+        assert!(matches!(lru.access(1), Access::Miss { evicted: Some(0) }));
+        assert_eq!(lru.iter_mru().collect::<Vec<_>>(), vec![1]);
+        assert!(!lru.contains(0) && lru.contains(1));
+    }
+
+    #[test]
+    fn insert_is_idempotent_on_residents() {
+        let mut lru = NeuronLru::new(8, 2);
+        assert_eq!(lru.insert(5), None);
+        assert_eq!(lru.insert(5), None); // already resident: no eviction
+        assert_eq!(lru.len(), 1);
+        lru.insert(6);
+        assert_eq!(lru.insert(7), Some(5)); // LRU evicted
+    }
+
+    #[test]
     fn resize_evicts_lru_first() {
         let mut lru = NeuronLru::new(10, 4);
         for id in 0..4 {

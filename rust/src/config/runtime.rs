@@ -57,6 +57,12 @@ pub struct RuntimeConfig {
     pub seed: u64,
     /// Cold-path neuron-cluster size (neurons per scheduling unit).
     pub cluster_neurons: usize,
+    /// Paged-KV block size in tokens (the KV analog of the neuron
+    /// cluster: the granularity at which cache memory is pooled).
+    pub kv_block_tokens: usize,
+    /// Leasable blocks in the shared KV pool (0 = auto-size to a
+    /// dense-equivalent for `max_batch` slots).
+    pub kv_pool_blocks: usize,
 }
 
 impl Default for RuntimeConfig {
@@ -76,11 +82,28 @@ impl Default for RuntimeConfig {
             io_threads: 1,
             seed: 42,
             cluster_neurons: 64,
+            kv_block_tokens: 16,
+            kv_pool_blocks: 0,
         }
     }
 }
 
 impl RuntimeConfig {
+    /// Leasable KV pool blocks the simulation engine builds:
+    /// `kv_pool_blocks` when set, else an auto size — a dense-equivalent
+    /// per slot for the TCP server's 4096-token `max_tokens` cap plus 64
+    /// blocks of prompt headroom. The auto pool is a scheduling model
+    /// (bookkeeping only, a few KB), deliberately roomy so default-config
+    /// serving never stalls on it; set `kv_pool_blocks` explicitly to
+    /// model a real, tighter memory budget.
+    pub fn kv_pool_blocks_effective(&self) -> usize {
+        if self.kv_pool_blocks > 0 {
+            return self.kv_pool_blocks;
+        }
+        let bt = self.kv_block_tokens.max(1);
+        self.max_batch.max(1) * (4096usize.div_ceil(bt) + 64)
+    }
+
     /// The llama.cpp-style configuration (mmap, CPU dense, no smarts).
     pub fn llama_cpp_like() -> Self {
         RuntimeConfig {
@@ -148,6 +171,12 @@ impl RuntimeConfig {
         if let Some(v) = j.get("cluster_neurons").as_usize() {
             self.cluster_neurons = v;
         }
+        if let Some(v) = j.get("kv_block_tokens").as_usize() {
+            self.kv_block_tokens = v;
+        }
+        if let Some(v) = j.get("kv_pool_blocks").as_usize() {
+            self.kv_pool_blocks = v;
+        }
         if let Some(v) = j.get("bundling").as_bool() {
             self.bundling = v;
         }
@@ -203,11 +232,21 @@ mod tests {
     }
 
     #[test]
+    fn kv_pool_auto_size_covers_the_server_cap() {
+        let c = RuntimeConfig::default(); // max_batch 4, 16-token blocks
+        assert_eq!(c.kv_pool_blocks_effective(), 4 * (256 + 64));
+        let explicit =
+            RuntimeConfig { kv_pool_blocks: 12, ..Default::default() };
+        assert_eq!(explicit.kv_pool_blocks_effective(), 12);
+    }
+
+    #[test]
     fn json_overrides() {
         let mut c = RuntimeConfig::default();
         let j = Json::parse(
             r#"{"offload_ffn_frac": 0.75, "pipeline": "matrix",
-                "xpu": "cpu", "max_batch": 2, "bundling": false}"#,
+                "xpu": "cpu", "max_batch": 2, "bundling": false,
+                "kv_block_tokens": 8, "kv_pool_blocks": 40}"#,
         )
         .unwrap();
         c.apply_json(&j);
@@ -216,5 +255,7 @@ mod tests {
         assert_eq!(c.xpu, XpuMode::CpuOnly);
         assert_eq!(c.max_batch, 2);
         assert!(!c.bundling);
+        assert_eq!(c.kv_block_tokens, 8);
+        assert_eq!(c.kv_pool_blocks, 40);
     }
 }

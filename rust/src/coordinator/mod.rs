@@ -29,6 +29,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, ensure, Result};
 
 use crate::engine::real::{RealEngine, RealEngineOptions};
+use crate::kv::KvPoolError;
 use crate::metrics::ServingMetrics;
 use crate::model::ModelDims;
 use crate::serve::{
@@ -89,6 +90,10 @@ pub struct ServeReport {
     pub wall_s: f64,
     pub step_latency_ms: Samples,
     pub serving: ServingMetrics,
+    /// Admissions deferred because the KV pool could not host the
+    /// request (continuous batching waits for a retire to free blocks —
+    /// admission consults pool pressure, not slot count alone).
+    pub kv_admission_stalls: usize,
 }
 
 impl ServeReport {
@@ -271,10 +276,14 @@ impl<E: Engine> Coordinator<E> {
         let mut active: Vec<Option<ActiveSeq>> = (0..cap).map(|_| None).collect();
         let mut live = 0usize;
         let mut idle_steps = 0usize;
+        // set when the engine refused an admission for lack of KV pool
+        // blocks; cleared by the next retire (which frees blocks)
+        let mut pool_blocked = false;
         while live > 0 || !queue.is_empty() {
             // admission at decode-step granularity: refill every free slot
-            // with requests that have arrived (queue is in submit order)
-            while live < cap {
+            // with requests that have arrived (queue is in submit order) —
+            // gated on pool pressure as well as slot availability
+            while live < cap && !pool_blocked {
                 let arrived = queue
                     .front()
                     .is_some_and(|r| r.submit_s <= t0.elapsed().as_secs_f64());
@@ -285,7 +294,28 @@ impl<E: Engine> Coordinator<E> {
                 let queue_s =
                     (t0.elapsed().as_secs_f64() - req.submit_s).max(0.0);
                 let admit_t0 = Instant::now();
-                let adm = self.engine.admit(req)?;
+                let adm = match self.engine.admit(req) {
+                    Ok(adm) => adm,
+                    Err(e) if e.downcast_ref::<KvPoolError>().is_some() => {
+                        // KV pool pressure: with sequences in flight this
+                        // is transient — requeue and retry after the next
+                        // retire. With nothing in flight it can never
+                        // resolve (the request alone exceeds the pool);
+                        // keep the typed error downcastable so the server
+                        // can answer the client instead of dropping it.
+                        if live == 0 {
+                            return Err(e.context(format!(
+                                "request {} cannot be admitted",
+                                req.id
+                            )));
+                        }
+                        queue.push_front(req);
+                        report.kv_admission_stalls += 1;
+                        pool_blocked = true;
+                        break;
+                    }
+                    Err(e) => return Err(e),
+                };
                 let prefill_s = admit_t0.elapsed().as_secs_f64();
                 report.prefill_tokens += req.prompt.len();
                 let mut seq = ActiveSeq::new(
@@ -357,6 +387,9 @@ impl<E: Engine> Coordinator<E> {
                     seq.mark_done();
                     live -= 1;
                     self.engine.retire(slot)?;
+                    // the retire returned blocks to the KV pool: deferred
+                    // admissions are worth retrying
+                    pool_blocked = false;
                     close_session(&mut report, seq, FinishReason::Length);
                 }
             }
@@ -673,6 +706,55 @@ mod tests {
         }
         assert_eq!(report.decode_tokens, 0);
         assert_eq!(c.engine.stats().steps, 0);
+    }
+
+    #[test]
+    fn continuous_defers_admission_under_pool_pressure() {
+        // 3 slots, but the pool only fits ~2 worst-case sequences:
+        // admission must gate on blocks-free (not slot count), defer the
+        // overflow requests, and still complete everything untruncated
+        let cfg = RuntimeConfig {
+            max_batch: 3,
+            kv_block_tokens: 4,
+            kv_pool_blocks: 6,
+            ..Default::default()
+        };
+        let engine = SimEngine::new(oneplus_12(), bamboo_7b(), cfg);
+        let mut c = Coordinator::new(engine);
+        let requests: Vec<InferenceRequest> = (0..6)
+            .map(|id| {
+                InferenceRequest::new(id, vec![id as u32, 1, 2, 3], 8)
+            })
+            .collect();
+        let report = c.serve_collect(&requests).unwrap();
+        assert_eq!(report.sessions.len(), 6);
+        for s in &report.sessions {
+            assert_eq!(s.tokens.len(), 8, "request {} truncated", s.id);
+        }
+        assert!(
+            report.kv_admission_stalls > 0,
+            "pool pressure never deferred an admission"
+        );
+        let pool = c.engine.kv_pool().unwrap();
+        assert_eq!(pool.free_blocks, 6, "leaked pool blocks");
+        assert!(pool.alloc_stalls > 0);
+    }
+
+    #[test]
+    fn oversized_request_fails_fast_on_an_idle_pool() {
+        // a request whose worst case exceeds the whole pool can never be
+        // admitted: the coordinator reports it instead of spinning
+        let cfg = RuntimeConfig {
+            max_batch: 2,
+            kv_block_tokens: 4,
+            kv_pool_blocks: 2,
+            ..Default::default()
+        };
+        let engine = SimEngine::new(oneplus_12(), bamboo_7b(), cfg);
+        let mut c = Coordinator::new(engine);
+        let big = InferenceRequest::new(0, vec![1; 16], 4);
+        let err = c.serve_collect(&[big]).unwrap_err();
+        assert!(format!("{err:#}").contains("cannot be admitted"), "{err:#}");
     }
 
     #[test]

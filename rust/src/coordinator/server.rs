@@ -22,8 +22,17 @@
 //!   → {"cmd": "stats"}
 //!   ← {"served": N, "decode_tps": .., "cache_hit_rate": ..,
 //!      "queue_ms": {"p50": .., "p90": .., "p99": ..},
-//!      "prefill_ms": {..}, "decode_ms": {..}, "ttft_ms": {..}}
+//!      "prefill_ms": {..}, "decode_ms": {..}, "ttft_ms": {..},
+//!      "kv": {"blocks_total": .., "blocks_free": .., "occupancy": ..,
+//!             "share_rate": .., "shared_blocks": .., "alloc_stalls": ..,
+//!             "cow_copies": ..}}       (engines with a paged KV pool)
 //!   → {"cmd": "shutdown"}   ← {"ok": true}
+//!
+//! Malformed input never silently drops the connection: every bad line —
+//! unparseable JSON, a non-object request, a wrong-typed field, an
+//! unknown command — gets a structured one-line reply
+//! `{"error": "...", "code": "bad_json" | "bad_request"}` and the
+//! connection stays open for the next line.
 //!
 //! Single-threaded accept loop (mobile serving is one-app-one-model;
 //! concurrency lives in the engine's slots, not in connection handling).
@@ -38,6 +47,7 @@ use crate::config::{DeviceConfig, ModelSpec, RuntimeConfig};
 use crate::coordinator::{Coordinator, RealEnginePool, ScheduleMode};
 use crate::engine::real::{RealEngine, RealEngineOptions};
 use crate::engine::SimEngine;
+use crate::kv::KvPoolError;
 use crate::metrics::ServingMetrics;
 use crate::serve::{Engine, FnSink, InferenceRequest, Session, TokenEvent};
 use crate::tokenizer::Tokenizer;
@@ -77,6 +87,12 @@ pub fn load_tokenizer(artifacts: &Path) -> Tokenizer {
             Tokenizer::train(FALLBACK_CORPUS, 64)
         }
     }
+}
+
+/// One-line structured error reply: the server answers malformed input
+/// instead of silently dropping it (or the connection).
+fn error_json(msg: &str, code: &str) -> Json {
+    json::obj(vec![("error", json::s(msg)), ("code", json::s(code))])
 }
 
 pub struct Server<E: Engine> {
@@ -183,29 +199,72 @@ impl<E: Engine> Server<E> {
         let mut writer = stream.try_clone()?;
         let reader = BufReader::new(stream);
         for line in reader.lines() {
-            let line = line?;
+            let line = match line {
+                Ok(l) => l,
+                Err(e) => {
+                    // a broken read (e.g. invalid UTF-8 on the wire) gets
+                    // a structured goodbye instead of a silent hang-up
+                    let _ = writeln!(
+                        writer,
+                        "{}",
+                        error_json(&format!("read error: {e}"), "bad_request")
+                    );
+                    return Ok(false);
+                }
+            };
             if line.trim().is_empty() {
                 continue;
             }
             let req = match Json::parse(&line) {
                 Ok(j) => j,
                 Err(e) => {
-                    writeln!(writer, "{}", json::obj(vec![
-                        ("error", json::s(&format!("bad json: {e}"))),
-                    ]))?;
+                    writeln!(
+                        writer,
+                        "{}",
+                        error_json(&format!("bad json: {e}"), "bad_json")
+                    )?;
                     continue;
                 }
             };
-            match req.get("cmd").as_str() {
-                Some("shutdown") => {
+            if req.as_obj().is_none() {
+                writeln!(
+                    writer,
+                    "{}",
+                    error_json("request must be a JSON object", "bad_request")
+                )?;
+                continue;
+            }
+            match (req.get("cmd").as_str(), req.get("cmd") != &Json::Null) {
+                (Some("shutdown"), _) => {
                     writeln!(writer, "{}", json::obj(vec![("ok", Json::Bool(true))]))?;
                     return Ok(true);
                 }
-                Some("stats") => {
+                (Some("stats"), _) => {
                     let stats = self.stats_json();
                     writeln!(writer, "{stats}")?;
                 }
-                _ => self.complete(&req, &mut writer)?,
+                (Some(other), _) => {
+                    writeln!(
+                        writer,
+                        "{}",
+                        error_json(
+                            &format!(
+                                "unknown cmd '{other}' (expected stats \
+                                 or shutdown)"
+                            ),
+                            "bad_request",
+                        )
+                    )?;
+                }
+                (None, true) => {
+                    // "cmd" present but not a string
+                    writeln!(
+                        writer,
+                        "{}",
+                        error_json("cmd must be a string", "bad_request")
+                    )?;
+                }
+                (None, false) => self.complete(&req, &mut writer)?,
             }
         }
         Ok(false)
@@ -225,7 +284,7 @@ impl<E: Engine> Server<E> {
                 ("p99", json::num(p(s, 99.0))),
             ])
         }
-        json::obj(vec![
+        let mut fields = vec![
             ("served", json::num(self.served as f64)),
             ("decode_tps", json::num(engine.decode_tps())),
             ("cache_hit_rate", json::num(engine.cache_hit_rate())),
@@ -233,7 +292,24 @@ impl<E: Engine> Server<E> {
             ("prefill_ms", pct(&mut self.serving.prefill_ms)),
             ("decode_ms", pct(&mut self.serving.decode_ms)),
             ("ttft_ms", pct(&mut self.serving.ttft_ms)),
-        ])
+        ];
+        // paged-KV pool occupancy / prefix-share rate / allocation stalls
+        if let Some(p) = self.coord.engine.kv_pool() {
+            fields.push((
+                "kv",
+                json::obj(vec![
+                    ("block_tokens", json::num(p.block_tokens as f64)),
+                    ("blocks_total", json::num(p.total_blocks as f64)),
+                    ("blocks_free", json::num(p.free_blocks as f64)),
+                    ("occupancy", json::num(p.occupancy())),
+                    ("share_rate", json::num(p.share_rate())),
+                    ("shared_blocks", json::num(p.shared_blocks as f64)),
+                    ("alloc_stalls", json::num(p.alloc_stalls as f64)),
+                    ("cow_copies", json::num(p.cow_copies as f64)),
+                ]),
+            ));
+        }
+        json::obj(fields)
     }
 
     fn session_json(&self, sess: &Session, event: Option<&str>) -> Json {
@@ -257,16 +333,52 @@ impl<E: Engine> Server<E> {
     }
 
     fn complete(&mut self, req: &Json, writer: &mut TcpStream) -> Result<()> {
-        let prompt_text = req.get("prompt").as_str().unwrap_or("hello");
+        let prompt_text = match req.get("prompt").as_str() {
+            Some(p) => p,
+            None => {
+                let msg = if req.get("prompt") == &Json::Null {
+                    "missing field 'prompt' (string)"
+                } else {
+                    "prompt must be a string"
+                };
+                writeln!(writer, "{}", error_json(msg, "bad_request"))?;
+                return Ok(());
+            }
+        };
         // hard server-side cap: the sim engine has no context window, so
         // an unbounded client max_tokens would hold the single-threaded
         // accept loop forever
-        let max_tokens = req
-            .get("max_tokens")
-            .as_usize()
-            .unwrap_or(16)
-            .clamp(1, MAX_TOKENS_CAP);
-        let stream = req.get("stream").as_bool().unwrap_or(false);
+        let max_tokens = match req.get("max_tokens") {
+            Json::Null => 16,
+            v => match v.as_usize() {
+                Some(n) => n.clamp(1, MAX_TOKENS_CAP),
+                None => {
+                    writeln!(
+                        writer,
+                        "{}",
+                        error_json(
+                            "max_tokens must be a non-negative integer",
+                            "bad_request",
+                        )
+                    )?;
+                    return Ok(());
+                }
+            },
+        };
+        let stream = match req.get("stream") {
+            Json::Null => false,
+            v => match v.as_bool() {
+                Some(b) => b,
+                None => {
+                    writeln!(
+                        writer,
+                        "{}",
+                        error_json("stream must be a boolean", "bad_request")
+                    )?;
+                    return Ok(());
+                }
+            },
+        };
         let id = self.next_id;
         self.next_id += 1;
         let vocab = self.coord.engine.vocab();
@@ -274,7 +386,7 @@ impl<E: Engine> Server<E> {
         let mut ireq = InferenceRequest::new(id, prompt_ids, max_tokens);
         ireq.params.seed = id;
         let requests = [ireq];
-        let report = if stream {
+        let result = if stream {
             let tokenizer = &self.tokenizer;
             let mut w = writer.try_clone()?;
             let mut sink = FnSink(move |ev: &TokenEvent| -> Result<()> {
@@ -291,9 +403,27 @@ impl<E: Engine> Server<E> {
                 writeln!(w, "{}", json::obj(fields))?;
                 Ok(())
             });
-            self.coord.serve(&requests, &mut sink)?
+            self.coord.serve(&requests, &mut sink)
         } else {
-            self.coord.serve_collect(&requests)?
+            self.coord.serve_collect(&requests)
+        };
+        let report = match result {
+            Ok(r) => r,
+            // a request whose KV demand exceeds the whole pool can never
+            // be served: tell the client (structured, connection kept)
+            // instead of tearing the connection down
+            Err(e) if e.downcast_ref::<KvPoolError>().is_some() => {
+                writeln!(
+                    writer,
+                    "{}",
+                    error_json(
+                        &format!("cannot serve request: {e:#}"),
+                        "bad_request",
+                    )
+                )?;
+                return Ok(());
+            }
+            Err(e) => return Err(e),
         };
         let sess = report.session(id).context("request produced no session")?;
         self.served += 1;
@@ -403,6 +533,98 @@ mod tests {
         });
         assert!(responses[0].get("error").as_str().is_some());
         assert_eq!(responses[1].get("ok"), &Json::Bool(true));
+    }
+
+    #[test]
+    fn malformed_requests_get_structured_errors() {
+        let responses = run_sim_client_server(|addr| {
+            let mut conn = std::net::TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let r1 = chat(&mut conn, &mut reader, "[1, 2]"); // non-object
+            let r2 = chat(&mut conn, &mut reader, r#"{"cmd": "frobnicate"}"#);
+            let r3 = chat(&mut conn, &mut reader, r#"{"prompt": 5}"#);
+            let r4 = chat(&mut conn, &mut reader, r#"{"max_tokens": 4}"#);
+            let r5 = chat(&mut conn, &mut reader,
+                          r#"{"prompt": "x", "max_tokens": "lots"}"#);
+            let r6 = chat(&mut conn, &mut reader,
+                          r#"{"prompt": "x", "stream": "yes"}"#);
+            // the connection survived six bad lines: a real request works
+            let r7 = chat(&mut conn, &mut reader,
+                          r#"{"prompt": "ok", "max_tokens": 2}"#);
+            let r8 = chat(&mut conn, &mut reader, r#"{"cmd": "shutdown"}"#);
+            vec![r1, r2, r3, r4, r5, r6, r7, r8]
+        });
+        for (i, r) in responses[..6].iter().enumerate() {
+            assert!(
+                r.get("error").as_str().is_some(),
+                "line {i} got no structured error: {r:?}"
+            );
+            assert_eq!(r.get("code").as_str(), Some("bad_request"), "line {i}");
+        }
+        assert_eq!(responses[6].get("tokens").as_arr().unwrap().len(), 2);
+        assert_eq!(responses[7].get("ok"), &Json::Bool(true));
+    }
+
+    #[test]
+    fn stats_reports_kv_pool_occupancy() {
+        let responses = run_sim_client_server(|addr| {
+            let mut conn = std::net::TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let r1 = chat(&mut conn, &mut reader,
+                          r#"{"prompt": "neuron clusters", "max_tokens": 3}"#);
+            let r2 = chat(&mut conn, &mut reader, r#"{"cmd": "stats"}"#);
+            let r3 = chat(&mut conn, &mut reader, r#"{"cmd": "shutdown"}"#);
+            vec![r1, r2, r3]
+        });
+        let kv = responses[1].get("kv");
+        let total = kv.get("blocks_total").as_f64().unwrap();
+        assert!(total > 0.0);
+        // the request completed and retired: its blocks went back
+        assert_eq!(kv.get("blocks_free").as_f64(), Some(total));
+        assert_eq!(kv.get("occupancy").as_f64(), Some(0.0));
+        assert!(kv.get("share_rate").as_f64().unwrap() >= 0.0);
+        assert_eq!(kv.get("alloc_stalls").as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn unservable_request_gets_error_line_not_a_dropped_connection() {
+        // a pool too small for the request's worst case: the server must
+        // answer with a structured error and keep the connection serving
+        let cfg = RuntimeConfig {
+            max_batch: 2,
+            kv_block_tokens: 4,
+            kv_pool_blocks: 2,
+            ..Default::default()
+        };
+        let mut server = Server::sim(oneplus_12(), bamboo_7b(), cfg);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let client_handle = std::thread::spawn(move || {
+            let addr = rx.recv().unwrap();
+            let mut conn = std::net::TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            // demand = blocks_for(1 + 63) = 16 blocks > the 2-block pool
+            let r1 = chat(&mut conn, &mut reader,
+                          r#"{"prompt": "x", "max_tokens": 64}"#);
+            // connection survived: a pool-sized request still serves
+            let r2 = chat(&mut conn, &mut reader,
+                          r#"{"prompt": "x", "max_tokens": 2}"#);
+            let r3 = chat(&mut conn, &mut reader, r#"{"cmd": "shutdown"}"#);
+            vec![r1, r2, r3]
+        });
+        server.run("127.0.0.1:0", Some(tx)).unwrap();
+        let responses = client_handle.join().unwrap();
+        assert_eq!(responses[0].get("code").as_str(), Some("bad_request"));
+        assert!(
+            responses[0]
+                .get("error")
+                .as_str()
+                .unwrap()
+                .contains("cannot be admitted"),
+            "{:?}",
+            responses[0]
+        );
+        assert_eq!(responses[1].get("tokens").as_arr().unwrap().len(), 2);
+        assert_eq!(responses[2].get("ok"), &Json::Bool(true));
     }
 
     #[test]

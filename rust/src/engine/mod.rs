@@ -26,6 +26,7 @@ use crate::cache::{Access, MemoryBudget, NeuronCache};
 use crate::config::{
     CoreClass, DeviceConfig, ModelSpec, PipelineMode, RuntimeConfig, XpuMode,
 };
+use crate::kv::{pool_err, KvLease, KvPool, KvPoolStats};
 use crate::metrics::{RunMetrics, StepMetrics};
 use crate::pipeline::{schedule, ClusterTask};
 use crate::planner::{Plan, Planner};
@@ -59,6 +60,11 @@ pub struct SimEngine {
     /// serving slots for the [`Engine`] trait (one per concurrent
     /// sequence, capacity = cfg.max_batch)
     slots: Vec<Option<SimSlot>>,
+    /// Modeled paged-KV block pool: admissions lease blocks, decode steps
+    /// append, retire releases — so pool occupancy (and admission under
+    /// pool pressure) behaves exactly as on the real engine and scheduler
+    /// policies stay equivalence-testable against it.
+    kv_pool: KvPool,
     sv_prefill_s: f64,
     sv_decode_s: f64,
     sv_decode_tokens: u64,
@@ -67,10 +73,16 @@ pub struct SimEngine {
 /// Per-slot state of an admitted sequence on the simulation engine: a
 /// deterministic token stream keyed by (request id, sampling seed), so
 /// the synthesized output is independent of batch composition and
-/// scheduler — which makes continuous-vs-lockstep equivalence testable.
+/// scheduler — which makes continuous-vs-lockstep equivalence testable —
+/// plus the slot's KV lease on the shared block pool.
 #[derive(Debug, Clone)]
 struct SimSlot {
     rng: Rng,
+    lease: KvLease,
+    /// Worst-case pool blocks this sequence may reach
+    /// (`prompt + max_tokens - 1` tokens); admission reserves the
+    /// difference so in-flight decodes never exhaust the pool mid-step.
+    demand_blocks: usize,
 }
 
 impl SimEngine {
@@ -101,6 +113,11 @@ impl SimEngine {
         let ufs = UfsModel::new(dev.ufs.clone());
         let rng = Rng::new(cfg.seed.wrapping_mul(0x9E37_79B9));
         let capacity = cfg.max_batch.max(1);
+        let kv_pool = KvPool::new(
+            cfg.kv_pool_blocks_effective(),
+            cfg.kv_block_tokens.max(1),
+            0,
+        );
         SimEngine {
             dev,
             spec,
@@ -119,6 +136,7 @@ impl SimEngine {
             cur_hot_frac: hot0,
             last_batch: 0,
             slots: vec![None; capacity],
+            kv_pool,
             sv_prefill_s: 0.0,
             sv_decode_s: 0.0,
             sv_decode_tokens: 0,
@@ -573,13 +591,32 @@ impl Engine for SimEngine {
             .ok_or_else(|| {
                 anyhow!("engine full: all {} slots occupied", self.slots.len())
             })?;
+        // lease the prompt's KV blocks from the shared pool, reserving
+        // every in-flight sequence's worst-case growth (and this one's)
+        // so admission under pool pressure fails with a typed, deferrable
+        // error instead of letting a later decode step exhaust the pool.
+        // The arithmetic is KvPool::admit_reserve — the same the real
+        // engine uses, which keeps scheduler behavior under memory
+        // pressure identical across backends.
+        let (demand_blocks, reserve) = self.kv_pool.admit_reserve(
+            req.prompt.len(),
+            req.params.max_tokens,
+            None,
+            self.slots
+                .iter()
+                .flatten()
+                .map(|s| (s.demand_blocks, s.lease.blocks().len())),
+        );
+        let lease =
+            self.kv_pool.admit(&req.prompt, reserve).map_err(pool_err)?;
+        let info = lease.info();
         // modeled prefill cost (NPU-centric, async prefetch, §4.1.1)
         let pre = self.prefill_run(req.prompt.len().max(1), true);
         self.sv_prefill_s += pre.total_s;
         let mut rng = self.slot_stream(req);
         let first = rng.below(self.spec.vocab) as u32;
-        self.slots[slot] = Some(SimSlot { rng });
-        Ok(Admission { slot, first_token: Some(first) })
+        self.slots[slot] = Some(SimSlot { rng, lease, demand_blocks });
+        Ok(Admission { slot, first_token: Some(first), lease: Some(info) })
     }
 
     fn step(&mut self) -> Result<Vec<(SlotId, u32)>> {
@@ -591,6 +628,31 @@ impl Engine for SimEngine {
             .collect();
         if occupied.is_empty() {
             return Ok(Vec::new());
+        }
+        // each decoded token's KV entry occupies one more pool position
+        // (allocating a block at boundaries). Appends run before the
+        // modeled decode and roll back on a mid-loop failure, so a
+        // pool-exhausted step leaves the engine (and its metrics) intact.
+        let mut appended: Vec<SlotId> = Vec::new();
+        let mut append_err = None;
+        for &slot in &occupied {
+            if let Some(s) = self.slots[slot].as_mut() {
+                match self.kv_pool.append(&mut s.lease) {
+                    Ok(_) => appended.push(slot),
+                    Err(e) => {
+                        append_err = Some(e);
+                        break;
+                    }
+                }
+            }
+        }
+        if let Some(e) = append_err {
+            for slot in appended {
+                if let Some(s) = self.slots[slot].as_mut() {
+                    self.kv_pool.unappend(&mut s.lease);
+                }
+            }
+            return Err(pool_err(e));
         }
         let sm = self.decode_step(occupied.len());
         self.metrics.push_step(&sm);
@@ -612,7 +674,9 @@ impl Engine for SimEngine {
             "slot {slot} out of range (capacity {})",
             self.slots.len()
         );
-        self.slots[slot] = None;
+        if let Some(s) = self.slots[slot].take() {
+            self.kv_pool.release(s.lease);
+        }
         Ok(())
     }
 
@@ -627,6 +691,10 @@ impl Engine for SimEngine {
             cache_hits: self.metrics.cache_hits,
             cache_misses: self.metrics.cache_misses,
         }
+    }
+
+    fn kv_pool(&self) -> Option<KvPoolStats> {
+        Some(self.kv_pool.stats())
     }
 }
 
@@ -795,6 +863,60 @@ mod tests {
         assert_eq!(st.decode_tokens, 3);
         assert!(st.decode_s > 0.0 && st.prefill_s > 0.0);
         assert!(e.retire(9).is_err());
+    }
+
+    #[test]
+    fn sim_models_pool_occupancy_and_prefix_sharing() {
+        use crate::serve::InferenceRequest;
+        let cfg = RuntimeConfig {
+            max_batch: 2,
+            kv_block_tokens: 4,
+            kv_pool_blocks: 16,
+            ..Default::default()
+        };
+        let mut e = SimEngine::new(oneplus_12(), bamboo_7b(), cfg);
+        let prompt: Vec<u32> = (0..8).collect();
+        let a = e.admit(&InferenceRequest::new(0, prompt.clone(), 4)).unwrap();
+        let p0 = e.kv_pool().unwrap();
+        assert_eq!(p0.total_blocks, 16);
+        assert_eq!(p0.free_blocks, 14); // 8 prompt tokens = 2 blocks
+        assert_eq!(a.lease.unwrap().blocks, 2);
+        // identical prompt: both full blocks are shared, zero fresh cost
+        let b = e.admit(&InferenceRequest::new(1, prompt, 4)).unwrap();
+        assert_eq!(b.lease.unwrap().shared_blocks, 2);
+        assert_eq!(e.kv_pool().unwrap().free_blocks, 14);
+        assert!(e.kv_pool().unwrap().share_rate() > 0.0);
+        // decode steps grow each lease into a fresh private block
+        e.step().unwrap();
+        assert_eq!(e.kv_pool().unwrap().free_blocks, 12);
+        // retire releases blocks; the shared prefix survives the first
+        e.retire(a.slot).unwrap();
+        assert_eq!(e.kv_pool().unwrap().free_blocks, 13);
+        e.retire(b.slot).unwrap();
+        assert_eq!(e.kv_pool().unwrap().free_blocks, 16);
+    }
+
+    #[test]
+    fn sim_admission_under_pool_pressure_is_typed() {
+        use crate::kv::KvPoolError;
+        use crate::serve::InferenceRequest;
+        let cfg = RuntimeConfig {
+            max_batch: 2,
+            kv_block_tokens: 4,
+            kv_pool_blocks: 3,
+            ..Default::default()
+        };
+        let mut e = SimEngine::new(oneplus_12(), bamboo_7b(), cfg);
+        let a = e.admit(&InferenceRequest::new(0, vec![1, 2, 3, 4, 5], 4)).unwrap();
+        // a slot is free, but the pool cannot host the prompt plus the
+        // in-flight sequence's growth reserve → typed, deferrable error
+        let err = e
+            .admit(&InferenceRequest::new(1, vec![7, 8, 9, 1, 2], 4))
+            .unwrap_err();
+        assert!(err.downcast_ref::<KvPoolError>().is_some(), "{err}");
+        assert!(e.kv_pool().unwrap().alloc_stalls > 0);
+        e.retire(a.slot).unwrap();
+        assert!(e.admit(&InferenceRequest::new(1, vec![7, 8, 9, 1, 2], 4)).is_ok());
     }
 
     #[test]

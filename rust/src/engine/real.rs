@@ -14,6 +14,11 @@
 //!   cluster pipeline (§4.3)          → IO thread streams missing bundles
 //!                                       over a channel while compute
 //!                                       drains hits, then arrivals
+//!   segmented cache granularity      → paged KV: sequences lease
+//!   (§4.2, applied to KV state)        fixed-size blocks from a shared
+//!                                       refcounted pool (KvPool), with
+//!                                       identical prompt prefixes
+//!                                       sharing physical blocks
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -23,6 +28,7 @@ use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::cache::{Access, NeuronCache};
 use crate::config::CoreClass;
+use crate::kv::{pool_err, KvLease, KvPool, KvPoolStats};
 use crate::metrics::{RunMetrics, StepMetrics};
 use crate::model::{ModelDims, Predictor, WeightFile, Weights};
 use crate::runtime::{Runtime, Tensor, TensorData};
@@ -45,6 +51,12 @@ pub struct RealEngineOptions {
     /// Predictor sketch rank.
     pub predictor_rank: usize,
     pub seed: u64,
+    /// Leasable KV pool blocks (0 = every block the compiled pool has,
+    /// `dims.kv_blocks - 1`). Smaller values model tighter memory: the
+    /// engine then serves more concurrency than a dense per-slot layout
+    /// of the same footprint could, stalling admissions instead of
+    /// over-committing.
+    pub kv_blocks: usize,
 }
 
 impl Default for RealEngineOptions {
@@ -56,6 +68,7 @@ impl Default for RealEngineOptions {
             exact_cold: false,
             predictor_rank: 64,
             seed: 42,
+            kv_blocks: 0,
         }
     }
 }
@@ -105,16 +118,30 @@ pub struct RealEngine {
     attn_lits: Vec<Vec<xla::Literal>>,
     hot_lits: HashMap<(usize, usize), Vec<xla::Literal>>,
     lm_lits: Vec<xla::Literal>,
-    /// KV caches per layer: [B, S, KVH, DH]; the host copy feeds prefill
-    /// installs, the literals feed the decode loop output→input.
+    /// Paged KV pools per layer: `[kv_blocks, kv_block, KVH, DH]` — one
+    /// shared block pool instead of dense per-row regions. The host copy
+    /// feeds prefill installs, the literals feed the decode loop
+    /// output→input.
     pub(crate) kv: Vec<(Tensor, Tensor)>,
     kv_lits: Vec<(xla::Literal, xla::Literal)>,
+    /// Block-pool bookkeeping: free list, refcounts, prefix-sharing index.
+    pool: KvPool,
+    /// Per batch row: the lease mapping that row's logical positions to
+    /// physical pool blocks (the row of the decode graphs' block table).
+    /// Rows without a lease ride along pinned to the reserved scratch
+    /// block and never advance.
+    leases: Vec<Option<KvLease>>,
+    /// Per row: worst-case blocks the admitted sequence may reach
+    /// (`prompt + max_tokens - 1` tokens, capped by the window).
+    /// Admission reserves the un-grown remainder so in-flight decodes
+    /// never exhaust the pool mid-step. 0 for vacant / direct-use rows.
+    slot_demand: Vec<usize>,
     pub batch: usize,
-    /// Per-row KV position: how many cache entries row `r` has written.
-    /// Rows are independent sequences — the decode graphs take the whole
-    /// vector, so each row ropes, inserts and masks at its own position
-    /// (no shared decode clock, no zero-padded history for rows admitted
-    /// mid-flight).
+    /// Per-row KV position: how many cache entries row `r` has written
+    /// (mirrors its lease's token count). Rows are independent sequences
+    /// — the decode graphs take the whole vector, so each row ropes,
+    /// inserts and masks at its own position (no shared decode clock, no
+    /// zero-padded history for rows admitted mid-flight).
     pub row_pos: Vec<usize>,
     pub opts: RealEngineOptions,
     pub metrics: RunMetrics,
@@ -145,19 +172,32 @@ impl RealEngine {
             "batch {batch} has no compiled graph (available: {:?})",
             dims.batches
         );
-        // artifact-ABI guard: the decode graphs take a [B] per-row `pos`
-        // vector; artifacts emitted by an older compiler declare a scalar
-        // and would fail opaquely mid-serve — catch that at load time
+        // artifact-ABI guard: the paged decode graphs end with
+        // (k_pool [NB,BS,KVH,DH], v_pool, block_table [B,M], pos [B]);
+        // artifacts emitted by an older compiler declare dense per-row
+        // caches (or a scalar pos) and would fail opaquely mid-serve —
+        // reject non-paged artifacts at load time
         let attn = rt.graph(&Runtime::decode_attn_name(batch))?;
+        let n_args = attn.args.len();
         let pos_ok = attn
             .args
             .last()
             .is_some_and(|a| a.shape.len() == 1 && a.shape[0] == batch);
+        let table_ok = n_args >= 2
+            && attn.args[n_args - 2].shape
+                == vec![batch, dims.seq_max / dims.kv_block];
+        let pool_ok = n_args >= 4
+            && attn.args[n_args - 4].shape.first() == Some(&dims.kv_blocks)
+            && attn.args[n_args - 4].shape.get(1) == Some(&dims.kv_block);
         ensure!(
-            pos_ok,
-            "artifacts are stale: decode graphs predate per-row KV \
-             positions (expected pos arg of shape [{batch}]) — regenerate \
-             with `python -m compile.aot`"
+            pos_ok && table_ok && pool_ok,
+            "artifacts are stale: decode graphs predate the paged-KV ABI \
+             (expected trailing args k_pool/v_pool [{}, {}, ..], \
+             block_table [{batch}, {}], pos [{batch}]) — regenerate with \
+             `python -m compile.aot`",
+            dims.kv_blocks,
+            dims.kv_block,
+            dims.seq_max / dims.kv_block,
         );
         let weights = Weights::generate(&dims, opts.seed);
         if !weight_path.exists() {
@@ -180,10 +220,24 @@ impl RealEngine {
             dims.layers, dims.inter, hot_k0, opts.cold_cache_neurons);
         let kv = (0..dims.layers)
             .map(|_| {
-                let shape = vec![batch, dims.seq_max, dims.kv_heads, dims.head_dim()];
+                let shape = vec![
+                    dims.kv_blocks,
+                    dims.kv_block,
+                    dims.kv_heads,
+                    dims.head_dim(),
+                ];
                 (Tensor::zeros(shape.clone()), Tensor::zeros(shape))
             })
             .collect();
+        // leasable blocks: the compiled pool minus the reserved scratch
+        // block, optionally capped to model a tighter memory budget
+        let device_blocks = dims.kv_blocks - 1;
+        let leasable = if opts.kv_blocks > 0 {
+            opts.kv_blocks.min(device_blocks)
+        } else {
+            device_blocks
+        };
+        let pool = KvPool::new(leasable, dims.kv_block, dims.max_blocks());
         let mut engine = RealEngine {
             rt,
             dims,
@@ -199,6 +253,9 @@ impl RealEngine {
             lm_lits: Vec::new(),
             kv,
             kv_lits: Vec::new(),
+            pool,
+            leases: vec![None; batch],
+            slot_demand: vec![0; batch],
             batch,
             row_pos: vec![0; batch],
             opts,
@@ -291,17 +348,113 @@ impl RealEngine {
         Ok(())
     }
 
-    /// Reset sequence state (KV caches + every row position) for a new
-    /// batch group. Errors propagate (literal re-encoding can fail) —
-    /// this sits on the serve path, so it must not panic.
+    /// Reset sequence state (every lease, the KV pool contents, and every
+    /// row position) for a new batch group. Errors propagate (literal
+    /// re-encoding can fail) — this sits on the serve path, so it must
+    /// not panic.
     pub fn reset(&mut self) -> Result<()> {
+        for row in 0..self.batch {
+            self.release_lease(row);
+        }
         let d = &self.dims;
-        let shape = vec![self.batch, d.seq_max, d.kv_heads, d.head_dim()];
+        let shape = vec![d.kv_blocks, d.kv_block, d.kv_heads, d.head_dim()];
         for kv in self.kv.iter_mut() {
             *kv = (Tensor::zeros(shape.clone()), Tensor::zeros(shape.clone()));
         }
         self.row_pos = vec![0; self.batch];
         self.refresh_kv_literals()
+    }
+
+    /// Release row `row`'s lease back to the pool (no-op when vacant) and
+    /// rewind its position — the rolling-reclamation primitive. Block
+    /// contents need no zeroing: a reallocated block is either
+    /// overwritten by its new owner's prefill install or masked out by
+    /// the per-row valid length.
+    fn release_lease(&mut self, row: usize) {
+        if let Some(lease) = self.leases[row].take() {
+            self.pool.release(lease);
+        }
+        self.slot_demand[row] = 0;
+        self.row_pos[row] = 0;
+    }
+
+    /// Reservation arithmetic for admitting a sequence now (shared with
+    /// the simulation engine via [`KvPool::admit_reserve`], so scheduler
+    /// behavior under pool pressure is identical across backends).
+    /// Returns `(demand_blocks, reserve_blocks)`.
+    fn admit_reserve(
+        &self,
+        prompt_len: usize,
+        max_tokens: usize,
+    ) -> (usize, usize) {
+        self.pool.admit_reserve(
+            prompt_len,
+            max_tokens,
+            Some(self.dims.seq_max),
+            self.leases.iter().zip(&self.slot_demand).filter_map(
+                |(l, &d)| l.as_ref().map(|l| (d, l.blocks().len())),
+            ),
+        )
+    }
+
+    /// Lease the prompt's blocks for row `row`, sharing identical prompt
+    /// prefixes already resident in the pool. `reserve` keeps blocks free
+    /// for in-flight rows' growth.
+    fn lease_row(
+        &mut self,
+        row: usize,
+        prompt: &[u32],
+        reserve: usize,
+    ) -> Result<()> {
+        self.release_lease(row);
+        let lease =
+            self.pool.admit(prompt, reserve).map_err(pool_err)?;
+        self.row_pos[row] = 0;
+        self.leases[row] = Some(lease);
+        Ok(())
+    }
+
+    /// The decode graphs' block table: row r of `[B, max_blocks]`, the
+    /// lease's physical blocks padded with the reserved scratch block.
+    fn block_table(&self) -> Tensor {
+        let m = self.dims.max_blocks();
+        let mut table = vec![0i32; self.batch * m];
+        for (row, lease) in self.leases.iter().enumerate() {
+            if let Some(l) = lease {
+                for (j, &b) in l.blocks().iter().enumerate().take(m) {
+                    table[row * m + j] = b as i32;
+                }
+            }
+        }
+        Tensor::i32(vec![self.batch, m], table)
+    }
+
+    /// Copy one physical block's K/V contents to another in the host
+    /// pools (the copy-on-write detach of a shared block).
+    fn copy_block(&mut self, src: u32, dst: u32) {
+        if src == dst {
+            return;
+        }
+        let d = &self.dims;
+        let per_block = d.kv_block * d.kv_heads * d.head_dim();
+        let (s0, d0) = (src as usize * per_block, dst as usize * per_block);
+        for (kc, vc) in self.kv.iter_mut() {
+            for cache in [kc, vc] {
+                let data = match &mut cache.data {
+                    TensorData::F32(a) => a,
+                    _ => unreachable!(),
+                };
+                let (lo, hi) = (s0.min(d0), s0.max(d0));
+                let (head, tail) = data.split_at_mut(hi);
+                if s0 < d0 {
+                    tail[..per_block]
+                        .copy_from_slice(&head[lo..lo + per_block]);
+                } else {
+                    head[lo..lo + per_block]
+                        .copy_from_slice(&tail[..per_block]);
+                }
+            }
+        }
     }
 
     /// Current hot cluster size per layer.
@@ -427,17 +580,69 @@ impl RealEngine {
     }
 
     /// One decode step for the current batch; returns next token ids.
-    /// Every row decodes at (and then advances) its own KV position.
+    /// Rows holding a KV lease decode at (and then advance) their own
+    /// position, writing the new token's K/V through the block table;
+    /// rows without a lease ride along against the reserved scratch
+    /// block and never advance. An idle engine with no leases at all
+    /// (the direct-use path: benches, Best-of-N riders) bootstraps an
+    /// empty lease per row first.
     pub fn decode_step(&mut self, tokens: &[u32]) -> Result<Vec<u32>> {
         ensure!(tokens.len() == self.batch, "token count != batch");
-        for &p in &self.row_pos {
-            if p >= self.dims.seq_max {
+        if self.leases.iter().all(Option::is_none) {
+            for row in 0..self.batch {
+                self.lease_row(row, &[], 0)?;
+            }
+        }
+        for (lease, &p) in self.leases.iter().zip(&self.row_pos) {
+            if lease.is_some() && p >= self.dims.seq_max {
                 return Err(KvCapacityError {
                     requested: p + 1,
                     capacity: self.dims.seq_max,
                 }
                 .into());
             }
+        }
+        // grow every live lease to cover its next position (block alloc
+        // at boundaries; typed pool error under exhaustion). On a
+        // mid-loop failure the successful appends are reverted, so the
+        // lease lengths stay in lockstep with row_pos and the engine
+        // survives the failed step intact. CoW hops must copy
+        // device-side state, which lives in the literals — so sync host
+        // copies first, copy, and re-encode.
+        let mut cow_hops = Vec::new();
+        let mut appended: Vec<usize> = Vec::new();
+        let mut append_err = None;
+        for (row, lease) in self.leases.iter_mut().enumerate() {
+            let Some(lease) = lease else { continue };
+            match self.pool.append(lease) {
+                Ok(app) => {
+                    appended.push(row);
+                    if let Some(c) = app.cow {
+                        cow_hops.push(c);
+                    }
+                }
+                Err(e) => {
+                    append_err = Some(e);
+                    break;
+                }
+            }
+        }
+        // a detached (CoW) tail stays mapped even if this step is rolled
+        // back below, so its contents must be materialized either way
+        if !cow_hops.is_empty() {
+            self.sync_kv_host()?;
+            for c in cow_hops {
+                self.copy_block(c.src, c.dst);
+            }
+            self.refresh_kv_literals()?;
+        }
+        if let Some(e) = append_err {
+            for row in appended {
+                if let Some(lease) = self.leases[row].as_mut() {
+                    self.pool.unappend(lease);
+                }
+            }
+            return Err(pool_err(e));
         }
         let start = std::time::Instant::now();
         let mut step = StepMetrics::default();
@@ -459,14 +664,18 @@ impl RealEngine {
             self.row_pos.iter().map(|&p| p as i32).collect(),
         )
         .to_literal()?;
+        // logical→physical block table, one row per sequence
+        let table_lit = self.block_table().to_literal()?;
         for l in 0..d.layers {
-            // attention graph (NPU side): norm → qkv → rope → cache insert
-            // → GQA (Pallas kernel) → out-proj → residual + FFN input norm
+            // attention graph (NPU side): norm → qkv → rope → paged cache
+            // insert through the block table → gather → GQA (Pallas
+            // kernel) → out-proj → residual + FFN input norm
             let x_lit = Tensor::f32(vec![b, h], x.clone()).to_literal()?;
             let mut inputs: Vec<&xla::Literal> = vec![&x_lit];
             inputs.extend(self.attn_lits[l].iter());
             inputs.push(&self.kv_lits[l].0);
             inputs.push(&self.kv_lits[l].1);
+            inputs.push(&table_lit);
             inputs.push(&pos_lit);
             let npu_start = std::time::Instant::now();
             let mut out = self.rt.execute_raw(&attn_name, &inputs)?;
@@ -527,8 +736,12 @@ impl RealEngine {
                 best.0 as u32
             })
             .collect();
-        for p in self.row_pos.iter_mut() {
-            *p += 1;
+        // only leased rows wrote a KV entry this step; vacant rows stay
+        // pinned at position 0 against the scratch block
+        for (lease, p) in self.leases.iter().zip(self.row_pos.iter_mut()) {
+            if lease.is_some() {
+                *p += 1;
+            }
         }
         step.step_s = start.elapsed().as_secs_f64();
         self.metrics.push_step(&step);
@@ -537,22 +750,53 @@ impl RealEngine {
 
     /// Prefill one prompt (row `row` of the batch) through the per-layer
     /// prefill graphs, streaming offloaded weights with one sequential
-    /// read per layer (§4.1.1). Returns the first generated token and
-    /// leaves the engine ready to decode (KV literals rebuilt).
+    /// read per layer (§4.1.1). Leases the prompt's KV blocks from the
+    /// shared pool (sharing identical prefixes already resident), returns
+    /// the first generated token, and leaves the engine ready to decode
+    /// (KV literals rebuilt).
     pub fn prefill(&mut self, row: usize, prompt: &[u32]) -> Result<u32> {
-        let first = self.prefill_no_refresh(row, prompt)?;
-        self.refresh_kv_literals()?;
+        let first = self.prefill_with_reserve(row, prompt, 0)?;
+        if let Err(e) = self.refresh_kv_literals() {
+            // failed literal rebuild: the row will not decode, so its
+            // lease must not linger and grow
+            self.release_lease(row);
+            return Err(e);
+        }
         Ok(first)
     }
 
     /// Prefill without the trailing KV-literal rebuild — group admission
     /// installs several rows and rebuilds the literals once at the end
     /// (the rebuild re-encodes the whole cache, so per-row rebuilds in a
-    /// group are O(B²) wasted encoding).
-    fn prefill_no_refresh(&mut self, row: usize, prompt: &[u32]) -> Result<u32> {
+    /// group are O(B²) wasted encoding). `reserve` blocks stay free for
+    /// in-flight rows' growth when leasing the prompt.
+    fn prefill_with_reserve(
+        &mut self,
+        row: usize,
+        prompt: &[u32],
+        reserve: usize,
+    ) -> Result<u32> {
+        ensure!(row < self.batch, "row out of range");
+        // block allocation first: under pool pressure this fails with a
+        // typed, deferrable error before any compute or IO is spent
+        self.lease_row(row, prompt, reserve)?;
+        match self.prefill_leased(row, prompt) {
+            Ok(first) => Ok(first),
+            Err(e) => {
+                // do not leak the lease on a failed prefill: an orphan
+                // would hold (and keep growing) pool blocks on a row the
+                // serve loop considers vacant
+                self.release_lease(row);
+                Err(e)
+            }
+        }
+    }
+
+    /// The prefill body proper: runs the per-layer prefill graphs and
+    /// installs K/V into row `row`'s already-leased blocks.
+    fn prefill_leased(&mut self, row: usize, prompt: &[u32]) -> Result<u32> {
         let d = self.dims.clone();
         let t = d.prefill_chunk;
-        ensure!(row < self.batch, "row out of range");
         ensure!(!prompt.is_empty() && prompt.len() <= t,
                 "prompt must be 1..={t} tokens");
         let h = d.hidden;
@@ -612,9 +856,11 @@ impl RealEngine {
         Ok(self.cpu_lm_head_argmax(last))
     }
 
-    /// Copy `len` freshly-prefilled K/V token rows into batch row `row`
-    /// of the layer cache. Bounds are checked against both the cache row
-    /// (`seq_max`) and the prefill output itself, with a typed
+    /// Install `len` freshly-prefilled K/V token rows into batch row
+    /// `row`'s leased pool blocks, skipping the prefix-shared blocks
+    /// (their contents are already resident and identical — same tokens
+    /// at the same positions). Bounds are checked against the context
+    /// window, the prefill output, and the lease itself, with a typed
     /// [`KvCapacityError`] instead of silent truncation or a slice panic.
     fn install_kv(
         &mut self,
@@ -625,16 +871,28 @@ impl RealEngine {
         len: usize,
     ) -> std::result::Result<(), KvCapacityError> {
         let d = &self.dims;
-        let (s, kvh, dh) = (d.seq_max, d.kv_heads, d.head_dim());
-        let per_tok = kvh * dh;
-        // two distinct bounds, reported with the one that actually binds:
-        // the cache row (`seq_max`) and the prefill output's token rows
+        let (s, bt) = (d.seq_max, d.kv_block);
+        let per_tok = d.kv_heads * d.head_dim();
+        // distinct bounds, reported with the one that actually binds: the
+        // context window, the prefill output's token rows, and the lease
         if len > s {
             return Err(KvCapacityError { requested: len, capacity: s });
         }
         let emitted = (k.len() / per_tok).min(v.len() / per_tok);
         if len > emitted {
             return Err(KvCapacityError { requested: len, capacity: emitted });
+        }
+        let (blocks, shared_tokens) = match &self.leases[row] {
+            Some(l) => (l.blocks().to_vec(), l.shared_blocks() * bt),
+            None => {
+                return Err(KvCapacityError { requested: len, capacity: 0 })
+            }
+        };
+        if len > blocks.len() * bt {
+            return Err(KvCapacityError {
+                requested: len,
+                capacity: blocks.len() * bt,
+            });
         }
         let (kc, vc) = &mut self.kv[layer];
         for (cache, fresh) in [(kc, k), (vc, v)] {
@@ -643,9 +901,12 @@ impl RealEngine {
                 _ => unreachable!(),
             };
             let src = fresh.as_f32();
-            let dst = row * s * per_tok;
-            data[dst..dst + len * per_tok]
-                .copy_from_slice(&src[..len * per_tok]);
+            for t in shared_tokens.min(len)..len {
+                let block = blocks[t / bt] as usize;
+                let dst = (block * bt + t % bt) * per_tok;
+                data[dst..dst + per_tok]
+                    .copy_from_slice(&src[t * per_tok..(t + 1) * per_tok]);
+            }
         }
         Ok(())
     }
@@ -671,24 +932,6 @@ impl RealEngine {
                 (Tensor::from_literal(k_lit)?, Tensor::from_literal(v_lit)?);
         }
         Ok(())
-    }
-
-    /// Zero one batch row's KV history (host copies) and rewind its
-    /// position — the rolling-reclamation primitive. Called when a slot
-    /// retires and again right before a slot is refilled, so a new
-    /// sequence can never attend to a previous occupant's keys.
-    fn reclaim_row(&mut self, row: usize) {
-        let d = self.dims.clone();
-        let per_row = d.seq_max * d.kv_heads * d.head_dim();
-        for (kc, vc) in self.kv.iter_mut() {
-            if let TensorData::F32(a) = &mut kc.data {
-                a[row * per_row..(row + 1) * per_row].fill(0.0);
-            }
-            if let TensorData::F32(a) = &mut vc.data {
-                a[row * per_row..(row + 1) * per_row].fill(0.0);
-            }
-        }
-        self.row_pos[row] = 0;
     }
 
     fn cpu_lm_head_argmax(&self, x: &[f32]) -> u32 {
@@ -726,11 +969,13 @@ impl Engine for RealEngine {
         self.dims.vocab
     }
 
-    /// Admit into a free batch row. The row prefills at its own KV
-    /// positions `0..len` and decodes from there: with per-row positions
-    /// in the attention graphs, a mid-flight admission (continuous
-    /// batching) is exact — the new row attends only over its own real
-    /// history, and the prompt is never capped to a shared decode clock.
+    /// Admit into a free batch row. Admission allocates the request's KV
+    /// lease from the shared pool (prefix-sharing against resident
+    /// prompts, typed pool-pressure error before any compute), then the
+    /// row prefills at its own positions `0..len` and decodes from there:
+    /// a mid-flight admission (continuous batching) is exact — the new
+    /// row attends only over its own real history through its block
+    /// table, never over another sequence's blocks.
     fn admit(&mut self, req: &InferenceRequest) -> Result<Admission> {
         let slot = self
             .serve_slots
@@ -745,24 +990,38 @@ impl Engine for RealEngine {
             // prefill rebuilds literals from host state at its end; pull
             // the in-flight rows' decoded KV down first
             self.sync_kv_host()?;
-        } else if self.row_pos.iter().any(|&p| p > 0) {
+        } else if self.row_pos.iter().any(|&p| p > 0)
+            || self.leases.iter().any(Option::is_some)
+        {
             // idle engine with stale direct-use state: full reset
             self.reset()?;
         }
         // the prefill graph is compiled for a fixed chunk: keep the tail
         let prompt = self.prompt_tail(&req.prompt);
         ensure!(!prompt.is_empty(), "empty prompt");
-        self.reclaim_row(slot);
-        let first = self.prefill(slot, prompt)?;
+        // reserve every in-flight row's remaining worst-case growth (and
+        // this sequence's own) so active decodes can always get their
+        // next block — pool pressure surfaces here, as a typed error
+        let (demand, reserve) =
+            self.admit_reserve(prompt.len(), req.params.max_tokens);
+        let first = self.prefill_with_reserve(slot, prompt, reserve)?;
+        self.slot_demand[slot] = demand;
+        if let Err(e) = self.refresh_kv_literals() {
+            // the row will never decode: do not leak its lease into the
+            // pool (decode_step grows every leased row, occupied or not)
+            self.release_lease(slot);
+            return Err(e);
+        }
         self.sv_prefill_s += t0.elapsed().as_secs_f64();
+        let lease = self.leases[slot].as_ref().map(|l| l.info());
         self.serve_slots[slot] = Some(first);
-        Ok(Admission { slot, first_token: Some(first) })
+        Ok(Admission { slot, first_token: Some(first), lease })
     }
 
     /// Group admission into an idle engine. Each row prefills its own
-    /// prompt at its own length — per-row positions make right-padding
-    /// to a shared decode position unnecessary, so group admission is as
-    /// exact as serving each request alone.
+    /// prompt at its own length, and rows with identical prompt prefixes
+    /// share pool blocks — so group admission is as exact as serving
+    /// each request alone, and cheaper in KV memory than dense rows.
     fn admit_group(&mut self, reqs: &[&InferenceRequest]) -> Result<Vec<Admission>> {
         ensure!(
             self.serve_slots.iter().all(Option::is_none),
@@ -774,7 +1033,9 @@ impl Engine for RealEngine {
             reqs.len(),
             self.batch
         );
-        if self.row_pos.iter().any(|&p| p > 0) {
+        if self.row_pos.iter().any(|&p| p > 0)
+            || self.leases.iter().any(Option::is_some)
+        {
             self.reset()?;
         }
         let t0 = std::time::Instant::now();
@@ -782,12 +1043,24 @@ impl Engine for RealEngine {
         for (row, req) in reqs.iter().enumerate() {
             let prompt = self.prompt_tail(&req.prompt);
             ensure!(!prompt.is_empty(), "empty prompt");
-            let first = self.prefill_no_refresh(row, prompt)?;
+            let (demand, reserve) =
+                self.admit_reserve(prompt.len(), req.params.max_tokens);
+            let first = self.prefill_with_reserve(row, prompt, reserve)?;
+            self.slot_demand[row] = demand;
             self.serve_slots[row] = Some(first);
-            out.push(Admission { slot: row, first_token: Some(first) });
+            let lease = self.leases[row].as_ref().map(|l| l.info());
+            out.push(Admission { slot: row, first_token: Some(first), lease });
         }
-        // one KV-literal rebuild for the whole group, not one per row
-        self.refresh_kv_literals()?;
+        // one KV-literal rebuild for the whole group, not one per row;
+        // on failure no row can decode, so unwind the whole group's
+        // leases and slots instead of leaking them
+        if let Err(e) = self.refresh_kv_literals() {
+            for row in 0..self.batch {
+                self.serve_slots[row] = None;
+                self.release_lease(row);
+            }
+            return Err(e);
+        }
         self.sv_prefill_s += t0.elapsed().as_secs_f64();
         Ok(out)
     }
@@ -801,18 +1074,8 @@ impl Engine for RealEngine {
         let t0 = std::time::Instant::now();
         let next = self.decode_step(&tokens)?;
         self.sv_decode_s += t0.elapsed().as_secs_f64();
-        // vacant rows rode along in the static graph and advanced with
-        // everyone else; pin them back to 0 so an unbounded retire/refill
-        // stream never walks them into the seq_max wall, and a drained
-        // engine is left with every position at 0 (no spurious reset on
-        // the next idle admission). Their KV scribbles land in a row
-        // that is reclaimed again at the next admission.
-        for (state, pos) in self.serve_slots.iter().zip(self.row_pos.iter_mut())
-        {
-            if state.is_none() {
-                *pos = 0;
-            }
-        }
+        // vacant rows hold no lease: they rode along against the scratch
+        // block at position 0 and did not advance or consume pool blocks
         let mut out = Vec::with_capacity(self.batch);
         for (slot, state) in self.serve_slots.iter_mut().enumerate() {
             if state.is_some() {
@@ -824,10 +1087,10 @@ impl Engine for RealEngine {
         Ok(out)
     }
 
-    /// Free a slot. Rolling KV reclamation happens here: the row's host
-    /// KV region is zeroed and its position rewound immediately, so
-    /// continuous batching sustains unbounded request streams — the
-    /// engine never needs to drain to recover positions.
+    /// Free a slot. Rolling KV reclamation happens here: the row's lease
+    /// goes back to the pool immediately (refcounted — prefix blocks
+    /// shared with other rows survive), so continuous batching sustains
+    /// unbounded request streams without the engine ever draining.
     fn retire(&mut self, slot: SlotId) -> Result<()> {
         ensure!(
             slot < self.serve_slots.len(),
@@ -835,7 +1098,7 @@ impl Engine for RealEngine {
             self.serve_slots.len()
         );
         if self.serve_slots[slot].take().is_some() {
-            self.reclaim_row(slot);
+            self.release_lease(slot);
         }
         Ok(())
     }
@@ -856,6 +1119,10 @@ impl Engine for RealEngine {
             cache_hits: self.metrics.cache_hits,
             cache_misses: self.metrics.cache_misses,
         }
+    }
+
+    fn kv_pool(&self) -> Option<KvPoolStats> {
+        Some(self.pool.stats())
     }
 }
 
@@ -932,8 +1199,11 @@ mod tests {
             inputs.push(Tensor::f32(vec![d.inter], lw.gate_bias.clone()));
             inputs.push(Tensor::f32(vec![d.inter, d.hidden], lw.down.clone()));
         }
+        let m = d.seq_max / d.kv_block;
+        let table: Vec<i32> = (1..=m as i32).collect();
         inputs.push(e.kv[0].0.clone());
         inputs.push(e.kv[0].1.clone());
+        inputs.push(Tensor::i32(vec![1, m], table.clone()));
         inputs.push(Tensor::i32(vec![1], vec![0]));
         let dense = e.rt.execute("decode_dense_b1", &inputs).unwrap();
         let want = dense[0].as_f32().to_vec();
@@ -944,6 +1214,7 @@ mod tests {
         attn_in.extend(e.attn_weight_tensors(0));
         attn_in.push(e.kv[0].0.clone());
         attn_in.push(e.kv[0].1.clone());
+        attn_in.push(Tensor::i32(vec![1, m], table));
         attn_in.push(Tensor::i32(vec![1], vec![0]));
         let mut out = e.rt.execute("decode_attn_b1", &attn_in).unwrap();
         let _vc = out.pop().unwrap();
@@ -1148,6 +1419,91 @@ mod tests {
             assert_eq!(s.tokens.len(), 4, "request {} truncated", s.id);
         }
         assert_eq!(c.engine.active(), 0);
+        std::fs::remove_file(wp).ok();
+    }
+
+    #[test]
+    fn prefix_sharing_consumes_fewer_blocks_and_stays_exact() {
+        // acceptance: two requests with a common prompt prefix consume
+        // fewer pool blocks than two independent requests, and the
+        // sharing request's token stream equals its solo run.
+        let Some(dir) = artifacts() else { return };
+        let wp = weight_path("share");
+        let mut e = RealEngine::new(dir, &wp, 2, opts(true, 128)).unwrap();
+        let bt = e.dims.kv_block;
+        let prefix: Vec<u32> = (0..bt as u32).collect(); // one full block
+        let mut prompt_a = prefix.clone();
+        prompt_a.extend([31, 7]);
+        let mut prompt_b = prefix.clone();
+        prompt_b.extend([9]);
+        let req_b = InferenceRequest::new(1, prompt_b.clone(), 5);
+        // solo reference stream for request B
+        let solo = {
+            let mut s =
+                RealEngine::new(dir, &wp, 2, opts(true, 128)).unwrap();
+            let adm = s.admit(&req_b).unwrap();
+            let mut toks = vec![adm.first_token.unwrap()];
+            while toks.len() < 5 {
+                let out = s.step().unwrap();
+                toks.push(
+                    out.iter().find(|(sl, _)| *sl == adm.slot).unwrap().1,
+                );
+            }
+            toks
+        };
+        let total = e.kv_pool().unwrap().total_blocks;
+        let a = e.admit(&InferenceRequest::new(0, prompt_a, 4)).unwrap();
+        let used_a = total - e.kv_pool().unwrap().free_blocks;
+        let adm = e.admit(&req_b).unwrap();
+        let used_both = total - e.kv_pool().unwrap().free_blocks;
+        assert_eq!(adm.lease.unwrap().shared_blocks, 1);
+        assert!(a.lease.unwrap().shared_blocks == 0);
+        // B re-used the prefix block: only its private tail was fresh
+        assert_eq!(used_both, used_a + 1);
+        assert!(e.kv_pool().unwrap().share_rate() > 0.0);
+        // …and sharing did not perturb B's decode stream
+        let mut shared = vec![adm.first_token.unwrap()];
+        while shared.len() < 5 {
+            let out = e.step().unwrap();
+            shared
+                .push(out.iter().find(|(s, _)| *s == adm.slot).unwrap().1);
+        }
+        assert_eq!(solo, shared, "prefix sharing changed the stream");
+        std::fs::remove_file(wp).ok();
+    }
+
+    #[test]
+    fn paged_pool_serves_more_concurrency_than_dense_equivalent() {
+        // acceptance: with a pool smaller than the dense per-row layout
+        // (2 rows × max_blocks), 2-way continuous batching still retires
+        // more total tokens than seq_max and drains cleanly — the dense
+        // layout could not even back both rows at this footprint.
+        let Some(dir) = artifacts() else { return };
+        let wp = weight_path("paged");
+        let o = RealEngineOptions { kv_blocks: 7, ..opts(false, 128) };
+        let e = RealEngine::new(dir, &wp, 2, o).unwrap();
+        let seq_max = e.dims.seq_max;
+        let pool = e.kv_pool().unwrap();
+        assert!(
+            pool.total_blocks < 2 * e.dims.max_blocks(),
+            "pool must be smaller than the dense 2-row equivalent"
+        );
+        let mut c = crate::coordinator::Coordinator::new(e);
+        let requests: Vec<InferenceRequest> = (0..12)
+            .map(|id| {
+                InferenceRequest::new(id, vec![3 + id as u32, 9, 17], 4)
+            })
+            .collect();
+        let total: usize =
+            requests.iter().map(|r| r.params.max_tokens).sum();
+        assert!(total > seq_max, "trace too small to cross the wall");
+        let report = c.serve_collect(&requests).unwrap();
+        assert_eq!(report.sessions.len(), requests.len());
+        for s in &report.sessions {
+            assert_eq!(s.tokens.len(), 4, "request {} truncated", s.id);
+        }
+        assert_eq!(c.engine.active(), 0);
+        assert_eq!(c.engine.kv_pool().unwrap().free_blocks, 7);
         std::fs::remove_file(wp).ok();
     }
 }

@@ -1,0 +1,772 @@
+//! Paged KV cache: a shared block pool with prefix sharing — the serving
+//! analog of the segmented neuron cache (§4.2).
+//!
+//! PowerInfer-2's central move is fine-grained, demand-driven memory
+//! management (cluster-granular neuron residency); this module applies
+//! the same idea to KV state. Instead of each decode slot statically
+//! owning a dense `[seq_max]` cache row, every sequence holds a
+//! [`KvLease`]: an ordered list of fixed-size blocks drawn from one
+//! shared, refcounted [`KvPool`]:
+//!
+//! ```text
+//!   admit(prompt) ──▶ KvLease { blocks: [3, 7, 9], len: 37 }
+//!                               │   │   └─ private tail (partial)
+//!                               └───┴──── full blocks, shareable
+//!   pool:  [R][·][·][3*][·][·][·][7*][·][9]...   (R = reserved scratch)
+//! ```
+//!
+//! - **Allocation** is free-list based and O(1) per block; a sequence
+//!   grows one block at a time as it decodes and returns every block at
+//!   [`KvPool::release`] — no drain barrier, no per-slot ceiling beyond
+//!   the block-table width.
+//! - **Prefix sharing**: full prompt blocks are content-addressed by a
+//!   position-anchored chain hash of their token ids. Two requests with
+//!   a common prompt prefix map the shared prefix to the *same physical
+//!   blocks* (refcounted), so N copies of a system prompt cost one.
+//! - **Copy-on-write**: a lease forked from another ([`KvPool::fork`])
+//!   shares all blocks; the first append to a shared tail block copies
+//!   it at block granularity and rewrites only the writer's mapping.
+//!
+//! The pool is pure bookkeeping — engines own the actual KV tensors
+//! (device-side, `[num_blocks, block_tokens, kv_heads, head_dim]` per
+//! layer) and consume the lease's block list as the per-row block table
+//! of the decode graphs.
+
+use std::collections::HashMap;
+
+/// Physical block 0 is never leased: it is the scratch block that vacant
+/// batch rows of a decode graph scribble into (their writes are masked).
+pub const RESERVED_BLOCK: u32 = 0;
+
+/// Typed allocation failure, preserved through `anyhow` so schedulers can
+/// tell "pool pressure, retry after a retire" from a real error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvPoolError {
+    /// Not enough free blocks for the allocation (plus requested reserve).
+    Exhausted { needed: usize, free: usize },
+    /// The lease would exceed the block-table width of the compiled
+    /// decode graphs (`max_blocks_per_seq`).
+    WindowExceeded { blocks: usize, max_blocks: usize },
+}
+
+impl std::fmt::Display for KvPoolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvPoolError::Exhausted { needed, free } => write!(
+                f,
+                "KV pool exhausted: {needed} blocks needed, {free} free"
+            ),
+            KvPoolError::WindowExceeded { blocks, max_blocks } => write!(
+                f,
+                "KV lease of {blocks} blocks exceeds the {max_blocks}-block \
+                 table of the compiled decode graphs"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for KvPoolError {}
+
+/// Copy-on-write hop returned by [`KvPool::append`]: the engine must copy
+/// the KV contents of physical block `src` into `dst` (all layers) before
+/// the next decode step writes through the new mapping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CowCopy {
+    pub src: u32,
+    pub dst: u32,
+}
+
+/// What one append decided: where the token's KV entry will land, and
+/// whether a shared tail block had to be copied first.
+#[derive(Debug, Clone, Copy)]
+pub struct KvAppend {
+    /// Physical block receiving the new token.
+    pub block: u32,
+    /// Slot within the block (`pos % block_tokens`).
+    pub slot: usize,
+    /// Set when a copy-on-write detach happened.
+    pub cow: Option<CowCopy>,
+}
+
+/// Compact lease summary carried on [`crate::serve::Admission`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvLeaseInfo {
+    /// Blocks mapped by the lease at admission.
+    pub blocks: usize,
+    /// Leading blocks reused from another lease's identical prompt prefix.
+    pub shared_blocks: usize,
+}
+
+/// One sequence's view of the pool: an ordered block list plus the token
+/// count it covers. Handed out at `admit`, grown by `append`, returned at
+/// `release` — KV ownership is explicit in the request lifecycle.
+#[derive(Debug, Clone)]
+pub struct KvLease {
+    blocks: Vec<u32>,
+    len: usize,
+    shared_blocks: usize,
+}
+
+impl KvLease {
+    /// Logical→physical block mapping (the decode graph's table row).
+    pub fn blocks(&self) -> &[u32] {
+        &self.blocks
+    }
+
+    /// Tokens covered by the lease.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Leading blocks shared with another lease at admission time.
+    pub fn shared_blocks(&self) -> usize {
+        self.shared_blocks
+    }
+
+    pub fn info(&self) -> KvLeaseInfo {
+        KvLeaseInfo {
+            blocks: self.blocks.len(),
+            shared_blocks: self.shared_blocks,
+        }
+    }
+}
+
+/// Pool occupancy snapshot (the `stats` surface of the paged-KV API).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KvPoolStats {
+    pub block_tokens: usize,
+    /// Leasable blocks (excludes the reserved scratch block).
+    pub total_blocks: usize,
+    pub free_blocks: usize,
+    pub active_leases: usize,
+    /// Physical blocks currently mapped by more than one lease.
+    pub shared_blocks: usize,
+    /// Cumulative fresh block allocations.
+    pub allocated_blocks: u64,
+    /// Cumulative allocations satisfied by sharing an existing block.
+    pub shared_hits: u64,
+    pub cow_copies: u64,
+    /// Cumulative allocation attempts that failed for lack of blocks.
+    pub alloc_stalls: u64,
+}
+
+impl KvPoolStats {
+    /// Fraction of leasable blocks in use.
+    pub fn occupancy(&self) -> f64 {
+        if self.total_blocks == 0 {
+            0.0
+        } else {
+            1.0 - self.free_blocks as f64 / self.total_blocks as f64
+        }
+    }
+
+    /// Fraction of block demand served by prefix sharing.
+    pub fn share_rate(&self) -> f64 {
+        let demand = self.allocated_blocks + self.shared_hits;
+        if demand == 0 {
+            0.0
+        } else {
+            self.shared_hits as f64 / demand as f64
+        }
+    }
+
+    /// Blocks a `tokens`-long sequence maps.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens.max(1))
+    }
+}
+
+/// The shared, refcounted block pool.
+#[derive(Debug, Clone)]
+pub struct KvPool {
+    block_tokens: usize,
+    /// 0 = unbounded (engines without a compiled block-table width).
+    max_blocks_per_seq: usize,
+    /// Per physical block (index 0 is the reserved scratch block, pinned).
+    refcount: Vec<u32>,
+    /// Chain hash of the block's content, 0 for private blocks.
+    hash_of: Vec<u128>,
+    /// Content-addressed index over full, immutable prompt blocks.
+    by_hash: HashMap<u128, u32>,
+    free: Vec<u32>,
+    active_leases: usize,
+    allocated_blocks: u64,
+    shared_hits: u64,
+    cow_copies: u64,
+    alloc_stalls: u64,
+}
+
+impl KvPool {
+    /// A pool of `blocks` leasable blocks of `block_tokens` tokens each.
+    /// `max_blocks_per_seq` bounds one lease (0 = unbounded). Physical
+    /// ids run `1..=blocks`; id 0 is the reserved scratch block.
+    pub fn new(blocks: usize, block_tokens: usize, max_blocks_per_seq: usize) -> KvPool {
+        let total = blocks + 1; // + reserved scratch block
+        KvPool {
+            block_tokens: block_tokens.max(1),
+            max_blocks_per_seq,
+            refcount: vec![0; total],
+            hash_of: vec![0; total],
+            by_hash: HashMap::new(),
+            // pop() hands out low ids first
+            free: (1..total as u32).rev().collect(),
+            active_leases: 0,
+            allocated_blocks: 0,
+            shared_hits: 0,
+            cow_copies: 0,
+            alloc_stalls: 0,
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Blocks a `tokens`-long sequence maps.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    pub fn stats(&self) -> KvPoolStats {
+        KvPoolStats {
+            block_tokens: self.block_tokens,
+            total_blocks: self.refcount.len() - 1,
+            free_blocks: self.free.len(),
+            active_leases: self.active_leases,
+            shared_blocks: self
+                .refcount
+                .iter()
+                .skip(1)
+                .filter(|&&rc| rc > 1)
+                .count(),
+            allocated_blocks: self.allocated_blocks,
+            shared_hits: self.shared_hits,
+            cow_copies: self.cow_copies,
+            alloc_stalls: self.alloc_stalls,
+        }
+    }
+
+    /// Position-anchored chain hash: depends on every token id up to and
+    /// including this block, so equal hashes mean equal prompt prefixes.
+    fn chain_hash(prev: u128, tokens: &[u32]) -> u128 {
+        // two independent 64-bit FNV-1a streams → collision-safe enough
+        // to content-address blocks without storing the tokens
+        let mut lo = (prev as u64) ^ 0xcbf2_9ce4_8422_2325;
+        let mut hi = ((prev >> 64) as u64) ^ 0x6c62_272e_07bb_0142;
+        for &t in tokens {
+            lo = (lo ^ t as u64).wrapping_mul(0x0000_0100_0000_01b3);
+            hi = (hi ^ (t as u64).rotate_left(17))
+                .wrapping_mul(0x0000_0100_0000_01b3);
+            hi ^= hi >> 29;
+        }
+        ((hi as u128) << 64) | lo as u128 | 1 // never 0 (0 = private)
+    }
+
+    fn alloc_block(&mut self) -> Option<u32> {
+        let b = self.free.pop()?;
+        self.refcount[b as usize] = 1;
+        self.hash_of[b as usize] = 0;
+        self.allocated_blocks += 1;
+        Some(b)
+    }
+
+    /// Admit a prompt: map its full blocks (sharing identical prefixes
+    /// already in the pool) plus a private partial tail. `reserve` blocks
+    /// are kept free for in-flight sequences' growth — admission under
+    /// pool pressure fails with [`KvPoolError::Exhausted`] rather than
+    /// starving active leases.
+    pub fn admit(
+        &mut self,
+        prompt: &[u32],
+        reserve: usize,
+    ) -> Result<KvLease, KvPoolError> {
+        let bt = self.block_tokens;
+        let n_blocks = self.blocks_for(prompt.len());
+        if self.max_blocks_per_seq > 0 && n_blocks > self.max_blocks_per_seq {
+            return Err(KvPoolError::WindowExceeded {
+                blocks: n_blocks,
+                max_blocks: self.max_blocks_per_seq,
+            });
+        }
+        let full = prompt.len() / bt;
+        // pass 1: measure the shareable prefix without allocating
+        let mut shared = 0usize;
+        let mut h: u128 = 0;
+        for i in 0..full {
+            h = Self::chain_hash(h, &prompt[i * bt..(i + 1) * bt]);
+            if shared == i && self.by_hash.contains_key(&h) {
+                shared = i + 1;
+            }
+        }
+        let fresh = n_blocks - shared;
+        if self.free.len() < fresh + reserve {
+            self.alloc_stalls += 1;
+            return Err(KvPoolError::Exhausted {
+                needed: fresh + reserve,
+                free: self.free.len(),
+            });
+        }
+        // pass 2: build the lease
+        let mut blocks = Vec::with_capacity(n_blocks);
+        let mut h: u128 = 0;
+        for i in 0..full {
+            h = Self::chain_hash(h, &prompt[i * bt..(i + 1) * bt]);
+            if i < shared {
+                let b = self.by_hash[&h];
+                self.refcount[b as usize] += 1;
+                self.shared_hits += 1;
+                blocks.push(b);
+            } else {
+                // guaranteed by the free check above
+                let b = self.alloc_block().expect("free check");
+                self.hash_of[b as usize] = h;
+                self.by_hash.insert(h, b);
+                blocks.push(b);
+            }
+        }
+        if prompt.len() % bt != 0 {
+            let b = self.alloc_block().expect("free check");
+            blocks.push(b);
+        }
+        self.active_leases += 1;
+        Ok(KvLease { blocks, len: prompt.len(), shared_blocks: shared })
+    }
+
+    /// Extend a lease by one token. Allocates a block at block boundaries
+    /// and detaches (copy-on-write) a shared tail before writing into it.
+    pub fn append(&mut self, lease: &mut KvLease) -> Result<KvAppend, KvPoolError> {
+        let bt = self.block_tokens;
+        let pos = lease.len;
+        let slot = pos % bt;
+        let needed_blocks = pos / bt + 1;
+        if self.max_blocks_per_seq > 0 && needed_blocks > self.max_blocks_per_seq
+        {
+            return Err(KvPoolError::WindowExceeded {
+                blocks: needed_blocks,
+                max_blocks: self.max_blocks_per_seq,
+            });
+        }
+        let mut cow = None;
+        if needed_blocks > lease.blocks.len() {
+            let Some(b) = self.alloc_block() else {
+                self.alloc_stalls += 1;
+                return Err(KvPoolError::Exhausted {
+                    needed: 1,
+                    free: 0,
+                });
+            };
+            lease.blocks.push(b);
+        } else {
+            let tail = lease.blocks[needed_blocks - 1];
+            if self.refcount[tail as usize] > 1 {
+                // copy-on-write: detach from the shared block
+                let Some(b) = self.alloc_block() else {
+                    self.alloc_stalls += 1;
+                    return Err(KvPoolError::Exhausted { needed: 1, free: 0 });
+                };
+                self.refcount[tail as usize] -= 1;
+                self.cow_copies += 1;
+                lease.blocks[needed_blocks - 1] = b;
+                if lease.shared_blocks >= needed_blocks {
+                    lease.shared_blocks = needed_blocks - 1;
+                }
+                cow = Some(CowCopy { src: tail, dst: b });
+            } else if self.hash_of[tail as usize] != 0 {
+                // sole owner of a content-indexed block about to mutate:
+                // unpublish it so no future admit shares a dirty block
+                self.unpublish(tail);
+            }
+        }
+        lease.len = pos + 1;
+        let block = lease.blocks[needed_blocks - 1];
+        Ok(KvAppend { block, slot, cow })
+    }
+
+    /// Undo the most recent [`KvPool::append`] on this lease — the
+    /// caller's decode step failed before the position was written, so
+    /// the token count shrinks by one and a block allocated at the
+    /// boundary goes back to the free list. (A copy-on-write detach is
+    /// not reverted: the lease keeps its private copy, which is
+    /// semantically identical.)
+    pub fn unappend(&mut self, lease: &mut KvLease) {
+        if lease.len == 0 {
+            return;
+        }
+        lease.len -= 1;
+        let keep = self.blocks_for(lease.len);
+        while lease.blocks.len() > keep {
+            let b = lease.blocks.pop().expect("keep < len");
+            let rc = &mut self.refcount[b as usize];
+            debug_assert!(*rc > 0, "unappend of unowned block {b}");
+            *rc -= 1;
+            if *rc == 0 {
+                self.unpublish(b);
+                self.free.push(b);
+            }
+        }
+    }
+
+    /// Reservation arithmetic shared by every engine's admission path:
+    /// the worst-case blocks a `(prompt, max_tokens)` sequence may reach
+    /// (optionally capped by a context window) and the blocks to hold
+    /// back when admitting it now — its own decode growth plus every
+    /// in-flight sequence's remaining growth, supplied as
+    /// `(demand_blocks, held_blocks)` pairs. Returns
+    /// `(demand_blocks, reserve_blocks)`.
+    pub fn admit_reserve(
+        &self,
+        prompt_len: usize,
+        max_tokens: usize,
+        window_tokens: Option<usize>,
+        in_flight: impl Iterator<Item = (usize, usize)>,
+    ) -> (usize, usize) {
+        let mut total =
+            prompt_len.saturating_add(max_tokens.saturating_sub(1));
+        if let Some(w) = window_tokens {
+            total = total.min(w);
+        }
+        let demand = self.blocks_for(total);
+        let growth = demand.saturating_sub(self.blocks_for(prompt_len));
+        let remaining: usize =
+            in_flight.map(|(d, h)| d.saturating_sub(h)).sum();
+        (demand, growth + remaining)
+    }
+
+    /// Duplicate a lease, sharing every block (for Best-of-N style
+    /// sequence forking). Appends by either copy diverge via CoW.
+    pub fn fork(&mut self, lease: &KvLease) -> KvLease {
+        for &b in &lease.blocks {
+            self.refcount[b as usize] += 1;
+            self.shared_hits += 1;
+        }
+        self.active_leases += 1;
+        KvLease {
+            blocks: lease.blocks.clone(),
+            len: lease.len,
+            shared_blocks: lease.blocks.len(),
+        }
+    }
+
+    /// Return every block of a lease; blocks whose refcount reaches zero
+    /// go back on the free list and leave the sharing index.
+    pub fn release(&mut self, lease: KvLease) {
+        for b in lease.blocks {
+            let rc = &mut self.refcount[b as usize];
+            debug_assert!(*rc > 0, "double free of block {b}");
+            *rc -= 1;
+            if *rc == 0 {
+                self.unpublish(b);
+                self.free.push(b);
+            }
+        }
+        self.active_leases -= 1;
+    }
+
+    fn unpublish(&mut self, block: u32) {
+        let h = self.hash_of[block as usize];
+        if h != 0 {
+            if self.by_hash.get(&h) == Some(&block) {
+                self.by_hash.remove(&h);
+            }
+            self.hash_of[block as usize] = 0;
+        }
+    }
+}
+
+/// Convert a pool failure into `anyhow` while keeping the typed error
+/// downcastable (what [`crate::coordinator::Coordinator`] keys on).
+pub fn pool_err(e: KvPoolError) -> anyhow::Error {
+    anyhow::Error::new(e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(lease: &KvLease) -> Vec<u32> {
+        lease.blocks().to_vec()
+    }
+
+    #[test]
+    fn admit_maps_blocks_and_release_frees_them() {
+        let mut p = KvPool::new(8, 4, 0);
+        assert_eq!(p.free_blocks(), 8);
+        let lease = p.admit(&[1, 2, 3, 4, 5], 0).unwrap(); // 2 blocks
+        assert_eq!(lease.len(), 5);
+        assert_eq!(lease.blocks().len(), 2);
+        assert_eq!(lease.shared_blocks(), 0);
+        assert!(lease.blocks().iter().all(|&b| b != RESERVED_BLOCK));
+        assert_eq!(p.free_blocks(), 6);
+        p.release(lease);
+        assert_eq!(p.free_blocks(), 8);
+        assert_eq!(p.stats().active_leases, 0);
+    }
+
+    #[test]
+    fn append_allocates_at_block_boundaries_only() {
+        let mut p = KvPool::new(8, 4, 0);
+        let mut lease = p.admit(&[9, 9, 9], 0).unwrap(); // 3 of 4 slots
+        assert_eq!(p.free_blocks(), 7);
+        let a = p.append(&mut lease).unwrap(); // fills the tail block
+        assert_eq!(a.slot, 3);
+        assert_eq!(p.free_blocks(), 7);
+        let a = p.append(&mut lease).unwrap(); // crosses the boundary
+        assert_eq!(a.slot, 0);
+        assert_eq!(lease.blocks().len(), 2);
+        assert_eq!(p.free_blocks(), 6);
+        assert_eq!(lease.len(), 5);
+        p.release(lease);
+        assert_eq!(p.free_blocks(), 8);
+    }
+
+    #[test]
+    fn identical_prompt_prefixes_share_blocks() {
+        let mut p = KvPool::new(16, 4, 0);
+        let prompt = [7u32, 1, 2, 3, 4, 5, 6, 7, 9, 9]; // 2 full + partial
+        let a = p.admit(&prompt, 0).unwrap();
+        let used_solo = 16 - p.free_blocks();
+        let b = p.admit(&prompt, 0).unwrap();
+        // the two full prompt blocks are shared; only the partial tail is
+        // private, so the second admission costs 1 block instead of 3
+        assert_eq!(b.shared_blocks(), 2);
+        assert_eq!(&ids(&b)[..2], &ids(&a)[..2]);
+        assert_ne!(ids(&b)[2], ids(&a)[2]);
+        assert_eq!(16 - p.free_blocks(), used_solo + 1);
+        let st = p.stats();
+        assert_eq!(st.shared_hits, 2);
+        assert_eq!(st.shared_blocks, 2);
+        assert!(st.share_rate() > 0.0);
+        // divergent prompt shares nothing
+        let c = p.admit(&[8, 8, 8, 8, 4, 5, 6, 7], 0).unwrap();
+        assert_eq!(c.shared_blocks(), 0);
+        p.release(a);
+        p.release(b);
+        p.release(c);
+        assert_eq!(p.free_blocks(), 16);
+    }
+
+    #[test]
+    fn shared_blocks_survive_one_release_and_free_on_last() {
+        let mut p = KvPool::new(8, 2, 0);
+        let prompt = [1u32, 2, 3, 4];
+        let a = p.admit(&prompt, 0).unwrap();
+        let b = p.admit(&prompt, 0).unwrap();
+        assert_eq!(ids(&a), ids(&b));
+        p.release(a);
+        assert_eq!(p.free_blocks(), 6, "blocks freed while still leased");
+        // the prefix is still published: a third admit re-shares it
+        let c = p.admit(&prompt, 0).unwrap();
+        assert_eq!(c.shared_blocks(), 2);
+        p.release(b);
+        p.release(c);
+        assert_eq!(p.free_blocks(), 8);
+        // fully released prefix is unpublished: next admit allocates fresh
+        let d = p.admit(&prompt, 0).unwrap();
+        assert_eq!(d.shared_blocks(), 0);
+        p.release(d);
+    }
+
+    #[test]
+    fn fork_shares_everything_and_append_copies_on_write() {
+        let mut p = KvPool::new(8, 4, 0);
+        let mut a = p.admit(&[1, 2, 3], 0).unwrap(); // 1 partial block
+        let mut b = p.fork(&a);
+        assert_eq!(ids(&a), ids(&b));
+        assert_eq!(p.stats().shared_blocks, 1);
+        // first append on the fork detaches its tail
+        let app = p.append(&mut b).unwrap();
+        let cow = app.cow.expect("shared tail must copy on write");
+        assert_eq!(cow.src, ids(&a)[0]);
+        assert_eq!(cow.dst, ids(&b)[0]);
+        assert_ne!(ids(&a)[0], ids(&b)[0]);
+        assert_eq!(p.stats().cow_copies, 1);
+        // the original, now sole owner, appends in place
+        let app = p.append(&mut a).unwrap();
+        assert!(app.cow.is_none());
+        p.release(a);
+        p.release(b);
+        assert_eq!(p.free_blocks(), 8);
+    }
+
+    #[test]
+    fn unappend_reverts_len_and_boundary_allocations() {
+        let mut p = KvPool::new(8, 4, 0);
+        let mut lease = p.admit(&[1, 2, 3, 4], 0).unwrap(); // 1 full block
+        let free0 = p.free_blocks();
+        // boundary append allocates a block; unappend returns it
+        p.append(&mut lease).unwrap();
+        assert_eq!(p.free_blocks(), free0 - 1);
+        p.unappend(&mut lease);
+        assert_eq!(lease.len(), 4);
+        assert_eq!(lease.blocks().len(), 1);
+        assert_eq!(p.free_blocks(), free0);
+        // mid-block append allocates nothing; unappend frees nothing
+        p.append(&mut lease).unwrap(); // pos 4 → new block
+        p.append(&mut lease).unwrap(); // pos 5, same block
+        let free1 = p.free_blocks();
+        p.unappend(&mut lease);
+        assert_eq!(lease.len(), 5);
+        assert_eq!(p.free_blocks(), free1);
+        p.release(lease);
+        assert_eq!(p.free_blocks(), 8);
+    }
+
+    #[test]
+    fn admit_reserve_math() {
+        let p = KvPool::new(32, 4, 0);
+        // prompt 5 → 2 blocks; total 5+7 = 12 → 3 blocks; growth 1
+        let (demand, reserve) = p.admit_reserve(5, 8, None, std::iter::empty());
+        assert_eq!((demand, reserve), (3, 1));
+        // a window caps the demand
+        let (demand, _) = p.admit_reserve(5, 100, Some(16), std::iter::empty());
+        assert_eq!(demand, 4);
+        // in-flight remaining growth adds to the reserve
+        let in_flight = [(3usize, 1usize), (4, 4)].into_iter();
+        let (_, reserve) = p.admit_reserve(5, 8, None, in_flight);
+        assert_eq!(reserve, 1 + 2);
+    }
+
+    #[test]
+    fn exhaustion_is_typed_and_counts_stalls() {
+        let mut p = KvPool::new(2, 4, 0);
+        let a = p.admit(&[1, 2, 3, 4, 5], 0).unwrap(); // 2 blocks
+        let err = p.admit(&[9], 0).unwrap_err();
+        assert_eq!(err, KvPoolError::Exhausted { needed: 1, free: 0 });
+        assert_eq!(p.stats().alloc_stalls, 1);
+        p.release(a);
+        assert!(p.admit(&[9], 0).is_ok());
+    }
+
+    #[test]
+    fn reserve_holds_back_blocks_for_growth() {
+        let mut p = KvPool::new(3, 4, 0);
+        let mut a = p.admit(&[1, 2, 3, 4], 0).unwrap();
+        // 2 blocks free, but a 1-block admit with reserve 2 must fail
+        let err = p.admit(&[5], 2).unwrap_err();
+        assert_eq!(err, KvPoolError::Exhausted { needed: 3, free: 2 });
+        assert!(p.admit(&[5], 1).is_ok());
+        // the reserve kept a block for the in-flight lease's growth
+        assert!(p.append(&mut a).is_ok());
+    }
+
+    #[test]
+    fn window_bound_rejects_oversized_sequences() {
+        let mut p = KvPool::new(16, 4, 2);
+        assert_eq!(
+            p.admit(&[0; 9], 0).unwrap_err(),
+            KvPoolError::WindowExceeded { blocks: 3, max_blocks: 2 }
+        );
+        let mut lease = p.admit(&[0; 8], 0).unwrap();
+        assert_eq!(
+            p.append(&mut lease).unwrap_err(),
+            KvPoolError::WindowExceeded { blocks: 3, max_blocks: 2 }
+        );
+        p.release(lease);
+    }
+
+    #[test]
+    fn append_past_published_block_keeps_it_shareable() {
+        let mut p = KvPool::new(8, 4, 0);
+        // prompt is exactly one full block → published for sharing
+        let mut a = p.admit(&[1, 2, 3, 4], 0).unwrap();
+        // append crosses into a new block; the full block stays published
+        p.append(&mut a).unwrap();
+        let b = p.admit(&[1, 2, 3, 4], 0).unwrap();
+        assert_eq!(b.shared_blocks(), 1);
+        p.release(a);
+        p.release(b);
+    }
+
+    #[test]
+    fn churn_maintains_refcount_and_free_list_invariants() {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(7);
+        let mut p = KvPool::new(32, 4, 0);
+        let mut live: Vec<KvLease> = Vec::new();
+        for step in 0..5000 {
+            match rng.below(4) {
+                0 => {
+                    let len = 1 + rng.below(10);
+                    let prompt: Vec<u32> =
+                        (0..len).map(|_| rng.below(4) as u32).collect();
+                    if let Ok(l) = p.admit(&prompt, 0) {
+                        live.push(l);
+                    }
+                }
+                1 if !live.is_empty() => {
+                    let i = rng.below(live.len());
+                    let _ = p.append(&mut live[i]);
+                }
+                2 if !live.is_empty() => {
+                    let i = rng.below(live.len());
+                    let l = live.swap_remove(i);
+                    p.release(l);
+                }
+                _ if !live.is_empty() => {
+                    let i = rng.below(live.len());
+                    let f = p.fork(&live[i]);
+                    live.push(f);
+                }
+                _ => {}
+            }
+            // invariant: every leased block's refcount equals the number
+            // of leases mapping it, and free + uniquely-leased = total
+            let mut counts = vec![0u32; 33];
+            for l in &live {
+                for &b in l.blocks() {
+                    counts[b as usize] += 1;
+                }
+            }
+            for b in 1..33 {
+                assert_eq!(
+                    p.refcount[b], counts[b],
+                    "step {step}: refcount mismatch on block {b}"
+                );
+            }
+            let in_use = counts[1..].iter().filter(|&&c| c > 0).count();
+            assert_eq!(
+                p.free_blocks() + in_use,
+                32,
+                "step {step}: free-list leak"
+            );
+            assert_eq!(p.stats().active_leases, live.len());
+        }
+        for l in live {
+            p.release(l);
+        }
+        assert_eq!(p.free_blocks(), 32);
+        assert!(p.stats().allocated_blocks > 0);
+    }
+
+    #[test]
+    fn stats_snapshot_math() {
+        let s = KvPoolStats {
+            block_tokens: 4,
+            total_blocks: 10,
+            free_blocks: 4,
+            allocated_blocks: 6,
+            shared_hits: 2,
+            ..Default::default()
+        };
+        assert!((s.occupancy() - 0.6).abs() < 1e-12);
+        assert!((s.share_rate() - 0.25).abs() < 1e-12);
+        assert_eq!(s.blocks_for(9), 3);
+        assert_eq!(KvPoolStats::default().occupancy(), 0.0);
+        assert_eq!(KvPoolStats::default().share_rate(), 0.0);
+    }
+
+    #[test]
+    fn pool_error_displays_and_downcasts() {
+        let e = pool_err(KvPoolError::Exhausted { needed: 3, free: 1 });
+        assert!(e.to_string().contains("exhausted"));
+        assert!(e.downcast_ref::<KvPoolError>().is_some());
+    }
+}

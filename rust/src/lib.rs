@@ -8,6 +8,7 @@
 pub mod cache;
 pub mod config;
 pub mod coordinator;
+pub mod kv;
 pub mod energy;
 pub mod metrics;
 pub mod model;

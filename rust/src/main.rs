@@ -53,7 +53,7 @@ USAGE:
   pi2 graphs    [--artifacts DIR]         list compiled NPU graphs
   pi2 serve     [--addr HOST:PORT] [--engine real|sim] [--artifacts DIR]
                 [--mode continuous|lockstep] [--slots N] [--device D]
-                [--model M] [--throttle]
+                [--model M] [--throttle] [--kv-blocks N]
                 line-protocol TCP server; streams tokens with
                 {{\"stream\": true}}. --engine real runs the PJRT engine
                 (needs artifacts), --engine sim the simulation engine
@@ -184,8 +184,20 @@ fn cmd_serve(args: &Args) -> i32 {
             }
             let weight_path = std::path::PathBuf::from(
                 args.opt_or("weights", "/tmp/pi2_serve_weights.bin"));
+            let kv_blocks = match args.opt("kv-blocks") {
+                Some(s) => match s.parse::<usize>() {
+                    Ok(n) if n >= 1 => n,
+                    _ => {
+                        eprintln!("invalid --kv-blocks '{s}' (expected a \
+                                   positive integer)");
+                        return 2;
+                    }
+                },
+                None => 0, // every block the compiled pool has
+            };
             let opts = RealEngineOptions {
                 throttle_io: args.flag("throttle"),
+                kv_blocks,
                 ..Default::default()
             };
             println!("compiling NPU graph table…");

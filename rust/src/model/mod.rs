@@ -27,6 +27,11 @@ pub struct ModelDims {
     pub prefill_chunk: usize,
     pub batches: Vec<usize>,
     pub hot_ks: Vec<usize>,
+    /// Paged-KV block size in tokens.
+    pub kv_block: usize,
+    /// Physical blocks in the compiled KV pool (including the reserved
+    /// scratch block 0 that vacant batch rows write into).
+    pub kv_blocks: usize,
 }
 
 impl ModelDims {
@@ -36,6 +41,12 @@ impl ModelDims {
 
     pub fn kv_dim(&self) -> usize {
         self.kv_heads * self.head_dim()
+    }
+
+    /// Block-table width of the decode graphs: blocks one sequence may
+    /// map (`seq_max / kv_block`).
+    pub fn max_blocks(&self) -> usize {
+        self.seq_max / self.kv_block
     }
 
     pub fn from_json(j: &Json) -> Result<Self> {
@@ -49,6 +60,12 @@ impl ModelDims {
                 .to_usize_vec()
                 .with_context(|| format!("model_config missing list {k}"))
         };
+        let paged = |k: &str| -> Result<usize> {
+            field(k).context(
+                "artifacts predate the paged-KV ABI — regenerate with \
+                 `python -m compile.aot`",
+            )
+        };
         let dims = ModelDims {
             hidden: field("hidden")?,
             inter: field("inter")?,
@@ -60,9 +77,17 @@ impl ModelDims {
             prefill_chunk: field("prefill_chunk")?,
             batches: list("batches")?,
             hot_ks: list("hot_ks")?,
+            kv_block: paged("kv_block")?,
+            kv_blocks: paged("kv_blocks")?,
         };
         ensure!(dims.hidden % dims.heads == 0, "hidden % heads != 0");
         ensure!(dims.heads % dims.kv_heads == 0, "heads % kv_heads != 0");
+        ensure!(dims.kv_block >= 1, "kv_block must be >= 1");
+        ensure!(
+            dims.seq_max % dims.kv_block == 0,
+            "seq_max % kv_block != 0"
+        );
+        ensure!(dims.kv_blocks >= 2, "kv_blocks must be >= 2");
         Ok(dims)
     }
 
@@ -138,6 +163,7 @@ mod tests {
             r#"{"hidden": 32, "inter": 128, "layers": 2, "heads": 4,
                 "kv_heads": 2, "vocab": 64, "seq_max": 16,
                 "prefill_chunk": 8, "batches": [1, 2], "hot_ks": [128],
+                "kv_block": 4, "kv_blocks": 9,
                 "rope_theta": 10000.0, "norm_eps": 1e-5}"#,
         )
         .unwrap();
@@ -146,6 +172,7 @@ mod tests {
         assert_eq!(d.head_dim(), 8);
         assert_eq!(d.kv_dim(), 16);
         assert_eq!(d.batches, vec![1, 2]);
+        assert_eq!(d.max_blocks(), 4);
     }
 
     #[test]
@@ -153,7 +180,33 @@ mod tests {
         let j = Json::parse(
             r#"{"hidden": 33, "inter": 128, "layers": 2, "heads": 4,
                 "kv_heads": 2, "vocab": 64, "seq_max": 16,
+                "prefill_chunk": 8, "batches": [1], "hot_ks": [128],
+                "kv_block": 4, "kv_blocks": 9}"#,
+        )
+        .unwrap();
+        assert!(ModelDims::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn dims_reject_pre_paged_manifests_with_hint() {
+        // a manifest without the paged-KV fields is a stale artifact set
+        let j = Json::parse(
+            r#"{"hidden": 32, "inter": 128, "layers": 2, "heads": 4,
+                "kv_heads": 2, "vocab": 64, "seq_max": 16,
                 "prefill_chunk": 8, "batches": [1], "hot_ks": [128]}"#,
+        )
+        .unwrap();
+        let err = ModelDims::from_json(&j).unwrap_err();
+        assert!(format!("{err:#}").contains("compile.aot"), "{err:#}");
+    }
+
+    #[test]
+    fn dims_reject_misaligned_kv_block() {
+        let j = Json::parse(
+            r#"{"hidden": 32, "inter": 128, "layers": 2, "heads": 4,
+                "kv_heads": 2, "vocab": 64, "seq_max": 16,
+                "prefill_chunk": 8, "batches": [1], "hot_ks": [128],
+                "kv_block": 5, "kv_blocks": 9}"#,
         )
         .unwrap();
         assert!(ModelDims::from_json(&j).is_err());

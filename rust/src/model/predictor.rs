@@ -181,6 +181,8 @@ mod tests {
             prefill_chunk: 4,
             batches: vec![1],
             hot_ks: vec![64],
+            kv_block: 4,
+            kv_blocks: 3,
         }
     }
 

@@ -299,6 +299,8 @@ mod tests {
             prefill_chunk: 4,
             batches: vec![1],
             hot_ks: vec![16],
+            kv_block: 4,
+            kv_blocks: 3,
         }
     }
 

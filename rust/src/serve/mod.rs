@@ -10,14 +10,22 @@
 //! ```
 //!
 //! — and the [`Engine`] trait (`admit` / `step` / `retire` / `capacity`
-//! / `stats`) that both the simulation engine ([`crate::engine::SimEngine`])
-//! and the real PJRT engine ([`crate::engine::real::RealEngine`])
-//! implement. The coordinator, the TCP server, the experiments, benches
-//! and examples are all generic over this trait, so scheduling policies
-//! (lockstep vs. continuous batching) apply to every backend uniformly.
+//! / `stats` / `kv_pool`) that both the simulation engine
+//! ([`crate::engine::SimEngine`]) and the real PJRT engine
+//! ([`crate::engine::real::RealEngine`]) implement. The coordinator, the
+//! TCP server, the experiments, benches and examples are all generic over
+//! this trait, so scheduling policies (lockstep vs. continuous batching)
+//! apply to every backend uniformly.
+//!
+//! KV ownership is explicit in the lifecycle: `admit` allocates the
+//! request's [`crate::kv::KvLease`] from the engine's shared block pool
+//! (paged KV, prefix-shared across requests) and `retire` releases it —
+//! an [`Admission`] carries the lease summary, and [`Engine::kv_pool`]
+//! exposes pool pressure to admission control.
 
 use anyhow::Result;
 
+use crate::kv::{KvLeaseInfo, KvPoolStats};
 use crate::trace;
 
 /// Index of an engine decode slot (one concurrent sequence). Slots are
@@ -235,23 +243,41 @@ pub struct Admission {
     /// calls (the real engine's mid-flight admission path) and the first
     /// token will surface from `step` later.
     pub first_token: Option<u32>,
+    /// Summary of the KV lease backing this request (`None` for engines
+    /// without paged KV). The lease itself lives in the engine for the
+    /// request's lifetime: handed out here, grown per decode step, and
+    /// reclaimed by [`Engine::retire`].
+    pub lease: Option<KvLeaseInfo>,
+}
+
+impl Admission {
+    /// Admission into `slot` with a synchronous first token and no paged
+    /// KV (simple / test engines).
+    pub fn unpaged(slot: SlotId, first_token: Option<u32>) -> Admission {
+        Admission { slot, first_token, lease: None }
+    }
 }
 
 /// The unified serving interface over every inference backend.
 ///
 /// Lifecycle contract:
 /// - `admit` places a request into a free slot (error when full) and runs
-///   or schedules its prefill at that slot's own sequence positions.
+///   or schedules its prefill at that slot's own sequence positions. On
+///   paged-KV engines it also allocates the request's [`crate::kv::KvLease`]
+///   from the shared block pool — a typed [`crate::kv::KvPoolError`] (kept
+///   downcastable through `anyhow`) signals pool pressure, which
+///   schedulers treat as "defer and retry after a retire", not failure.
 /// - `step` decodes one token for every occupied slot and returns
 ///   `(slot, token)` pairs; slots whose prefill is still catching up may
 ///   be absent from one or more steps.
 /// - `retire` frees a slot at any time; it is idempotent, and engines
-///   with per-slot KV state reclaim the slot's cache region immediately
-///   (no drain barrier), so `decode_budget(slot)` is restored for the
-///   next occupant.
-/// - Capacity and context budget are per-slot: `capacity()` counts the
-///   independent slots, and `decode_budget(slot)` tracks one slot's
-///   remaining context window.
+///   with paged KV release the slot's lease back to the pool immediately
+///   (no drain barrier), so the blocks are available to the next
+///   admission.
+/// - Capacity is per-slot, KV is pooled: `capacity()` counts the
+///   independent decode slots, `decode_budget(slot)` tracks one slot's
+///   remaining context window, and `kv_pool()` exposes shared-pool
+///   occupancy (admission must consult both).
 /// - The caller owns stop conditions (`max_tokens` etc.) — the engine
 ///   only produces tokens.
 pub trait Engine {
@@ -295,6 +321,12 @@ pub trait Engine {
 
     /// Cumulative counters (monotone within an engine's lifetime).
     fn stats(&self) -> EngineStats;
+
+    /// Paged-KV pool snapshot: block occupancy, prefix-share rate, and
+    /// allocation stalls. `None` for engines without a shared block pool.
+    fn kv_pool(&self) -> Option<KvPoolStats> {
+        None
+    }
 }
 
 /// Forwarding impl so a backend can be chosen at runtime
@@ -334,6 +366,10 @@ impl<E: Engine + ?Sized> Engine for Box<E> {
 
     fn stats(&self) -> EngineStats {
         (**self).stats()
+    }
+
+    fn kv_pool(&self) -> Option<KvPoolStats> {
+        (**self).kv_pool()
     }
 }
 

@@ -164,7 +164,7 @@ impl Engine for WindowedEngine {
         ensure!(req.prompt.len() < self.seq_max, "prompt exceeds window");
         let pos = req.prompt.len();
         self.slots[slot] = Some((req.id, pos));
-        Ok(Admission { slot, first_token: Some(Self::token(req.id, pos)) })
+        Ok(Admission::unpaged(slot, Some(Self::token(req.id, pos))))
     }
 
     fn step(&mut self) -> Result<Vec<(SlotId, u32)>> {
@@ -210,6 +210,76 @@ impl Engine for WindowedEngine {
             ..Default::default()
         }
     }
+}
+
+#[test]
+fn paged_pool_smaller_than_dense_equivalent_matches_solo_streams() {
+    // acceptance (sim): with a KV pool smaller than the dense per-slot
+    // layout would need, full-concurrency continuous batching retires
+    // more total tokens than the pool could ever hold at once, and every
+    // request's token stream equals its solo run
+    let mk = || {
+        let cfg = RuntimeConfig {
+            max_batch: 2,
+            kv_block_tokens: 4,
+            kv_pool_blocks: 6,
+            ..Default::default()
+        };
+        SimEngine::new(oneplus_12(), bamboo_7b(), cfg)
+    };
+    let requests = reqs(&[6, 6, 6, 6, 6, 6]);
+    let mut solo_streams = Vec::new();
+    for req in &requests {
+        let mut c = Coordinator::new(mk());
+        let r = c.serve_collect(std::slice::from_ref(req)).unwrap();
+        solo_streams.push(r.sessions[0].tokens.clone());
+    }
+    let mut c = Coordinator::new(mk());
+    let report = c.serve_collect(&requests).unwrap();
+    assert_eq!(report.sessions.len(), requests.len());
+    let total_tokens: usize =
+        report.sessions.iter().map(|s| s.tokens.len()).sum();
+    assert!(total_tokens > 6 * 4, "run never outgrew the pool");
+    for (req, solo) in requests.iter().zip(&solo_streams) {
+        assert_eq!(
+            &report.session(req.id).unwrap().tokens,
+            solo,
+            "request {} diverged from its solo run",
+            req.id
+        );
+    }
+    assert_eq!(c.engine.kv_pool().unwrap().free_blocks, 6, "pool leak");
+}
+
+#[test]
+fn shared_prompt_prefix_consumes_fewer_pool_blocks() {
+    // acceptance: two requests with a common prompt prefix use fewer
+    // pool blocks than two independent requests of the same lengths
+    let mk = || {
+        let cfg = RuntimeConfig {
+            max_batch: 2,
+            kv_block_tokens: 4,
+            kv_pool_blocks: 32,
+            ..Default::default()
+        };
+        SimEngine::new(oneplus_12(), bamboo_7b(), cfg)
+    };
+    let shared_prompt: Vec<u32> = (0..8).collect();
+    let mut e = mk();
+    e.admit(&InferenceRequest::new(0, shared_prompt.clone(), 4)).unwrap();
+    let b = e.admit(&InferenceRequest::new(1, shared_prompt, 4)).unwrap();
+    let used_shared = 32 - e.kv_pool().unwrap().free_blocks;
+    let mut e2 = mk();
+    e2.admit(&InferenceRequest::new(0, (0..8).collect(), 4)).unwrap();
+    e2.admit(&InferenceRequest::new(1, (100..108).collect(), 4)).unwrap();
+    let used_independent = 32 - e2.kv_pool().unwrap().free_blocks;
+    assert!(
+        used_shared < used_independent,
+        "sharing saved nothing: {used_shared} vs {used_independent} blocks"
+    );
+    assert_eq!(b.lease.unwrap().shared_blocks, 2);
+    assert!(e.kv_pool().unwrap().share_rate() > 0.0);
+    assert_eq!(e2.kv_pool().unwrap().shared_hits, 0);
 }
 
 #[test]

@@ -7,9 +7,11 @@
 //! macros. Semantics match upstream for this subset: `{:#}` prints the
 //! full cause chain, `?` converts any `std::error::Error`.
 
+use std::any::Any;
 use std::fmt;
 
-/// Opaque error: a message plus an optional cause chain.
+/// Opaque error: a message plus an optional cause chain, optionally
+/// carrying the original typed error for [`Error::downcast_ref`].
 ///
 /// Like upstream `anyhow::Error`, this type deliberately does NOT
 /// implement `std::error::Error`, so the blanket `From<E>` conversion
@@ -17,6 +19,7 @@ use std::fmt;
 pub struct Error {
     msg: String,
     source: Option<Box<Error>>,
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 pub type Result<T, E = Error> = std::result::Result<T, E>;
@@ -24,12 +27,54 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 impl Error {
     /// Build an error from any displayable message.
     pub fn msg<M: fmt::Display>(message: M) -> Error {
-        Error { msg: message.to_string(), source: None }
+        Error { msg: message.to_string(), source: None, payload: None }
+    }
+
+    /// Build from a typed error, preserving it for `downcast_ref` (the
+    /// upstream `anyhow::Error::new` semantics).
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(s) = cur {
+            msgs.push(s.to_string());
+            cur = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for msg in msgs.into_iter().rev() {
+            err = Some(Error { msg, source: err.map(Box::new), payload: None });
+        }
+        let mut err = err.expect("at least one message");
+        err.payload = Some(Box::new(e));
+        err
     }
 
     /// Wrap this error with an outer context message.
     pub fn context<C: fmt::Display>(self, context: C) -> Error {
-        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+        Error {
+            msg: context.to_string(),
+            source: Some(Box::new(self)),
+            payload: None,
+        }
+    }
+
+    /// Borrow the typed error this (or any error in its context chain)
+    /// was built from, if it is an `E`.
+    pub fn downcast_ref<E: 'static>(&self) -> Option<&E> {
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            if let Some(p) =
+                e.payload.as_ref().and_then(|p| p.downcast_ref::<E>())
+            {
+                return Some(p);
+            }
+            cur = e.source.as_deref();
+        }
+        None
+    }
+
+    /// True when the chain carries a typed `E` (upstream `Error::is`).
+    pub fn is<E: 'static>(&self) -> bool {
+        self.downcast_ref::<E>().is_some()
     }
 
     /// Iterate the cause chain, outermost first.
@@ -80,18 +125,9 @@ impl fmt::Debug for Error {
 
 impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
     fn from(e: E) -> Error {
-        // Preserve the std cause chain as context layers.
-        let mut msgs = vec![e.to_string()];
-        let mut cur: Option<&(dyn std::error::Error + 'static)> = e.source();
-        while let Some(s) = cur {
-            msgs.push(s.to_string());
-            cur = s.source();
-        }
-        let mut err: Option<Error> = None;
-        for msg in msgs.into_iter().rev() {
-            err = Some(Error { msg, source: err.map(Box::new) });
-        }
-        err.expect("at least one message")
+        // Preserve the std cause chain as context layers AND the typed
+        // value, so `?`-converted errors stay downcastable.
+        Error::new(e)
     }
 }
 
@@ -240,6 +276,17 @@ mod tests {
         assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
         let e = anyhow!("plain {}", 5);
         assert_eq!(format!("{e}"), "plain 5");
+    }
+
+    #[test]
+    fn downcast_ref_survives_context_layers() {
+        let e = Error::new(io_err()).context("open weights");
+        let io = e.downcast_ref::<std::io::Error>().expect("payload kept");
+        assert_eq!(io.kind(), std::io::ErrorKind::NotFound);
+        assert!(e.is::<std::io::Error>());
+        assert!(!e.is::<std::fmt::Error>());
+        // message-only errors carry no payload
+        assert!(Error::msg("plain").downcast_ref::<std::io::Error>().is_none());
     }
 
     #[test]
