@@ -105,8 +105,9 @@ def _rand_for_spec(rng, name, spec, dims):
             b, m = spec.shape
             vals = 1 + np.arange(b * m, dtype=np.int32) % (dims.kv_blocks - 1)
             return vals.reshape(b, m)
-        # the [B] per-row `pos` vector; keep every row's position small
-        # and valid (distinct rows exercise the per-row insert/mask paths)
+        # the [B] per-row `pos` vector and the prefill chunk's [1] `start`
+        # offset; keep every position small and valid (distinct values
+        # exercise the per-row insert/mask and prefix-mask paths)
         return rng.integers(0, 4, size=spec.shape, dtype=np.int32)
     scale = 0.25
     return (rng.standard_normal(spec.shape) * scale).astype(np.float32)

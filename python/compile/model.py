@@ -10,10 +10,18 @@ between the resulting executables.
 
 Graph inventory (kind → role in the paper):
 
-  prefill_layer      NPU-centric prefill (§4.1.1): one dense transformer
-                     layer over a T-token chunk, full FFN, returns the
-                     layer output plus the K/V rows to install in the
-                     cache.
+  prefill_chunk      NPU-centric chunked prefill (§4.1.1, pipelined à la
+                     §4.2's neuron clusters): one dense transformer layer
+                     over a T-token prompt *chunk* starting at absolute
+                     position start, attending over the already-installed
+                     prompt prefix (passed in as k_prev/v_prev rows
+                     0..start) plus the chunk itself (causal). start = 0
+                     with an empty prefix is a whole-prompt prefill; the
+                     serving layer slices long prompts into bounded
+                     chunks so in-flight decodes interleave with prompt
+                     installation instead of stalling behind it. Returns
+                     the layer output plus the roped K/V rows to install
+                     at positions start..start+T.
   decode_attn        decode-phase attention (§4.1.2): RMSNorm → QKV →
                      RoPE → paged cache insert through a per-row block
                      table into the shared KV pool → gather → GQA
@@ -205,31 +213,59 @@ def lm_head(dims: ModelDims, x, norm_f, w_lm):
 # ---------------------------------------------------------------------------
 
 
-def prefill_layer(dims: ModelDims, x, norm1, wq, wk, wv, wo, norm2,
-                  gate, up, gate_bias, down):
-    """One dense transformer layer over a T-token prefill chunk.
+def prefill_chunk(dims: ModelDims, x, norm1, wq, wk, wv, wo, norm2,
+                  gate, up, gate_bias, down, k_prev, v_prev, start):
+    """One dense transformer layer over a T-token prompt chunk.
 
-    x: [T, H] (single sequence; the paper prefills one prompt at a time).
-    Returns (x_out [T,H], k [T,NKV,DH], v [T,NKV,DH]) — the caller installs
-    k/v into the cache rows for positions 0..T.
+    x: [T, H] — the chunk's token embeddings / hidden state (single
+    sequence; the paper prefills one prompt at a time). The chunk sits at
+    absolute positions start..start+T of its sequence, and attends over
+
+      * the already-installed prompt prefix: k_prev/v_prev [S, NKV, DH]
+        (S = seq_max), roped K as stored in the KV pool, valid in rows
+        0..start (rows beyond start are zero padding and masked out), and
+      * the chunk itself, causally.
+
+    start: [1] int32 — the chunk's first absolute position (RoPE offset
+    and prefix-mask length). start = 0 with zeroed k_prev/v_prev is
+    exactly a whole-prompt prefill, so one graph serves both the
+    synchronous and the chunked admission paths.
+
+    Returns (x_out [T,H], k [T,NKV,DH], v [T,NKV,DH]) — the caller
+    installs the roped k/v rows into the sequence's leased pool blocks at
+    positions start..start+T and feeds x_out to the next layer's chunk.
+    Right-padded chunks (fewer than T real tokens) are fine: a padded
+    query's output is garbage but attends only backwards, so real rows
+    are unaffected and the caller simply ignores rows past its length.
     """
     t = x.shape[0]
+    s = dims.seq_max
     nh, nkv, dh = dims.heads, dims.kv_heads, dims.head_dim
     h = rmsnorm(x, norm1, dims.norm_eps)
     q = (h @ wq.T).reshape(t, nh, dh)
     k = (h @ wk.T).reshape(t, nkv, dh)
     v = (h @ wv.T).reshape(t, nkv, dh)
-    positions = jnp.arange(t, dtype=jnp.int32)
+    positions = start[0] + jnp.arange(t, dtype=jnp.int32)
     q = rope(q, positions, dims.rope_theta)
     k = rope(k, positions, dims.rope_theta)
 
     scale = 1.0 / jnp.sqrt(jnp.float32(dh))
     group = nh // nkv
-    kx = jnp.repeat(k, group, axis=1)
-    vx = jnp.repeat(v, group, axis=1)
+    # key axis = [installed prefix (S rows, start valid) ++ chunk (T rows)]
+    kx = jnp.concatenate(
+        [jnp.repeat(k_prev, group, axis=1), jnp.repeat(k, group, axis=1)],
+        axis=0)
+    vx = jnp.concatenate(
+        [jnp.repeat(v_prev, group, axis=1), jnp.repeat(v, group, axis=1)],
+        axis=0)
     scores = jnp.einsum("thd,shd->hts", q, kx) * scale
-    causal = jnp.tril(jnp.ones((t, t), dtype=bool))
-    scores = jnp.where(causal[None, :, :], scores, -1e30)
+    # prefix keys visible iff their absolute position < start (they all
+    # precede every chunk query); chunk keys causally within the chunk
+    key_idx = jnp.arange(s + t)
+    prefix_valid = key_idx[None, :] < start[0]
+    chunk_causal = (key_idx[None, :] - s) <= jnp.arange(t)[:, None]
+    mask = jnp.where(key_idx[None, :] < s, prefix_valid, chunk_causal)
+    scores = jnp.where(mask[None, :, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     attn = jnp.einsum("hts,shd->thd", probs, vx)
 
@@ -318,13 +354,15 @@ def graph_table(d: ModelDims):
         ))
 
     t = d.prefill_chunk
+    prev = _s(d.seq_max, d.kv_heads, d.head_dim)
     args = ([("x", _s(t, d.hidden))] + attn_weight_specs(d)
-            + ffn_weight_specs(d, d.inter))
+            + ffn_weight_specs(d, d.inter)
+            + [("k_prev", prev), ("v_prev", prev), ("start", _si(1))])
     graphs.append((
-        f"prefill_layer_t{t}",
-        lambda *a, _d=d: prefill_layer(_d, *a),
+        f"prefill_chunk_t{t}",
+        lambda *a, _d=d: prefill_chunk(_d, *a),
         args,
-        {"kind": "prefill_layer", "tokens": t},
+        {"kind": "prefill_chunk", "tokens": t},
     ))
 
     return graphs

@@ -55,7 +55,7 @@ class TestSelftestVectors:
     def test_cases_cover_every_graph_kind(self, selftest):
         names = [case["graph"] for case in selftest["cases"]]
         for prefix in ("decode_attn", "decode_ffn", "decode_dense",
-                       "lm_head", "prefill_layer"):
+                       "lm_head", "prefill_chunk"):
             assert any(n.startswith(prefix) for n in names), prefix
 
     def test_vectors_are_finite_and_sized(self, selftest):

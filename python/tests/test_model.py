@@ -252,6 +252,19 @@ class TestDenseLayerEquivalence:
         np.testing.assert_allclose(hot + cold, full, rtol=1e-4, atol=1e-5)
 
 
+def _zero_prev(d):
+    """Zeroed prefix K/V input pair [S, NKV, DH] for prefill_chunk."""
+    shape = (d.seq_max, d.kv_heads, d.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def _prefill_full(d, x, args_w):
+    """Whole-prompt prefill: one chunk at start 0 with an empty prefix."""
+    kz, vz = _zero_prev(d)
+    return model.prefill_chunk(d, x, *args_w, kz, vz,
+                               jnp.zeros((1,), jnp.int32))
+
+
 class TestPrefillDecodeConsistency:
     def test_prefill_then_decode_matches_all_prefill(self):
         """Token t computed by decode after a (t)-token prefill must equal
@@ -266,11 +279,11 @@ class TestPrefillDecodeConsistency:
         args_w = [aw["norm1"], aw["wq"], aw["wk"], aw["wv"], aw["wo"],
                   aw["norm2"], fw["gate"], fw["up"], fw["gate_bias"],
                   fw["down"]]
-        y_full, k_full, v_full = model.prefill_layer(d, x_full, *args_w)
+        y_full, k_full, v_full = _prefill_full(d, x_full, args_w)
 
         # prefill the first t-1 tokens into the row's leased pool blocks,
         # then decode token t-1 through the block table
-        y_pre, k_pre, v_pre = model.prefill_layer(d, x_full[:t - 1], *args_w)
+        y_pre, k_pre, v_pre = _prefill_full(d, x_full[:t - 1], args_w)
         kp, vp = _pool(d)
         table = _tables(d, 1)  # row 0 → blocks 1..4
         bs = d.kv_block
@@ -289,6 +302,61 @@ class TestPrefillDecodeConsistency:
         blk, off = 1 + (t - 1) // bs, (t - 1) % bs
         np.testing.assert_allclose(kp2[blk, off], k_full[t - 1], rtol=1e-4,
                                    atol=1e-5)
+
+    @pytest.mark.parametrize("split", [1, 3, 4, 7])
+    def test_chunked_prefill_matches_whole_prompt(self, split):
+        """Prefilling a prompt in two chunks — the second attending over
+        the first's installed K/V through k_prev/v_prev — must reproduce
+        the whole-prompt prefill, whatever the chunk boundary. This is
+        the invariant that lets the serving layer slice prompt
+        installation into bounded chunks between decode steps."""
+        d = DIMS
+        rng = _rng(9)
+        aw, fw = _attn_weights(rng, d), _ffn_weights(rng, d)
+        t = d.prefill_chunk
+        x_full = jnp.asarray(rng.standard_normal((t, d.hidden)), jnp.float32)
+        args_w = [aw["norm1"], aw["wq"], aw["wk"], aw["wv"], aw["wo"],
+                  aw["norm2"], fw["gate"], fw["up"], fw["gate_bias"],
+                  fw["down"]]
+        y_full, k_full, v_full = _prefill_full(d, x_full, args_w)
+
+        # chunk 1 at start 0, chunk 2 at start=split over chunk 1's K/V
+        y1, k1, v1 = _prefill_full(d, x_full[:split], args_w)
+        kp = jnp.zeros((d.seq_max, d.kv_heads, d.head_dim), jnp.float32)
+        vp = jnp.zeros_like(kp)
+        kp = kp.at[:split].set(k1)
+        vp = vp.at[:split].set(v1)
+        y2, k2, v2 = model.prefill_chunk(
+            d, x_full[split:], *args_w, kp, vp,
+            jnp.full((1,), split, jnp.int32))
+
+        y = jnp.concatenate([y1, y2], axis=0)
+        k = jnp.concatenate([k1, k2], axis=0)
+        v = jnp.concatenate([v1, v2], axis=0)
+        np.testing.assert_allclose(y, y_full, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(k, k_full, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(v, v_full, rtol=1e-5, atol=1e-6)
+
+    def test_padded_chunk_rows_do_not_perturb_real_rows(self):
+        """A right-padded chunk (fewer real tokens than the compiled T)
+        must produce the same outputs for its real rows — padding only
+        attends backwards, exactly like the serving layer's final partial
+        chunk."""
+        d = DIMS
+        rng = _rng(10)
+        aw, fw = _attn_weights(rng, d), _ffn_weights(rng, d)
+        t = d.prefill_chunk
+        args_w = [aw["norm1"], aw["wq"], aw["wk"], aw["wv"], aw["wo"],
+                  aw["norm2"], fw["gate"], fw["up"], fw["gate_bias"],
+                  fw["down"]]
+        n = t - 3
+        x = jnp.asarray(rng.standard_normal((n, d.hidden)), jnp.float32)
+        y_exact, k_exact, _ = _prefill_full(d, x, args_w)
+        x_pad = jnp.concatenate(
+            [x, jnp.zeros((t - n, d.hidden), jnp.float32)], axis=0)
+        y_pad, k_pad, _ = _prefill_full(d, x_pad, args_w)
+        np.testing.assert_allclose(y_pad[:n], y_exact, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(k_pad[:n], k_exact, rtol=1e-5, atol=1e-6)
 
 
 class TestLmHead:
@@ -315,7 +383,7 @@ class TestGraphTable:
             assert f"lm_head_b{b}" in names
             for k in d.hot_ks:
                 assert f"decode_ffn_b{b}_k{k}" in names
-        assert f"prefill_layer_t{d.prefill_chunk}" in names
+        assert f"prefill_chunk_t{d.prefill_chunk}" in names
         # (attn + dense + lm_head + ffn·|hot_ks|) per batch + 1 prefill
         assert len(names) == len(d.batches) * (3 + len(d.hot_ks)) + 1
 

@@ -63,6 +63,12 @@ pub struct RuntimeConfig {
     /// Leasable blocks in the shared KV pool (0 = auto-size to a
     /// dense-equivalent for `max_batch` slots).
     pub kv_pool_blocks: usize,
+    /// Chunked-prefill budget: prompt tokens the continuous scheduler
+    /// installs per iteration, between decode steps (two-phase
+    /// admission). 0 = synchronous admission — each new prompt prefills
+    /// inside `admit` and stalls every in-flight decode for its full
+    /// duration. CLI: `pi2 serve --prefill-chunk N`.
+    pub prefill_chunk: usize,
 }
 
 impl Default for RuntimeConfig {
@@ -84,6 +90,7 @@ impl Default for RuntimeConfig {
             cluster_neurons: 64,
             kv_block_tokens: 16,
             kv_pool_blocks: 0,
+            prefill_chunk: 0,
         }
     }
 }
@@ -177,6 +184,9 @@ impl RuntimeConfig {
         if let Some(v) = j.get("kv_pool_blocks").as_usize() {
             self.kv_pool_blocks = v;
         }
+        if let Some(v) = j.get("prefill_chunk").as_usize() {
+            self.prefill_chunk = v;
+        }
         if let Some(v) = j.get("bundling").as_bool() {
             self.bundling = v;
         }
@@ -246,7 +256,8 @@ mod tests {
         let j = Json::parse(
             r#"{"offload_ffn_frac": 0.75, "pipeline": "matrix",
                 "xpu": "cpu", "max_batch": 2, "bundling": false,
-                "kv_block_tokens": 8, "kv_pool_blocks": 40}"#,
+                "kv_block_tokens": 8, "kv_pool_blocks": 40,
+                "prefill_chunk": 24}"#,
         )
         .unwrap();
         c.apply_json(&j);
@@ -257,5 +268,6 @@ mod tests {
         assert!(!c.bundling);
         assert_eq!(c.kv_block_tokens, 8);
         assert_eq!(c.kv_pool_blocks, 40);
+        assert_eq!(c.prefill_chunk, 24);
     }
 }

@@ -8,11 +8,19 @@
 //! engine and the real PJRT engine alike:
 //!
 //! - [`ScheduleMode::Lockstep`]: requests are admitted in groups and the
-//!   whole group decodes until its *longest* member finishes — the
-//!   pre-redesign behavior, kept as the baseline scheduler.
+//!   group's slots admit no newcomers until its *longest* member
+//!   finishes — the baseline scheduler. Finished members are retired on
+//!   the spot (their rows idle instead of decoding discarded tokens),
+//!   so the waste is idle slots, not wasted decode work.
 //! - [`ScheduleMode::Continuous`]: admission and eviction happen at
 //!   decode-step granularity; the moment a sequence finishes its slot is
 //!   retired and the next queued request takes it (continuous batching).
+//!   With [`Coordinator::prefill_chunk`]` > 0`, admissions are two-phase:
+//!   the prompt installs in bounded chunks *between* decode steps
+//!   (`admit_deferred` + `prefill_chunk`), so a newcomer's prefill never
+//!   stalls the in-flight streams for more than one chunk — the
+//!   serving-layer instance of the paper's decompose-and-overlap
+//!   principle (§4.1.1).
 //!
 //! [`RealEnginePool`] holds the real-engine-specific machinery that is
 //! *not* part of the serving API: one compiled engine per batch point of
@@ -72,10 +80,12 @@ impl ScheduleMode {
 /// `prefill_s`/`decode_s` are *engine seconds* (wall-clock for the real
 /// engine, modeled device seconds for the simulation engine), so
 /// [`ServeReport::decode_tps`] compares schedulers on the quantity that
-/// matters: useful tokens per second of engine time. The engine may emit
-/// more tokens than `decode_tokens` under lockstep — tokens decoded for
-/// already-finished group members are discarded, which is exactly the
-/// waste continuous batching removes.
+/// matters: useful tokens per second of engine time. Lockstep retires
+/// finished group members immediately (they hold their slot idle, not
+/// decoding), so neither scheduler decodes discarded tokens — the
+/// residual lockstep waste is slots idling until the group's longest
+/// member finishes. Per-slot inter-token latency lives in
+/// [`ServingMetrics::itl_ms`] (`report.serving`).
 #[derive(Debug, Default)]
 pub struct ServeReport {
     pub sessions: Vec<Session>,
@@ -94,6 +104,14 @@ pub struct ServeReport {
     /// request (continuous batching waits for a retire to free blocks —
     /// admission consults pool pressure, not slot count alone).
     pub kv_admission_stalls: usize,
+    /// Admissions that deferred their first token to chunked prefill
+    /// ([`Admission::first_token`]` == None`).
+    ///
+    /// [`Admission::first_token`]: crate::serve::Admission::first_token
+    pub deferred_admissions: usize,
+    /// Bounded prefill-chunk calls the continuous scheduler interleaved
+    /// with decode steps.
+    pub prefill_chunks: usize,
 }
 
 impl ServeReport {
@@ -130,6 +148,13 @@ struct ActiveSeq {
     decode_done_s: Option<f64>,
     /// Lockstep only: finished but still holding its slot.
     finished: bool,
+    /// Chunked admission: the prompt is still installing; the slot sits
+    /// out decode steps until the engine reports the first token.
+    pending_prefill: bool,
+    /// Engine-clock timestamp of this sequence's last emitted token
+    /// (per-slot inter-token latency is the gap between consecutive
+    /// stamps).
+    last_tok_clock: Option<f64>,
 }
 
 impl ActiveSeq {
@@ -160,6 +185,8 @@ impl ActiveSeq {
             decode_started: Instant::now(),
             decode_done_s: None,
             finished: false,
+            pending_prefill: false,
+            last_tok_clock: None,
         }
     }
 
@@ -188,6 +215,16 @@ fn emit<S: TokenSink>(
     sink.on_token(&TokenEvent { request_id: seq.id, token, index, finish })
 }
 
+/// Stamp one emitted token on the engine clock and record the gap from
+/// the sequence's previous token — the per-slot inter-token latency
+/// whose tail chunked prefill exists to bound.
+fn record_itl(seq: &mut ActiveSeq, now_clock: f64, serving: &mut ServingMetrics) {
+    if let Some(prev) = seq.last_tok_clock {
+        serving.itl_ms.push((now_clock - prev).max(0.0) * 1e3);
+    }
+    seq.last_tok_clock = Some(now_clock);
+}
+
 fn close_session(report: &mut ServeReport, seq: ActiveSeq, finish: FinishReason) {
     let metrics = RequestMetrics {
         queue_s: seq.queue_s,
@@ -212,16 +249,30 @@ fn close_session(report: &mut ServeReport, seq: ActiveSeq, finish: FinishReason)
 pub struct Coordinator<E: Engine> {
     pub engine: E,
     pub mode: ScheduleMode,
+    /// Prompt tokens of pending (chunked) prefill the continuous
+    /// scheduler advances per iteration, between decode steps. 0 = admit
+    /// synchronously: each admission installs its whole prompt inside
+    /// `admit`, stalling every in-flight decode for the full prompt
+    /// duration — the head-of-line blocking this knob removes. With a
+    /// budget of N, no in-flight stream ever waits for more than N
+    /// prompt tokens of newcomers between its decode steps.
+    pub prefill_chunk: usize,
 }
 
 impl<E: Engine> Coordinator<E> {
     /// Continuous batching by default — the redesign's reason to exist.
     pub fn new(engine: E) -> Self {
-        Coordinator { engine, mode: ScheduleMode::Continuous }
+        Coordinator { engine, mode: ScheduleMode::Continuous, prefill_chunk: 0 }
     }
 
     pub fn with_mode(engine: E, mode: ScheduleMode) -> Self {
-        Coordinator { engine, mode }
+        Coordinator { engine, mode, prefill_chunk: 0 }
+    }
+
+    /// Enable chunked prefill with a per-iteration token budget.
+    pub fn with_prefill_chunk(mut self, tokens: usize) -> Self {
+        self.prefill_chunk = tokens;
+        self
     }
 
     /// Serve every request to completion, streaming tokens to `sink`.
@@ -263,6 +314,16 @@ impl<E: Engine> Coordinator<E> {
         self.serve(requests, &mut NullSink)
     }
 
+    /// Current engine-clock reading (cumulative prefill + decode engine
+    /// seconds) relative to `clock0`. Tokens are stamped on this clock,
+    /// so per-slot inter-token latency measures exactly the engine work —
+    /// including other requests' prefill — that ran between a stream's
+    /// consecutive tokens.
+    fn engine_clock(&self, clock0: f64) -> f64 {
+        let st = self.engine.stats();
+        st.prefill_s + st.decode_s - clock0
+    }
+
     fn serve_continuous<S: TokenSink>(
         &mut self,
         requests: &[InferenceRequest],
@@ -270,6 +331,7 @@ impl<E: Engine> Coordinator<E> {
     ) -> Result<ServeReport> {
         let t0 = Instant::now();
         let s0 = self.engine.stats();
+        let clock0 = s0.prefill_s + s0.decode_s;
         let mut report = ServeReport::default();
         let cap = self.engine.capacity().max(1);
         let mut queue: VecDeque<&InferenceRequest> = requests.iter().collect();
@@ -294,7 +356,15 @@ impl<E: Engine> Coordinator<E> {
                 let queue_s =
                     (t0.elapsed().as_secs_f64() - req.submit_s).max(0.0);
                 let admit_t0 = Instant::now();
-                let adm = match self.engine.admit(req) {
+                // chunked prefill on: claim the slot and lease now, and
+                // install the prompt between decode steps below, so the
+                // admission itself stalls nobody
+                let admitted = if self.prefill_chunk > 0 {
+                    self.engine.admit_deferred(req)
+                } else {
+                    self.engine.admit(req)
+                };
+                let adm = match admitted {
                     Ok(adm) => adm,
                     Err(e) if e.downcast_ref::<KvPoolError>().is_some() => {
                         // KV pool pressure: with sequences in flight this
@@ -324,6 +394,11 @@ impl<E: Engine> Coordinator<E> {
                 if let Some(tok) = adm.first_token {
                     seq.tokens.push(tok);
                     seq.mark_first_token(t0.elapsed().as_secs_f64());
+                    record_itl(
+                        &mut seq,
+                        self.engine_clock(clock0),
+                        &mut report.serving,
+                    );
                     let done = seq.tokens.len() >= seq.max_tokens;
                     emit(sink, &seq, tok, 0, done.then_some(FinishReason::Length))?;
                     if done {
@@ -332,6 +407,9 @@ impl<E: Engine> Coordinator<E> {
                         close_session(&mut report, seq, FinishReason::Length);
                         continue;
                     }
+                } else {
+                    report.deferred_admissions += 1;
+                    seq.pending_prefill = true;
                 }
                 active[adm.slot] = Some(seq);
                 live += 1;
@@ -349,6 +427,62 @@ impl<E: Engine> Coordinator<E> {
                 }
                 continue;
             }
+            // advance pending (chunked) prefills under the per-iteration
+            // token budget: in-flight streams' next decode step is never
+            // more than one budget's worth of newcomer prompt away — the
+            // serving-layer instance of the paper's decompose-and-overlap
+            // principle (§4.1.1)
+            if self.prefill_chunk > 0 {
+                let mut budget = self.prefill_chunk;
+                for slot in 0..cap {
+                    if budget == 0 {
+                        break;
+                    }
+                    if !active[slot]
+                        .as_ref()
+                        .is_some_and(|s| s.pending_prefill)
+                    {
+                        continue;
+                    }
+                    let chunk_t0 = Instant::now();
+                    let progress = self.engine.prefill_chunk(slot, budget)?;
+                    report.prefill_chunks += 1;
+                    budget = budget.saturating_sub(progress.installed);
+                    let now_clock = self.engine_clock(clock0);
+                    let done_budget = self.engine.decode_budget(slot);
+                    let Some(seq) = active[slot].as_mut() else { continue };
+                    seq.prefill_s += chunk_t0.elapsed().as_secs_f64();
+                    if progress.installed == 0
+                        && progress.first_token.is_none()
+                    {
+                        // a no-progress engine must not be spun on
+                        break;
+                    }
+                    let Some(tok) = progress.first_token else { continue };
+                    // prompt fully installed: the slot decodes from here;
+                    // clamp max_tokens to the now-known context budget
+                    // exactly as a synchronous admission would
+                    seq.pending_prefill = false;
+                    if let Some(b) = done_budget {
+                        seq.max_tokens = seq.max_tokens.min(1 + b);
+                    }
+                    seq.tokens.push(tok);
+                    seq.mark_first_token(t0.elapsed().as_secs_f64());
+                    record_itl(seq, now_clock, &mut report.serving);
+                    let done = seq.tokens.len() >= seq.max_tokens;
+                    emit(sink, seq, tok, 0, done.then_some(FinishReason::Length))?;
+                    if done {
+                        let Some(mut seq) = active[slot].take() else {
+                            continue;
+                        };
+                        seq.mark_done();
+                        live -= 1;
+                        self.engine.retire(slot)?;
+                        pool_blocked = false;
+                        close_session(&mut report, seq, FinishReason::Length);
+                    }
+                }
+            }
             let st = Instant::now();
             let toks = self.engine.step()?;
             report.step_latency_ms.push(st.elapsed().as_secs_f64() * 1e3);
@@ -364,6 +498,7 @@ impl<E: Engine> Coordinator<E> {
                 continue;
             }
             idle_steps = 0;
+            let now_clock = self.engine_clock(clock0);
             for (slot, tok) in toks {
                 // a slot whose row of the context window is exhausted ends
                 // its sequence on the token it just received; other slots
@@ -376,6 +511,7 @@ impl<E: Engine> Coordinator<E> {
                 };
                 seq.tokens.push(tok);
                 seq.mark_first_token(t0.elapsed().as_secs_f64());
+                record_itl(seq, now_clock, &mut report.serving);
                 report.decode_tokens += 1;
                 let index = seq.tokens.len() - 1;
                 let done = seq.tokens.len() >= seq.max_tokens || exhausted;
@@ -408,6 +544,7 @@ impl<E: Engine> Coordinator<E> {
     ) -> Result<ServeReport> {
         let t0 = Instant::now();
         let s0 = self.engine.stats();
+        let clock0 = s0.prefill_s + s0.decode_s;
         let mut report = ServeReport::default();
         let cap = self.engine.capacity().max(1);
         let mut idx = 0;
@@ -441,20 +578,35 @@ impl<E: Engine> Coordinator<E> {
                 let mut seq = ActiveSeq::new(
                     req, queue_s, prefill_s,
                     self.engine.decode_budget(adm.slot));
+                let mut finished_at_prefill = false;
                 if let Some(tok) = adm.first_token {
                     seq.tokens.push(tok);
                     seq.mark_first_token(t0.elapsed().as_secs_f64());
+                    record_itl(
+                        &mut seq,
+                        self.engine_clock(clock0),
+                        &mut report.serving,
+                    );
                     let done = seq.tokens.len() >= seq.max_tokens;
                     emit(sink, &seq, tok, 0,
                          done.then_some(FinishReason::Length))?;
                     if done {
                         seq.mark_done();
+                        finished_at_prefill = true;
                     }
                 }
                 seqs.push((adm.slot, seq));
+                if finished_at_prefill {
+                    // a single-token member is done at prefill: free its
+                    // row immediately instead of decoding discards
+                    self.engine.retire(adm.slot)?;
+                }
             }
-            // decode until the whole group is done; finished members hold
-            // their slots and their tokens are discarded (lockstep waste)
+            // decode until the whole group is done. Finished members are
+            // retired on the spot — their rows stop decoding (and stop
+            // holding KV) instead of generating discarded tokens; the
+            // residual lockstep cost is that the freed slots admit no
+            // newcomers until the whole group drains.
             let mut idle_steps = 0usize;
             while seqs.iter().any(|(_, s)| !s.finished) {
                 let st = Instant::now();
@@ -470,14 +622,13 @@ impl<E: Engine> Coordinator<E> {
                     continue;
                 }
                 idle_steps = 0;
-                // lockstep holds finished members' slots, and those rows
-                // keep advancing with the group — so the group ends when
-                // ANY held row exhausts its context window (the shared
-                // wall of the pre-per-row scheduler), or the next step
-                // would error on the full row
+                // the group ends when any still-live row exhausts its
+                // context window (finished rows were retired and no
+                // longer advance)
                 let wall = toks.iter().any(|&(slot, _)| {
                     self.engine.decode_budget(slot) == Some(0)
                 });
+                let now_clock = self.engine_clock(clock0);
                 for (slot, tok) in toks {
                     let Some((_, seq)) =
                         seqs.iter_mut().find(|(s, _)| *s == slot)
@@ -489,6 +640,7 @@ impl<E: Engine> Coordinator<E> {
                     }
                     seq.tokens.push(tok);
                     seq.mark_first_token(t0.elapsed().as_secs_f64());
+                    record_itl(seq, now_clock, &mut report.serving);
                     report.decode_tokens += 1;
                     let index = seq.tokens.len() - 1;
                     let done = seq.tokens.len() >= seq.max_tokens || wall;
@@ -496,6 +648,7 @@ impl<E: Engine> Coordinator<E> {
                          done.then_some(FinishReason::Length))?;
                     if done {
                         seq.mark_done();
+                        self.engine.retire(slot)?;
                     }
                 }
                 // every slot the engine reported this step got its finish
@@ -504,6 +657,7 @@ impl<E: Engine> Coordinator<E> {
                 // engine surfaces the wall as an error on the next step
             }
             for (slot, seq) in seqs {
+                // idempotent: finished members were already retired
                 self.engine.retire(slot)?;
                 close_session(&mut report, seq, FinishReason::Length);
             }
@@ -679,15 +833,18 @@ mod tests {
     }
 
     #[test]
-    fn lockstep_discards_overrun_tokens() {
+    fn lockstep_masks_finished_members_instead_of_discarding_tokens() {
         let mut c = Coordinator::with_mode(sim(2), ScheduleMode::Lockstep);
-        // one short + one long rider in the same group
+        // one short + one long rider in the same group: the short member
+        // is retired the moment it finishes, so the engine decodes no
+        // discarded tokens for it while the rider runs on
         let report = c.serve_collect(&reqs(&[2, 8])).unwrap();
         assert_eq!(report.session(0).unwrap().tokens.len(), 2);
         assert_eq!(report.session(1).unwrap().tokens.len(), 8);
-        // useful decode tokens: (2-1) + (8-1); the engine emitted 7+7
+        // useful decode tokens: (2-1) + (8-1) — and the engine emitted
+        // exactly that (the old scheduler emitted 14, discarding 6)
         assert_eq!(report.decode_tokens, 8);
-        assert_eq!(c.engine.stats().decode_tokens, 14);
+        assert_eq!(c.engine.stats().decode_tokens, 8);
         // the short member's decode latency must not include the time it
         // idled waiting for the group's long rider
         let short = &report.session(0).unwrap().metrics;

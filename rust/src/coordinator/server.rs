@@ -23,6 +23,7 @@
 //!   ← {"served": N, "decode_tps": .., "cache_hit_rate": ..,
 //!      "queue_ms": {"p50": .., "p90": .., "p99": ..},
 //!      "prefill_ms": {..}, "decode_ms": {..}, "ttft_ms": {..},
+//!      "itl_ms": {"p50": .., "p99": .., "max": ..},
 //!      "kv": {"blocks_total": .., "blocks_free": .., "occupancy": ..,
 //!             "share_rate": .., "shared_blocks": .., "alloc_stalls": ..,
 //!             "cow_copies": ..}}       (engines with a paged KV pool)
@@ -163,6 +164,12 @@ impl<E: Engine> Server<E> {
         self.coord.mode = mode;
     }
 
+    /// Chunked-prefill budget (prompt tokens installed per scheduler
+    /// iteration between decode steps); 0 = synchronous admission.
+    pub fn set_prefill_chunk(&mut self, tokens: usize) {
+        self.coord.prefill_chunk = tokens;
+    }
+
     /// Bind and serve until a shutdown command arrives. Sends the bound
     /// address through `ready` once listening (for tests / launchers).
     pub fn run(
@@ -284,6 +291,19 @@ impl<E: Engine> Server<E> {
                 ("p99", json::num(p(s, 99.0))),
             ])
         }
+        // per-slot inter-token latency on the engine clock: p50/p99/max,
+        // the tail the --prefill-chunk knob exists to bound
+        let itl = {
+            let s = &mut self.serving.itl_ms;
+            let p = |s: &mut Samples, q: f64| {
+                if s.is_empty() { 0.0 } else { s.percentile(q) }
+            };
+            json::obj(vec![
+                ("p50", json::num(p(s, 50.0))),
+                ("p99", json::num(p(s, 99.0))),
+                ("max", json::num(p(s, 100.0))),
+            ])
+        };
         let mut fields = vec![
             ("served", json::num(self.served as f64)),
             ("decode_tps", json::num(engine.decode_tps())),
@@ -292,6 +312,7 @@ impl<E: Engine> Server<E> {
             ("prefill_ms", pct(&mut self.serving.prefill_ms)),
             ("decode_ms", pct(&mut self.serving.decode_ms)),
             ("ttft_ms", pct(&mut self.serving.ttft_ms)),
+            ("itl_ms", itl),
         ];
         // paged-KV pool occupancy / prefix-share rate / allocation stalls
         if let Some(p) = self.coord.engine.kv_pool() {
@@ -428,6 +449,9 @@ impl<E: Engine> Server<E> {
         let sess = report.session(id).context("request produced no session")?;
         self.served += 1;
         self.serving.record(&sess.metrics);
+        // fold this serve call's inter-token gaps into the server-lifetime
+        // distribution the stats command reports
+        self.serving.itl_ms.extend_from(&report.serving.itl_ms);
         let event = stream.then_some("done");
         writeln!(writer, "{}", self.session_json(sess, event))?;
         Ok(())
@@ -484,6 +508,13 @@ mod tests {
         assert!((0.0..=1.0).contains(&hit));
         assert!(responses[1].get("prefill_ms").get("p50").as_f64().unwrap() >= 0.0);
         assert!(responses[1].get("decode_tps").as_f64().unwrap() > 0.0);
+        // inter-token latency distribution is part of the stats surface
+        let itl = responses[1].get("itl_ms");
+        assert!(itl.get("p99").as_f64().unwrap() >= 0.0);
+        assert!(
+            itl.get("max").as_f64().unwrap()
+                >= itl.get("p50").as_f64().unwrap()
+        );
         assert_eq!(responses[2].get("ok"), &Json::Bool(true));
     }
 

@@ -30,7 +30,9 @@ use crate::kv::{pool_err, KvLease, KvPool, KvPoolStats};
 use crate::metrics::{RunMetrics, StepMetrics};
 use crate::pipeline::{schedule, ClusterTask};
 use crate::planner::{Plan, Planner};
-use crate::serve::{Admission, Engine, EngineStats, InferenceRequest, SlotId};
+use crate::serve::{
+    Admission, Engine, EngineStats, InferenceRequest, PrefillProgress, SlotId,
+};
 use crate::sparsity::{ActivationModel, PredictorModel, N_REP};
 use crate::storage::{IoBurst, IoPattern, UfsModel};
 use crate::util::prng::Rng;
@@ -83,6 +85,15 @@ struct SimSlot {
     /// (`prompt + max_tokens - 1` tokens); admission reserves the
     /// difference so in-flight decodes never exhaust the pool mid-step.
     demand_blocks: usize,
+    /// Prompt tokens not yet prefilled (two-phase admission). A slot
+    /// with pending prompt tokens holds its lease but sits out decode
+    /// steps until [`Engine::prefill_chunk`] installs the rest.
+    pending: usize,
+    /// The prompt, kept until the prefill completes: the lease's full
+    /// blocks are published for prefix sharing only then (a
+    /// half-installed prompt must never be shareable), and publication
+    /// needs the token ids. Drained to empty on publish.
+    prompt: Vec<u32>,
 }
 
 impl SimEngine {
@@ -583,7 +594,21 @@ impl Engine for SimEngine {
         self.spec.vocab
     }
 
+    /// Synchronous admission: claim the slot, then run the whole prompt
+    /// in one unbounded chunk — exactly the deferred path with an
+    /// infinite budget, so the two admission modes cannot drift apart.
     fn admit(&mut self, req: &InferenceRequest) -> Result<Admission> {
+        let adm = self.admit_deferred(req)?;
+        let progress = self.prefill_chunk(adm.slot, usize::MAX)?;
+        Ok(Admission { first_token: progress.first_token, ..adm })
+    }
+
+    /// Two-phase admission: lease the prompt's KV blocks now (same
+    /// reservation arithmetic and typed pool-pressure error as the
+    /// synchronous path), defer the prefill *compute* to
+    /// [`Engine::prefill_chunk`] calls. The slot holds its lease but
+    /// sits out decode steps until the prompt completes.
+    fn admit_deferred(&mut self, req: &InferenceRequest) -> Result<Admission> {
         let slot = self
             .slots
             .iter()
@@ -607,24 +632,80 @@ impl Engine for SimEngine {
                 .flatten()
                 .map(|s| (s.demand_blocks, s.lease.blocks().len())),
         );
-        let lease =
-            self.kv_pool.admit(&req.prompt, reserve).map_err(pool_err)?;
+        // unpublished: the prompt's blocks must not be shareable until
+        // its (possibly chunked) install completes — prefill_chunk
+        // publishes them with the first token
+        let lease = self
+            .kv_pool
+            .admit_unpublished(&req.prompt, reserve)
+            .map_err(pool_err)?;
         let info = lease.info();
-        // modeled prefill cost (NPU-centric, async prefetch, §4.1.1)
-        let pre = self.prefill_run(req.prompt.len().max(1), true);
+        let rng = self.slot_stream(req);
+        self.slots[slot] = Some(SimSlot {
+            rng,
+            lease,
+            demand_blocks,
+            pending: req.prompt.len().max(1),
+            prompt: req.prompt.clone(),
+        });
+        Ok(Admission { slot, first_token: None, lease: Some(info) })
+    }
+
+    /// Advance a pending prompt by up to `budget` tokens, modeling each
+    /// chunk with the prefill timeline machinery (NPU-centric, async
+    /// prefetch, §4.1.1 — smaller chunks pay the per-layer fixed costs
+    /// more often, which is the honest price of pipelining). The token
+    /// stream itself is untouched by chunking: it is keyed only by
+    /// (request id, seed), so chunked and synchronous admissions emit
+    /// byte-identical sequences.
+    fn prefill_chunk(
+        &mut self,
+        slot: SlotId,
+        budget: usize,
+    ) -> Result<PrefillProgress> {
+        ensure!(
+            slot < self.slots.len(),
+            "slot {slot} out of range (capacity {})",
+            self.slots.len()
+        );
+        let pending = match &self.slots[slot] {
+            Some(s) => s.pending,
+            None => 0,
+        };
+        if pending == 0 || budget == 0 {
+            return Ok(PrefillProgress {
+                installed: 0,
+                remaining: pending,
+                first_token: None,
+            });
+        }
+        let n = pending.min(budget);
+        let pre = self.prefill_run(n, true);
         self.sv_prefill_s += pre.total_s;
-        let mut rng = self.slot_stream(req);
-        let first = rng.below(self.spec.vocab) as u32;
-        self.slots[slot] = Some(SimSlot { rng, lease, demand_blocks });
-        Ok(Admission { slot, first_token: Some(first), lease: Some(info) })
+        let vocab = self.spec.vocab;
+        let s = self.slots[slot].as_mut().expect("checked above");
+        s.pending -= n;
+        let first_token = if s.pending == 0 {
+            // install complete: the prompt's blocks become shareable now
+            let prompt = std::mem::take(&mut s.prompt);
+            self.kv_pool.publish(&s.lease, &prompt);
+            Some(s.rng.below(vocab) as u32)
+        } else {
+            None
+        };
+        Ok(PrefillProgress { installed: n, remaining: s.pending, first_token })
     }
 
     fn step(&mut self) -> Result<Vec<(SlotId, u32)>> {
+        // slots with a pending (chunked) prefill hold their lease but
+        // sit the step out — they join once the prompt is installed
         let occupied: Vec<SlotId> = self
             .slots
             .iter()
             .enumerate()
-            .filter_map(|(i, s)| s.is_some().then_some(i))
+            .filter_map(|(i, s)| {
+                s.as_ref().is_some_and(|s| s.pending == 0).then_some(i)
+            })
             .collect();
         if occupied.is_empty() {
             return Ok(Vec::new());
@@ -917,6 +998,103 @@ mod tests {
         assert!(e.kv_pool().unwrap().alloc_stalls > 0);
         e.retire(a.slot).unwrap();
         assert!(e.admit(&InferenceRequest::new(1, vec![7, 8, 9, 1, 2], 4)).is_ok());
+    }
+
+    #[test]
+    fn deferred_admission_streams_match_synchronous() {
+        use crate::serve::InferenceRequest;
+        let req = InferenceRequest::new(9, vec![1, 2, 3, 4, 5, 6, 7], 5);
+        // synchronous admit
+        let mut a = engine(RuntimeConfig { max_batch: 2, ..Default::default() });
+        let adm = a.admit(&req).unwrap();
+        let mut sync = vec![adm.first_token.unwrap()];
+        for _ in 0..4 {
+            sync.push(a.step().unwrap()[0].1);
+        }
+        // deferred admit, prompt installed 2 tokens at a time
+        let mut b = engine(RuntimeConfig { max_batch: 2, ..Default::default() });
+        let adm = b.admit_deferred(&req).unwrap();
+        assert_eq!(adm.first_token, None);
+        assert_eq!(b.active(), 1, "pending slot must count as occupied");
+        assert!(b.step().unwrap().is_empty(), "pending slot must sit out");
+        let mut installed = 0;
+        let first = loop {
+            let p = b.prefill_chunk(adm.slot, 2).unwrap();
+            installed += p.installed;
+            if let Some(tok) = p.first_token {
+                assert_eq!(p.remaining, 0);
+                break tok;
+            }
+        };
+        assert_eq!(installed, req.prompt.len());
+        let mut chunked = vec![first];
+        for _ in 0..4 {
+            chunked.push(b.step().unwrap()[0].1);
+        }
+        assert_eq!(sync, chunked, "chunking changed the token stream");
+        // prefill_chunk on a completed slot is a no-op
+        assert_eq!(
+            b.prefill_chunk(adm.slot, 8).unwrap(),
+            crate::serve::PrefillProgress::default()
+        );
+        assert!(b.prefill_chunk(99, 1).is_err(), "out-of-range slot");
+    }
+
+    #[test]
+    fn pending_prompts_are_not_shareable_until_installed() {
+        use crate::serve::InferenceRequest;
+        let cfg = RuntimeConfig {
+            max_batch: 3,
+            kv_block_tokens: 4,
+            kv_pool_blocks: 32,
+            ..Default::default()
+        };
+        let mut e = SimEngine::new(oneplus_12(), bamboo_7b(), cfg);
+        let prompt: Vec<u32> = (0..8).collect();
+        let a = e
+            .admit_deferred(&InferenceRequest::new(0, prompt.clone(), 4))
+            .unwrap();
+        // an identical prompt admitted while the first is still
+        // installing must NOT share its half-installed blocks
+        let b = e
+            .admit_deferred(&InferenceRequest::new(1, prompt.clone(), 4))
+            .unwrap();
+        assert_eq!(
+            b.lease.unwrap().shared_blocks,
+            0,
+            "shared a block whose contents are not installed yet"
+        );
+        // complete a's install: its blocks publish, and a third
+        // admission shares them
+        while e.prefill_chunk(a.slot, 3).unwrap().first_token.is_none() {}
+        let c = e.admit(&InferenceRequest::new(2, prompt, 4)).unwrap();
+        assert_eq!(c.lease.unwrap().shared_blocks, 2);
+    }
+
+    #[test]
+    fn retire_mid_prefill_rolls_back_the_lease() {
+        use crate::serve::InferenceRequest;
+        let cfg = RuntimeConfig {
+            max_batch: 2,
+            kv_block_tokens: 4,
+            kv_pool_blocks: 16,
+            ..Default::default()
+        };
+        let mut e = SimEngine::new(oneplus_12(), bamboo_7b(), cfg);
+        let adm = e
+            .admit_deferred(&InferenceRequest::new(0, (0..10).collect(), 4))
+            .unwrap();
+        assert!(e.kv_pool().unwrap().free_blocks < 16);
+        e.prefill_chunk(adm.slot, 3).unwrap(); // abandon mid-prompt
+        e.retire(adm.slot).unwrap();
+        assert_eq!(e.active(), 0);
+        assert_eq!(
+            e.kv_pool().unwrap().free_blocks,
+            16,
+            "cancelled mid-prefill admission leaked pool blocks"
+        );
+        // the slot is immediately reusable
+        assert!(e.admit(&InferenceRequest::new(1, vec![5], 2)).is_ok());
     }
 
     #[test]

@@ -32,7 +32,9 @@ use crate::kv::{pool_err, KvLease, KvPool, KvPoolStats};
 use crate::metrics::{RunMetrics, StepMetrics};
 use crate::model::{ModelDims, Predictor, WeightFile, Weights};
 use crate::runtime::{Runtime, Tensor, TensorData};
-use crate::serve::{Admission, Engine, EngineStats, InferenceRequest, SlotId};
+use crate::serve::{
+    Admission, Engine, EngineStats, InferenceRequest, PrefillProgress, SlotId,
+};
 use crate::storage::{FlashFile, ThrottledFile, UfsModel};
 
 /// Options for the real engine.
@@ -98,6 +100,19 @@ impl std::fmt::Display for KvCapacityError {
 
 impl std::error::Error for KvCapacityError {}
 
+/// A prompt mid-installation on one batch row (two-phase admission):
+/// the row already holds its full KV lease, `installed` counts the
+/// prompt tokens whose K/V sit in the leased blocks, and the remainder
+/// is advanced chunk by chunk between decode steps. Rows with a pending
+/// prompt ride decode steps against the reserved scratch block exactly
+/// like vacant rows — their installed prefix is never read or written
+/// until the prompt completes.
+#[derive(Debug, Clone)]
+struct PendingPrefill {
+    prompt: Vec<u32>,
+    installed: usize,
+}
+
 /// The engine itself: owns the PJRT runtime, resident weights, the
 /// segmented cache, and per-layer KV state for one decode batch.
 pub struct RealEngine {
@@ -148,6 +163,10 @@ pub struct RealEngine {
     /// Serving slots for the [`Engine`] trait: one per batch row, holding
     /// the row's last generated token while a sequence occupies it.
     serve_slots: Vec<Option<u32>>,
+    /// Per row: the not-yet-installed remainder of a deferred admission's
+    /// prompt (chunked prefill). `Some` marks the row occupied even
+    /// before it produces its first token.
+    pending: Vec<Option<PendingPrefill>>,
     sv_prefill_s: f64,
     sv_decode_s: f64,
     sv_decode_tokens: u64,
@@ -198,6 +217,32 @@ impl RealEngine {
             dims.kv_blocks,
             dims.kv_block,
             dims.seq_max / dims.kv_block,
+        );
+        // chunked-prefill ABI: the prefill graph must accept the already
+        // installed prefix (k_prev/v_prev [S, KVH, DH]) plus the chunk's
+        // [1] start offset, so prompts install incrementally between
+        // decode steps; whole-prompt-only artifacts would stall every
+        // in-flight stream for each admission
+        let pf_name = Runtime::prefill_name(dims.prefill_chunk);
+        let prev_shape = vec![dims.seq_max, dims.kv_heads, dims.head_dim()];
+        let pf_ok = rt
+            .graph(&pf_name)
+            .map(|g| {
+                let n = g.args.len();
+                n >= 3
+                    && g.args[n - 1].shape == vec![1]
+                    && g.args[n - 2].shape == prev_shape
+                    && g.args[n - 3].shape == prev_shape
+            })
+            .unwrap_or(false);
+        ensure!(
+            pf_ok,
+            "artifacts are stale: no chunked prefill graph {pf_name} with \
+             trailing args k_prev/v_prev [{}, {}, {}], start [1] — \
+             regenerate with `python -m compile.aot`",
+            dims.seq_max,
+            dims.kv_heads,
+            dims.head_dim(),
         );
         let weights = Weights::generate(&dims, opts.seed);
         if !weight_path.exists() {
@@ -261,6 +306,7 @@ impl RealEngine {
             opts,
             metrics: RunMetrics::new(),
             serve_slots: vec![None; batch],
+            pending: vec![None; batch],
             sv_prefill_s: 0.0,
             sv_decode_s: 0.0,
             sv_decode_tokens: 0,
@@ -366,16 +412,24 @@ impl RealEngine {
     }
 
     /// Release row `row`'s lease back to the pool (no-op when vacant) and
-    /// rewind its position — the rolling-reclamation primitive. Block
-    /// contents need no zeroing: a reallocated block is either
+    /// rewind its position — the rolling-reclamation primitive, also the
+    /// rollback of a cancelled or failed mid-prompt (chunked) prefill.
+    /// Block contents need no zeroing: a reallocated block is either
     /// overwritten by its new owner's prefill install or masked out by
     /// the per-row valid length.
     fn release_lease(&mut self, row: usize) {
         if let Some(lease) = self.leases[row].take() {
             self.pool.release(lease);
         }
+        self.pending[row] = None;
         self.slot_demand[row] = 0;
         self.row_pos[row] = 0;
+    }
+
+    /// A row is occupied the moment it is admitted — a pending (chunked)
+    /// prefill holds the row and its lease before the first token exists.
+    fn row_occupied(&self, row: usize) -> bool {
+        self.serve_slots[row].is_some() || self.pending[row].is_some()
     }
 
     /// Reservation arithmetic for admitting a sequence now (shared with
@@ -398,8 +452,11 @@ impl RealEngine {
     }
 
     /// Lease the prompt's blocks for row `row`, sharing identical prompt
-    /// prefixes already resident in the pool. `reserve` keeps blocks free
-    /// for in-flight rows' growth.
+    /// prefixes already resident (installed *and published*) in the
+    /// pool. `reserve` keeps blocks free for in-flight rows' growth.
+    /// The lease's own fresh blocks stay unpublished until the prompt's
+    /// install completes ([`KvPool::publish`] in `advance_prefill`) — a
+    /// chunked admission's half-installed blocks must never be shared.
     fn lease_row(
         &mut self,
         row: usize,
@@ -407,8 +464,10 @@ impl RealEngine {
         reserve: usize,
     ) -> Result<()> {
         self.release_lease(row);
-        let lease =
-            self.pool.admit(prompt, reserve).map_err(pool_err)?;
+        let lease = self
+            .pool
+            .admit_unpublished(prompt, reserve)
+            .map_err(pool_err)?;
         self.row_pos[row] = 0;
         self.leases[row] = Some(lease);
         Ok(())
@@ -416,10 +475,15 @@ impl RealEngine {
 
     /// The decode graphs' block table: row r of `[B, max_blocks]`, the
     /// lease's physical blocks padded with the reserved scratch block.
+    /// Rows with a pending (chunked) prefill keep an all-scratch table
+    /// row: their half-installed blocks must not take decode writes.
     fn block_table(&self) -> Tensor {
         let m = self.dims.max_blocks();
         let mut table = vec![0i32; self.batch * m];
         for (row, lease) in self.leases.iter().enumerate() {
+            if self.pending[row].is_some() {
+                continue;
+            }
             if let Some(l) = lease {
                 for (j, &b) in l.blocks().iter().enumerate().take(m) {
                     table[row * m + j] = b as i32;
@@ -593,7 +657,12 @@ impl RealEngine {
                 self.lease_row(row, &[], 0)?;
             }
         }
-        for (lease, &p) in self.leases.iter().zip(&self.row_pos) {
+        for (row, (lease, &p)) in
+            self.leases.iter().zip(&self.row_pos).enumerate()
+        {
+            if self.pending[row].is_some() {
+                continue; // pending prefill: the row sits this step out
+            }
             if lease.is_some() && p >= self.dims.seq_max {
                 return Err(KvCapacityError {
                     requested: p + 1,
@@ -614,6 +683,11 @@ impl RealEngine {
         let mut append_err = None;
         for (row, lease) in self.leases.iter_mut().enumerate() {
             let Some(lease) = lease else { continue };
+            if self.pending[row].is_some() {
+                // mid-prefill rows hold their lease at prompt length and
+                // ride the step against the scratch block — no growth
+                continue;
+            }
             match self.pool.append(lease) {
                 Ok(app) => {
                     appended.push(row);
@@ -658,10 +732,21 @@ impl RealEngine {
         let hot_k = self.cache.hot_per_layer;
         let attn_name = Runtime::decode_attn_name(b);
         let ffn_name = Runtime::decode_ffn_name(b, hot_k);
-        // the [B] per-row position vector the attention graphs consume
+        // the [B] per-row position vector the attention graphs consume;
+        // pending-prefill rows sit at 0 like vacant rows (their real
+        // position belongs to the half-installed prompt, which decode
+        // must neither read nor advance)
         let pos_lit = Tensor::i32(
             vec![b],
-            self.row_pos.iter().map(|&p| p as i32).collect(),
+            (0..b)
+                .map(|r| {
+                    if self.pending[r].is_some() {
+                        0
+                    } else {
+                        self.row_pos[r] as i32
+                    }
+                })
+                .collect(),
         )
         .to_literal()?;
         // logical→physical block table, one row per sequence
@@ -736,10 +821,13 @@ impl RealEngine {
                 best.0 as u32
             })
             .collect();
-        // only leased rows wrote a KV entry this step; vacant rows stay
-        // pinned at position 0 against the scratch block
-        for (lease, p) in self.leases.iter().zip(self.row_pos.iter_mut()) {
-            if lease.is_some() {
+        // only leased, fully-prefilled rows wrote a KV entry this step;
+        // vacant and mid-prefill rows stay pinned against the scratch
+        // block and do not advance
+        for (row, (lease, p)) in
+            self.leases.iter().zip(self.row_pos.iter_mut()).enumerate()
+        {
+            if lease.is_some() && self.pending[row].is_none() {
                 *p += 1;
             }
         }
@@ -748,14 +836,32 @@ impl RealEngine {
         Ok(next)
     }
 
-    /// Prefill one prompt (row `row` of the batch) through the per-layer
-    /// prefill graphs, streaming offloaded weights with one sequential
-    /// read per layer (§4.1.1). Leases the prompt's KV blocks from the
-    /// shared pool (sharing identical prefixes already resident), returns
-    /// the first generated token, and leaves the engine ready to decode
-    /// (KV literals rebuilt).
+    /// Prefill one prompt (row `row` of the batch) through the chunked
+    /// per-layer prefill graphs, streaming offloaded weights with one
+    /// sequential read per layer per chunk (§4.1.1). Leases the prompt's
+    /// KV blocks from the shared pool (sharing identical prefixes already
+    /// resident), returns the first generated token, and leaves the
+    /// engine ready to decode (KV literals rebuilt). Direct-use entry
+    /// point (Best-of-N, examples) — serving goes through the
+    /// [`Engine`] trait's two-phase admission instead.
     pub fn prefill(&mut self, row: usize, prompt: &[u32]) -> Result<u32> {
-        let first = self.prefill_with_reserve(row, prompt, 0)?;
+        ensure!(row < self.batch, "row out of range");
+        let prompt = self.prompt_window(prompt).to_vec();
+        ensure!(!prompt.is_empty(), "empty prompt");
+        // block allocation first: under pool pressure this fails with a
+        // typed, deferrable error before any compute or IO is spent
+        self.lease_row(row, &prompt, 0)?;
+        self.pending[row] = Some(PendingPrefill { prompt, installed: 0 });
+        let first = match self.advance_prefill(row, usize::MAX) {
+            Ok(p) => p.first_token.expect("unbounded budget completes"),
+            Err(e) => {
+                // do not leak the lease on a failed prefill: an orphan
+                // would hold (and keep growing) pool blocks on a row the
+                // serve loop considers vacant
+                self.release_lease(row);
+                return Err(e);
+            }
+        };
         if let Err(e) = self.refresh_kv_literals() {
             // failed literal rebuild: the row will not decode, so its
             // lease must not linger and grow
@@ -765,102 +871,162 @@ impl RealEngine {
         Ok(first)
     }
 
-    /// Prefill without the trailing KV-literal rebuild — group admission
-    /// installs several rows and rebuilds the literals once at the end
-    /// (the rebuild re-encodes the whole cache, so per-row rebuilds in a
-    /// group are O(B²) wasted encoding). `reserve` blocks stay free for
-    /// in-flight rows' growth when leasing the prompt.
-    fn prefill_with_reserve(
+    /// Advance row `row`'s pending prompt by up to `budget` tokens: slice
+    /// the remainder into compiled-size chunks, run each through the
+    /// per-layer chunked prefill graphs (the chunk attends over the
+    /// already-installed prefix via the graph's k_prev/v_prev inputs),
+    /// and scatter the fresh K/V through the row's leased blocks. The
+    /// call that installs the final chunk computes the first generated
+    /// token and clears the pending state. No KV-literal rebuild here —
+    /// callers batch that (one rebuild per [`Engine::prefill_chunk`] call
+    /// or per admitted group, not one per chunk per layer).
+    fn advance_prefill(
         &mut self,
         row: usize,
-        prompt: &[u32],
-        reserve: usize,
-    ) -> Result<u32> {
-        ensure!(row < self.batch, "row out of range");
-        // block allocation first: under pool pressure this fails with a
-        // typed, deferrable error before any compute or IO is spent
-        self.lease_row(row, prompt, reserve)?;
-        match self.prefill_leased(row, prompt) {
-            Ok(first) => Ok(first),
-            Err(e) => {
-                // do not leak the lease on a failed prefill: an orphan
-                // would hold (and keep growing) pool blocks on a row the
-                // serve loop considers vacant
-                self.release_lease(row);
-                Err(e)
-            }
+        budget: usize,
+    ) -> Result<PrefillProgress> {
+        let (prompt, start_installed) = match &self.pending[row] {
+            Some(p) => (p.prompt.clone(), p.installed),
+            None => return Ok(PrefillProgress::default()),
+        };
+        let mut installed = start_installed;
+        if budget == 0 {
+            return Ok(PrefillProgress {
+                installed: 0,
+                remaining: prompt.len() - installed,
+                first_token: None,
+            });
         }
-    }
-
-    /// The prefill body proper: runs the per-layer prefill graphs and
-    /// installs K/V into row `row`'s already-leased blocks.
-    fn prefill_leased(&mut self, row: usize, prompt: &[u32]) -> Result<u32> {
         let d = self.dims.clone();
         let t = d.prefill_chunk;
-        ensure!(!prompt.is_empty() && prompt.len() <= t,
-                "prompt must be 1..={t} tokens");
         let h = d.hidden;
-        // right-pad: causal attention keeps positions < len exact
-        let mut x = vec![0f32; t * h];
-        for (i, &tok) in prompt.iter().enumerate() {
-            let tok = (tok as usize).min(d.vocab - 1);
-            x[i * h..(i + 1) * h]
-                .copy_from_slice(&self.weights.embedding[tok * h..(tok + 1) * h]);
-        }
         let name = Runtime::prefill_name(t);
-        for l in 0..d.layers {
-            // stream the layer's full FFN weights: hot prefix is resident;
-            // the cold suffix arrives via one big sequential read (§4.4)
-            let hot_k = self.cache.hot_per_layer;
-            let io_start = std::time::Instant::now();
-            let (gate, up, bias, down) = {
-                let lw = &self.weights.layers[l];
-                if hot_k >= d.inter {
-                    (lw.gate.clone(), lw.up.clone(),
-                     lw.gate_bias.clone(), lw.down.clone())
-                } else {
-                    let n_f32 = (3 * h + 1) * (d.inter - hot_k);
-                    let off = self.wfile.bundle_offset(l, hot_k);
-                    let cold = self.flash.read_f32s(off, n_f32)?;
-                    let mut gate = lw.gate[..hot_k * h].to_vec();
-                    let mut up = lw.up[..hot_k * h].to_vec();
-                    let mut bias = lw.gate_bias[..hot_k].to_vec();
-                    let mut down = lw.down[..hot_k * h].to_vec();
-                    for chunk in cold.chunks_exact(3 * h + 1) {
-                        gate.extend_from_slice(&chunk[..h]);
-                        up.extend_from_slice(&chunk[h..2 * h]);
-                        bias.push(chunk[2 * h]);
-                        down.extend_from_slice(&chunk[2 * h + 1..]);
+        let mut spent = 0usize;
+        let mut first = None;
+        while spent < budget && installed < prompt.len() {
+            let n = (prompt.len() - installed)
+                .min(t)
+                .min(budget - spent);
+            // right-pad the chunk to the compiled T: padded queries only
+            // attend backwards, so real rows are exact and their K/V and
+            // hidden-state rows are simply the first n of the outputs
+            let mut x = vec![0f32; t * h];
+            for (i, &tok) in prompt[installed..installed + n]
+                .iter()
+                .enumerate()
+            {
+                let tok = (tok as usize).min(d.vocab - 1);
+                x[i * h..(i + 1) * h].copy_from_slice(
+                    &self.weights.embedding[tok * h..(tok + 1) * h],
+                );
+            }
+            for l in 0..d.layers {
+                // stream the layer's full FFN weights: hot prefix is
+                // resident; the cold suffix arrives via one big
+                // sequential read (§4.4). Chunking pays this stream once
+                // per chunk — the price of not stalling in-flight decodes
+                let hot_k = self.cache.hot_per_layer;
+                let io_start = std::time::Instant::now();
+                let (gate, up, bias, down) = {
+                    let lw = &self.weights.layers[l];
+                    if hot_k >= d.inter {
+                        (lw.gate.clone(), lw.up.clone(),
+                         lw.gate_bias.clone(), lw.down.clone())
+                    } else {
+                        let n_f32 = (3 * h + 1) * (d.inter - hot_k);
+                        let off = self.wfile.bundle_offset(l, hot_k);
+                        let cold = self.flash.read_f32s(off, n_f32)?;
+                        let mut gate = lw.gate[..hot_k * h].to_vec();
+                        let mut up = lw.up[..hot_k * h].to_vec();
+                        let mut bias = lw.gate_bias[..hot_k].to_vec();
+                        let mut down = lw.down[..hot_k * h].to_vec();
+                        for chunk in cold.chunks_exact(3 * h + 1) {
+                            gate.extend_from_slice(&chunk[..h]);
+                            up.extend_from_slice(&chunk[h..2 * h]);
+                            bias.push(chunk[2 * h]);
+                            down.extend_from_slice(&chunk[2 * h + 1..]);
+                        }
+                        (gate, up, bias, down)
                     }
-                    (gate, up, bias, down)
-                }
-            };
-            self.metrics.io_busy_s += io_start.elapsed().as_secs_f64();
-            let mut inputs = vec![Tensor::f32(vec![t, h], x.clone())];
-            inputs.extend(self.attn_weight_tensors(l));
-            inputs.push(Tensor::f32(vec![d.inter, h], gate));
-            inputs.push(Tensor::f32(vec![d.inter, h], up));
-            inputs.push(Tensor::f32(vec![d.inter], bias));
-            inputs.push(Tensor::f32(vec![d.inter, h], down));
-            let mut out = self.rt.execute(&name, &inputs)?;
-            let (v, k, xo) = match (out.pop(), out.pop(), out.pop()) {
-                (Some(v), Some(k), Some(x)) => (v, k, x),
-                _ => bail!("graph {name}: expected 3 outputs"),
-            };
-            x = xo.into_f32();
-            // install K/V rows 0..len for this batch row
-            self.install_kv(l, row, &k, &v, prompt.len())?;
+                };
+                self.metrics.io_busy_s += io_start.elapsed().as_secs_f64();
+                let (k_prev, v_prev) = self.prev_kv(l, row, installed);
+                let mut inputs = vec![Tensor::f32(vec![t, h], x.clone())];
+                inputs.extend(self.attn_weight_tensors(l));
+                inputs.push(Tensor::f32(vec![d.inter, h], gate));
+                inputs.push(Tensor::f32(vec![d.inter, h], up));
+                inputs.push(Tensor::f32(vec![d.inter], bias));
+                inputs.push(Tensor::f32(vec![d.inter, h], down));
+                inputs.push(k_prev);
+                inputs.push(v_prev);
+                inputs.push(Tensor::i32(vec![1], vec![installed as i32]));
+                let mut out = self.rt.execute(&name, &inputs)?;
+                let (v, k, xo) = match (out.pop(), out.pop(), out.pop()) {
+                    (Some(v), Some(k), Some(x)) => (v, k, x),
+                    _ => bail!("graph {name}: expected 3 outputs"),
+                };
+                x = xo.into_f32();
+                // install the chunk's K/V rows at their absolute positions
+                self.install_kv(l, row, &k, &v, installed, n)?;
+            }
+            installed += n;
+            spent += n;
+            self.row_pos[row] = installed;
+            if installed == prompt.len() {
+                let last = &x[(n - 1) * h..n * h];
+                first = Some(self.cpu_lm_head_argmax(last));
+            }
         }
-        self.row_pos[row] = prompt.len();
-        let last = &x[(prompt.len() - 1) * h..prompt.len() * h];
-        Ok(self.cpu_lm_head_argmax(last))
+        if first.is_some() {
+            // install complete: the prompt's full blocks become
+            // shareable for future admissions now — and only now
+            if let Some(lease) = self.leases[row].as_ref() {
+                self.pool.publish(lease, &prompt);
+            }
+            self.pending[row] = None;
+        } else if let Some(p) = self.pending[row].as_mut() {
+            p.installed = installed;
+        }
+        Ok(PrefillProgress {
+            installed: spent,
+            remaining: prompt.len() - installed,
+            first_token: first,
+        })
     }
 
-    /// Install `len` freshly-prefilled K/V token rows into batch row
-    /// `row`'s leased pool blocks, skipping the prefix-shared blocks
-    /// (their contents are already resident and identical — same tokens
-    /// at the same positions). Bounds are checked against the context
-    /// window, the prefill output, and the lease itself, with a typed
+    /// The chunked prefill graph's prefix input pair: rows
+    /// `0..installed` of batch row `row`'s K/V, gathered from its leased
+    /// host pool blocks into a dense `[seq_max, KVH, DH]` tensor
+    /// (zero-padded past `installed`; the graph masks those rows out).
+    fn prev_kv(&self, layer: usize, row: usize, installed: usize) -> (Tensor, Tensor) {
+        let d = &self.dims;
+        let bt = d.kv_block;
+        let per_tok = d.kv_heads * d.head_dim();
+        let mut kp = vec![0f32; d.seq_max * per_tok];
+        let mut vp = vec![0f32; d.seq_max * per_tok];
+        if let Some(lease) = &self.leases[row] {
+            let blocks = lease.blocks();
+            let (kc, vc) = &self.kv[layer];
+            for (dst, cache) in [(&mut kp, kc), (&mut vp, vc)] {
+                let data = cache.as_f32();
+                for tok in 0..installed {
+                    let block = blocks[tok / bt] as usize;
+                    let src = (block * bt + tok % bt) * per_tok;
+                    dst[tok * per_tok..(tok + 1) * per_tok]
+                        .copy_from_slice(&data[src..src + per_tok]);
+                }
+            }
+        }
+        let shape = vec![d.seq_max, d.kv_heads, d.head_dim()];
+        (Tensor::f32(shape.clone(), kp), Tensor::f32(shape, vp))
+    }
+
+    /// Install `len` freshly-prefilled K/V token rows (a chunk at
+    /// absolute positions `start..start+len`) into batch row `row`'s
+    /// leased pool blocks, skipping the prefix-shared blocks (their
+    /// contents are already resident and identical — same tokens at the
+    /// same positions). Bounds are checked against the context window,
+    /// the prefill output, and the lease itself, with a typed
     /// [`KvCapacityError`] instead of silent truncation or a slice panic.
     fn install_kv(
         &mut self,
@@ -868,15 +1034,17 @@ impl RealEngine {
         row: usize,
         k: &Tensor,
         v: &Tensor,
+        start: usize,
         len: usize,
     ) -> std::result::Result<(), KvCapacityError> {
         let d = &self.dims;
         let (s, bt) = (d.seq_max, d.kv_block);
         let per_tok = d.kv_heads * d.head_dim();
+        let end = start + len;
         // distinct bounds, reported with the one that actually binds: the
         // context window, the prefill output's token rows, and the lease
-        if len > s {
-            return Err(KvCapacityError { requested: len, capacity: s });
+        if end > s {
+            return Err(KvCapacityError { requested: end, capacity: s });
         }
         let emitted = (k.len() / per_tok).min(v.len() / per_tok);
         if len > emitted {
@@ -888,9 +1056,9 @@ impl RealEngine {
                 return Err(KvCapacityError { requested: len, capacity: 0 })
             }
         };
-        if len > blocks.len() * bt {
+        if end > blocks.len() * bt {
             return Err(KvCapacityError {
-                requested: len,
+                requested: end,
                 capacity: blocks.len() * bt,
             });
         }
@@ -901,21 +1069,28 @@ impl RealEngine {
                 _ => unreachable!(),
             };
             let src = fresh.as_f32();
-            for t in shared_tokens.min(len)..len {
-                let block = blocks[t / bt] as usize;
-                let dst = (block * bt + t % bt) * per_tok;
+            // chunk-local row i sits at absolute position start + i;
+            // positions inside the shared prefix are already resident
+            let from = shared_tokens.saturating_sub(start).min(len);
+            for i in from..len {
+                let abs = start + i;
+                let block = blocks[abs / bt] as usize;
+                let dst = (block * bt + abs % bt) * per_tok;
                 data[dst..dst + per_tok]
-                    .copy_from_slice(&src[t * per_tok..(t + 1) * per_tok]);
+                    .copy_from_slice(&src[i * per_tok..(i + 1) * per_tok]);
             }
         }
         Ok(())
     }
 
-    /// Longest prompt suffix the compiled prefill graph accepts.
-    fn prompt_tail<'a>(&self, p: &'a [u32]) -> &'a [u32] {
-        let chunk = self.dims.prefill_chunk;
-        if p.len() > chunk {
-            &p[p.len() - chunk..]
+    /// Longest prompt suffix the engine can install: the context window
+    /// minus one position, so an admitted sequence can always decode at
+    /// least one step. Chunked prefill lifted the old one-compiled-chunk
+    /// cap — prompts now install across as many chunks as they need.
+    fn prompt_window<'a>(&self, p: &'a [u32]) -> &'a [u32] {
+        let cap = self.dims.seq_max.saturating_sub(1).max(1);
+        if p.len() > cap {
+            &p[p.len() - cap..]
         } else {
             p
         }
@@ -962,7 +1137,7 @@ impl Engine for RealEngine {
     }
 
     fn active(&self) -> usize {
-        self.serve_slots.iter().filter(|s| s.is_some()).count()
+        (0..self.batch).filter(|&r| self.row_occupied(r)).count()
     }
 
     fn vocab(&self) -> usize {
@@ -975,47 +1150,97 @@ impl Engine for RealEngine {
     /// row prefills at its own positions `0..len` and decodes from there:
     /// a mid-flight admission (continuous batching) is exact — the new
     /// row attends only over its own real history through its block
-    /// table, never over another sequence's blocks.
+    /// table, never over another sequence's blocks. The synchronous path
+    /// is the deferred path drained with an unbounded budget, so the two
+    /// admission modes cannot drift apart.
     fn admit(&mut self, req: &InferenceRequest) -> Result<Admission> {
-        let slot = self
-            .serve_slots
-            .iter()
-            .position(Option::is_none)
+        let adm = self.admit_deferred(req)?;
+        // prefill_chunk rolls the slot back on failure
+        let progress = self.prefill_chunk(adm.slot, usize::MAX)?;
+        Ok(Admission { first_token: progress.first_token, ..adm })
+    }
+
+    /// Two-phase admission: claim the row and lease the whole prompt now
+    /// (same reservation arithmetic and typed pool-pressure error as the
+    /// synchronous path), install the prompt later via bounded
+    /// [`Engine::prefill_chunk`] calls. Until the prompt completes the
+    /// row rides decode steps against the reserved scratch block exactly
+    /// like a vacant row, so in-flight sequences are untouched.
+    fn admit_deferred(&mut self, req: &InferenceRequest) -> Result<Admission> {
+        let slot = (0..self.batch)
+            .find(|&r| !self.row_occupied(r))
             .ok_or_else(|| {
                 anyhow!("engine full: all {} rows occupied", self.batch)
             })?;
-        let t0 = std::time::Instant::now();
-        let mid_flight = self.serve_slots.iter().any(Option::is_some);
-        if mid_flight {
-            // prefill rebuilds literals from host state at its end; pull
-            // the in-flight rows' decoded KV down first
-            self.sync_kv_host()?;
-        } else if self.row_pos.iter().any(|&p| p > 0)
-            || self.leases.iter().any(Option::is_some)
+        let idle = !(0..self.batch).any(|r| self.row_occupied(r));
+        if idle
+            && (self.row_pos.iter().any(|&p| p > 0)
+                || self.leases.iter().any(Option::is_some))
         {
             // idle engine with stale direct-use state: full reset
             self.reset()?;
         }
-        // the prefill graph is compiled for a fixed chunk: keep the tail
-        let prompt = self.prompt_tail(&req.prompt);
+        let prompt = self.prompt_window(&req.prompt).to_vec();
         ensure!(!prompt.is_empty(), "empty prompt");
         // reserve every in-flight row's remaining worst-case growth (and
         // this sequence's own) so active decodes can always get their
         // next block — pool pressure surfaces here, as a typed error
         let (demand, reserve) =
             self.admit_reserve(prompt.len(), req.params.max_tokens);
-        let first = self.prefill_with_reserve(slot, prompt, reserve)?;
+        self.lease_row(slot, &prompt, reserve)?;
         self.slot_demand[slot] = demand;
+        self.pending[slot] = Some(PendingPrefill { prompt, installed: 0 });
+        let lease = self.leases[slot].as_ref().map(|l| l.info());
+        Ok(Admission { slot, first_token: None, lease })
+    }
+
+    /// Advance a pending prompt by up to `budget` tokens between decode
+    /// steps. Pulls the in-flight rows' decoded KV down first (the
+    /// literal rebuild at the end re-encodes from host state), then runs
+    /// the chunk graphs and rebuilds the literals once per call. Any
+    /// failure mid-prompt rolls the row back — lease released, row
+    /// freed — so a half-installed prompt never leaks into the pool.
+    fn prefill_chunk(
+        &mut self,
+        slot: SlotId,
+        budget: usize,
+    ) -> Result<PrefillProgress> {
+        ensure!(
+            slot < self.batch,
+            "slot {slot} out of range (capacity {})",
+            self.batch
+        );
+        if self.pending[slot].is_none() {
+            return Ok(PrefillProgress::default());
+        }
+        let t0 = std::time::Instant::now();
+        // the literal rebuild below re-encodes from host state, so rows
+        // decoded since the last rebuild must be pulled down first — but
+        // only mid-flight: with no other row occupied, no decode step
+        // can have advanced the literals past the host copies, and the
+        // full pool download is pure waste
+        let mid_flight =
+            (0..self.batch).any(|r| r != slot && self.row_occupied(r));
+        let result = if mid_flight { self.sync_kv_host() } else { Ok(()) }
+            .and_then(|()| self.advance_prefill(slot, budget));
+        let progress = match result {
+            Ok(p) => p,
+            Err(e) => {
+                self.serve_slots[slot] = None;
+                self.release_lease(slot);
+                return Err(e);
+            }
+        };
         if let Err(e) = self.refresh_kv_literals() {
-            // the row will never decode: do not leak its lease into the
-            // pool (decode_step grows every leased row, occupied or not)
+            self.serve_slots[slot] = None;
             self.release_lease(slot);
             return Err(e);
         }
         self.sv_prefill_s += t0.elapsed().as_secs_f64();
-        let lease = self.leases[slot].as_ref().map(|l| l.info());
-        self.serve_slots[slot] = Some(first);
-        Ok(Admission { slot, first_token: Some(first), lease })
+        if let Some(first) = progress.first_token {
+            self.serve_slots[slot] = Some(first);
+        }
+        Ok(progress)
     }
 
     /// Group admission into an idle engine. Each row prefills its own
@@ -1024,7 +1249,7 @@ impl Engine for RealEngine {
     /// each request alone, and cheaper in KV memory than dense rows.
     fn admit_group(&mut self, reqs: &[&InferenceRequest]) -> Result<Vec<Admission>> {
         ensure!(
-            self.serve_slots.iter().all(Option::is_none),
+            (0..self.batch).all(|r| !self.row_occupied(r)),
             "admit_group requires an idle engine"
         );
         ensure!(
@@ -1040,21 +1265,48 @@ impl Engine for RealEngine {
         }
         let t0 = std::time::Instant::now();
         let mut out = Vec::with_capacity(reqs.len());
+        let mut fail: Option<anyhow::Error> = None;
         for (row, req) in reqs.iter().enumerate() {
-            let prompt = self.prompt_tail(&req.prompt);
-            ensure!(!prompt.is_empty(), "empty prompt");
+            let prompt = self.prompt_window(&req.prompt).to_vec();
+            if prompt.is_empty() {
+                fail = Some(anyhow!("empty prompt"));
+                break;
+            }
             let (demand, reserve) =
                 self.admit_reserve(prompt.len(), req.params.max_tokens);
-            let first = self.prefill_with_reserve(row, prompt, reserve)?;
+            if let Err(e) = self.lease_row(row, &prompt, reserve) {
+                fail = Some(e);
+                break;
+            }
             self.slot_demand[row] = demand;
-            self.serve_slots[row] = Some(first);
-            let lease = self.leases[row].as_ref().map(|l| l.info());
-            out.push(Admission { slot: row, first_token: Some(first), lease });
+            self.pending[row] = Some(PendingPrefill { prompt, installed: 0 });
+            match self.advance_prefill(row, usize::MAX) {
+                Ok(p) => {
+                    let first =
+                        p.first_token.expect("unbounded budget completes");
+                    self.serve_slots[row] = Some(first);
+                    let lease = self.leases[row].as_ref().map(|l| l.info());
+                    out.push(Admission {
+                        slot: row,
+                        first_token: Some(first),
+                        lease,
+                    });
+                }
+                Err(e) => {
+                    fail = Some(e);
+                    break;
+                }
+            }
         }
         // one KV-literal rebuild for the whole group, not one per row;
-        // on failure no row can decode, so unwind the whole group's
+        // on any failure no row can decode, so unwind the whole group's
         // leases and slots instead of leaking them
-        if let Err(e) = self.refresh_kv_literals() {
+        let refresh_err = if fail.is_none() {
+            self.refresh_kv_literals().err()
+        } else {
+            None
+        };
+        if let Some(e) = fail.or(refresh_err) {
             for row in 0..self.batch {
                 self.serve_slots[row] = None;
                 self.release_lease(row);
@@ -1066,6 +1318,9 @@ impl Engine for RealEngine {
     }
 
     fn step(&mut self) -> Result<Vec<(SlotId, u32)>> {
+        // rows still mid-prefill have no token yet; if nothing else is
+        // live there is nothing to decode (the scheduler keeps advancing
+        // the pending prompts via prefill_chunk)
         if self.serve_slots.iter().all(Option::is_none) {
             return Ok(Vec::new());
         }
@@ -1091,13 +1346,16 @@ impl Engine for RealEngine {
     /// goes back to the pool immediately (refcounted — prefix blocks
     /// shared with other rows survive), so continuous batching sustains
     /// unbounded request streams without the engine ever draining.
+    /// Retiring a row whose chunked prefill is still mid-prompt is the
+    /// cancellation path: the half-installed lease rolls back with it.
     fn retire(&mut self, slot: SlotId) -> Result<()> {
         ensure!(
             slot < self.serve_slots.len(),
             "slot {slot} out of range (capacity {})",
             self.serve_slots.len()
         );
-        if self.serve_slots[slot].take().is_some() {
+        if self.serve_slots[slot].take().is_some() || self.pending[slot].is_some()
+        {
             self.release_lease(slot);
         }
         Ok(())
@@ -1343,15 +1601,21 @@ mod tests {
         let over = d.seq_max + 1;
         let k = Tensor::zeros(vec![over, d.kv_heads, d.head_dim()]);
         let v = Tensor::zeros(vec![over, d.kv_heads, d.head_dim()]);
-        let err = e.install_kv(0, 0, &k, &v, over).unwrap_err();
+        let err = e.install_kv(0, 0, &k, &v, 0, over).unwrap_err();
         assert_eq!(
             err,
             KvCapacityError { requested: over, capacity: d.seq_max }
         );
+        // a chunk whose *end* position crosses the window is rejected too
+        let err = e.install_kv(0, 0, &k, &v, d.seq_max - 1, 2).unwrap_err();
+        assert_eq!(
+            err,
+            KvCapacityError { requested: d.seq_max + 1, capacity: d.seq_max }
+        );
         // shorter K/V tensors bound the install too (no silent truncation
         // and no slice panic)
         let small = Tensor::zeros(vec![2, d.kv_heads, d.head_dim()]);
-        let err = e.install_kv(0, 0, &small, &small, 4).unwrap_err();
+        let err = e.install_kv(0, 0, &small, &small, 0, 4).unwrap_err();
         assert_eq!(err, KvCapacityError { requested: 4, capacity: 2 });
         std::fs::remove_file(wp).ok();
     }
@@ -1392,6 +1656,147 @@ mod tests {
                 .push(out.iter().find(|(s, _)| *s == adm.slot).unwrap().1);
         }
         assert_eq!(solo, shared, "mid-flight admission diverged from solo");
+        std::fs::remove_file(wp).ok();
+    }
+
+    #[test]
+    fn chunked_admission_matches_synchronous_admit() {
+        // acceptance: a deferred admission whose prompt installs in
+        // bounded chunks produces the byte-identical token stream of a
+        // synchronous admit — on the real graphs, not just the sim.
+        let Some(dir) = artifacts() else { return };
+        let wp = weight_path("chunkeq");
+        let req = InferenceRequest::new(3, vec![5, 12, 3, 9, 1, 7], 6);
+        let want = req.params.max_tokens;
+        let sync = {
+            let mut e = RealEngine::new(dir, &wp, 2, opts(true, 128)).unwrap();
+            let adm = e.admit(&req).unwrap();
+            let mut toks = vec![adm.first_token.unwrap()];
+            while toks.len() < want {
+                let out = e.step().unwrap();
+                toks.push(
+                    out.iter().find(|(s, _)| *s == adm.slot).unwrap().1,
+                );
+            }
+            toks
+        };
+        let mut e = RealEngine::new(dir, &wp, 2, opts(true, 128)).unwrap();
+        let adm = e.admit_deferred(&req).unwrap();
+        assert_eq!(adm.first_token, None);
+        assert_eq!(e.active(), 1, "pending row must count as occupied");
+        assert!(e.step().unwrap().is_empty(), "pending row must sit out");
+        let first = loop {
+            let p = e.prefill_chunk(adm.slot, 2).unwrap();
+            if let Some(tok) = p.first_token {
+                assert_eq!(p.remaining, 0);
+                break tok;
+            }
+            assert!(p.installed > 0, "no progress");
+        };
+        let mut chunked = vec![first];
+        while chunked.len() < want {
+            let out = e.step().unwrap();
+            chunked
+                .push(out.iter().find(|(s, _)| *s == adm.slot).unwrap().1);
+        }
+        assert_eq!(sync, chunked, "chunked admission diverged");
+        std::fs::remove_file(wp).ok();
+    }
+
+    #[test]
+    fn chunked_admission_mid_flight_leaves_neighbour_exact() {
+        // while a newcomer's prompt installs chunk by chunk, the already
+        // decoding neighbour must keep producing its solo stream — the
+        // pending row rides the scratch block like a vacant row.
+        let Some(dir) = artifacts() else { return };
+        let wp = weight_path("chunkmid");
+        let neighbour = InferenceRequest::new(1, vec![9, 2, 2, 8], 8);
+        let solo = {
+            let mut e = RealEngine::new(dir, &wp, 2, opts(true, 128)).unwrap();
+            let adm = e.admit(&neighbour).unwrap();
+            let mut toks = vec![adm.first_token.unwrap()];
+            while toks.len() < 8 {
+                let out = e.step().unwrap();
+                toks.push(
+                    out.iter().find(|(s, _)| *s == adm.slot).unwrap().1,
+                );
+            }
+            toks
+        };
+        let mut e = RealEngine::new(dir, &wp, 2, opts(true, 128)).unwrap();
+        let a0 = e.admit(&neighbour).unwrap();
+        let mut got = vec![a0.first_token.unwrap()];
+        for _ in 0..2 {
+            let out = e.step().unwrap();
+            got.push(out.iter().find(|(s, _)| *s == a0.slot).unwrap().1);
+        }
+        // newcomer arrives; its prompt installs 2 tokens per step
+        let req = InferenceRequest::new(7, vec![5, 12, 3, 4, 6], 4);
+        let adm = e.admit_deferred(&req).unwrap();
+        let mut pending = true;
+        while got.len() < 8 {
+            if pending {
+                let p = e.prefill_chunk(adm.slot, 2).unwrap();
+                pending = p.first_token.is_none();
+            }
+            let out = e.step().unwrap();
+            if let Some(&(_, t)) =
+                out.iter().find(|(s, _)| *s == a0.slot)
+            {
+                got.push(t);
+            }
+        }
+        assert_eq!(solo, got, "chunked admission perturbed the neighbour");
+        std::fs::remove_file(wp).ok();
+    }
+
+    #[test]
+    fn retire_mid_prefill_rolls_back_the_lease() {
+        // cancellation while the prompt is half-installed must return
+        // every leased block and leave the row reusable.
+        let Some(dir) = artifacts() else { return };
+        let wp = weight_path("chunkroll");
+        let mut e = RealEngine::new(dir, &wp, 2, opts(true, 128)).unwrap();
+        let free0 = e.kv_pool().unwrap().free_blocks;
+        let req = InferenceRequest::new(0, vec![3, 9, 17, 4, 2, 6], 4);
+        let adm = e.admit_deferred(&req).unwrap();
+        assert!(e.kv_pool().unwrap().free_blocks < free0);
+        e.prefill_chunk(adm.slot, 2).unwrap(); // abandon mid-prompt
+        e.retire(adm.slot).unwrap();
+        assert_eq!(e.active(), 0);
+        assert_eq!(
+            e.kv_pool().unwrap().free_blocks,
+            free0,
+            "cancelled mid-prefill admission leaked pool blocks"
+        );
+        let again = e.admit(&req).unwrap();
+        assert_eq!(again.slot, adm.slot, "row not reusable after rollback");
+        std::fs::remove_file(wp).ok();
+    }
+
+    #[test]
+    fn long_prompt_installs_across_multiple_compiled_chunks() {
+        // prompts longer than the compiled chunk size now install across
+        // several chunk-graph calls instead of being truncated to one
+        // chunk — and the first token still matches feeding the prompt
+        // token by token through decode steps.
+        let Some(dir) = artifacts() else { return };
+        let wp = weight_path("chunklong");
+        let mut e = RealEngine::new(dir, &wp, 1, opts(true, 128)).unwrap();
+        let t = e.dims.prefill_chunk;
+        let prompt: Vec<u32> = (0..(t + 3) as u32).map(|i| 3 + i * 5 % 40).collect();
+        assert!(prompt.len() > t && prompt.len() < e.dims.seq_max);
+        let next_a = e.prefill(0, &prompt).unwrap();
+        assert_eq!(e.row_pos[0], prompt.len());
+        let mut b = RealEngine::new(dir, &wp, 1, opts(true, 128)).unwrap();
+        let mut next_b = 0u32;
+        for (i, &tok) in prompt.iter().enumerate() {
+            let out = b.decode_step(&[tok]).unwrap();
+            if i == prompt.len() - 1 {
+                next_b = out[0];
+            }
+        }
+        assert_eq!(next_a, next_b, "multi-chunk prefill vs step-by-step");
         std::fs::remove_file(wp).ok();
     }
 

@@ -279,14 +279,44 @@ impl KvPool {
     }
 
     /// Admit a prompt: map its full blocks (sharing identical prefixes
-    /// already in the pool) plus a private partial tail. `reserve` blocks
+    /// already in the pool) plus a private partial tail, and publish the
+    /// fresh full blocks for future sharing immediately. `reserve` blocks
     /// are kept free for in-flight sequences' growth — admission under
     /// pool pressure fails with [`KvPoolError::Exhausted`] rather than
     /// starving active leases.
+    ///
+    /// Publication asserts "this block's contents are resident": only
+    /// callers that install the prompt before anyone else can admit
+    /// (synchronous, single-threaded prefill) may use this entry point.
+    /// Chunked admissions lease with [`KvPool::admit_unpublished`] and
+    /// [`KvPool::publish`] once the install completes.
     pub fn admit(
         &mut self,
         prompt: &[u32],
         reserve: usize,
+    ) -> Result<KvLease, KvPoolError> {
+        self.admit_inner(prompt, reserve, true)
+    }
+
+    /// [`KvPool::admit`] without publishing the fresh full blocks: they
+    /// share *in* an already-published identical prefix (whose contents
+    /// are guaranteed resident), but cannot be shared *out* until
+    /// [`KvPool::publish`] marks them content-valid. This is the
+    /// deferred-admission entry point — a half-installed prompt must
+    /// never be shareable.
+    pub fn admit_unpublished(
+        &mut self,
+        prompt: &[u32],
+        reserve: usize,
+    ) -> Result<KvLease, KvPoolError> {
+        self.admit_inner(prompt, reserve, false)
+    }
+
+    fn admit_inner(
+        &mut self,
+        prompt: &[u32],
+        reserve: usize,
+        publish: bool,
     ) -> Result<KvLease, KvPoolError> {
         let bt = self.block_tokens;
         let n_blocks = self.blocks_for(prompt.len());
@@ -327,8 +357,10 @@ impl KvPool {
             } else {
                 // guaranteed by the free check above
                 let b = self.alloc_block().expect("free check");
-                self.hash_of[b as usize] = h;
-                self.by_hash.insert(h, b);
+                if publish {
+                    self.hash_of[b as usize] = h;
+                    self.by_hash.insert(h, b);
+                }
                 blocks.push(b);
             }
         }
@@ -338,6 +370,27 @@ impl KvPool {
         }
         self.active_leases += 1;
         Ok(KvLease { blocks, len: prompt.len(), shared_blocks: shared })
+    }
+
+    /// Publish a lease's full prompt blocks for prefix sharing once
+    /// their contents are actually resident. The deferred-admission
+    /// counterpart of the publication [`KvPool::admit`] does inline:
+    /// call it exactly when the prompt's install completes. Blocks that
+    /// are already content-addressed (shared-in prefixes, or a hash some
+    /// other lease published first) are left as they are.
+    pub fn publish(&mut self, lease: &KvLease, prompt: &[u32]) {
+        let bt = self.block_tokens;
+        let full = (prompt.len() / bt).min(lease.blocks.len());
+        let mut h: u128 = 0;
+        for i in 0..full {
+            h = Self::chain_hash(h, &prompt[i * bt..(i + 1) * bt]);
+            let b = lease.blocks[i];
+            if self.hash_of[b as usize] == 0 && !self.by_hash.contains_key(&h)
+            {
+                self.hash_of[b as usize] = h;
+                self.by_hash.insert(h, b);
+            }
+        }
     }
 
     /// Extend a lease by one token. Allocates a block at block boundaries
@@ -617,6 +670,46 @@ mod tests {
         assert_eq!(p.free_blocks(), free1);
         p.release(lease);
         assert_eq!(p.free_blocks(), 8);
+    }
+
+    #[test]
+    fn unpublished_admission_shares_in_but_not_out() {
+        let mut p = KvPool::new(16, 4, 0);
+        let prompt = [1u32, 2, 3, 4, 5, 6, 7, 8]; // 2 full blocks
+        // a half-installed prompt must not be shareable: before publish,
+        // an identical admission allocates fresh blocks
+        let a = p.admit_unpublished(&prompt, 0).unwrap();
+        let b = p.admit_unpublished(&prompt, 0).unwrap();
+        assert_eq!(b.shared_blocks(), 0, "shared an unpublished block");
+        assert_ne!(ids(&a)[0], ids(&b)[0]);
+        // once a's install completes and publishes, new admissions share
+        p.publish(&a, &prompt);
+        let c = p.admit_unpublished(&prompt, 0).unwrap();
+        assert_eq!(c.shared_blocks(), 2);
+        assert_eq!(&ids(&c)[..2], &ids(&a)[..2]);
+        // publishing b afterwards is a no-op: the hashes are taken
+        p.publish(&b, &prompt);
+        let d = p.admit_unpublished(&prompt, 0).unwrap();
+        assert_eq!(&ids(&d)[..2], &ids(&a)[..2]);
+        p.release(a);
+        p.release(b);
+        p.release(c);
+        p.release(d);
+        assert_eq!(p.free_blocks(), 16);
+    }
+
+    #[test]
+    fn unpublished_release_leaves_no_stale_index() {
+        // an unpublished lease released mid-install must leave the
+        // sharing index untouched (its blocks were never in it)
+        let mut p = KvPool::new(8, 4, 0);
+        let prompt = [9u32, 9, 9, 9];
+        let a = p.admit_unpublished(&prompt, 0).unwrap();
+        p.release(a);
+        assert_eq!(p.free_blocks(), 8);
+        let b = p.admit_unpublished(&prompt, 0).unwrap();
+        assert_eq!(b.shared_blocks(), 0);
+        p.release(b);
     }
 
     #[test]

@@ -54,9 +54,14 @@ USAGE:
   pi2 serve     [--addr HOST:PORT] [--engine real|sim] [--artifacts DIR]
                 [--mode continuous|lockstep] [--slots N] [--device D]
                 [--model M] [--throttle] [--kv-blocks N]
+                [--prefill-chunk N]
                 line-protocol TCP server; streams tokens with
                 {{\"stream\": true}}. --engine real runs the PJRT engine
-                (needs artifacts), --engine sim the simulation engine
+                (needs artifacts), --engine sim the simulation engine.
+                --prefill-chunk N installs new prompts N tokens at a
+                time between decode steps (two-phase admission), so an
+                admission never stalls in-flight streams for a whole
+                prompt; 0 (default) prefills synchronously inside admit
 
 DEVICES: oneplus12 (default), ace2
 MODELS:  bamboo-7b (default), mistral-7b, qwen2-7b, llama-13b, mixtral-47b
@@ -171,6 +176,23 @@ fn cmd_serve(args: &Args) -> i32 {
         return 2;
     };
     let addr = args.opt_or("addr", "127.0.0.1:7071").to_string();
+    // chunked-prefill budget: prompt tokens installed per scheduler
+    // iteration between decode steps (0 = synchronous admission). The
+    // sim path can also set it via --config's "prefill_chunk"; the flag
+    // wins when given.
+    let prefill_chunk = match args.opt("prefill-chunk") {
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) => Some(n),
+            Err(_) => {
+                eprintln!(
+                    "invalid --prefill-chunk '{s}' (expected a \
+                     non-negative integer)"
+                );
+                return 2;
+            }
+        },
+        None => None,
+    };
     let run = |err: anyhow::Error| -> i32 {
         eprintln!("server error: {err:#}");
         1
@@ -222,6 +244,7 @@ fn cmd_serve(args: &Args) -> i32 {
                 }
             };
             server.set_mode(mode);
+            server.set_prefill_chunk(prefill_chunk.unwrap_or(0));
             println!("serving (real engine, {} scheduling) on {addr} — one \
                       JSON request per line; {{\"cmd\":\"shutdown\"}} to stop",
                      mode.as_str());
@@ -238,8 +261,10 @@ fn cmd_serve(args: &Args) -> i32 {
                 return 2;
             };
             let cfg = base_config(args);
+            let cfg_chunk = cfg.prefill_chunk;
             let mut server = Server::<SimEngine>::sim(dev, spec, cfg);
             server.set_mode(mode);
+            server.set_prefill_chunk(prefill_chunk.unwrap_or(cfg_chunk));
             println!("serving (sim engine, {} scheduling) on {addr} — one \
                       JSON request per line; {{\"cmd\":\"shutdown\"}} to stop",
                      mode.as_str());

@@ -157,6 +157,14 @@ pub struct ServingMetrics {
     pub decode_ms: Samples,
     /// Submit → first token.
     pub ttft_ms: Samples,
+    /// Per-slot inter-token latency: one sample per gap between two
+    /// consecutive tokens of the same sequence, measured on the *engine
+    /// clock* (cumulative prefill + decode engine-seconds — wall-clock
+    /// for the real engine, modeled seconds for the sim). This is the
+    /// stall an in-flight stream feels when another request's prompt
+    /// installs between its decode steps; chunked prefill exists to
+    /// bound its tail (p99/max).
+    pub itl_ms: Samples,
 }
 
 impl ServingMetrics {

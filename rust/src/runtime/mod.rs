@@ -293,7 +293,7 @@ impl Runtime {
     }
 
     pub fn prefill_name(chunk: usize) -> String {
-        format!("prefill_layer_t{chunk}")
+        format!("prefill_chunk_t{chunk}")
     }
 }
 
@@ -322,7 +322,7 @@ mod tests {
     fn graph_names_match_python_table() {
         assert_eq!(Runtime::decode_attn_name(2), "decode_attn_b2");
         assert_eq!(Runtime::decode_ffn_name(1, 512), "decode_ffn_b1_k512");
-        assert_eq!(Runtime::prefill_name(64), "prefill_layer_t64");
+        assert_eq!(Runtime::prefill_name(64), "prefill_chunk_t64");
         assert_eq!(Runtime::lm_head_name(4), "lm_head_b4");
         assert_eq!(Runtime::decode_dense_name(1), "decode_dense_b1");
     }

@@ -9,8 +9,9 @@
 //!        (queued)              (prefill)        (streamed)              (record)
 //! ```
 //!
-//! — and the [`Engine`] trait (`admit` / `step` / `retire` / `capacity`
-//! / `stats` / `kv_pool`) that both the simulation engine
+//! — and the [`Engine`] trait (`admit` / `admit_deferred` +
+//! `prefill_chunk` / `step` / `retire` / `capacity` / `stats` /
+//! `kv_pool`) that both the simulation engine
 //! ([`crate::engine::SimEngine`]) and the real PJRT engine
 //! ([`crate::engine::real::RealEngine`]) implement. The coordinator, the
 //! TCP server, the experiments, benches and examples are all generic over
@@ -239,9 +240,10 @@ impl EngineStats {
 pub struct Admission {
     pub slot: SlotId,
     /// First generated token, when prefill produced one synchronously.
-    /// `None` means the engine defers prefill into subsequent [`Engine::step`]
-    /// calls (the real engine's mid-flight admission path) and the first
-    /// token will surface from `step` later.
+    /// `None` means the prompt is still pending ([`Engine::admit_deferred`]):
+    /// the caller advances it with bounded [`Engine::prefill_chunk`] calls
+    /// and the first token surfaces from the call that installs the final
+    /// chunk.
     pub first_token: Option<u32>,
     /// Summary of the KV lease backing this request (`None` for engines
     /// without paged KV). The lease itself lives in the engine for the
@@ -258,6 +260,21 @@ impl Admission {
     }
 }
 
+/// Progress of one [`Engine::prefill_chunk`] call on a slot whose
+/// admission deferred its prompt installation
+/// ([`Admission::first_token`]` == None`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefillProgress {
+    /// Prompt tokens installed by this call.
+    pub installed: usize,
+    /// Prompt tokens still pending after this call.
+    pub remaining: usize,
+    /// The first generated token — set exactly once, by the call that
+    /// installs the prompt's final chunk. The slot joins subsequent
+    /// [`Engine::step`]s from then on.
+    pub first_token: Option<u32>,
+}
+
 /// The unified serving interface over every inference backend.
 ///
 /// Lifecycle contract:
@@ -267,6 +284,19 @@ impl Admission {
 ///   from the shared block pool — a typed [`crate::kv::KvPoolError`] (kept
 ///   downcastable through `anyhow`) signals pool pressure, which
 ///   schedulers treat as "defer and retry after a retire", not failure.
+/// - `admit_deferred` is the two-phase variant: the slot and KV lease are
+///   claimed immediately (same pool-pressure semantics), but the prompt
+///   is *not* run — the admission comes back with `first_token == None`
+///   and the caller advances the pending prompt with bounded
+///   `prefill_chunk` calls, interleaved with `step`s for the other slots.
+///   This is what removes the head-of-line admission stall: in-flight
+///   decodes never wait for more than one chunk of a newcomer's prompt.
+///   Engines without chunked prefill fall back to a synchronous `admit`.
+/// - `prefill_chunk` advances one pending prompt by up to `budget`
+///   tokens against the slot's existing lease and reports
+///   [`PrefillProgress`]; the call that installs the final chunk returns
+///   the first generated token. A failure mid-prompt rolls the slot back
+///   (lease released, slot freed) — pending state never leaks.
 /// - `step` decodes one token for every occupied slot and returns
 ///   `(slot, token)` pairs; slots whose prefill is still catching up may
 ///   be absent from one or more steps.
@@ -292,6 +322,28 @@ pub trait Engine {
 
     /// Admit one request into a free slot.
     fn admit(&mut self, req: &InferenceRequest) -> Result<Admission>;
+
+    /// Admit one request without running its prefill: claim the slot and
+    /// KV lease now, install the prompt later via [`Engine::prefill_chunk`].
+    /// Engines that only prefill synchronously (the default) admit
+    /// normally and return the first token immediately — callers must
+    /// key off [`Admission::first_token`], not off which method they
+    /// called.
+    fn admit_deferred(&mut self, req: &InferenceRequest) -> Result<Admission> {
+        self.admit(req)
+    }
+
+    /// Advance `slot`'s pending prompt by at most `budget` tokens.
+    /// No-op (`installed == 0 && remaining == 0`) on slots without a
+    /// pending prefill — which is the only case for engines that never
+    /// defer (the default).
+    fn prefill_chunk(
+        &mut self,
+        _slot: SlotId,
+        _budget: usize,
+    ) -> Result<PrefillProgress> {
+        Ok(PrefillProgress::default())
+    }
 
     /// Admit a whole group into an idle engine (lockstep group
     /// formation). Engines may override to prefill the group jointly;
@@ -346,6 +398,18 @@ impl<E: Engine + ?Sized> Engine for Box<E> {
 
     fn admit(&mut self, req: &InferenceRequest) -> Result<Admission> {
         (**self).admit(req)
+    }
+
+    fn admit_deferred(&mut self, req: &InferenceRequest) -> Result<Admission> {
+        (**self).admit_deferred(req)
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        slot: SlotId,
+        budget: usize,
+    ) -> Result<PrefillProgress> {
+        (**self).prefill_chunk(slot, budget)
     }
 
     fn admit_group(&mut self, reqs: &[&InferenceRequest]) -> Result<Vec<Admission>> {
@@ -430,6 +494,44 @@ mod tests {
             .unwrap();
         assert_eq!(sink.events.len(), 2);
         assert_eq!(sink.events[1].finish, Some(FinishReason::Length));
+    }
+
+    #[test]
+    fn default_deferred_admission_falls_back_to_synchronous() {
+        // an engine that only implements the synchronous path must be
+        // drivable through the two-phase API: admit_deferred admits with
+        // an immediate first token, and prefill_chunk is a no-op
+        struct SyncOnly(bool);
+        impl Engine for SyncOnly {
+            fn capacity(&self) -> usize {
+                1
+            }
+            fn active(&self) -> usize {
+                usize::from(self.0)
+            }
+            fn vocab(&self) -> usize {
+                8
+            }
+            fn admit(&mut self, _req: &InferenceRequest) -> Result<Admission> {
+                self.0 = true;
+                Ok(Admission::unpaged(0, Some(3)))
+            }
+            fn step(&mut self) -> Result<Vec<(SlotId, u32)>> {
+                Ok(vec![(0, 1)])
+            }
+            fn retire(&mut self, _slot: SlotId) -> Result<()> {
+                self.0 = false;
+                Ok(())
+            }
+            fn stats(&self) -> EngineStats {
+                EngineStats::default()
+            }
+        }
+        let mut e: Box<dyn Engine> = Box::new(SyncOnly(false));
+        let adm =
+            e.admit_deferred(&InferenceRequest::new(0, vec![1], 2)).unwrap();
+        assert_eq!(adm.first_token, Some(3), "default must not defer");
+        assert_eq!(e.prefill_chunk(0, 16).unwrap(), PrefillProgress::default());
     }
 
     #[test]

@@ -113,6 +113,21 @@ impl Samples {
         }
         self.values.iter().sum::<f64>() / self.values.len() as f64
     }
+
+    /// Largest sample (`NaN` when empty).
+    pub fn max(&mut self) -> f64 {
+        self.percentile(100.0)
+    }
+
+    /// Absorb every sample of `other` (merging per-serve distributions
+    /// into a server-lifetime one).
+    pub fn extend_from(&mut self, other: &Samples) {
+        if other.values.is_empty() {
+            return;
+        }
+        self.values.extend_from_slice(&other.values);
+        self.sorted = false;
+    }
 }
 
 /// Format a bytes count human-readably.

@@ -83,7 +83,7 @@ fn graph_table_covers_expected_kinds() {
     let Some(dir) = selftest_dir() else { return };
     let rt = Runtime::load(dir).expect("load selftest artifacts");
     for name in ["decode_attn_b1", "decode_ffn_b1_k128", "decode_dense_b1",
-                 "lm_head_b1", "prefill_layer_t8"] {
+                 "lm_head_b1", "prefill_chunk_t8"] {
         assert!(rt.has_graph(name), "missing graph {name}");
     }
     // arg shape validation is enforced

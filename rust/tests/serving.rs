@@ -1,16 +1,17 @@
 //! Scheduler-level tests of the unified serving API: slot reuse,
 //! admission under pressure, scheduler equivalence (identical per-request
 //! token streams under lockstep and continuous batching), mid-flight
-//! admission equivalence, per-slot context budgets (rolling KV
-//! reclamation past the window), arrival-clock queueing, and the
-//! continuous-batching throughput win on a mixed-length trace.
+//! admission equivalence, chunked-prefill equivalence and its bounded
+//! admission stall, per-slot context budgets (rolling KV reclamation
+//! past the window), arrival-clock queueing, and the continuous-batching
+//! throughput win on a mixed-length trace.
 
 use anyhow::{anyhow, ensure, Result};
 use powerinfer2::config::{bamboo_7b, oneplus_12, RuntimeConfig};
 use powerinfer2::coordinator::{Coordinator, ScheduleMode};
 use powerinfer2::engine::SimEngine;
 use powerinfer2::serve::{
-    Admission, CollectSink, Engine, EngineStats, FinishReason,
+    Admission, CollectSink, Engine, EngineStats, FinishReason, FnSink,
     InferenceRequest, SlotId,
 };
 use powerinfer2::trace::{mixed_length_mix, with_poisson_arrivals};
@@ -308,6 +309,144 @@ fn request_admitted_at_step_k_matches_solo_stream() {
         shared.push(out.iter().find(|&&(s, _)| s == adm.slot).unwrap().1);
     }
     assert_eq!(solo, shared, "mid-flight admission changed the stream");
+}
+
+#[test]
+fn chunked_prefill_streams_match_synchronous_admit() {
+    // acceptance: enabling chunked prefill changes *when* prompt work
+    // runs, never *what* is generated — every request's token stream is
+    // byte-identical to the synchronous-admission run.
+    let requests = trace_requests(12, 19);
+    let mut sync = Coordinator::new(sim(3));
+    let rs = sync.serve_collect(&requests).unwrap();
+    let mut chunked = Coordinator::new(sim(3)).with_prefill_chunk(5);
+    let rc = chunked.serve_collect(&requests).unwrap();
+    assert_eq!(rs.sessions.len(), requests.len());
+    assert_eq!(rc.sessions.len(), requests.len());
+    for req in &requests {
+        assert_eq!(
+            rs.session(req.id).unwrap().tokens,
+            rc.session(req.id).unwrap().tokens,
+            "request {} diverged under chunked prefill",
+            req.id
+        );
+    }
+    // the chunked run really deferred: admissions came back without a
+    // first token and the scheduler advanced prompts in bounded chunks
+    assert!(rc.deferred_admissions > 0, "no admission was deferred");
+    assert!(
+        rc.prefill_chunks >= rc.deferred_admissions,
+        "deferred prompts must advance through prefill_chunk calls"
+    );
+    assert_eq!(rs.deferred_admissions, 0);
+    assert_eq!(chunked.engine.active(), 0, "slots must drain");
+}
+
+#[test]
+fn chunked_prefill_bounds_the_admission_stall() {
+    // acceptance: with a long prompt admitted mid-flight, the in-flight
+    // stream's worst inter-token gap (engine clock) is strictly lower
+    // under chunked prefill than under synchronous admission — the
+    // head-of-line stall is bounded by the chunk budget. Memory-rich
+    // operating point: with FFN weights resident, prefill cost scales
+    // with tokens, which is exactly where chunking pays.
+    let mk = || {
+        let cfg = RuntimeConfig {
+            max_batch: 2,
+            offload_ffn_frac: 0.0,
+            ..Default::default()
+        };
+        SimEngine::new(oneplus_12(), bamboo_7b(), cfg)
+    };
+    // rider decodes throughout; the quick request frees a slot so the
+    // long-prompt newcomer is admitted mid-flight of the rider
+    let requests = vec![
+        InferenceRequest::new(0, vec![1, 2, 3], 24),
+        InferenceRequest::new(1, vec![4, 5], 2),
+        InferenceRequest::new(2, (0..256).map(|i| (i % 60) as u32).collect(), 4),
+    ];
+    let mut sync = Coordinator::new(mk());
+    let mut rs = sync.serve_collect(&requests).unwrap();
+    let mut chunked = Coordinator::new(mk()).with_prefill_chunk(32);
+    let mut rc = chunked.serve_collect(&requests).unwrap();
+    let sync_max = rs.serving.itl_ms.max();
+    let chunked_max = rc.serving.itl_ms.max();
+    assert!(
+        chunked_max < sync_max,
+        "chunked prefill did not lower the admission stall: \
+         max ITL {chunked_max:.1}ms (chunked) vs {sync_max:.1}ms (sync)"
+    );
+    // ...and the streams are still identical
+    for req in &requests {
+        assert_eq!(
+            rs.session(req.id).unwrap().tokens,
+            rc.session(req.id).unwrap().tokens,
+            "request {} diverged",
+            req.id
+        );
+    }
+    assert!(rc.deferred_admissions >= 1);
+}
+
+#[test]
+fn serve_abort_with_pending_prefill_drains_cleanly() {
+    // a client hanging up while another request's chunked prefill is
+    // mid-prompt must not leak the pending slot or its KV lease
+    let cfg = RuntimeConfig {
+        max_batch: 2,
+        kv_block_tokens: 4,
+        kv_pool_blocks: 64,
+        ..Default::default()
+    };
+    let engine = SimEngine::new(oneplus_12(), bamboo_7b(), cfg);
+    let mut c = Coordinator::new(engine).with_prefill_chunk(4);
+    let requests = vec![
+        InferenceRequest::new(0, vec![1, 2, 3], 20),
+        InferenceRequest::new(1, (0..24).collect(), 4),
+    ];
+    let mut seen = 0usize;
+    let mut sink = FnSink(|_ev: &powerinfer2::serve::TokenEvent| {
+        seen += 1;
+        if seen >= 3 {
+            Err(anyhow!("client hung up"))
+        } else {
+            Ok(())
+        }
+    });
+    let err = c.serve(&requests, &mut sink).unwrap_err();
+    assert!(format!("{err}").contains("hung up"), "{err}");
+    assert_eq!(c.engine.active(), 0, "aborted serve leaked slots");
+    let pool = c.engine.kv_pool().unwrap();
+    assert_eq!(
+        pool.free_blocks, pool.total_blocks,
+        "aborted serve leaked KV blocks of a pending prefill"
+    );
+}
+
+#[test]
+fn pool_pressure_deferral_works_with_chunked_prefill() {
+    // chunked admission claims the lease up front, so pool pressure
+    // surfaces at admit_deferred exactly as it does at admit — the
+    // scheduler's defer-until-retire path must compose with chunking
+    let cfg = RuntimeConfig {
+        max_batch: 3,
+        kv_block_tokens: 4,
+        kv_pool_blocks: 6,
+        ..Default::default()
+    };
+    let engine = SimEngine::new(oneplus_12(), bamboo_7b(), cfg);
+    let mut c = Coordinator::new(engine).with_prefill_chunk(2);
+    let requests: Vec<InferenceRequest> = (0..6)
+        .map(|id| InferenceRequest::new(id, vec![id as u32, 1, 2, 3], 8))
+        .collect();
+    let report = c.serve_collect(&requests).unwrap();
+    assert_eq!(report.sessions.len(), 6);
+    for s in &report.sessions {
+        assert_eq!(s.tokens.len(), 8, "request {} truncated", s.id);
+    }
+    assert!(report.kv_admission_stalls > 0, "pool pressure never deferred");
+    assert!(report.deferred_admissions > 0, "no two-phase admission");
+    assert_eq!(c.engine.kv_pool().unwrap().free_blocks, 6, "leaked blocks");
 }
 
 #[test]
