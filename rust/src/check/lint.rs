@@ -1,0 +1,752 @@
+//! pi2-lint: repo-specific static rules over first-party `rust/src`.
+//!
+//! A dependency-free, line/token-level scanner (no syn, no regex — the
+//! offline crate set has neither) with just enough of a lexer to tell
+//! code from strings and comments and to track `#[cfg(test)]` regions
+//! by brace depth. Four rules, each of which encodes a repo contract
+//! clippy cannot express:
+//!
+//! - **hot-path-unwrap** — no `.unwrap()` / `.expect(` in the serving
+//!   hot-path modules (`coordinator/`, `engine/`, `kv/`, `serve/`)
+//!   outside `#[cfg(test)]`. A panic there tears down a serving thread
+//!   mid-request; fallible paths must return `Result`. Justified
+//!   exceptions carry an inline `// pi2-lint: allow(hot-path-unwrap):
+//!   <why it cannot fire>`.
+//! - **unsafe-code** — no `unsafe` outside the explicit allowlist
+//!   (`storage/flash_file.rs`, the single pread call). The crate root
+//!   also carries `#![deny(unsafe_code)]`, so the compiler and this
+//!   lint agree; the lint exists to fail fast with a `file:line`
+//!   diagnostic in `pi2 check` without a full build.
+//! - **kv-encapsulation** — no raw [`crate::kv::KvPool`] block-state
+//!   mutation outside `kv/`: allocation and free must flow through
+//!   `KvLease` via the pool's public lifecycle API (`admit*` /
+//!   `append` / `fork` / `release`). Touching `refcount` / `hash_of` /
+//!   `by_hash` / the free list / `alloc_block` / `unpublish` from
+//!   engine or scheduler code bypasses the refcount discipline the
+//!   invariant checker enforces.
+//! - **typed-pool-error** — admission / pool-pressure failures must be
+//!   typed (`Error::new` with a downcastable type such as
+//!   [`crate::kv::KvPoolError`]), never bare `anyhow!` / `bail!`
+//!   strings: the scheduler downcasts to tell "defer and retry after a
+//!   retire" from a real error, and a stringly-typed failure silently
+//!   breaks that dispatch.
+//!
+//! An allow annotation without a rule name or a justification is itself
+//! a diagnostic (**bad-allow**): exceptions are part of the reviewed
+//! surface, not an escape hatch.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Modules where a panic is a serving incident, not a bug report.
+const HOT_PATH_DIRS: [&str; 4] = ["coordinator/", "engine/", "kv/", "serve/"];
+
+/// Files allowed to contain `unsafe` (each entry is a reviewed,
+/// documented site — currently only the positioned-read syscall).
+const UNSAFE_ALLOWLIST: [&str; 1] = ["storage/flash_file.rs"];
+
+/// Tokens that reach into `KvPool`'s block bookkeeping. Private fields
+/// make most of these uncompilable outside `kv/` anyway; the lint turns
+/// "the compiler would eventually object somewhere" into a direct
+/// `file:line` diagnostic, and catches the public-but-internal entry
+/// points (`unpublish`-style helpers) a refactor might expose.
+const KV_INTERNALS: [&str; 7] = [
+    ".alloc_block(",
+    ".unpublish(",
+    ".refcount[",
+    ".hash_of[",
+    ".by_hash",
+    ".free.push(",
+    ".free.pop(",
+];
+
+/// Keywords that mark an error string as a pool-pressure site.
+const POOL_WORDS: [&str; 2] = ["pool", "exhaust"];
+
+/// Rule identifiers, as written in `pi2-lint: allow(<rule>)`.
+pub const RULE_HOT_PATH_UNWRAP: &str = "hot-path-unwrap";
+pub const RULE_UNSAFE_CODE: &str = "unsafe-code";
+pub const RULE_KV_ENCAPSULATION: &str = "kv-encapsulation";
+pub const RULE_TYPED_POOL_ERROR: &str = "typed-pool-error";
+pub const RULE_BAD_ALLOW: &str = "bad-allow";
+
+const ALL_RULES: [&str; 4] = [
+    RULE_HOT_PATH_UNWRAP,
+    RULE_UNSAFE_CODE,
+    RULE_KV_ENCAPSULATION,
+    RULE_TYPED_POOL_ERROR,
+];
+
+/// One violation, addressed like a compiler diagnostic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Path relative to the scanned source root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.message
+        )
+    }
+}
+
+/// Result of scanning a tree: diagnostics plus coverage counters, so a
+/// clean run is distinguishable from a run that scanned nothing.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub files: usize,
+    pub lines: usize,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+}
+
+/// One source line, split by the mini-lexer.
+struct LineView {
+    /// Code characters only: string/char literal *contents* are blanked
+    /// (delimiters kept), comments removed.
+    code: String,
+    /// Concatenated contents of string literals on the line.
+    strings: String,
+    /// Concatenated comment text on the line.
+    comment: String,
+    /// The line starts inside (or opens) a `#[cfg(test)]` region.
+    in_test: bool,
+}
+
+/// Lexer state that survives line boundaries.
+enum Mode {
+    Code,
+    BlockComment(usize),
+    Str,
+    RawStr(usize),
+}
+
+/// Split a file into per-line code/string/comment views and mark
+/// `#[cfg(test)]` regions by brace depth. Good enough for a lint: it
+/// understands line/block/doc comments, string, raw-string, byte-string
+/// and char literals (vs lifetimes), and nested block comments.
+fn scan_lines(source: &str) -> Vec<LineView> {
+    let mut out = Vec::new();
+    let mut mode = Mode::Code;
+    // rolling, whitespace-stripped window of recent code chars, used to
+    // spot `#[cfg(test)]` even when formatted across lines
+    let mut recent = String::new();
+    let mut pending_test_attr = false;
+    let mut depth = 0usize;
+    let mut test_depth: Option<usize> = None;
+
+    for raw in source.split('\n') {
+        let mut code = String::new();
+        let mut strings = String::new();
+        let mut comment = String::new();
+        let mut in_test = test_depth.is_some();
+        let chars: Vec<char> = raw.chars().collect();
+        let mut i = 0usize;
+        while i < chars.len() {
+            let c = chars[i];
+            match mode {
+                Mode::BlockComment(d) => {
+                    if c == '*' && chars.get(i + 1) == Some(&'/') {
+                        if d == 1 {
+                            mode = Mode::Code;
+                        } else {
+                            mode = Mode::BlockComment(d - 1);
+                        }
+                        i += 2;
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        mode = Mode::BlockComment(d + 1);
+                        i += 2;
+                    } else {
+                        comment.push(c);
+                        i += 1;
+                    }
+                    continue;
+                }
+                Mode::Str => {
+                    if c == '\\' {
+                        i += 2; // skip the escaped char (incl. `\"`)
+                    } else if c == '"' {
+                        mode = Mode::Code;
+                        code.push('"');
+                        i += 1;
+                    } else {
+                        strings.push(c);
+                        i += 1;
+                    }
+                    continue;
+                }
+                Mode::RawStr(hashes) => {
+                    if c == '"' {
+                        let close = (1..=hashes)
+                            .all(|k| chars.get(i + k) == Some(&'#'));
+                        if close {
+                            mode = Mode::Code;
+                            code.push('"');
+                            i += 1 + hashes;
+                            continue;
+                        }
+                    }
+                    strings.push(c);
+                    i += 1;
+                    continue;
+                }
+                Mode::Code => {}
+            }
+            // Mode::Code
+            if c == '/' && chars.get(i + 1) == Some(&'/') {
+                comment.push_str(&raw[byte_at(raw, i + 2)..]);
+                break; // rest of the line is a line/doc comment
+            }
+            if c == '/' && chars.get(i + 1) == Some(&'*') {
+                mode = Mode::BlockComment(1);
+                i += 2;
+                continue;
+            }
+            // raw / byte string starts: r", r#", br", b"
+            let prev_ident = i > 0
+                && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_');
+            if (c == 'r' || c == 'b') && !prev_ident {
+                let mut j = i + 1;
+                if c == 'b' && chars.get(j) == Some(&'r') {
+                    j += 1;
+                }
+                if c == 'r' || j > i + 1 {
+                    let mut hashes = 0usize;
+                    while chars.get(j + hashes) == Some(&'#') {
+                        hashes += 1;
+                    }
+                    if chars.get(j + hashes) == Some(&'"') {
+                        mode = Mode::RawStr(hashes);
+                        code.push('"');
+                        i = j + hashes + 1;
+                        continue;
+                    }
+                }
+                if c == 'b' && chars.get(i + 1) == Some(&'"') {
+                    mode = Mode::Str;
+                    code.push('"');
+                    i += 2;
+                    continue;
+                }
+            }
+            if c == '"' {
+                mode = Mode::Str;
+                code.push('"');
+                i += 1;
+                continue;
+            }
+            if c == '\'' && !prev_ident {
+                // char literal vs lifetime: 'x' or an escape is a char
+                // literal; anything else ('a in generics) is a lifetime
+                if chars.get(i + 1) == Some(&'\\') {
+                    let mut j = i + 2;
+                    while j < chars.len() && chars[j] != '\'' {
+                        j += 1;
+                    }
+                    code.push('\'');
+                    code.push('\'');
+                    i = j + 1;
+                    continue;
+                }
+                if chars.get(i + 2) == Some(&'\'') {
+                    code.push('\'');
+                    code.push('\'');
+                    i += 3;
+                    continue;
+                }
+            }
+            code.push(c);
+            if !c.is_whitespace() {
+                recent.push(c);
+                if recent.len() > 24 {
+                    let cut = recent.len() - 24;
+                    recent.drain(..cut);
+                }
+                if recent.ends_with("#[cfg(test)]") {
+                    pending_test_attr = true;
+                }
+            }
+            match c {
+                '{' => {
+                    depth += 1;
+                    if pending_test_attr {
+                        test_depth = Some(depth);
+                        pending_test_attr = false;
+                        in_test = true;
+                    }
+                }
+                '}' => {
+                    if test_depth == Some(depth) {
+                        test_depth = None;
+                    }
+                    depth = depth.saturating_sub(1);
+                }
+                ';' => {
+                    // `#[cfg(test)] use …;` — the attribute covered one
+                    // braceless item
+                    pending_test_attr = false;
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        out.push(LineView { code, strings, comment, in_test });
+    }
+    out
+}
+
+/// Byte offset of the `idx`-th char of `s` (for slicing comment tails).
+fn byte_at(s: &str, idx: usize) -> usize {
+    s.char_indices().nth(idx).map(|(b, _)| b).unwrap_or(s.len())
+}
+
+/// A parsed allow annotation: a comment whose content (after leading
+/// whitespace) starts with the marker, then `allow(` + a comma-separated
+/// rule list + `)` + `:` + a non-empty justification.
+struct Allow {
+    rules: Vec<String>,
+    justified: bool,
+    malformed: Option<String>,
+}
+
+fn parse_allow(comment: &str) -> Option<Allow> {
+    // the annotation must BE the comment (modulo leading whitespace), not
+    // appear mid-prose — documentation may mention pi2-lint freely
+    let rest = comment
+        .trim_start()
+        .strip_prefix("pi2-lint:")?
+        .trim_start();
+    let Some(body) = rest.strip_prefix("allow(") else {
+        return Some(Allow {
+            rules: Vec::new(),
+            justified: false,
+            malformed: Some(
+                "expected `pi2-lint: allow(<rule>): <justification>`".into(),
+            ),
+        });
+    };
+    let Some(close) = body.find(')') else {
+        return Some(Allow {
+            rules: Vec::new(),
+            justified: false,
+            malformed: Some("unclosed allow(...) rule list".into()),
+        });
+    };
+    let rules: Vec<String> = body[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    if rules.is_empty() {
+        return Some(Allow {
+            rules,
+            justified: false,
+            malformed: Some("empty allow(...) rule list".into()),
+        });
+    }
+    if let Some(bad) = rules.iter().find(|r| !ALL_RULES.contains(&r.as_str()))
+    {
+        return Some(Allow {
+            rules: Vec::new(),
+            justified: false,
+            malformed: Some(format!(
+                "unknown rule '{bad}' (known: {})",
+                ALL_RULES.join(", ")
+            )),
+        });
+    }
+    let tail = body[close + 1..].trim_start();
+    let justification = tail.strip_prefix(':').unwrap_or("").trim();
+    Some(Allow { rules, justified: !justification.is_empty(), malformed: None })
+}
+
+/// Does `code` contain `unsafe` as a standalone token?
+fn has_unsafe_token(code: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut from = 0usize;
+    while let Some(pos) = code[from..].find("unsafe") {
+        let start = from + pos;
+        let end = start + "unsafe".len();
+        let pre = start == 0
+            || !(bytes[start - 1].is_ascii_alphanumeric()
+                || bytes[start - 1] == b'_');
+        let post = end >= bytes.len()
+            || !(bytes[end].is_ascii_alphanumeric() || bytes[end] == b'_');
+        if pre && post {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+/// Lint one file's source. `rel` is its path relative to the source
+/// root, `/`-separated — rule applicability keys off it.
+pub fn lint_source(rel: &str, source: &str) -> Vec<Diagnostic> {
+    let hot_path = HOT_PATH_DIRS.iter().any(|d| rel.starts_with(d));
+    let unsafe_allowed = UNSAFE_ALLOWLIST.contains(&rel);
+    let in_kv = rel.starts_with("kv/");
+    let lines = scan_lines(source);
+
+    // collect allow annotations: an allow on a code-free line covers the
+    // next line with code; otherwise it covers its own line
+    let mut allows: HashMap<usize, Vec<String>> = HashMap::new();
+    let mut diags = Vec::new();
+    for (idx, lv) in lines.iter().enumerate() {
+        let Some(allow) = parse_allow(&lv.comment) else { continue };
+        let lineno = idx + 1;
+        if let Some(why) = allow.malformed {
+            diags.push(Diagnostic {
+                file: rel.to_string(),
+                line: lineno,
+                rule: RULE_BAD_ALLOW,
+                message: format!("malformed pi2-lint annotation: {why}"),
+            });
+            continue;
+        }
+        if !allow.justified {
+            diags.push(Diagnostic {
+                file: rel.to_string(),
+                line: lineno,
+                rule: RULE_BAD_ALLOW,
+                message: "allow(...) without a justification — write \
+                          `pi2-lint: allow(<rule>): <why this site is \
+                          safe>`"
+                    .into(),
+            });
+            continue;
+        }
+        let target = if lv.code.trim().is_empty() {
+            // standalone comment: covers the next non-blank code line
+            lines
+                .iter()
+                .enumerate()
+                .skip(idx + 1)
+                .find(|(_, l)| !l.code.trim().is_empty())
+                .map(|(j, _)| j + 1)
+                .unwrap_or(lineno)
+        } else {
+            lineno
+        };
+        allows.entry(target).or_default().extend(allow.rules);
+    }
+    let allowed = |line: usize, rule: &str| {
+        allows.get(&line).is_some_and(|rs| rs.iter().any(|r| r == rule))
+    };
+
+    for (idx, lv) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+        if lv.in_test {
+            continue; // `#[cfg(test)]` regions may panic freely
+        }
+        if hot_path
+            && (lv.code.contains(".unwrap()") || lv.code.contains(".expect("))
+            && !allowed(lineno, RULE_HOT_PATH_UNWRAP)
+        {
+            diags.push(Diagnostic {
+                file: rel.to_string(),
+                line: lineno,
+                rule: RULE_HOT_PATH_UNWRAP,
+                message: "unwrap()/expect() on a serving hot path — return \
+                          a typed error, or justify with `pi2-lint: \
+                          allow(hot-path-unwrap): ...`"
+                    .into(),
+            });
+        }
+        if !unsafe_allowed
+            && has_unsafe_token(&lv.code)
+            && !allowed(lineno, RULE_UNSAFE_CODE)
+        {
+            diags.push(Diagnostic {
+                file: rel.to_string(),
+                line: lineno,
+                rule: RULE_UNSAFE_CODE,
+                message: format!(
+                    "`unsafe` outside the allowlist ({})",
+                    UNSAFE_ALLOWLIST.join(", ")
+                ),
+            });
+        }
+        if !in_kv && !allowed(lineno, RULE_KV_ENCAPSULATION) {
+            if let Some(tok) =
+                KV_INTERNALS.iter().find(|t| lv.code.contains(*t))
+            {
+                diags.push(Diagnostic {
+                    file: rel.to_string(),
+                    line: lineno,
+                    rule: RULE_KV_ENCAPSULATION,
+                    message: format!(
+                        "raw KvPool block mutation (`{tok}`) outside kv/ — \
+                         alloc/free must flow through KvLease via the \
+                         pool's lifecycle API"
+                    ),
+                });
+            }
+        }
+        if hot_path
+            && (lv.code.contains("anyhow!(") || lv.code.contains("bail!("))
+            && !allowed(lineno, RULE_TYPED_POOL_ERROR)
+        {
+            // pool-pressure wording in the message string marks the site
+            // as one the scheduler must be able to downcast
+            let next_strings = lines
+                .get(idx + 1)
+                .map(|l| l.strings.as_str())
+                .unwrap_or("");
+            let msg_text =
+                format!("{} {}", lv.strings, next_strings).to_lowercase();
+            if POOL_WORDS.iter().any(|w| msg_text.contains(w)) {
+                diags.push(Diagnostic {
+                    file: rel.to_string(),
+                    line: lineno,
+                    rule: RULE_TYPED_POOL_ERROR,
+                    message: "bare-string error at a pool-pressure site — \
+                              use a typed, downcastable error \
+                              (Error::new(KvPoolError...)) so schedulers \
+                              can defer instead of failing"
+                        .into(),
+                });
+            }
+        }
+    }
+    diags
+}
+
+/// Recursively collect `.rs` files under `root` (sorted, stable order).
+fn collect_rs(root: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(root)
+        .with_context(|| format!("read dir {}", root.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            // first-party source only: vendored crates keep their own
+            // style and are not ours to lint
+            if path.file_name().is_some_and(|n| n == "vendor") {
+                continue;
+            }
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every first-party `.rs` file under `src_root`.
+pub fn lint_tree(src_root: &Path) -> Result<LintReport> {
+    let mut files = Vec::new();
+    collect_rs(src_root, &mut files)?;
+    let mut report = LintReport::default();
+    for path in files {
+        let rel = path
+            .strip_prefix(src_root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let source = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        report.files += 1;
+        report.lines += source.lines().count();
+        report.diagnostics.extend(lint_source(&rel, &source));
+    }
+    report.diagnostics.sort_by(|a, b| {
+        (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule))
+    });
+    Ok(report)
+}
+
+/// The crate's own `src/` directory — what `pi2 check` scans by default
+/// and what the self-clean regression test pins.
+pub fn default_src_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_at(diags: &[Diagnostic], line: usize) -> Vec<&'static str> {
+        diags.iter().filter(|d| d.line == line).map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn planted_unwrap_in_hot_path_fixture_is_caught_with_file_line() {
+        // the regression the satellite task demands: a planted unwrap in
+        // a hot-path fixture must produce a file:line diagnostic
+        let fixture = "\
+fn admit(x: Option<u32>) -> u32 {
+    let v = x.unwrap();
+    v
+}
+";
+        let diags = lint_source("engine/planted.rs", fixture);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].rule, RULE_HOT_PATH_UNWRAP);
+        assert_eq!(diags[0].line, 2);
+        assert_eq!(diags[0].to_string().split(':').next(), Some("engine/planted.rs"));
+        assert!(diags[0].to_string().starts_with("engine/planted.rs:2:"));
+        // the same code outside a hot-path module is not flagged
+        assert!(lint_source("experiments/planted.rs", fixture).is_empty());
+    }
+
+    #[test]
+    fn expect_is_flagged_and_unwrap_or_is_not() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.expect(\"msg\") }\n\
+                   fn g(x: Option<u32>) -> u32 { x.unwrap_or(0) }\n";
+        let diags = lint_source("kv/f.rs", src);
+        assert_eq!(rules_at(&diags, 1), vec![RULE_HOT_PATH_UNWRAP]);
+        assert!(rules_at(&diags, 2).is_empty(), "unwrap_or is fine");
+    }
+
+    #[test]
+    fn cfg_test_regions_are_exempt() {
+        let src = "\
+fn hot() -> u32 { 1 }
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let v: Option<u32> = Some(1);
+        v.unwrap();
+    }
+}
+";
+        assert!(lint_source("coordinator/mod.rs", src).is_empty());
+        // …and code after the test module is back in scope
+        let src2 = format!("{src}\nfn tail(x: Option<u32>) -> u32 {{ x.unwrap() }}\n");
+        let diags = lint_source("coordinator/mod.rs", &src2);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].line, 12);
+    }
+
+    #[test]
+    fn strings_and_comments_do_not_trip_rules() {
+        let src = "\
+// calling .unwrap() here would be bad
+fn f() -> &'static str {
+    \"contains .unwrap() and unsafe words\"
+}
+/* unsafe .expect( block comment */
+";
+        assert!(lint_source("serve/doc.rs", src).is_empty());
+    }
+
+    #[test]
+    fn justified_allow_suppresses_and_unjustified_is_flagged() {
+        let ok = "\
+fn f(x: Option<u32>) -> u32 {
+    // pi2-lint: allow(hot-path-unwrap): length checked two lines up
+    x.unwrap()
+}
+";
+        assert!(lint_source("kv/f.rs", ok).is_empty());
+        let inline = "fn f(x: Option<u32>) -> u32 { x.unwrap() } \
+                      // pi2-lint: allow(hot-path-unwrap): invariant\n";
+        assert!(lint_source("kv/f.rs", inline).is_empty());
+        let bare = "\
+fn f(x: Option<u32>) -> u32 {
+    // pi2-lint: allow(hot-path-unwrap)
+    x.unwrap()
+}
+";
+        let diags = lint_source("kv/f.rs", bare);
+        assert_eq!(diags.len(), 2, "{diags:?}");
+        assert!(diags.iter().any(|d| d.rule == RULE_BAD_ALLOW));
+        assert!(diags.iter().any(|d| d.rule == RULE_HOT_PATH_UNWRAP));
+        let unknown = "// pi2-lint: allow(no-such-rule): because\nfn f() {}\n";
+        let diags = lint_source("kv/f.rs", unknown);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, RULE_BAD_ALLOW);
+        assert!(diags[0].message.contains("no-such-rule"));
+    }
+
+    #[test]
+    fn unsafe_outside_allowlist_is_flagged() {
+        let src = "fn f() { unsafe { std::hint::unreachable_unchecked() } }\n";
+        let diags = lint_source("engine/real.rs", src);
+        assert_eq!(rules_at(&diags, 1), vec![RULE_UNSAFE_CODE]);
+        // the allowlisted file may use it
+        assert!(lint_source("storage/flash_file.rs", src).is_empty());
+        // identifiers containing the word are not the keyword
+        assert!(lint_source("engine/x.rs", "fn f(unsafe_code: u32) {}\n")
+            .iter()
+            .all(|d| d.rule != RULE_UNSAFE_CODE));
+    }
+
+    #[test]
+    fn kv_internals_outside_kv_are_flagged() {
+        let src = "fn f(p: &mut KvPool) { p.refcount[3] += 1; }\n";
+        let diags = lint_source("engine/mod.rs", src);
+        assert_eq!(rules_at(&diags, 1), vec![RULE_KV_ENCAPSULATION]);
+        // inside kv/ the pool may touch its own fields
+        assert!(lint_source("kv/mod.rs", src).is_empty());
+        // going through the lease API is fine anywhere
+        let ok = "fn f(p: &mut KvPool, l: KvLease) { p.release(l); }\n";
+        assert!(lint_source("engine/mod.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn bare_string_pool_errors_are_flagged() {
+        let src = "fn f() -> Result<()> { bail!(\"kv pool exhausted\") }\n";
+        let diags = lint_source("engine/real.rs", src);
+        assert_eq!(rules_at(&diags, 1), vec![RULE_TYPED_POOL_ERROR]);
+        // the macro with a non-pool message is allowed (engine-full etc.)
+        let ok = "fn f() -> Result<()> { bail!(\"engine full\") }\n";
+        assert!(lint_source("engine/real.rs", ok).is_empty());
+        // multi-line: macro on one line, string on the next
+        let two = "fn f() -> E {\n    anyhow!(\n        \"pool dry\"\n    )\n}\n";
+        let diags = lint_source("engine/real.rs", two);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals_lex_cleanly() {
+        let src = "\
+fn f() -> (&'static str, char) {
+    let r = r#\"has .unwrap() inside\"#;
+    let c = '\\'';
+    let l: Vec<&'static str> = vec![r];
+    (l[0], c)
+}
+";
+        assert!(lint_source("serve/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn the_tree_is_clean() {
+        // the self-application gate: the repo's own source must pass its
+        // own lint. A regression here is exactly what `pi2 check` (and
+        // the CI job) would fail on.
+        let report = lint_tree(&default_src_root()).unwrap();
+        assert!(report.files > 30, "scanned only {} files", report.files);
+        assert!(
+            report.is_clean(),
+            "pi2-lint diagnostics on the tree:\n{}",
+            report
+                .diagnostics
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+}

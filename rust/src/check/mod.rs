@@ -1,0 +1,31 @@
+//! `pi2 check` — the repo's correctness tooling, surfaced as a CLI
+//! subcommand and a CI job.
+//!
+//! Two layers, both dependency-free:
+//!
+//! - [`lint`]: a line/token-level static scanner over first-party
+//!   `rust/src` enforcing repo-specific rules clippy cannot express —
+//!   no `unwrap()`/`expect()` on serving hot paths, no `unsafe` outside
+//!   the storage allowlist, no raw [`crate::kv::KvPool`] internals
+//!   touched outside `kv/`, and typed (downcastable) errors at
+//!   pool-pressure sites. Violations are `file:line` diagnostics and a
+//!   non-zero exit.
+//! - [`model`]: a deterministic, bounded-depth exhaustive model checker
+//!   over the request lifecycle: every interleaving of
+//!   `{admit, admit_deferred, prefill_chunk, step, retire, abort,
+//!   pool-exhaustion}` on a [`crate::coordinator::Coordinator`] over
+//!   [`crate::engine::SimEngine`], with
+//!   [`crate::kv::KvPool::check_invariants`] and
+//!   [`crate::coordinator::Coordinator::check_invariants`] asserted
+//!   after **every** transition. A failing interleaving is reported as
+//!   a replayable schedule.
+//!
+//! The point of landing this before the concurrency roadmap items
+//! (multi-threaded serving, watermark/preemption admission) is that
+//! those are exactly the changes that turn latent lifecycle bugs —
+//! leaked leases, double frees, panics tearing down a serving thread —
+//! into production incidents. The checker is the substrate they are
+//! verified against.
+
+pub mod lint;
+pub mod model;

@@ -1,0 +1,714 @@
+//! Bounded-depth exhaustive model checker for the request lifecycle.
+//!
+//! The serving stack's correctness claims — no leaked leases, no double
+//! frees, refcounts equal to lease membership, occupancy arithmetic
+//! consistent between scheduler and pool — are easy to state and easy to
+//! silently break from any of the half-dozen code paths that touch a
+//! slot. This module checks them *exhaustively* over a small world: it
+//! enumerates every interleaving of
+//! `{admit, admit_deferred, prefill_chunk, step, retire, abort}` (plus
+//! the implicit pool-exhaustion "blocked" transitions) for a handful of
+//! concurrent request lifecycles driven through a real
+//! [`Coordinator`]`<`[`SimEngine`]`>`, and asserts
+//! [`Coordinator::check_invariants`] — which folds in
+//! [`crate::kv::KvPool::check_invariants`] — after **every** transition.
+//!
+//! The search is breadth-first over operation schedules with
+//! visited-state deduplication, so each reachable state is audited once.
+//! [`SimEngine`] is deterministic and not `Clone`, so an edge is
+//! explored by replaying its schedule prefix from scratch — replay *is*
+//! the state, which is also what makes a failing schedule replayable:
+//! a violation is reported as the exact operation list that reproduces
+//! it ([`ExploreReport::violation`], re-run with [`replay`]).
+//!
+//! The checker's own honesty is tested by planting a bug:
+//! [`SimFault::LeakLeaseOnRetire`] makes `retire` drop a lease without
+//! releasing it, and [`leak_self_test`] must catch that with a
+//! replayable schedule — `pi2 check` fails if it does not.
+
+use std::collections::{HashSet, VecDeque};
+use std::fmt;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{bamboo_7b, oneplus_12, RuntimeConfig};
+use crate::coordinator::Coordinator;
+use crate::engine::{SimEngine, SimFault};
+use crate::kv::KvPoolError;
+use crate::serve::{Engine, InferenceRequest};
+
+/// One lifecycle transition the checker can drive. `r` indexes into
+/// [`ModelConfig::requests`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Synchronous admission: slot + lease + whole prompt in one call.
+    Admit(usize),
+    /// Two-phase admission: slot + lease now, prompt installed later
+    /// via [`Op::PrefillChunk`].
+    AdmitDeferred(usize),
+    /// Advance request `r`'s pending prompt by one chunk budget.
+    PrefillChunk(usize),
+    /// One decode step over every installed slot.
+    Step,
+    /// Retire a finished request (emitted its full token budget).
+    Retire(usize),
+    /// Cancel an unfinished request (pending or mid-decode).
+    Abort(usize),
+}
+
+impl fmt::Display for Op {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Op::Admit(r) => write!(f, "admit(r{r})"),
+            Op::AdmitDeferred(r) => write!(f, "admit_deferred(r{r})"),
+            Op::PrefillChunk(r) => write!(f, "prefill_chunk(r{r})"),
+            Op::Step => write!(f, "step"),
+            Op::Retire(r) => write!(f, "retire(r{r})"),
+            Op::Abort(r) => write!(f, "abort(r{r})"),
+        }
+    }
+}
+
+/// Render a schedule as the replayable one-liner printed on failure.
+pub fn format_schedule(schedule: &[Op]) -> String {
+    let mut s = String::new();
+    for (i, op) in schedule.iter().enumerate() {
+        if i > 0 {
+            s.push_str("; ");
+        }
+        let _ = write!(s, "{op}");
+    }
+    s
+}
+
+/// Where one modeled request is in its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Queued,
+    /// Admitted via the deferred path; prompt partially installed.
+    Pending { slot: usize, installed: usize },
+    /// Emitting tokens (`emitted` counts the first token too).
+    Decoding { slot: usize, emitted: usize },
+    Done,
+}
+
+/// Shape of one modeled request.
+#[derive(Debug, Clone)]
+pub struct LifecycleSpec {
+    pub prompt: Vec<u32>,
+    pub max_tokens: usize,
+}
+
+impl LifecycleSpec {
+    pub fn new(prompt_len: usize, max_tokens: usize) -> Self {
+        LifecycleSpec {
+            prompt: (0..prompt_len as u32).collect(),
+            max_tokens: max_tokens.max(1),
+        }
+    }
+}
+
+/// One bounded world to exhaust: the request set, the engine/pool
+/// geometry, and the search bounds.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub requests: Vec<LifecycleSpec>,
+    /// Leasable KV pool blocks (the reserved scratch block is extra).
+    pub pool_blocks: usize,
+    pub block_tokens: usize,
+    pub max_batch: usize,
+    /// `prefill_chunk` budget for [`Op::PrefillChunk`].
+    pub chunk: usize,
+    /// Offer [`Op::AdmitDeferred`] in addition to [`Op::Admit`].
+    pub deferred: bool,
+    /// Schedule-length bound; deeper frontiers mark the run incomplete.
+    pub max_depth: usize,
+    /// Distinct-state bound (runaway backstop; suite configs stay far
+    /// under it).
+    pub max_states: usize,
+    /// Planted engine bug, [`SimFault::None`] for real checking.
+    pub fault: SimFault,
+}
+
+/// A failing interleaving: the exact schedule to hand to [`replay`]
+/// and the invariant it broke.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub schedule: Vec<Op>,
+    pub message: String,
+}
+
+/// Outcome of one [`explore`] run.
+#[derive(Debug, Clone)]
+pub struct ExploreReport {
+    pub name: &'static str,
+    /// Distinct states audited (including the initial one).
+    pub states: usize,
+    /// Transitions driven (each one followed by a full invariant audit).
+    pub transitions: usize,
+    pub max_depth_reached: usize,
+    /// False when a bound ([`ModelConfig::max_depth`] /
+    /// [`ModelConfig::max_states`]) truncated the frontier.
+    pub complete: bool,
+    pub violation: Option<Violation>,
+}
+
+/// The model checker's state: a real coordinator over the simulation
+/// engine, plus the checker's own mirror of each request's phase. The
+/// mirror is what invariants are cross-checked *against* — engine
+/// occupancy must always agree with what the drive history implies.
+struct World {
+    coord: Coordinator<SimEngine>,
+    phases: Vec<Phase>,
+}
+
+impl World {
+    fn new(cfg: &ModelConfig) -> World {
+        // shrink the simulated model so a replayed transition costs
+        // microseconds, not milliseconds — the timeline arithmetic is
+        // irrelevant here, only the lifecycle bookkeeping is under test
+        let mut spec = bamboo_7b();
+        spec.layers = 2;
+        spec.inter = 2048;
+        let rt = RuntimeConfig {
+            max_batch: cfg.max_batch,
+            kv_block_tokens: cfg.block_tokens,
+            kv_pool_blocks: cfg.pool_blocks,
+            seed: 0,
+            ..Default::default()
+        };
+        let mut engine = SimEngine::new(oneplus_12(), spec, rt);
+        engine.inject_fault(cfg.fault);
+        World {
+            coord: Coordinator::new(engine),
+            phases: vec![Phase::Queued; cfg.requests.len()],
+        }
+    }
+
+    fn request(cfg: &ModelConfig, r: usize) -> InferenceRequest {
+        InferenceRequest::new(
+            r as u64,
+            cfg.requests[r].prompt.clone(),
+            cfg.requests[r].max_tokens,
+        )
+    }
+
+    fn live(&self) -> usize {
+        self.phases
+            .iter()
+            .filter(|p| {
+                matches!(p, Phase::Pending { .. } | Phase::Decoding { .. })
+            })
+            .count()
+    }
+
+    /// Every operation legal from this state. Admission is only offered
+    /// below the batch cap (an engine-full error is a caller bug, not a
+    /// deferrable condition — pool pressure is modeled separately, as a
+    /// blocked transition inside [`World::apply`]). `step` is only
+    /// offered while no finished request awaits retirement: the
+    /// scheduler contract is retire-before-next-step, and bounding the
+    /// checker to it keeps the emitted counts — and the state space —
+    /// finite.
+    fn enabled(&self, cfg: &ModelConfig) -> Vec<Op> {
+        let mut ops = Vec::new();
+        let live = self.live();
+        let finished_waiting = self.phases.iter().enumerate().any(
+            |(r, p)| matches!(p, Phase::Decoding { emitted, .. }
+                              if *emitted >= cfg.requests[r].max_tokens),
+        );
+        for (r, phase) in self.phases.iter().enumerate() {
+            let max_tokens = cfg.requests[r].max_tokens;
+            match *phase {
+                Phase::Queued => {
+                    if live < cfg.max_batch {
+                        ops.push(Op::Admit(r));
+                        if cfg.deferred {
+                            ops.push(Op::AdmitDeferred(r));
+                        }
+                    }
+                }
+                Phase::Pending { .. } => {
+                    ops.push(Op::PrefillChunk(r));
+                    ops.push(Op::Abort(r));
+                }
+                Phase::Decoding { emitted, .. } => {
+                    if emitted >= max_tokens {
+                        ops.push(Op::Retire(r));
+                    } else {
+                        ops.push(Op::Abort(r));
+                    }
+                }
+                Phase::Done => {}
+            }
+        }
+        let decoding_unfinished = self.phases.iter().enumerate().any(
+            |(r, p)| matches!(p, Phase::Decoding { emitted, .. }
+                              if *emitted < cfg.requests[r].max_tokens),
+        );
+        if decoding_unfinished && !finished_waiting {
+            ops.push(Op::Step);
+        }
+        ops
+    }
+
+    /// Drive one transition. `Ok(true)` = state advanced, `Ok(false)` =
+    /// the operation blocked on typed pool pressure (a legal no-op: the
+    /// scheduler defers and retries), `Err` = invariant / contract
+    /// violation.
+    fn apply(&mut self, op: Op, cfg: &ModelConfig) -> Result<bool> {
+        match op {
+            Op::Admit(r) => {
+                let req = World::request(cfg, r);
+                match self.coord.engine.admit(&req) {
+                    Ok(adm) => {
+                        if adm.first_token.is_none() {
+                            return Err(anyhow!(
+                                "admit(r{r}) returned no first token"
+                            ));
+                        }
+                        self.phases[r] =
+                            Phase::Decoding { slot: adm.slot, emitted: 1 };
+                        Ok(true)
+                    }
+                    Err(e) if is_pool_pressure(&e) => Ok(false),
+                    Err(e) => Err(e.context(format!("admit(r{r})"))),
+                }
+            }
+            Op::AdmitDeferred(r) => {
+                let req = World::request(cfg, r);
+                match self.coord.engine.admit_deferred(&req) {
+                    Ok(adm) => {
+                        self.phases[r] =
+                            Phase::Pending { slot: adm.slot, installed: 0 };
+                        Ok(true)
+                    }
+                    Err(e) if is_pool_pressure(&e) => Ok(false),
+                    Err(e) => {
+                        Err(e.context(format!("admit_deferred(r{r})")))
+                    }
+                }
+            }
+            Op::PrefillChunk(r) => {
+                let Phase::Pending { slot, installed } = self.phases[r]
+                else {
+                    return Err(anyhow!(
+                        "prefill_chunk(r{r}) driven on a non-pending request"
+                    ));
+                };
+                let budget = cfg.chunk.max(1);
+                let p = self
+                    .coord
+                    .engine
+                    .prefill_chunk(slot, budget)
+                    .map_err(|e| {
+                        e.context(format!("prefill_chunk(r{r})"))
+                    })?;
+                self.phases[r] = if p.first_token.is_some() {
+                    Phase::Decoding { slot, emitted: 1 }
+                } else {
+                    Phase::Pending { slot, installed: installed + p.installed }
+                };
+                Ok(true)
+            }
+            Op::Step => match self.coord.engine.step() {
+                Ok(toks) => {
+                    for &(slot, _) in &toks {
+                        let r = self.phases.iter().position(|p| {
+                            matches!(p, Phase::Decoding { slot: s, .. }
+                                     if *s == slot)
+                        });
+                        let Some(r) = r else {
+                            return Err(anyhow!(
+                                "step emitted a token for slot {slot}, which \
+                                 no decoding request owns"
+                            ));
+                        };
+                        if let Phase::Decoding { emitted, .. } =
+                            &mut self.phases[r]
+                        {
+                            *emitted += 1;
+                        }
+                    }
+                    // every decoding request must have been stepped —
+                    // a silently skipped slot is a lost token
+                    for (r, p) in self.phases.iter().enumerate() {
+                        if let Phase::Decoding { slot, .. } = p {
+                            if !toks.iter().any(|&(s, _)| s == *slot) {
+                                return Err(anyhow!(
+                                    "step skipped decoding request r{r} \
+                                     (slot {slot})"
+                                ));
+                            }
+                        }
+                    }
+                    Ok(true)
+                }
+                Err(e) if is_pool_pressure(&e) => Ok(false),
+                Err(e) => Err(e.context("step")),
+            },
+            Op::Retire(r) | Op::Abort(r) => {
+                let slot = match self.phases[r] {
+                    Phase::Pending { slot, .. }
+                    | Phase::Decoding { slot, .. } => slot,
+                    _ => {
+                        return Err(anyhow!(
+                            "{op} driven on a request with no slot"
+                        ))
+                    }
+                };
+                self.coord
+                    .engine
+                    .retire(slot)
+                    .map_err(|e| e.context(format!("{op}")))?;
+                self.phases[r] = Phase::Done;
+                Ok(true)
+            }
+        }
+    }
+
+    /// The full invariant audit run after every transition: the
+    /// coordinator/engine/pool stack's own invariants, then the
+    /// cross-check that engine occupancy matches what the drive history
+    /// implies.
+    fn audit(&self) -> Result<()> {
+        self.coord.check_invariants()?;
+        let live = self.live();
+        let active = self.coord.engine.active();
+        if active != live {
+            return Err(anyhow!(
+                "engine reports {active} occupied slots but the schedule \
+                 implies {live} live requests"
+            ));
+        }
+        Ok(())
+    }
+
+    /// Canonical state fingerprint for visited-state deduplication:
+    /// every request's phase plus the pool occupancy triple. Blocked
+    /// transitions leave it unchanged, which is what dedups them.
+    fn signature(&self) -> String {
+        let mut sig = String::new();
+        for p in &self.phases {
+            match p {
+                Phase::Queued => sig.push('q'),
+                Phase::Pending { slot, installed } => {
+                    let _ = write!(sig, "p{slot}.{installed}");
+                }
+                Phase::Decoding { slot, emitted } => {
+                    let _ = write!(sig, "d{slot}.{emitted}");
+                }
+                Phase::Done => sig.push('x'),
+            }
+            sig.push(',');
+        }
+        let (free, leases, shared) = self
+            .coord
+            .engine
+            .kv_pool()
+            .map_or((0, 0, 0), |s| {
+                (s.free_blocks, s.active_leases, s.shared_blocks)
+            });
+        let _ = write!(sig, "|{free},{leases},{shared}");
+        sig
+    }
+}
+
+fn is_pool_pressure(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<KvPoolError>().is_some()
+}
+
+/// Exhaustively explore every reachable interleaving of `cfg`'s request
+/// lifecycles up to the configured bounds, auditing the full invariant
+/// stack after every transition. [`SimEngine`] is deterministic, so each
+/// edge is driven by replaying its schedule prefix from scratch — which
+/// is exactly what makes the reported [`Violation::schedule`] replayable
+/// verbatim via [`replay`].
+pub fn explore(cfg: &ModelConfig) -> ExploreReport {
+    let mut report = ExploreReport {
+        name: cfg.name,
+        states: 0,
+        transitions: 0,
+        max_depth_reached: 0,
+        complete: true,
+        violation: None,
+    };
+    let root = World::new(cfg);
+    if let Err(e) = root.audit() {
+        report.violation =
+            Some(Violation { schedule: Vec::new(), message: format!("{e:#}") });
+        return report;
+    }
+    let mut seen: HashSet<String> = HashSet::new();
+    seen.insert(root.signature());
+    report.states = 1;
+    let mut frontier: VecDeque<Vec<Op>> = VecDeque::new();
+    frontier.push_back(Vec::new());
+    while let Some(prefix) = frontier.pop_front() {
+        if prefix.len() >= cfg.max_depth {
+            report.complete = false;
+            continue;
+        }
+        // replay once to enumerate this node's enabled operations
+        let mut node = World::new(cfg);
+        for &op in &prefix {
+            if node.apply(op, cfg).is_err() {
+                // the prefix audited clean when first explored; an error
+                // on re-replay would mean nondeterminism — surface it
+                report.violation = Some(Violation {
+                    schedule: prefix.clone(),
+                    message: "schedule replay diverged (engine \
+                              nondeterminism)"
+                        .into(),
+                });
+                return report;
+            }
+        }
+        for op in node.enabled(cfg) {
+            report.transitions += 1;
+            let mut next = World::new(cfg);
+            for &p in &prefix {
+                let _ = next.apply(p, cfg);
+            }
+            let mut schedule = prefix.clone();
+            schedule.push(op);
+            let advanced = match next.apply(op, cfg) {
+                Ok(advanced) => advanced,
+                Err(e) => {
+                    report.violation = Some(Violation {
+                        schedule,
+                        message: format!("{e:#}"),
+                    });
+                    return report;
+                }
+            };
+            if let Err(e) = next.audit() {
+                report.violation =
+                    Some(Violation { schedule, message: format!("{e:#}") });
+                return report;
+            }
+            if !advanced {
+                continue; // blocked on pool pressure: audited, no new state
+            }
+            if seen.insert(next.signature()) {
+                report.states += 1;
+                report.max_depth_reached =
+                    report.max_depth_reached.max(schedule.len());
+                if report.states >= cfg.max_states {
+                    report.complete = false;
+                    return report;
+                }
+                frontier.push_back(schedule);
+            }
+        }
+    }
+    report
+}
+
+/// Re-drive one schedule against a fresh world, auditing after every
+/// operation — the reproduction command for a reported [`Violation`].
+/// Returns the failing step's index and error, or `Ok` if the schedule
+/// runs clean.
+pub fn replay(cfg: &ModelConfig, schedule: &[Op]) -> Result<()> {
+    let mut w = World::new(cfg);
+    w.audit()?;
+    for (i, &op) in schedule.iter().enumerate() {
+        w.apply(op, cfg)
+            .and_then(|_| w.audit())
+            .map_err(|e| e.context(format!("at step {i}: {op}")))?;
+    }
+    Ok(())
+}
+
+/// The bounded worlds `pi2 check` exhausts, chosen to cover the three
+/// regimes that historically hide lifecycle bugs: plain concurrent
+/// lifecycles, chunked (two-phase) prefill interleaved with decode, and
+/// admission under pool exhaustion.
+pub fn default_suite() -> Vec<ModelConfig> {
+    vec![
+        // three full lifecycles with aborts, ample pool: the pure
+        // interleaving space of admit/step/retire/abort
+        ModelConfig {
+            name: "three-lifecycles",
+            requests: vec![
+                LifecycleSpec::new(3, 2),
+                LifecycleSpec::new(5, 2),
+                LifecycleSpec::new(2, 2),
+            ],
+            pool_blocks: 32,
+            block_tokens: 2,
+            max_batch: 3,
+            chunk: 0,
+            deferred: false,
+            max_depth: 14,
+            max_states: 20_000,
+            fault: SimFault::None,
+        },
+        // two-phase admission: pending prompts advance chunk-by-chunk
+        // while a neighbour decodes — the regime the mid-flight
+        // admission stall fix lives in
+        ModelConfig {
+            name: "chunked-prefill",
+            requests: vec![LifecycleSpec::new(5, 2), LifecycleSpec::new(3, 2)],
+            pool_blocks: 32,
+            block_tokens: 2,
+            max_batch: 2,
+            chunk: 2,
+            deferred: true,
+            max_depth: 12,
+            max_states: 20_000,
+            fault: SimFault::None,
+        },
+        // tight pool: admissions block on typed pool pressure until a
+        // retire frees blocks — the deferral path under exhaustion
+        ModelConfig {
+            name: "pool-exhaustion",
+            requests: vec![
+                LifecycleSpec::new(4, 3),
+                LifecycleSpec::new(4, 3),
+                LifecycleSpec::new(4, 3),
+            ],
+            pool_blocks: 5,
+            block_tokens: 2,
+            max_batch: 3,
+            chunk: 0,
+            deferred: false,
+            max_depth: 12,
+            max_states: 20_000,
+            fault: SimFault::None,
+        },
+    ]
+}
+
+/// A world with a deliberately broken engine
+/// ([`SimFault::LeakLeaseOnRetire`]). [`explore`] must catch the leak
+/// and report a replayable schedule — `pi2 check` fails when it does
+/// not, which is the checker checking itself.
+pub fn leak_self_test() -> ModelConfig {
+    ModelConfig {
+        name: "planted-lease-leak",
+        requests: vec![LifecycleSpec::new(2, 1), LifecycleSpec::new(2, 1)],
+        pool_blocks: 8,
+        block_tokens: 2,
+        max_batch: 2,
+        chunk: 0,
+        deferred: false,
+        max_depth: 6,
+        max_states: 2_000,
+        fault: SimFault::LeakLeaseOnRetire,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_clean() -> ModelConfig {
+        ModelConfig {
+            name: "tiny-clean",
+            requests: vec![LifecycleSpec::new(2, 1), LifecycleSpec::new(3, 1)],
+            pool_blocks: 16,
+            block_tokens: 2,
+            max_batch: 2,
+            chunk: 0,
+            deferred: false,
+            max_depth: 8,
+            max_states: 2_000,
+            fault: SimFault::None,
+        }
+    }
+
+    #[test]
+    fn tiny_clean_world_explores_completely_without_violation() {
+        let cfg = tiny_clean();
+        let rep = explore(&cfg);
+        assert!(rep.violation.is_none(), "{:?}", rep.violation);
+        assert!(rep.complete, "bounds truncated a tiny world");
+        assert!(rep.states > 5, "only {} states reached", rep.states);
+        assert!(rep.transitions >= rep.states - 1);
+        // the all-requests-done state is reachable and replayable
+        let done = [
+            Op::Admit(0),
+            Op::Admit(1),
+            Op::Retire(0),
+            Op::Retire(1),
+        ];
+        replay(&cfg, &done).expect("full completion schedule");
+    }
+
+    #[test]
+    fn chunked_deferred_world_is_clean() {
+        let cfg = ModelConfig {
+            name: "tiny-chunked",
+            requests: vec![LifecycleSpec::new(3, 1), LifecycleSpec::new(2, 1)],
+            chunk: 2,
+            deferred: true,
+            max_depth: 8,
+            ..tiny_clean()
+        };
+        let rep = explore(&cfg);
+        assert!(rep.violation.is_none(), "{:?}", rep.violation);
+        assert!(rep.states > 8, "deferred ops should widen the space");
+    }
+
+    #[test]
+    fn pool_exhaustion_blocks_are_legal_no_ops_not_violations() {
+        let cfg = ModelConfig {
+            name: "tiny-exhaustion",
+            requests: vec![LifecycleSpec::new(4, 2), LifecycleSpec::new(4, 2)],
+            pool_blocks: 4,
+            block_tokens: 2,
+            max_depth: 10,
+            ..tiny_clean()
+        };
+        let rep = explore(&cfg);
+        assert!(rep.violation.is_none(), "{:?}", rep.violation);
+        // blocked admissions are driven (and audited) but dedup to the
+        // same state, so transitions strictly exceed new-state edges
+        assert!(rep.transitions > rep.states - 1);
+    }
+
+    #[test]
+    fn planted_lease_leak_is_caught_with_a_replayable_schedule() {
+        let cfg = leak_self_test();
+        let rep = explore(&cfg);
+        let v = rep.violation.expect("planted leak must be caught");
+        assert!(
+            v.schedule.iter().any(|op| matches!(op, Op::Retire(_))),
+            "leak fires at retire; schedule was: {}",
+            format_schedule(&v.schedule)
+        );
+        // the reported schedule reproduces the violation verbatim
+        let err = replay(&cfg, &v.schedule)
+            .expect_err("violating schedule must replay to a failure");
+        assert!(
+            err.downcast_ref::<crate::kv::InvariantViolation>().is_some()
+                || !v.message.is_empty(),
+            "replayed failure should carry the violation: {err:#}"
+        );
+    }
+
+    #[test]
+    fn schedules_format_replayably() {
+        let s = [Op::AdmitDeferred(0), Op::PrefillChunk(0), Op::Step,
+                 Op::Abort(1)];
+        assert_eq!(
+            format_schedule(&s),
+            "admit_deferred(r0); prefill_chunk(r0); step; abort(r1)"
+        );
+    }
+
+    #[test]
+    fn default_suite_names_are_distinct_and_bounded() {
+        let suite = default_suite();
+        assert_eq!(suite.len(), 3);
+        let names: HashSet<_> = suite.iter().map(|c| c.name).collect();
+        assert_eq!(names.len(), 3);
+        for cfg in &suite {
+            assert!(cfg.max_depth <= 16, "{}: depth bound too deep", cfg.name);
+            assert!(cfg.fault == SimFault::None);
+        }
+    }
+}

@@ -275,6 +275,27 @@ impl<E: Engine> Coordinator<E> {
         self
     }
 
+    /// Audit scheduler-visible engine state, then delegate to the
+    /// engine's own [`Engine::check_invariants`] (slot bookkeeping, KV
+    /// refcounts, free-list completeness). The lifecycle model checker
+    /// (`pi2 check`) calls this after every transition it drives.
+    pub fn check_invariants(&self) -> Result<()> {
+        let st = self.engine.stats();
+        ensure!(
+            st.active <= st.capacity,
+            "stats report {} active slots over a capacity of {}",
+            st.active,
+            st.capacity
+        );
+        ensure!(
+            st.active == self.engine.active(),
+            "stats.active ({}) disagrees with Engine::active() ({})",
+            st.active,
+            self.engine.active()
+        );
+        self.engine.check_invariants()
+    }
+
     /// Serve every request to completion, streaming tokens to `sink`.
     /// Each request is considered submitted `submit_s` seconds after
     /// call time (0 = immediately); it is not admitted before that

@@ -26,7 +26,7 @@ use crate::cache::{Access, MemoryBudget, NeuronCache};
 use crate::config::{
     CoreClass, DeviceConfig, ModelSpec, PipelineMode, RuntimeConfig, XpuMode,
 };
-use crate::kv::{pool_err, KvLease, KvPool, KvPoolStats};
+use crate::kv::{pool_err, violation, KvLease, KvPool, KvPoolStats};
 use crate::metrics::{RunMetrics, StepMetrics};
 use crate::pipeline::{schedule, ClusterTask};
 use crate::planner::{Plan, Planner};
@@ -67,9 +67,26 @@ pub struct SimEngine {
     /// pool pressure) behaves exactly as on the real engine and scheduler
     /// policies stay equivalence-testable against it.
     kv_pool: KvPool,
+    /// Deliberate lifecycle bug injected for checker self-tests
+    /// ([`SimEngine::inject_fault`]); [`SimFault::None`] in real use.
+    fault: SimFault,
     sv_prefill_s: f64,
     sv_decode_s: f64,
     sv_decode_tokens: u64,
+}
+
+/// Deliberately plantable lifecycle bugs, used to prove the invariant
+/// audit and the model checker actually catch the failure classes they
+/// exist for (a checker that has never seen a bug is untested).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimFault {
+    /// No fault: the engine behaves correctly.
+    #[default]
+    None,
+    /// `retire` frees the slot but drops the KV lease without releasing
+    /// it — the classic lease leak: refcounts stay up, blocks never
+    /// return to the free list, and the pool slowly starves.
+    LeakLeaseOnRetire,
 }
 
 /// Per-slot state of an admitted sequence on the simulation engine: a
@@ -148,6 +165,7 @@ impl SimEngine {
             last_batch: 0,
             slots: vec![None; capacity],
             kv_pool,
+            fault: SimFault::default(),
             sv_prefill_s: 0.0,
             sv_decode_s: 0.0,
             sv_decode_tokens: 0,
@@ -156,6 +174,13 @@ impl SimEngine {
 
     pub fn budget(&self) -> &MemoryBudget {
         &self.budget
+    }
+
+    /// Plant a deliberate lifecycle bug (see [`SimFault`]). Exists so the
+    /// invariant audit and the model checker can be tested against an
+    /// engine that is actually broken.
+    pub fn inject_fault(&mut self, fault: SimFault) {
+        self.fault = fault;
     }
 
     pub fn offloading(&self) -> bool {
@@ -683,7 +708,11 @@ impl Engine for SimEngine {
         let pre = self.prefill_run(n, true);
         self.sv_prefill_s += pre.total_s;
         let vocab = self.spec.vocab;
-        let s = self.slots[slot].as_mut().expect("checked above");
+        let Some(s) = self.slots[slot].as_mut() else {
+            // unreachable (pending > 0 implies the slot is occupied), but
+            // a vacant slot is a benign no-op, not a panic
+            return Ok(PrefillProgress::default());
+        };
         s.pending -= n;
         let first_token = if s.pending == 0 {
             // install complete: the prompt's blocks become shareable now
@@ -756,7 +785,12 @@ impl Engine for SimEngine {
             self.slots.len()
         );
         if let Some(s) = self.slots[slot].take() {
-            self.kv_pool.release(s.lease);
+            match self.fault {
+                SimFault::None => self.kv_pool.release(s.lease),
+                // planted bug: the slot empties but the lease is dropped
+                // without releasing its blocks — refcounts stay up forever
+                SimFault::LeakLeaseOnRetire => drop(s.lease),
+            }
         }
         Ok(())
     }
@@ -776,6 +810,48 @@ impl Engine for SimEngine {
 
     fn kv_pool(&self) -> Option<KvPoolStats> {
         Some(self.kv_pool.stats())
+    }
+
+    /// Full slot/pool consistency audit: every live slot's lease is
+    /// handed to [`KvPool::check_invariants`] (refcount = membership,
+    /// free-list completeness), then slot-local state is checked —
+    /// pending/prompt coherence and occupancy arithmetic.
+    fn check_invariants(&self) -> Result<()> {
+        self.kv_pool
+            .check_invariants(self.slots.iter().flatten().map(|s| &s.lease))?;
+        for (i, s) in self.slots.iter().enumerate() {
+            let Some(s) = s else { continue };
+            if s.pending > 0 {
+                if s.prompt.is_empty() {
+                    return Err(violation(format!(
+                        "slot {i}: {} prompt tokens pending but the prompt \
+                         buffer is empty",
+                        s.pending
+                    )));
+                }
+                if s.pending > s.prompt.len() {
+                    return Err(violation(format!(
+                        "slot {i}: pending {} exceeds prompt length {}",
+                        s.pending,
+                        s.prompt.len()
+                    )));
+                }
+            } else if !s.prompt.is_empty() {
+                return Err(violation(format!(
+                    "slot {i}: prefill complete but {} prompt tokens were \
+                     never drained",
+                    s.prompt.len()
+                )));
+            }
+        }
+        let active = self.active();
+        let leases = self.kv_pool.stats().active_leases;
+        if active != leases {
+            return Err(violation(format!(
+                "occupied slots ({active}) != active_leases ({leases})"
+            )));
+        }
+        Ok(())
     }
 }
 
@@ -1095,6 +1171,44 @@ mod tests {
         );
         // the slot is immediately reusable
         assert!(e.admit(&InferenceRequest::new(1, vec![5], 2)).is_ok());
+    }
+
+    #[test]
+    fn invariants_hold_through_a_lifecycle_and_catch_a_planted_leak() {
+        use crate::serve::InferenceRequest;
+        let cfg = RuntimeConfig {
+            max_batch: 2,
+            kv_block_tokens: 4,
+            kv_pool_blocks: 16,
+            ..Default::default()
+        };
+        // clean engine: invariants hold after every lifecycle transition
+        let mut e = SimEngine::new(oneplus_12(), bamboo_7b(), cfg.clone());
+        e.check_invariants().unwrap();
+        let a = e
+            .admit_deferred(&InferenceRequest::new(0, (0..6).collect(), 3))
+            .unwrap();
+        e.check_invariants().unwrap();
+        while e.prefill_chunk(a.slot, 2).unwrap().first_token.is_none() {
+            e.check_invariants().unwrap();
+        }
+        e.check_invariants().unwrap();
+        e.step().unwrap();
+        e.check_invariants().unwrap();
+        e.retire(a.slot).unwrap();
+        e.check_invariants().unwrap();
+
+        // faulty engine: the planted lease leak trips the audit at retire
+        let mut f = SimEngine::new(oneplus_12(), bamboo_7b(), cfg);
+        f.inject_fault(SimFault::LeakLeaseOnRetire);
+        let a = f.admit(&InferenceRequest::new(1, vec![1, 2, 3], 2)).unwrap();
+        f.check_invariants().unwrap(); // fault is latent until retire
+        f.retire(a.slot).unwrap();
+        let err = f.check_invariants().unwrap_err();
+        assert!(
+            err.downcast_ref::<crate::kv::InvariantViolation>().is_some(),
+            "leak must surface as a typed InvariantViolation: {err}"
+        );
     }
 
     #[test]

@@ -28,7 +28,7 @@ use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::cache::{Access, NeuronCache};
 use crate::config::CoreClass;
-use crate::kv::{pool_err, KvLease, KvPool, KvPoolStats};
+use crate::kv::{pool_err, violation, KvLease, KvPool, KvPoolStats};
 use crate::metrics::{RunMetrics, StepMetrics};
 use crate::model::{ModelDims, Predictor, WeightFile, Weights};
 use crate::runtime::{Runtime, Tensor, TensorData};
@@ -853,7 +853,16 @@ impl RealEngine {
         self.lease_row(row, &prompt, 0)?;
         self.pending[row] = Some(PendingPrefill { prompt, installed: 0 });
         let first = match self.advance_prefill(row, usize::MAX) {
-            Ok(p) => p.first_token.expect("unbounded budget completes"),
+            Ok(PrefillProgress { first_token: Some(t), .. }) => t,
+            Ok(_) => {
+                // an unbounded budget must install the whole prompt; a
+                // missing first token is an engine bug, reported as a
+                // typed error — never a panic on the serving path
+                self.release_lease(row);
+                return Err(anyhow!(
+                    "prefill returned no first token for an unbounded budget"
+                ));
+            }
             Err(e) => {
                 // do not leak the lease on a failed prefill: an orphan
                 // would hold (and keep growing) pool blocks on a row the
@@ -1281,9 +1290,7 @@ impl Engine for RealEngine {
             self.slot_demand[row] = demand;
             self.pending[row] = Some(PendingPrefill { prompt, installed: 0 });
             match self.advance_prefill(row, usize::MAX) {
-                Ok(p) => {
-                    let first =
-                        p.first_token.expect("unbounded budget completes");
+                Ok(PrefillProgress { first_token: Some(first), .. }) => {
                     self.serve_slots[row] = Some(first);
                     let lease = self.leases[row].as_ref().map(|l| l.info());
                     out.push(Admission {
@@ -1291,6 +1298,13 @@ impl Engine for RealEngine {
                         first_token: Some(first),
                         lease,
                     });
+                }
+                Ok(_) => {
+                    fail = Some(anyhow!(
+                        "prefill returned no first token for an unbounded \
+                         budget"
+                    ));
+                    break;
                 }
                 Err(e) => {
                     fail = Some(e);
@@ -1381,6 +1395,51 @@ impl Engine for RealEngine {
 
     fn kv_pool(&self) -> Option<KvPoolStats> {
         Some(self.pool.stats())
+    }
+
+    /// Row-bookkeeping audit against the pool: every held lease is
+    /// checked by [`KvPool::check_invariants`], then the per-row serving
+    /// state machine — an occupied row holds a lease, a pending prefill
+    /// excludes a decoded first token, and row positions never run past
+    /// the lease. Direct-use rows (bare `prefill`, Best-of-N) hold a
+    /// lease without serving state; that is legal and left alone.
+    fn check_invariants(&self) -> Result<()> {
+        self.pool.check_invariants(self.leases.iter().flatten())?;
+        for row in 0..self.batch {
+            match &self.leases[row] {
+                Some(l) => {
+                    if self.row_pos[row] > l.len() {
+                        return Err(violation(format!(
+                            "row {row}: position {} past lease length {}",
+                            self.row_pos[row],
+                            l.len()
+                        )));
+                    }
+                }
+                None => {
+                    if self.row_occupied(row) {
+                        return Err(violation(format!(
+                            "row {row}: occupied by the serve loop but \
+                             holds no lease"
+                        )));
+                    }
+                    if self.row_pos[row] != 0 || self.slot_demand[row] != 0 {
+                        return Err(violation(format!(
+                            "row {row}: vacant but position {} / demand {} \
+                             not reclaimed",
+                            self.row_pos[row], self.slot_demand[row]
+                        )));
+                    }
+                }
+            }
+            if self.pending[row].is_some() && self.serve_slots[row].is_some() {
+                return Err(violation(format!(
+                    "row {row}: pending prefill coexists with a decoded \
+                     first token"
+                )));
+            }
+        }
+        Ok(())
     }
 }
 

@@ -5,7 +5,13 @@
 //! Inference on a Smartphone" (Xue et al., 2024). See DESIGN.md for the
 //! system inventory and EXPERIMENTS.md for paper-vs-measured results.
 
+// `unsafe` is banned crate-wide; the single exception is the O_DIRECT
+// read path in `storage::flash_file`, which carries a scoped, documented
+// `#[allow(unsafe_code)]`. `pi2 check` enforces the same rule textually.
+#![deny(unsafe_code)]
+
 pub mod cache;
+pub mod check;
 pub mod config;
 pub mod coordinator;
 pub mod kv;

@@ -5,6 +5,7 @@
 //!   experiment  regenerate a paper table/figure (`all` for the suite)
 //!   simulate    run a decode/prefill simulation with explicit knobs
 //!   graphs      list the compiled NPU graph table from artifacts/
+//!   check       repo lint rules + lifecycle model checker (CI gate)
 
 use std::path::Path;
 
@@ -27,6 +28,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "graphs" => cmd_graphs(&args),
         "serve" => cmd_serve(&args),
+        "check" => cmd_check(&args),
         "help" | "--help" | "-h" => {
             print_help();
             0
@@ -51,6 +53,11 @@ USAGE:
                 [--batch B] [--prompt P] [--offload F] [--mem GB]
                 [--config file.json]
   pi2 graphs    [--artifacts DIR]         list compiled NPU graphs
+  pi2 check     [--src DIR] [--lint-only] [--model-only]
+                repo-specific lint rules over first-party sources
+                (hot-path unwrap ban, unsafe allowlist, KV encapsulation,
+                typed pool errors) plus the bounded exhaustive lifecycle
+                model checker; non-zero exit on any diagnostic
   pi2 serve     [--addr HOST:PORT] [--engine real|sim] [--artifacts DIR]
                 [--mode continuous|lockstep] [--slots N] [--device D]
                 [--model M] [--throttle] [--kv-blocks N]
@@ -278,6 +285,112 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     }
     0
+}
+
+/// `pi2 check`: the repo's own verification gate — the static lint pass
+/// over first-party sources, then the bounded exhaustive lifecycle model
+/// checker (including its planted-bug self-test). Exit 0 only when every
+/// layer is clean.
+fn cmd_check(args: &Args) -> i32 {
+    use powerinfer2::check::{lint, model};
+
+    let lint_only = args.flag("lint-only");
+    let model_only = args.flag("model-only");
+    let mut failed = false;
+
+    if !model_only {
+        // prefer the in-repo source tree relative to the invocation
+        // directory; fall back to the compile-time manifest path (useful
+        // when the binary runs from target/)
+        let src_root = match args.opt("src") {
+            Some(dir) => std::path::PathBuf::from(dir),
+            None => ["rust/src", "src"]
+                .iter()
+                .map(std::path::PathBuf::from)
+                .find(|p| p.is_dir())
+                .unwrap_or_else(lint::default_src_root),
+        };
+        println!("== pi2 lint: {} ==", src_root.display());
+        match lint::lint_tree(&src_root) {
+            Ok(report) => {
+                for d in &report.diagnostics {
+                    println!("{d}");
+                }
+                if report.is_clean() {
+                    println!(
+                        "lint clean: {} files, {} lines",
+                        report.files, report.lines
+                    );
+                } else {
+                    println!(
+                        "lint FAILED: {} diagnostic(s) across {} files",
+                        report.diagnostics.len(),
+                        report.files
+                    );
+                    failed = true;
+                }
+            }
+            Err(e) => {
+                eprintln!("lint could not run: {e:#}");
+                return 2;
+            }
+        }
+    }
+
+    if !lint_only {
+        println!("== pi2 model check: request-lifecycle interleavings ==");
+        for cfg in model::default_suite() {
+            let rep = model::explore(&cfg);
+            match &rep.violation {
+                None => {
+                    println!(
+                        "  {}: {} states, {} transitions audited, depth {} \
+                         ({})",
+                        rep.name,
+                        rep.states,
+                        rep.transitions,
+                        rep.max_depth_reached,
+                        if rep.complete { "exhaustive" } else { "bounded" }
+                    );
+                }
+                Some(v) => {
+                    println!("  {}: INVARIANT VIOLATION", rep.name);
+                    println!("    {}", v.message);
+                    println!("    replay: {}", model::format_schedule(&v.schedule));
+                    failed = true;
+                }
+            }
+        }
+        // the checker checking itself: a planted lease leak MUST be
+        // caught with a replayable schedule, else the model checker is
+        // giving false assurance and the gate fails
+        let self_test = model::leak_self_test();
+        match model::explore(&self_test).violation {
+            Some(v) => {
+                println!(
+                    "  {}: planted bug caught (replay: {})",
+                    self_test.name,
+                    model::format_schedule(&v.schedule)
+                );
+            }
+            None => {
+                println!(
+                    "  {}: planted lease leak was NOT caught — the model \
+                     checker is broken",
+                    self_test.name
+                );
+                failed = true;
+            }
+        }
+    }
+
+    if failed {
+        println!("pi2 check: FAILED");
+        1
+    } else {
+        println!("pi2 check: ok");
+        0
+    }
 }
 
 fn cmd_graphs(args: &Args) -> i32 {

@@ -379,6 +379,17 @@ pub trait Engine {
     fn kv_pool(&self) -> Option<KvPoolStats> {
         None
     }
+
+    /// Machine-checkable audit of the engine's internal consistency:
+    /// slot bookkeeping against KV pool state (refcounts, free list,
+    /// lease shapes — see [`crate::kv::KvPool::check_invariants`]).
+    /// The lifecycle model checker (`pi2 check`) calls this after every
+    /// transition; engines without internal state to audit (the
+    /// default) report clean. Failures are typed
+    /// [`crate::kv::InvariantViolation`]s.
+    fn check_invariants(&self) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// Forwarding impl so a backend can be chosen at runtime
@@ -434,6 +445,10 @@ impl<E: Engine + ?Sized> Engine for Box<E> {
 
     fn kv_pool(&self) -> Option<KvPoolStats> {
         (**self).kv_pool()
+    }
+
+    fn check_invariants(&self) -> Result<()> {
+        (**self).check_invariants()
     }
 }
 

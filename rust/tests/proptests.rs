@@ -220,3 +220,71 @@ fn prop_sim_deterministic() {
         assert_eq!(a.metrics.cache_misses, b.metrics.cache_misses, "seed {seed}");
     }
 }
+
+/// KV pool churn: the full bookkeeping audit (`check_invariants`) holds
+/// after EVERY operation across a randomized mix of admissions (eager
+/// and deferred-publish), appends, failed-step rollbacks, forks, and
+/// releases — the same audit the `pi2 check` model checker asserts
+/// after every lifecycle transition.
+#[test]
+fn prop_kv_pool_lifecycle_invariants() {
+    use powerinfer2::kv::KvPool;
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x2b5);
+        let blocks = rng.range(8, 48);
+        let block_tokens = rng.range(1, 5);
+        let mut p = KvPool::new(blocks, block_tokens, 0);
+        let mut live = Vec::new();
+        for step in 0..400 {
+            match rng.below(6) {
+                0 | 1 => {
+                    // small token alphabet so prefixes actually collide
+                    // and the sharing index gets exercised
+                    let len = 1 + rng.below(3 * block_tokens);
+                    let prompt: Vec<u32> =
+                        (0..len).map(|_| rng.below(3) as u32).collect();
+                    if rng.bool(0.3) {
+                        if let Ok(l) = p.admit_unpublished(&prompt, 0) {
+                            if rng.bool(0.5) {
+                                p.publish(&l, &prompt);
+                            }
+                            live.push(l);
+                        }
+                    } else if let Ok(l) = p.admit(&prompt, 0) {
+                        live.push(l);
+                    }
+                }
+                2 | 3 if !live.is_empty() => {
+                    let i = rng.below(live.len());
+                    if p.append(&mut live[i]).is_ok() && rng.bool(0.25) {
+                        // decode step "failed": roll the append back
+                        p.unappend(&mut live[i]);
+                    }
+                }
+                4 if !live.is_empty() => {
+                    let i = rng.below(live.len());
+                    let f = p.fork(&live[i]);
+                    live.push(f);
+                }
+                5 if !live.is_empty() => {
+                    let i = rng.below(live.len());
+                    let l = live.swap_remove(i);
+                    p.release(l);
+                }
+                _ => {}
+            }
+            if let Err(e) = p.check_invariants(&live) {
+                panic!("seed {seed} step {step}: {e}");
+            }
+            assert_eq!(
+                p.stats().active_leases,
+                live.len(),
+                "seed {seed} step {step}"
+            );
+        }
+        for l in live {
+            p.release(l);
+        }
+        assert_eq!(p.free_blocks(), blocks, "seed {seed}");
+    }
+}

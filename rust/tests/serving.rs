@@ -250,6 +250,7 @@ fn paged_pool_smaller_than_dense_equivalent_matches_solo_streams() {
         );
     }
     assert_eq!(c.engine.kv_pool().unwrap().free_blocks, 6, "pool leak");
+    c.check_invariants().unwrap();
 }
 
 #[test]
@@ -421,6 +422,8 @@ fn serve_abort_with_pending_prefill_drains_cleanly() {
         pool.free_blocks, pool.total_blocks,
         "aborted serve leaked KV blocks of a pending prefill"
     );
+    // the full bookkeeping audit, not just the block count
+    c.check_invariants().unwrap();
 }
 
 #[test]
@@ -447,6 +450,7 @@ fn pool_pressure_deferral_works_with_chunked_prefill() {
     assert!(report.kv_admission_stalls > 0, "pool pressure never deferred");
     assert!(report.deferred_admissions > 0, "no two-phase admission");
     assert_eq!(c.engine.kv_pool().unwrap().free_blocks, 6, "leaked blocks");
+    c.check_invariants().unwrap();
 }
 
 #[test]
