@@ -19,6 +19,7 @@ use powerinfer2::coordinator::{Coordinator, ScheduleMode};
 use powerinfer2::engine::SimEngine;
 use powerinfer2::serve::{Engine, InferenceRequest};
 use powerinfer2::trace::{mixed_length_mix, with_poisson_arrivals, Request, TaskKind};
+use powerinfer2::util::json::{arr, num, obj, s, Json};
 
 fn main() {
     println!("# bench: serving scheduler (sim engine, mixed-length trace)");
@@ -125,4 +126,60 @@ fn main() {
             pool.share_rate() * 100.0,
         );
     }
+
+    // offload streaming: cluster-granular cold-FFN residency at capped
+    // resident budgets (64 and 512 clusters, well below the full FFN)
+    // vs the per-neuron bundle baseline. The policy is exact — token
+    // streams are identical — so what moves between scenarios is the
+    // residency and I/O arithmetic the JSON below records.
+    println!("# bench: offload streaming (cluster residency budgets)");
+    let mut scenarios = Vec::new();
+    for (label, streaming, resident) in
+        [("off", false, 0usize), ("on-64", true, 64), ("on-512", true, 512)]
+    {
+        let cfg = RuntimeConfig {
+            max_batch: 4,
+            offload_streaming: streaming,
+            offload_resident_clusters: resident,
+            ..Default::default()
+        };
+        let engine = SimEngine::new(oneplus_12(), bamboo_7b(), cfg);
+        let mut coord = Coordinator::new(engine);
+        let mut report = coord.serve_collect(&requests).unwrap();
+        let ttft = &mut report.serving.ttft_ms;
+        let (t50, t99) = (ttft.percentile(50.0), ttft.percentile(99.0));
+        let itl = &mut report.serving.itl_ms;
+        let (i50, i99) = (itl.percentile(50.0), itl.percentile(99.0));
+        println!(
+            "offload {label:>6}: {:>7.1} tok/s  TTFT p50 {t50:>6.1}ms \
+             p99 {t99:>6.1}ms  ITL p50 {i50:>5.1}ms p99 {i99:>5.1}ms  \
+             hit {:>5.1}%  {:>7.1} MB streamed",
+            report.decode_tps(),
+            report.offload_cache_hit_rate * 100.0,
+            report.offload_bytes_streamed as f64 / 1e6,
+        );
+        scenarios.push(obj(vec![
+            ("scenario", s(label)),
+            ("offload_streaming", Json::Bool(streaming)),
+            ("resident_clusters", num(resident as f64)),
+            ("decode_tps", num(report.decode_tps())),
+            ("ttft_ms_p50", num(t50)),
+            ("ttft_ms_p99", num(t99)),
+            ("itl_ms_p50", num(i50)),
+            ("itl_ms_p99", num(i99)),
+            ("cache_hit_rate", num(report.offload_cache_hit_rate)),
+            ("bytes_streamed", num(report.offload_bytes_streamed as f64)),
+            ("overlap_ratio", num(report.offload_overlap_ratio)),
+            ("stall_s", num(report.offload_stall_s)),
+        ]));
+    }
+    let out = obj(vec![
+        ("bench", s("decode_offload")),
+        ("engine", s("sim")),
+        ("model", s("bamboo-7b")),
+        ("device", s("oneplus12")),
+        ("scenarios", arr(scenarios)),
+    ]);
+    std::fs::write("BENCH_decode_offload.json", format!("{out}\n")).unwrap();
+    println!("wrote BENCH_decode_offload.json");
 }

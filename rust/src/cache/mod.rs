@@ -388,6 +388,105 @@ mod tests {
         assert_eq!(c.cold.capacity(), 80);
     }
 
+    /// Shadow-model transition for one touch of `id`: move-to-front on a
+    /// resident, else push-front (within `cap`), checking the reported
+    /// eviction came from the shadow's LRU end.
+    fn shadow_touch(shadow: &mut Vec<u32>, id: u32, cap: usize,
+                    evicted: Option<u32>, seed: u64) {
+        if let Some(pos) = shadow.iter().position(|&x| x == id) {
+            shadow.remove(pos);
+            shadow.insert(0, id);
+            assert_eq!(evicted, None, "seed {seed}: eviction on a hit");
+            return;
+        }
+        if cap == 0 {
+            assert_eq!(evicted, None, "seed {seed}: eviction at capacity 0");
+            return;
+        }
+        if shadow.len() >= cap {
+            let lru_end = shadow.pop();
+            assert_eq!(
+                evicted, lru_end,
+                "seed {seed}: eviction not from the LRU end"
+            );
+        } else {
+            assert_eq!(evicted, None, "seed {seed}: spurious eviction");
+        }
+        shadow.insert(0, id);
+    }
+
+    #[test]
+    fn randomized_ops_match_a_shadow_recency_model() {
+        // seeded property test: drive access/insert/resize against a
+        // naive Vec shadow (MRU at the front). Invariants after every
+        // op: length never exceeds capacity, evictions come from the
+        // LRU end oldest-first, and iter_mru reproduces the shadow's
+        // exact recency order.
+        use crate::util::prng::Rng;
+        const UNIVERSE: usize = 96;
+        for seed in 0..8u64 {
+            let mut rng = Rng::new(0xC0FFEE ^ seed);
+            let mut lru = NeuronLru::new(UNIVERSE, 16);
+            let mut shadow: Vec<u32> = Vec::new(); // MRU first
+            let mut cap = 16usize;
+            for _ in 0..4000 {
+                match rng.below(8) {
+                    0 => {
+                        cap = rng.below(25);
+                        let evicted = lru.resize(cap);
+                        let mut want = Vec::new();
+                        while shadow.len() > cap {
+                            let Some(v) = shadow.pop() else { break };
+                            want.push(v);
+                        }
+                        assert_eq!(evicted, want, "seed {seed}: resize");
+                        assert_eq!(lru.capacity(), cap);
+                    }
+                    1 => {
+                        let id = rng.below(UNIVERSE) as u32;
+                        let evicted = lru.insert(id);
+                        shadow_touch(&mut shadow, id, cap, evicted, seed);
+                    }
+                    _ => {
+                        let id = rng.below(UNIVERSE) as u32;
+                        let was_resident = shadow.contains(&id);
+                        let evicted = match lru.access(id) {
+                            Access::Hit => {
+                                assert!(
+                                    was_resident,
+                                    "seed {seed}: phantom hit on {id}"
+                                );
+                                None
+                            }
+                            Access::Miss { evicted } => {
+                                assert!(
+                                    !was_resident,
+                                    "seed {seed}: missed resident {id}"
+                                );
+                                evicted
+                            }
+                        };
+                        shadow_touch(&mut shadow, id, cap, evicted, seed);
+                    }
+                }
+                assert!(lru.len() <= cap, "seed {seed}: over capacity");
+                assert_eq!(
+                    lru.len(),
+                    shadow.len(),
+                    "seed {seed}: length drift"
+                );
+                assert_eq!(
+                    lru.iter_mru().collect::<Vec<_>>(),
+                    shadow,
+                    "seed {seed}: recency order drift"
+                );
+                for &id in &shadow {
+                    assert!(lru.contains(id), "seed {seed}: lost {id}");
+                }
+            }
+        }
+    }
+
     #[test]
     fn stress_random_accesses_maintain_invariants() {
         use crate::util::prng::Rng;

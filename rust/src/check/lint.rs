@@ -7,7 +7,8 @@
 //! clippy cannot express:
 //!
 //! - **hot-path-unwrap** — no `.unwrap()` / `.expect(` in the serving
-//!   hot-path modules (`coordinator/`, `engine/`, `kv/`, `serve/`)
+//!   hot-path modules (`cache/`, `coordinator/`, `engine/`, `kv/`,
+//!   `offload/`, `pipeline/`, `serve/`, `storage/`)
 //!   outside `#[cfg(test)]`. A panic there tears down a serving thread
 //!   mid-request; fallible paths must return `Result`. Justified
 //!   exceptions carry an inline `// pi2-lint: allow(hot-path-unwrap):
@@ -41,8 +42,20 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-/// Modules where a panic is a serving incident, not a bug report.
-const HOT_PATH_DIRS: [&str; 4] = ["coordinator/", "engine/", "kv/", "serve/"];
+/// Modules where a panic is a serving incident, not a bug report. The
+/// offload subsystem pulled `cache/`, `pipeline/`, and `storage/` onto
+/// the per-step serving path, so they live under the same discipline as
+/// the engines that call them.
+const HOT_PATH_DIRS: [&str; 8] = [
+    "cache/",
+    "coordinator/",
+    "engine/",
+    "kv/",
+    "offload/",
+    "pipeline/",
+    "serve/",
+    "storage/",
+];
 
 /// Files allowed to contain `unsafe` (each entry is a reviewed,
 /// documented site — currently only the positioned-read syscall).

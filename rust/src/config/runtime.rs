@@ -69,6 +69,17 @@ pub struct RuntimeConfig {
     /// inside `admit` and stalls every in-flight decode for its full
     /// duration. CLI: `pi2 serve --prefill-chunk N`.
     pub prefill_chunk: usize,
+    /// Cluster-granular offload streaming (the `offload::OffloadPolicy`
+    /// path): cold-FFN residency and I/O are planned per *cluster record*
+    /// instead of per neuron bundle. CLI: `pi2 serve --offload-stream`.
+    pub offload_streaming: bool,
+    /// Cold-cluster resident budget in clusters across all layers
+    /// (0 = derive from the memory budget's FFN cache size).
+    pub offload_resident_clusters: usize,
+    /// Dense/sparse routing threshold: a cluster with at least this
+    /// fraction of its neurons predicted active rides the NPU path
+    /// (§4.1.2); below it, the CPU gather path.
+    pub offload_dense_threshold: f64,
 }
 
 impl Default for RuntimeConfig {
@@ -91,6 +102,9 @@ impl Default for RuntimeConfig {
             kv_block_tokens: 16,
             kv_pool_blocks: 0,
             prefill_chunk: 0,
+            offload_streaming: false,
+            offload_resident_clusters: 0,
+            offload_dense_threshold: 0.5,
         }
     }
 }
@@ -187,6 +201,15 @@ impl RuntimeConfig {
         if let Some(v) = j.get("prefill_chunk").as_usize() {
             self.prefill_chunk = v;
         }
+        if let Some(v) = j.get("offload_streaming").as_bool() {
+            self.offload_streaming = v;
+        }
+        if let Some(v) = j.get("offload_resident_clusters").as_usize() {
+            self.offload_resident_clusters = v;
+        }
+        if let Some(v) = j.get("offload_dense_threshold").as_f64() {
+            self.offload_dense_threshold = v;
+        }
         if let Some(v) = j.get("bundling").as_bool() {
             self.bundling = v;
         }
@@ -257,7 +280,9 @@ mod tests {
             r#"{"offload_ffn_frac": 0.75, "pipeline": "matrix",
                 "xpu": "cpu", "max_batch": 2, "bundling": false,
                 "kv_block_tokens": 8, "kv_pool_blocks": 40,
-                "prefill_chunk": 24}"#,
+                "prefill_chunk": 24, "offload_streaming": true,
+                "offload_resident_clusters": 96,
+                "offload_dense_threshold": 0.25}"#,
         )
         .unwrap();
         c.apply_json(&j);
@@ -269,5 +294,8 @@ mod tests {
         assert_eq!(c.kv_block_tokens, 8);
         assert_eq!(c.kv_pool_blocks, 40);
         assert_eq!(c.prefill_chunk, 24);
+        assert!(c.offload_streaming);
+        assert_eq!(c.offload_resident_clusters, 96);
+        assert!((c.offload_dense_threshold - 0.25).abs() < 1e-12);
     }
 }

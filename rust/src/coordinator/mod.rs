@@ -41,8 +41,8 @@ use crate::kv::KvPoolError;
 use crate::metrics::ServingMetrics;
 use crate::model::ModelDims;
 use crate::serve::{
-    Engine, FinishReason, InferenceRequest, NullSink, RequestMetrics, Session,
-    SlotId, TokenEvent, TokenSink,
+    Engine, EngineStats, FinishReason, InferenceRequest, NullSink,
+    RequestMetrics, Session, SlotId, TokenEvent, TokenSink,
 };
 use crate::util::stats::Samples;
 
@@ -112,6 +112,15 @@ pub struct ServeReport {
     /// Bounded prefill-chunk calls the continuous scheduler interleaved
     /// with decode steps.
     pub prefill_chunks: usize,
+    /// Cluster-residency hit rate of the offload streaming path over
+    /// this serve call (0.0 when the engine serves without offload).
+    pub offload_cache_hit_rate: f64,
+    /// Cluster-record bytes streamed from flash during this serve call.
+    pub offload_bytes_streamed: u64,
+    /// Fraction of this call's cluster I/O hidden behind compute.
+    pub offload_overlap_ratio: f64,
+    /// Exposed cluster-I/O stall time (engine seconds) this call.
+    pub offload_stall_s: f64,
 }
 
 impl ServeReport {
@@ -223,6 +232,31 @@ fn record_itl(seq: &mut ActiveSeq, now_clock: f64, serving: &mut ServingMetrics)
         serving.itl_ms.push((now_clock - prev).max(0.0) * 1e3);
     }
     seq.last_tok_clock = Some(now_clock);
+}
+
+/// Offload-path deltas between a serve call's start/end stats snapshots
+/// (engine counters are lifetime-cumulative; the report carries only
+/// this call's share).
+fn fill_offload_report(
+    report: &mut ServeReport,
+    s0: &EngineStats,
+    s1: &EngineStats,
+) {
+    let hits = s1.offload_cluster_hits - s0.offload_cluster_hits;
+    let misses = s1.offload_cluster_misses - s0.offload_cluster_misses;
+    report.offload_cache_hit_rate = if hits + misses == 0 {
+        0.0
+    } else {
+        hits as f64 / (hits + misses) as f64
+    };
+    report.offload_bytes_streamed =
+        s1.offload_bytes_streamed - s0.offload_bytes_streamed;
+    let io = s1.offload_io_s - s0.offload_io_s;
+    let hidden = s1.offload_io_hidden_s - s0.offload_io_hidden_s;
+    report.offload_overlap_ratio =
+        if io <= 0.0 { 0.0 } else { (hidden / io).clamp(0.0, 1.0) };
+    report.offload_stall_s =
+        (s1.offload_stall_s - s0.offload_stall_s).max(0.0);
 }
 
 fn close_session(report: &mut ServeReport, seq: ActiveSeq, finish: FinishReason) {
@@ -554,6 +588,7 @@ impl<E: Engine> Coordinator<E> {
         let s1 = self.engine.stats();
         report.prefill_s = s1.prefill_s - s0.prefill_s;
         report.decode_s = s1.decode_s - s0.decode_s;
+        fill_offload_report(&mut report, &s0, &s1);
         report.wall_s = t0.elapsed().as_secs_f64();
         Ok(report)
     }
@@ -686,6 +721,7 @@ impl<E: Engine> Coordinator<E> {
         let s1 = self.engine.stats();
         report.prefill_s = s1.prefill_s - s0.prefill_s;
         report.decode_s = s1.decode_s - s0.decode_s;
+        fill_offload_report(&mut report, &s0, &s1);
         report.wall_s = t0.elapsed().as_secs_f64();
         Ok(report)
     }

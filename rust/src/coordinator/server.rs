@@ -314,6 +314,25 @@ impl<E: Engine> Server<E> {
             ("ttft_ms", pct(&mut self.serving.ttft_ms)),
             ("itl_ms", itl),
         ];
+        // cluster-offload streaming counters (engines serving with the
+        // offload policy; absent otherwise so old clients see no change)
+        if engine.offload_cluster_hits + engine.offload_cluster_misses > 0 {
+            fields.push((
+                "offload",
+                json::obj(vec![
+                    ("cluster_hit_rate", json::num(engine.offload_hit_rate())),
+                    (
+                        "bytes_streamed",
+                        json::num(engine.offload_bytes_streamed as f64),
+                    ),
+                    (
+                        "io_overlap_ratio",
+                        json::num(engine.offload_overlap_ratio()),
+                    ),
+                    ("io_stall_s", json::num(engine.offload_stall_s)),
+                ]),
+            ));
+        }
         // paged-KV pool occupancy / prefix-share rate / allocation stalls
         if let Some(p) = self.coord.engine.kv_pool() {
             fields.push((

@@ -20,6 +20,8 @@ pub mod prefill;
 pub mod real;
 pub mod speculative;
 
+use std::collections::{BTreeMap, BTreeSet};
+
 use anyhow::{anyhow, ensure, Result};
 
 use crate::cache::{Access, MemoryBudget, NeuronCache};
@@ -28,6 +30,7 @@ use crate::config::{
 };
 use crate::kv::{pool_err, violation, KvLease, KvPool, KvPoolStats};
 use crate::metrics::{RunMetrics, StepMetrics};
+use crate::offload::{OffloadConfig, OffloadPolicy};
 use crate::pipeline::{schedule, ClusterTask};
 use crate::planner::{Plan, Planner};
 use crate::serve::{
@@ -50,6 +53,10 @@ pub struct SimEngine {
     ufs: UfsModel,
     cache: NeuronCache,
     budget: MemoryBudget,
+    /// Cluster-granular offload mirror (`cfg.offload_streaming`): the
+    /// same [`OffloadPolicy`] code the real engine drives, so hit/miss
+    /// and I/O-cost arithmetic are equivalence-testable without PJRT.
+    offload: Option<OffloadPolicy>,
     rng: Rng,
     pub metrics: RunMetrics,
     /// ids scratch to avoid per-step allocation
@@ -137,6 +144,30 @@ impl SimEngine {
             hot_n,
             if cfg.neuron_cache { cold_cap } else { 0 },
         );
+        // Cluster-granular offload mirror: residency planned per record
+        // (cluster_neurons bundles) with the same hot-prefix / cold-LRU
+        // split as the neuron cache above. The identity layout applies:
+        // the sim's neuron ids are already temperature-ordered, matching
+        // the packed cluster file's ordering.
+        let offload = if cfg.offload_streaming {
+            let cn = cfg.cluster_neurons.max(1);
+            let resident = if cfg.offload_resident_clusters > 0 {
+                cfg.offload_resident_clusters
+            } else {
+                cold_cap / cn
+            };
+            Some(OffloadPolicy::new(OffloadConfig {
+                layers: spec.layers,
+                clusters_per_layer: neurons.div_ceil(cn),
+                cluster_neurons: cn,
+                hot_clusters: hot_n / cn,
+                resident_clusters: resident,
+                dense_threshold: cfg.offload_dense_threshold,
+                record_bytes: cn as u64 * spec.bundle_aligned_bytes(),
+            }))
+        } else {
+            None
+        };
         let xpu = XpuModel::new(dev.clone());
         let ufs = UfsModel::new(dev.ufs.clone());
         let rng = Rng::new(cfg.seed.wrapping_mul(0x9E37_79B9));
@@ -157,6 +188,7 @@ impl SimEngine {
             ufs,
             cache,
             budget,
+            offload,
             rng,
             metrics: RunMetrics::new(),
             scratch_ids: Vec::new(),
@@ -379,18 +411,47 @@ impl SimEngine {
                     ((neurons as usize - hot_n_usize) as f64 * expert_frac) as u64
                 };
 
-                // cache lookups for neurons whose weights we need
+                // cache lookups for neurons whose weights we need; with
+                // offload streaming the residency unit is the cluster
+                // record, not the neuron bundle
                 let mut misses = 0u64;
+                let mut offload_active: Option<(Vec<(u32, usize)>, BTreeSet<u32>)> =
+                    None;
                 if offloading {
                     let resident_frac = self.budget.resident_ffn_frac();
                     let ids: Vec<u32> = self.scratch_ids.clone();
                     if cfg.predictor {
-                        for &id in &ids {
-                            match self.cache.access(layer, id as usize) {
-                                Access::Hit => step.cache_hits += 1,
-                                Access::Miss { .. } => {
-                                    step.cache_misses += 1;
-                                    misses += 1;
+                        if let Some(pol) = self.offload.as_mut() {
+                            let cn = pol.config().cluster_neurons.max(1) as u32;
+                            let mut counts: BTreeMap<u32, usize> = BTreeMap::new();
+                            for &id in &ids {
+                                *counts.entry(id / cn).or_insert(0) += 1;
+                            }
+                            let active: Vec<(u32, usize)> =
+                                counts.into_iter().collect();
+                            let plan =
+                                pol.plan_layer(layer, active.iter().copied());
+                            let fetched: BTreeSet<u32> =
+                                plan.fetch.iter().copied().collect();
+                            // bill per *neuron* so miss rates stay
+                            // comparable to the bundle-granular counters
+                            for &(c, k) in &active {
+                                if fetched.contains(&c) {
+                                    step.cache_misses += k as u64;
+                                    misses += k as u64;
+                                } else {
+                                    step.cache_hits += k as u64;
+                                }
+                            }
+                            offload_active = Some((active, fetched));
+                        } else {
+                            for &id in &ids {
+                                match self.cache.access(layer, id as usize) {
+                                    Access::Hit => step.cache_hits += 1,
+                                    Access::Miss { .. } => {
+                                        step.cache_misses += 1;
+                                        misses += 1;
+                                    }
                                 }
                             }
                         }
@@ -404,7 +465,10 @@ impl SimEngine {
 
                 // build cluster tasks over the computed neurons
                 let cluster_n = cfg.cluster_neurons.max(1) as u64;
-                let n_clusters = computed.div_ceil(cluster_n).max(1);
+                let n_clusters = match &offload_active {
+                    Some((active, _)) => active.len().max(1) as u64,
+                    None => computed.div_ceil(cluster_n).max(1),
+                };
                 let miss_per_cluster = misses as f64 / n_clusters as f64;
                 let pred_t = if cfg.predictor {
                     self.pred.flops(spec.hidden, spec.inter, batch)
@@ -420,76 +484,117 @@ impl SimEngine {
                 let ud_c = 2.0 * gate_c;
                 // per-cluster IO (misses share, §4.4 loading strategy)
                 let range = spec.ffn_bytes_per_layer() * spec.layers as u64;
-                let (gate_io, ud_io) = if miss_per_cluster > 0.0 {
-                    if cfg.bundling {
-                        if cfg.two_phase_load {
-                            let t4k = self.ufs.burst_time_s(&IoBurst {
-                                pattern: IoPattern::Random,
-                                block_bytes: 4096,
-                                count: 1,
-                                range_bytes: range,
-                                core: CoreClass::Big,
-                                issuers: cfg.io_threads,
-                            });
-                            (
-                                miss_per_cluster * t4k,
-                                miss_per_cluster * self.act.bundle_coactivation * t4k,
-                            )
-                        } else {
-                            let tb = self.ufs.burst_time_s(&IoBurst {
-                                pattern: IoPattern::Random,
-                                block_bytes: spec.bundle_aligned_bytes(),
-                                count: 1,
-                                range_bytes: range,
-                                core: CoreClass::Big,
-                                issuers: cfg.io_threads,
-                            });
-                            (miss_per_cluster * tb, 0.0)
-                        }
-                    } else if !cfg.predictor {
-                        // mmap dense sweep: the non-resident half of the
-                        // layer faults in once, in readahead-sized chunks
-                        let fault_bytes = miss_per_cluster
-                            * (3.0 * h * bpp) // whole bundle's bytes
-                            ;
-                        let chunk = 16 * 1024u64;
-                        let t = self.ufs.burst_time_s(&IoBurst {
-                            pattern: IoPattern::Random,
-                            block_bytes: chunk,
-                            count: ((fault_bytes as u64).div_ceil(chunk)).max(1),
-                            range_bytes: range,
-                            core: CoreClass::Mid,
-                            issuers: cfg.io_threads,
-                        });
-                        (t / 3.0, 2.0 * t / 3.0)
-                    } else {
-                        // unbundled: 3 scattered row reads per neuron
-                        let row_bytes =
-                            ((h * bpp) as u64).next_multiple_of(4096);
-                        let tr = self.ufs.burst_time_s(&IoBurst {
-                            pattern: IoPattern::Random,
-                            block_bytes: row_bytes,
-                            count: 1,
-                            range_bytes: range,
-                            core: CoreClass::Big,
-                            issuers: cfg.io_threads,
-                        });
-                        (miss_per_cluster * tr, 2.0 * miss_per_cluster * tr)
-                    }
+                let tasks: Vec<ClusterTask> = if let Some((active, fetched)) =
+                    &offload_active
+                {
+                    // record-granular streaming: a fetched cluster costs
+                    // one random read of its whole record, a resident one
+                    // costs none; compute scales with the cluster's
+                    // predicted-active share
+                    let rec_bytes = match &self.offload {
+                        Some(p) => p.config().record_bytes,
+                        None => 0,
+                    };
+                    let t_rec = self.ufs.burst_time_s(&IoBurst {
+                        pattern: IoPattern::Random,
+                        block_bytes: rec_bytes.max(4096),
+                        count: 1,
+                        range_bytes: range,
+                        core: CoreClass::Big,
+                        issuers: cfg.io_threads,
+                    });
+                    active
+                        .iter()
+                        .map(|&(c, k)| {
+                            let frac = k as f64 / cluster_n as f64;
+                            ClusterTask {
+                                pred_s: pred_t,
+                                gate_io_s: if fetched.contains(&c) {
+                                    t_rec
+                                } else {
+                                    0.0
+                                },
+                                gate_c_s: gate_c * frac,
+                                ud_io_s: 0.0,
+                                ud_c_s: ud_c * frac,
+                            }
+                        })
+                        .collect()
                 } else {
-                    (0.0, 0.0)
-                };
+                    let (gate_io, ud_io) = if miss_per_cluster > 0.0 {
+                        if cfg.bundling {
+                            if cfg.two_phase_load {
+                                let t4k = self.ufs.burst_time_s(&IoBurst {
+                                    pattern: IoPattern::Random,
+                                    block_bytes: 4096,
+                                    count: 1,
+                                    range_bytes: range,
+                                    core: CoreClass::Big,
+                                    issuers: cfg.io_threads,
+                                });
+                                (
+                                    miss_per_cluster * t4k,
+                                    miss_per_cluster
+                                        * self.act.bundle_coactivation
+                                        * t4k,
+                                )
+                            } else {
+                                let tb = self.ufs.burst_time_s(&IoBurst {
+                                    pattern: IoPattern::Random,
+                                    block_bytes: spec.bundle_aligned_bytes(),
+                                    count: 1,
+                                    range_bytes: range,
+                                    core: CoreClass::Big,
+                                    issuers: cfg.io_threads,
+                                });
+                                (miss_per_cluster * tb, 0.0)
+                            }
+                        } else if !cfg.predictor {
+                            // mmap dense sweep: the non-resident half of the
+                            // layer faults in once, in readahead-sized chunks
+                            let fault_bytes = miss_per_cluster
+                                * (3.0 * h * bpp) // whole bundle's bytes
+                                ;
+                            let chunk = 16 * 1024u64;
+                            let t = self.ufs.burst_time_s(&IoBurst {
+                                pattern: IoPattern::Random,
+                                block_bytes: chunk,
+                                count: ((fault_bytes as u64).div_ceil(chunk))
+                                    .max(1),
+                                range_bytes: range,
+                                core: CoreClass::Mid,
+                                issuers: cfg.io_threads,
+                            });
+                            (t / 3.0, 2.0 * t / 3.0)
+                        } else {
+                            // unbundled: 3 scattered row reads per neuron
+                            let row_bytes =
+                                ((h * bpp) as u64).next_multiple_of(4096);
+                            let tr = self.ufs.burst_time_s(&IoBurst {
+                                pattern: IoPattern::Random,
+                                block_bytes: row_bytes,
+                                count: 1,
+                                range_bytes: range,
+                                core: CoreClass::Big,
+                                issuers: cfg.io_threads,
+                            });
+                            (miss_per_cluster * tr, 2.0 * miss_per_cluster * tr)
+                        }
+                    } else {
+                        (0.0, 0.0)
+                    };
 
-                let task = ClusterTask {
-                    pred_s: pred_t,
-                    gate_io_s: gate_io,
-                    gate_c_s: gate_c,
-                    ud_io_s: ud_io,
-                    ud_c_s: ud_c,
+                    let task = ClusterTask {
+                        pred_s: pred_t,
+                        gate_io_s: gate_io,
+                        gate_c_s: gate_c,
+                        ud_io_s: ud_io,
+                        ud_c_s: ud_c,
+                    };
+                    (0..n_clusters).map(|_| task).collect()
                 };
-                let tasks: Vec<ClusterTask> =
-                    (0..n_clusters).map(|_| task).collect();
                 let sched = schedule(&tasks, cfg.pipeline, cfg.compute_threads);
+                let exposed_io;
                 if cfg.pipeline == PipelineMode::ClusterLevel {
                     // the borderless pipeline (Fig.6-b) lets the IO thread
                     // keep streaming during the attention block and the
@@ -502,32 +607,56 @@ impl SimEngine {
                     cold_sched_makespan =
                         npu_ffn_t.max(compute_span) + exposed;
                     step.io_stall_s += exposed;
+                    exposed_io = exposed;
                 } else {
                     cold_sched_makespan = sched.makespan_s;
                     step.io_stall_s += sched.io_stall_s;
+                    exposed_io = sched.io_stall_s;
+                }
+                if offload_active.is_some() {
+                    if let Some(pol) = self.offload.as_mut() {
+                        // the same hidden/exposed split feeds the overlap
+                        // counters the serving layer reports
+                        pol.record_io(
+                            sched.io_busy_s,
+                            (sched.io_busy_s - exposed_io).max(0.0),
+                        );
+                    }
                 }
                 step.cpu_busy_s += sched.compute_busy_s;
                 step.io_busy_s += sched.io_busy_s;
                 step.neurons_computed += computed;
-                let io_bytes = if cfg.bundling {
-                    if cfg.two_phase_load {
-                        (misses as f64 * 4096.0 * (1.0 + self.act.bundle_coactivation)) as u64
+                if let Some((_, fetched)) = &offload_active {
+                    let rec_bytes = match &self.offload {
+                        Some(p) => p.config().record_bytes,
+                        None => 0,
+                    };
+                    step.io_bytes += fetched.len() as u64 * rec_bytes;
+                    step.io_ops += fetched.len() as u64;
+                } else {
+                    let io_bytes = if cfg.bundling {
+                        if cfg.two_phase_load {
+                            (misses as f64
+                                * 4096.0
+                                * (1.0 + self.act.bundle_coactivation))
+                                as u64
+                        } else {
+                            misses * spec.bundle_aligned_bytes()
+                        }
+                    } else if !cfg.predictor {
+                        (misses as f64 * 3.0 * h * bpp) as u64
                     } else {
-                        misses * spec.bundle_aligned_bytes()
-                    }
-                } else if !cfg.predictor {
-                    (misses as f64 * 3.0 * h * bpp) as u64
-                } else {
-                    misses * 3 * ((h * bpp) as u64).next_multiple_of(4096)
-                };
-                step.io_bytes += io_bytes;
-                step.io_ops += if cfg.two_phase_load && cfg.bundling {
-                    (misses as f64 * 1.8) as u64
-                } else if cfg.bundling {
-                    misses
-                } else {
-                    misses * 3
-                };
+                        misses * 3 * ((h * bpp) as u64).next_multiple_of(4096)
+                    };
+                    step.io_bytes += io_bytes;
+                    step.io_ops += if cfg.two_phase_load && cfg.bundling {
+                        (misses as f64 * 1.8) as u64
+                    } else if cfg.bundling {
+                        misses
+                    } else {
+                        misses * 3
+                    };
+                }
                 step.bytes_touched_dram +=
                     (3.0 * computed as f64 * h * bpp) as u64;
             }
@@ -796,7 +925,7 @@ impl Engine for SimEngine {
     }
 
     fn stats(&self) -> EngineStats {
-        EngineStats {
+        let mut st = EngineStats {
             capacity: self.slots.len(),
             active: self.active(),
             steps: self.metrics.steps,
@@ -805,7 +934,12 @@ impl Engine for SimEngine {
             decode_s: self.sv_decode_s,
             cache_hits: self.metrics.cache_hits,
             cache_misses: self.metrics.cache_misses,
+            ..EngineStats::default()
+        };
+        if let Some(pol) = &self.offload {
+            pol.stats.export(&mut st);
         }
+        st
     }
 
     fn kv_pool(&self) -> Option<KvPoolStats> {
@@ -1234,5 +1368,86 @@ mod tests {
             );
         }
         assert_eq!(alone, shared, "stream depends on batch composition");
+    }
+
+    #[test]
+    fn offload_streaming_matches_bundle_path_and_bills_clusters() {
+        use crate::serve::InferenceRequest;
+        // acceptance: cluster-granular offload streaming must not change
+        // a single token — solo and batched — while billing cluster
+        // misses and streamed bytes that the bundle path never sees
+        let on_cfg = RuntimeConfig {
+            max_batch: 2,
+            offload_streaming: true,
+            offload_resident_clusters: 24,
+            ..Default::default()
+        };
+        let off_cfg = RuntimeConfig { max_batch: 2, ..Default::default() };
+        let reqs = [
+            InferenceRequest::new(11, vec![1, 2, 3, 4, 5], 6),
+            InferenceRequest::new(12, vec![9, 8, 7], 6),
+        ];
+        for batch in [1usize, 2] {
+            let mut on = engine(on_cfg.clone());
+            let mut off = engine(off_cfg.clone());
+            let mut s_on: Vec<Vec<u32>> = Vec::new();
+            let mut s_off: Vec<Vec<u32>> = Vec::new();
+            for (eng, out) in
+                [(&mut on, &mut s_on), (&mut off, &mut s_off)]
+            {
+                let slots: Vec<_> = reqs[..batch]
+                    .iter()
+                    .map(|r| {
+                        let adm = eng.admit(r).unwrap();
+                        out.push(vec![adm.first_token.unwrap()]);
+                        adm.slot
+                    })
+                    .collect();
+                for _ in 0..5 {
+                    let toks = eng.step().unwrap();
+                    for (i, &slot) in slots.iter().enumerate() {
+                        let t = toks
+                            .iter()
+                            .find(|&&(s, _)| s == slot)
+                            .unwrap()
+                            .1;
+                        out[i].push(t);
+                    }
+                }
+            }
+            assert_eq!(
+                s_on, s_off,
+                "offload streaming changed a stream (batch {batch})"
+            );
+            let st = on.stats();
+            assert!(st.offload_cluster_misses > 0, "no cluster misses");
+            assert!(st.offload_bytes_streamed > 0, "no bytes streamed");
+            let st_off = off.stats();
+            assert_eq!(st_off.offload_cluster_misses, 0);
+            assert_eq!(st_off.offload_bytes_streamed, 0);
+        }
+    }
+
+    #[test]
+    fn offload_residency_hits_under_a_roomy_budget() {
+        use crate::serve::InferenceRequest;
+        // a budget far above the working set: every first touch of a
+        // cluster misses, every repeat hits — the hit rate lands
+        // strictly between 0 and 1 and the misses bill real I/O time
+        let mut e = engine(RuntimeConfig {
+            offload_streaming: true,
+            offload_resident_clusters: 100_000,
+            ..Default::default()
+        });
+        e.admit(&InferenceRequest::new(5, vec![1, 2, 3], 40)).unwrap();
+        for _ in 0..30 {
+            e.step().unwrap();
+        }
+        let st = e.stats();
+        assert!(st.offload_cluster_hits > 0, "no residency hits");
+        assert!(st.offload_cluster_misses > 0, "no cold misses");
+        assert!(st.offload_io_s > 0.0, "no cluster I/O billed");
+        let hr = st.offload_hit_rate();
+        assert!(hr > 0.0 && hr < 1.0, "hit rate {hr}");
     }
 }

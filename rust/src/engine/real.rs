@@ -20,7 +20,7 @@
 //!                                       identical prompt prefixes
 //!                                       sharing physical blocks
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::path::Path;
 use std::sync::mpsc;
 
@@ -31,6 +31,7 @@ use crate::config::CoreClass;
 use crate::kv::{pool_err, violation, KvLease, KvPool, KvPoolStats};
 use crate::metrics::{RunMetrics, StepMetrics};
 use crate::model::{ModelDims, Predictor, WeightFile, Weights};
+use crate::offload::{ClusterLayout, NeuronStore, OffloadConfig, OffloadPolicy};
 use crate::runtime::{Runtime, Tensor, TensorData};
 use crate::serve::{
     Admission, Engine, EngineStats, InferenceRequest, PrefillProgress, SlotId,
@@ -59,6 +60,19 @@ pub struct RealEngineOptions {
     /// of the same footprint could, stalling admissions instead of
     /// over-committing.
     pub kv_blocks: usize,
+    /// Cluster-granular offload streaming: cold-FFN weights are read as
+    /// co-activation cluster records from a packed [`NeuronStore`] file
+    /// (built next to the weight file on first use) instead of per-neuron
+    /// bundles. Exact — the computed neuron set and the accumulation
+    /// order are identical either way. CLI: `pi2 serve --offload-stream`.
+    pub offload: bool,
+    /// Neurons per cluster record in the packed store.
+    pub offload_cluster_neurons: usize,
+    /// Resident cold-cluster budget across all layers.
+    pub offload_resident_clusters: usize,
+    /// Dense/sparse routing threshold (affects stats/billing only; the
+    /// computed set never changes).
+    pub offload_dense_threshold: f64,
 }
 
 impl Default for RealEngineOptions {
@@ -71,6 +85,10 @@ impl Default for RealEngineOptions {
             predictor_rank: 64,
             seed: 42,
             kv_blocks: 0,
+            offload: false,
+            offload_cluster_neurons: 8,
+            offload_resident_clusters: 64,
+            offload_dense_threshold: 0.5,
         }
     }
 }
@@ -125,6 +143,13 @@ pub struct RealEngine {
     cache: NeuronCache,
     /// Resident cold bundle data keyed by cache id.
     cold_store: HashMap<u32, Vec<f32>>,
+    /// Packed cluster store (`--offload` mode): cold FFN weights as
+    /// co-activation cluster records on flash.
+    store: Option<NeuronStore>,
+    /// Residency + routing policy for the cluster path.
+    offload: Option<OffloadPolicy>,
+    /// Resident cluster records keyed by the policy's global cluster id.
+    cluster_store: HashMap<u32, Vec<f32>>,
     /// Pinned hot-prefix weight tensors per (layer, hot_k).
     pub(crate) hot_tensors: HashMap<(usize, usize), [Tensor; 4]>,
     /// Pre-encoded XLA literals for static weights (§Perf: encoding a
@@ -263,6 +288,41 @@ impl RealEngine {
         let hot_k0 = Self::resolve_hot_k(&dims, opts.hot_k, batch);
         let cache = NeuronCache::new(
             dims.layers, dims.inter, hot_k0, opts.cold_cache_neurons);
+        // cluster path: pack (once) and open the co-activation store,
+        // and mirror its geometry into the residency policy
+        let (store, offload) = if opts.offload {
+            let ext = match weight_path.extension().and_then(|e| e.to_str()) {
+                Some(e) => format!("{e}.clusters"),
+                None => "clusters".to_string(),
+            };
+            let cpath = weight_path.with_extension(ext);
+            if !cpath.exists() {
+                let layout = ClusterLayout::co_activation(
+                    &dims, &weights, opts.offload_cluster_neurons, 32,
+                    opts.seed);
+                NeuronStore::pack(&dims, &weights, &layout, &cpath)?;
+            }
+            let mut store = NeuronStore::open(
+                &cpath,
+                UfsModel::new(crate::config::oneplus_12().ufs),
+                CoreClass::Big,
+            )?;
+            store.set_throttle(opts.throttle_io);
+            let policy = OffloadPolicy::new(OffloadConfig {
+                layers: dims.layers,
+                clusters_per_layer: store.clusters_per_layer(),
+                cluster_neurons: opts.offload_cluster_neurons.max(1),
+                // the co-activation layout spans every neuron; the
+                // active set already excludes the pinned hot prefix
+                hot_clusters: 0,
+                resident_clusters: opts.offload_resident_clusters,
+                dense_threshold: opts.offload_dense_threshold,
+                record_bytes: store.record_bytes(),
+            });
+            (Some(store), Some(policy))
+        } else {
+            (None, None)
+        };
         let kv = (0..dims.layers)
             .map(|_| {
                 let shape = vec![
@@ -292,6 +352,9 @@ impl RealEngine {
             predictors,
             cache,
             cold_store: HashMap::new(),
+            store,
+            offload,
+            cluster_store: HashMap::new(),
             hot_tensors: HashMap::new(),
             attn_lits: Vec::new(),
             hot_lits: HashMap::new(),
@@ -577,68 +640,192 @@ impl RealEngine {
             set.into_iter().collect()
         };
         step.neurons_computed += active.len() as u64;
+        if self.store.is_some() {
+            return self.cold_ffn_clusters(layer, ffn_in, step, &active);
+        }
 
-        // split into resident (cache hit) and missing neurons
-        let mut y = vec![0.0f32; b * h];
-        let mut misses = Vec::new();
+        // classify against the cache first, so accumulation below can
+        // run in one canonical ascending pass regardless of the hit/miss
+        // split — float-sum order must not depend on cache history, or
+        // offload-on and offload-off streams would diverge
+        let n_f32 = 3 * h + 1;
+        let mut misses: Vec<usize> = Vec::new();
         for &n in &active {
-            let id = self.cache.id(layer, n);
-            if self.cold_store.contains_key(&id) {
+            if self.cold_store.contains_key(&self.cache.id(layer, n)) {
                 self.cache.access(layer, n);
                 step.cache_hits += 1;
-                let bundle = &self.cold_store[&id];
-                accumulate_neuron(bundle, ffn_in, b, h, &mut y);
             } else {
                 misses.push(n);
             }
         }
-        // stream misses: IO thread reads bundles from flash while the
-        // compute side accumulates them as they arrive (§4.3's pipeline)
+        // stream misses: IO thread reads bundles from flash into a
+        // step-local staging map (§4.3's pipeline)
+        let mut arrived: HashMap<usize, Vec<f32>> = HashMap::new();
         if !misses.is_empty() {
-            let n_f32 = 3 * h + 1;
             let io_start = std::time::Instant::now();
-            let mut arrived: Vec<(usize, Vec<f32>)> = Vec::with_capacity(misses.len());
-            {
-                let (tx, rx) = mpsc::channel::<(usize, Vec<f32>)>();
-                let wfile = &self.wfile;
-                let flash = &self.flash;
-                let misses_ref = &misses;
-                std::thread::scope(|scope| {
-                    scope.spawn(move || {
-                        for &n in misses_ref {
-                            let off = wfile.bundle_offset(layer, n);
-                            match flash.read_f32s(off, n_f32) {
-                                Ok(data) => {
-                                    if tx.send((n, data)).is_err() {
-                                        break;
-                                    }
+            let (tx, rx) = mpsc::channel::<(usize, Vec<f32>)>();
+            let wfile = &self.wfile;
+            let flash = &self.flash;
+            let misses_ref = &misses;
+            std::thread::scope(|scope| {
+                scope.spawn(move || {
+                    for &n in misses_ref {
+                        let off = wfile.bundle_offset(layer, n);
+                        match flash.read_f32s(off, n_f32) {
+                            Ok(data) => {
+                                if tx.send((n, data)).is_err() {
+                                    break;
                                 }
-                                Err(_) => break,
                             }
+                            Err(_) => break,
                         }
-                    });
-                    for (n, data) in rx.iter() {
-                        accumulate_neuron(&data, ffn_in, b, h, &mut y);
-                        arrived.push((n, data));
                     }
                 });
-            }
-            step.io_busy_s += io_start.elapsed().as_secs_f64();
-            for (n, data) in arrived {
-                let id = self.cache.id(layer, n);
-                match self.cache.access(layer, n) {
-                    Access::Miss { evicted } => {
-                        step.cache_misses += 1;
-                        step.io_bytes += (n_f32 * 4) as u64;
-                        step.io_ops += 1;
-                        if let Some(e) = evicted {
-                            self.cold_store.remove(&e);
-                        }
-                        self.cold_store.insert(id, data);
-                    }
-                    Access::Hit => step.cache_hits += 1,
+                for (n, data) in rx.iter() {
+                    arrived.insert(n, data);
                 }
+            });
+            step.io_busy_s += io_start.elapsed().as_secs_f64();
+        }
+        // canonical accumulation: ascending neuron id, hits and arrivals
+        // interleaved exactly as a fully-resident pass would sum them
+        let mut y = vec![0.0f32; b * h];
+        for &n in &active {
+            if let Some(data) = arrived.get(&n) {
+                accumulate_neuron(data, ffn_in, b, h, &mut y);
+            } else if let Some(bundle) =
+                self.cold_store.get(&self.cache.id(layer, n))
+            {
+                accumulate_neuron(bundle, ffn_in, b, h, &mut y);
+            } else {
+                bail!(
+                    "cold neuron {n} of layer {layer} neither resident \
+                     nor streamed (flash read failed?)"
+                );
             }
+        }
+        // cache bookkeeping after the compute pass
+        for n in misses {
+            let Some(data) = arrived.remove(&n) else { continue };
+            let id = self.cache.id(layer, n);
+            match self.cache.access(layer, n) {
+                Access::Miss { evicted } => {
+                    step.cache_misses += 1;
+                    step.io_bytes += (n_f32 * 4) as u64;
+                    step.io_ops += 1;
+                    if let Some(e) = evicted {
+                        self.cold_store.remove(&e);
+                    }
+                    self.cold_store.insert(id, data);
+                }
+                Access::Hit => step.cache_hits += 1,
+            }
+        }
+        Ok(y)
+    }
+
+    /// Cluster-granular cold path (`--offload` mode): the same active
+    /// set as [`Self::cold_ffn`], but residency, flash reads and billing
+    /// run per co-activation cluster record from the packed
+    /// [`NeuronStore`]. Exactness: accumulation walks the identical
+    /// ascending neuron order over bit-identical bundle floats, so token
+    /// streams match the bundle path byte for byte; only the stats and
+    /// the I/O arithmetic differ.
+    fn cold_ffn_clusters(
+        &mut self,
+        layer: usize,
+        ffn_in: &[f32],
+        step: &mut StepMetrics,
+        active: &[usize],
+    ) -> Result<Vec<f32>> {
+        let (b, h) = (self.batch, self.dims.hidden);
+        let Some(store) = self.store.as_ref() else {
+            bail!("cluster path entered without a NeuronStore");
+        };
+        let Some(pol) = self.offload.as_mut() else {
+            bail!("cluster path entered without an OffloadPolicy");
+        };
+        let layout = store.layout();
+        // group the active neurons by their cluster record
+        let mut clusters: BTreeMap<u32, usize> = BTreeMap::new();
+        for &n in active {
+            *clusters.entry(layout.cluster_of(layer, n)).or_insert(0) += 1;
+        }
+        let plan =
+            pol.plan_layer(layer, clusters.iter().map(|(&c, &k)| (c, k)));
+        let fetched: BTreeSet<u32> = plan.fetch.iter().copied().collect();
+        // per-neuron cache billing mirrors the bundle path's counters
+        for (&c, &k) in &clusters {
+            if fetched.contains(&c) {
+                step.cache_misses += k as u64;
+            } else {
+                step.cache_hits += k as u64;
+            }
+        }
+        // stream missing cluster records from flash on the IO thread
+        let mut arrived: HashMap<u32, Vec<f32>> = HashMap::new();
+        if !plan.fetch.is_empty() {
+            let io_start = std::time::Instant::now();
+            let (tx, rx) = mpsc::channel::<(u32, Vec<f32>)>();
+            let fetch_ref = &plan.fetch;
+            std::thread::scope(|scope| {
+                scope.spawn(move || {
+                    for &c in fetch_ref {
+                        match store.read_cluster(layer, c) {
+                            Ok(data) => {
+                                if tx.send((c, data)).is_err() {
+                                    break;
+                                }
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                });
+                for (c, data) in rx.iter() {
+                    arrived.insert(c, data);
+                }
+            });
+            let io_s = io_start.elapsed().as_secs_f64();
+            step.io_busy_s += io_s;
+            step.io_bytes += plan.fetch.len() as u64 * store.record_bytes();
+            step.io_ops += plan.fetch.len() as u64;
+            // a barrier, not the overlapped pipeline: byte-identity
+            // forbids reordering compute against arrivals here, so none
+            // of this wall-clock I/O hides behind compute (the sim
+            // engine models the overlapped schedule)
+            pol.record_io(io_s, 0.0);
+        }
+        // canonical accumulation: ascending neuron id over a step-local
+        // view (arrivals + the residency the plan started from)
+        let mut y = vec![0.0f32; b * h];
+        for &n in active {
+            let c = layout.cluster_of(layer, n);
+            let record = match arrived.get(&c) {
+                Some(r) => r,
+                None => {
+                    match self.cluster_store.get(&pol.global_id(layer, c)) {
+                        Some(r) => r,
+                        None => bail!(
+                            "cluster {c} of layer {layer} neither \
+                             resident nor streamed (flash read failed?)"
+                        ),
+                    }
+                }
+            };
+            let bundle = store
+                .bundle_in_record(record, layout.slot_in_cluster(layer, n));
+            accumulate_neuron(bundle, ffn_in, b, h, &mut y);
+        }
+        // reconcile resident records with the plan: inserts before
+        // removals — each cluster appears at most once per plan, so this
+        // lands exactly on the policy cache's final residency
+        for &c in &plan.fetch {
+            if let Some(data) = arrived.remove(&c) {
+                self.cluster_store.insert(pol.global_id(layer, c), data);
+            }
+        }
+        for &gone in &plan.evicted {
+            self.cluster_store.remove(&gone);
         }
         Ok(y)
     }
@@ -1381,7 +1568,7 @@ impl Engine for RealEngine {
     }
 
     fn stats(&self) -> EngineStats {
-        EngineStats {
+        let mut st = EngineStats {
             capacity: self.batch,
             active: self.active(),
             steps: self.metrics.steps,
@@ -1390,7 +1577,12 @@ impl Engine for RealEngine {
             decode_s: self.sv_decode_s,
             cache_hits: self.metrics.cache_hits,
             cache_misses: self.metrics.cache_misses,
+            ..EngineStats::default()
+        };
+        if let Some(pol) = &self.offload {
+            pol.stats.export(&mut st);
         }
+        st
     }
 
     fn kv_pool(&self) -> Option<KvPoolStats> {
@@ -1969,5 +2161,71 @@ mod tests {
         assert_eq!(c.engine.active(), 0);
         assert_eq!(c.engine.kv_pool().unwrap().free_blocks, 7);
         std::fs::remove_file(wp).ok();
+    }
+
+    #[test]
+    fn offload_cluster_streaming_matches_bundle_path() {
+        // acceptance: `--offload-stream` (cluster records gathered from
+        // the packed NeuronStore) produces byte-identical token streams
+        // to the per-neuron bundle path — solo and batched — while
+        // billing cluster misses and streamed bytes the bundle path
+        // never sees. Predictor-driven cold path, so the predictor
+        // gating itself is under test too.
+        let Some(dir) = artifacts() else { return };
+        let wp = weight_path("offeq");
+        let reqs = [
+            InferenceRequest::new(7, vec![5, 12, 3], 6),
+            InferenceRequest::new(8, vec![2, 9], 6),
+        ];
+        let on_opts = RealEngineOptions {
+            offload: true,
+            offload_resident_clusters: 16,
+            ..opts(false, 128)
+        };
+        for batch in [1usize, 2] {
+            let mut streams: Vec<Vec<Vec<u32>>> = Vec::new();
+            let mut on_stats = None;
+            for offload in [false, true] {
+                let o = if offload {
+                    on_opts.clone()
+                } else {
+                    opts(false, 128)
+                };
+                let mut e = RealEngine::new(dir, &wp, 2, o).unwrap();
+                let mut out: Vec<Vec<u32>> = Vec::new();
+                let slots: Vec<_> = reqs[..batch]
+                    .iter()
+                    .map(|r| {
+                        let adm = e.admit(r).unwrap();
+                        out.push(vec![adm.first_token.unwrap()]);
+                        adm.slot
+                    })
+                    .collect();
+                for _ in 0..5 {
+                    let toks = e.step().unwrap();
+                    for (i, &slot) in slots.iter().enumerate() {
+                        out[i].push(
+                            toks.iter()
+                                .find(|(s, _)| *s == slot)
+                                .unwrap()
+                                .1,
+                        );
+                    }
+                }
+                if offload {
+                    on_stats = Some(e.stats());
+                }
+                streams.push(out);
+            }
+            assert_eq!(
+                streams[0], streams[1],
+                "offload streaming diverged (batch {batch})"
+            );
+            let st = on_stats.unwrap();
+            assert!(st.offload_cluster_misses > 0, "no cluster misses");
+            assert!(st.offload_bytes_streamed > 0, "no bytes streamed");
+        }
+        std::fs::remove_file(&wp).ok();
+        std::fs::remove_file(wp.with_extension("clusters")).ok();
     }
 }

@@ -18,6 +18,7 @@ pub mod kv;
 pub mod energy;
 pub mod metrics;
 pub mod model;
+pub mod offload;
 pub mod pipeline;
 pub mod quant;
 pub mod runtime;

@@ -28,6 +28,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "graphs" => cmd_graphs(&args),
         "serve" => cmd_serve(&args),
+        "offload-pack" => cmd_offload_pack(&args),
         "check" => cmd_check(&args),
         "help" | "--help" | "-h" => {
             print_help();
@@ -53,6 +54,12 @@ USAGE:
                 [--batch B] [--prompt P] [--offload F] [--mem GB]
                 [--config file.json]
   pi2 graphs    [--artifacts DIR]         list compiled NPU graphs
+  pi2 offload-pack [--artifacts DIR] [--weights PATH] [--out PATH]
+                [--cluster-neurons N] [--seed S]
+                build the cluster-granular neuron store file the real
+                engine's --offload-stream mode reads: FFN bundles
+                reordered into RIPPLE-style co-activation clusters
+                (default out: <weights>.clusters)
   pi2 check     [--src DIR] [--lint-only] [--model-only]
                 repo-specific lint rules over first-party sources
                 (hot-path unwrap ban, unsafe allowlist, KV encapsulation,
@@ -61,14 +68,19 @@ USAGE:
   pi2 serve     [--addr HOST:PORT] [--engine real|sim] [--artifacts DIR]
                 [--mode continuous|lockstep] [--slots N] [--device D]
                 [--model M] [--throttle] [--kv-blocks N]
-                [--prefill-chunk N]
+                [--prefill-chunk N] [--offload-stream]
+                [--resident-clusters N]
                 line-protocol TCP server; streams tokens with
                 {{\"stream\": true}}. --engine real runs the PJRT engine
                 (needs artifacts), --engine sim the simulation engine.
                 --prefill-chunk N installs new prompts N tokens at a
                 time between decode steps (two-phase admission), so an
                 admission never stalls in-flight streams for a whole
-                prompt; 0 (default) prefills synchronously inside admit
+                prompt; 0 (default) prefills synchronously inside admit.
+                --offload-stream reads cold FFN weights as co-activation
+                cluster records (exact: token streams are byte-identical
+                to the bundle path); --resident-clusters caps the
+                resident cold-cluster budget across all layers
 
 DEVICES: oneplus12 (default), ace2
 MODELS:  bamboo-7b (default), mistral-7b, qwen2-7b, llama-13b, mixtral-47b
@@ -200,6 +212,22 @@ fn cmd_serve(args: &Args) -> i32 {
         },
         None => None,
     };
+    // cluster-granular offload streaming (both engines; the sim path can
+    // also set it via --config's "offload_streaming")
+    let offload_stream = args.flag("offload-stream");
+    let resident_clusters = match args.opt("resident-clusters") {
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) => Some(n),
+            Err(_) => {
+                eprintln!(
+                    "invalid --resident-clusters '{s}' (expected a \
+                     non-negative integer)"
+                );
+                return 2;
+            }
+        },
+        None => None,
+    };
     let run = |err: anyhow::Error| -> i32 {
         eprintln!("server error: {err:#}");
         1
@@ -224,11 +252,15 @@ fn cmd_serve(args: &Args) -> i32 {
                 },
                 None => 0, // every block the compiled pool has
             };
-            let opts = RealEngineOptions {
+            let mut opts = RealEngineOptions {
                 throttle_io: args.flag("throttle"),
                 kv_blocks,
+                offload: offload_stream,
                 ..Default::default()
             };
+            if let Some(n) = resident_clusters {
+                opts.offload_resident_clusters = n;
+            }
             println!("compiling NPU graph table…");
             let slots = match args.opt("slots") {
                 Some(s) => match s.parse::<usize>() {
@@ -267,7 +299,13 @@ fn cmd_serve(args: &Args) -> i32 {
                 eprintln!("unknown model");
                 return 2;
             };
-            let cfg = base_config(args);
+            let mut cfg = base_config(args);
+            if offload_stream {
+                cfg.offload_streaming = true;
+            }
+            if let Some(n) = resident_clusters {
+                cfg.offload_resident_clusters = n;
+            }
             let cfg_chunk = cfg.prefill_chunk;
             let mut server = Server::<SimEngine>::sim(dev, spec, cfg);
             server.set_mode(mode);
@@ -285,6 +323,79 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     }
     0
+}
+
+/// `pi2 offload-pack`: build the cluster-granular [`NeuronStore`] file
+/// the real engine's `--offload-stream` mode reads. FFN neuron bundles
+/// are reordered into RIPPLE-style co-activation clusters and written as
+/// fixed-size per-cluster records, so a decode step fetches one record
+/// per predicted-active cluster instead of one bundle per neuron.
+fn cmd_offload_pack(args: &Args) -> i32 {
+    use powerinfer2::model::{ModelDims, Weights};
+    use powerinfer2::offload::{ClusterLayout, NeuronStore};
+
+    let artifacts =
+        std::path::PathBuf::from(args.opt_or("artifacts", "artifacts"));
+    let dims = match ModelDims::load_dir(&artifacts) {
+        Ok(d) => d,
+        Err(_) => {
+            eprintln!(
+                "note: no artifacts manifest in {} — packing \
+                 selftest-sized dims",
+                artifacts.display()
+            );
+            ModelDims {
+                hidden: 64,
+                inter: 256,
+                layers: 4,
+                heads: 4,
+                kv_heads: 2,
+                vocab: 1024,
+                seq_max: 128,
+                prefill_chunk: 16,
+                batches: vec![1, 2],
+                hot_ks: vec![64],
+                kv_block: 16,
+                kv_blocks: 9,
+            }
+        }
+    };
+    let seed = args.opt_u64("seed", 42);
+    let cn = args.opt_usize("cluster-neurons", 8).max(1);
+    let weight_path = std::path::PathBuf::from(
+        args.opt_or("weights", "/tmp/pi2_serve_weights.bin"));
+    let out = match args.opt("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => {
+            // the same derivation RealEngine uses, so serve finds it
+            let ext = match weight_path.extension().and_then(|e| e.to_str())
+            {
+                Some(e) => format!("{e}.clusters"),
+                None => "clusters".to_string(),
+            };
+            weight_path.with_extension(ext)
+        }
+    };
+    let weights = Weights::generate(&dims, seed);
+    let layout = ClusterLayout::co_activation(&dims, &weights, cn, 32, seed);
+    match NeuronStore::pack(&dims, &weights, &layout, &out) {
+        Ok(bytes) => {
+            println!(
+                "packed {} layers x {} clusters ({} neurons/cluster) -> \
+                 {} ({:.1} MB)",
+                dims.layers,
+                layout.clusters_per_layer(),
+                cn,
+                out.display(),
+                bytes as f64 / 1e6
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("pack failed: {e:#}");
+            1
+        }
+    }
 }
 
 /// `pi2 check`: the repo's own verification gate — the static lint pass

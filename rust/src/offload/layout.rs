@@ -1,0 +1,325 @@
+//! Co-activation-aware cluster ordering (RIPPLE-style).
+//!
+//! The offload store groups FFN neurons into fixed-size clusters; one
+//! cluster is the unit of flash I/O and of cache residency. Which neurons
+//! share a cluster decides how much of every streamed record is useful,
+//! so the layout matters as much as the cache policy: co-activated
+//! neurons should live in the same record, and frequently-activated
+//! neurons should occupy low cluster ids (the residency layer's hot
+//! prefix).
+//!
+//! [`ClusterLayout::co_activation`] estimates both signals the same way
+//! RIPPLE does, from the weights alone: K seeded unit-RMS probe inputs
+//! are pushed through every gate row, giving each neuron a K-bit
+//! activation signature (bit k = "fired on probe k") whose popcount
+//! estimates its activation probability. Neurons are ordered hottest
+//! first, then clusters are filled greedily — each cluster seeds with the
+//! hottest unassigned neuron and pulls the most signature-similar
+//! (smallest Hamming distance) peers from a bounded look-ahead window.
+//!
+//! The layout is a pure permutation: every neuron appears in exactly one
+//! cluster slot, so streaming a cluster record always yields the exact
+//! bundles the dense path would have used — the byte-identical-streams
+//! guarantee does not depend on how good the layout is, only the I/O
+//! efficiency does.
+
+use anyhow::{ensure, Result};
+
+use crate::model::{ModelDims, Weights};
+use crate::util::prng::Rng;
+
+/// Padding marker for unused slots in a partial trailing cluster.
+pub const NO_NEURON: u32 = u32::MAX;
+
+/// Per-layer permutation mapping cluster slots to neuron ids.
+#[derive(Debug, Clone)]
+pub struct ClusterLayout {
+    pub cluster_neurons: usize,
+    pub inter: usize,
+    /// `perm[layer][slot]` = neuron id occupying that slot (slot `s`
+    /// belongs to cluster `s / cluster_neurons`), or [`NO_NEURON`] for
+    /// the zero-padded tail of the last cluster.
+    pub perm: Vec<Vec<u32>>,
+    /// Inverse: `slot_of[layer][neuron]` = slot index.
+    slot_of: Vec<Vec<u32>>,
+}
+
+impl ClusterLayout {
+    /// Neurons stay in index order: cluster `c` holds neurons
+    /// `c*cluster_neurons ..`. The layout the simulation engine uses
+    /// (its activation model already draws hot-first ids) and the
+    /// fallback when no weights are available to probe.
+    pub fn identity(
+        layers: usize,
+        inter: usize,
+        cluster_neurons: usize,
+    ) -> ClusterLayout {
+        let cn = cluster_neurons.max(1);
+        let slots = inter.div_ceil(cn) * cn;
+        let one: Vec<u32> = (0..slots as u32)
+            .map(|s| if (s as usize) < inter { s } else { NO_NEURON })
+            .collect();
+        let perm = vec![one; layers];
+        // identity is a valid permutation by construction
+        ClusterLayout::from_perm(perm, inter, cn).unwrap_or(ClusterLayout {
+            cluster_neurons: cn,
+            inter,
+            perm: Vec::new(),
+            slot_of: Vec::new(),
+        })
+    }
+
+    /// RIPPLE-style layout: probe the gate rows with `probes` (≤ 64)
+    /// seeded unit-RMS inputs, order neurons by estimated activation
+    /// probability, and pack signature-similar neurons into shared
+    /// clusters. Deterministic in `seed`.
+    pub fn co_activation(
+        dims: &ModelDims,
+        weights: &Weights,
+        cluster_neurons: usize,
+        probes: usize,
+        seed: u64,
+    ) -> ClusterLayout {
+        let cn = cluster_neurons.max(1);
+        let h = dims.hidden;
+        let k = probes.clamp(1, 64);
+        let rms = (1.0 / (h.max(1) as f64).sqrt()) as f32;
+        let mut rng = Rng::new(seed);
+        let mut perm = Vec::with_capacity(dims.layers);
+        for l in 0..dims.layers {
+            let mut lr = rng.fork(l as u64 + 1);
+            let mut probe_x = vec![vec![0f32; h]; k];
+            for x in &mut probe_x {
+                lr.fill_normal(x, rms);
+            }
+            // K-bit activation signature + popcount per neuron
+            let mut sig = vec![0u64; dims.inter];
+            let mut hits = vec![0u32; dims.inter];
+            for n in 0..dims.inter {
+                // bundle layout: [gate(H) | up(H) | bias | down(H)]
+                let bundle = weights.bundle(l, n);
+                let (gate, bias) = (&bundle[..h], bundle[2 * h]);
+                for (bit, x) in probe_x.iter().enumerate() {
+                    let pre: f32 = gate
+                        .iter()
+                        .zip(x.iter())
+                        .map(|(a, b)| a * b)
+                        .sum::<f32>()
+                        + bias;
+                    if pre > 0.0 {
+                        sig[n] |= 1 << bit;
+                        hits[n] += 1;
+                    }
+                }
+            }
+            // hottest first; ties broken by id for determinism
+            let mut order: Vec<u32> = (0..dims.inter as u32).collect();
+            order.sort_by(|&a, &b| {
+                hits[b as usize].cmp(&hits[a as usize]).then(a.cmp(&b))
+            });
+            perm.push(pack_layer(&order, &sig, dims.inter, cn));
+        }
+        // the greedy packer emits a permutation by construction
+        ClusterLayout::from_perm(perm, dims.inter, cn).unwrap_or_else(|_| {
+            ClusterLayout::identity(dims.layers, dims.inter, cn)
+        })
+    }
+
+    /// Validate an externally-supplied permutation (e.g. read back from a
+    /// packed store file) and build the inverse index.
+    pub fn from_perm(
+        perm: Vec<Vec<u32>>,
+        inter: usize,
+        cluster_neurons: usize,
+    ) -> Result<ClusterLayout> {
+        let cn = cluster_neurons.max(1);
+        let slots = inter.div_ceil(cn) * cn;
+        let mut slot_of = Vec::with_capacity(perm.len());
+        for (l, layer) in perm.iter().enumerate() {
+            ensure!(
+                layer.len() == slots,
+                "layer {l}: {} slots in permutation table, expected {slots}",
+                layer.len()
+            );
+            let mut inv = vec![NO_NEURON; inter];
+            for (s, &n) in layer.iter().enumerate() {
+                if n == NO_NEURON {
+                    continue;
+                }
+                ensure!(
+                    (n as usize) < inter,
+                    "layer {l} slot {s}: neuron {n} out of range {inter}"
+                );
+                ensure!(
+                    inv[n as usize] == NO_NEURON,
+                    "layer {l}: neuron {n} appears in two cluster slots"
+                );
+                inv[n as usize] = s as u32;
+            }
+            ensure!(
+                inv.iter().all(|&s| s != NO_NEURON),
+                "layer {l}: permutation table does not cover every neuron"
+            );
+            slot_of.push(inv);
+        }
+        Ok(ClusterLayout { cluster_neurons: cn, inter, perm, slot_of })
+    }
+
+    pub fn layers(&self) -> usize {
+        self.perm.len()
+    }
+
+    pub fn clusters_per_layer(&self) -> usize {
+        match self.perm.first() {
+            Some(p) => p.len() / self.cluster_neurons,
+            None => 0,
+        }
+    }
+
+    /// Cluster (layer-local id) holding `neuron`.
+    pub fn cluster_of(&self, layer: usize, neuron: usize) -> u32 {
+        (self.slot_of[layer][neuron] as usize / self.cluster_neurons) as u32
+    }
+
+    /// Slot index of `neuron` *within* its cluster record.
+    pub fn slot_in_cluster(&self, layer: usize, neuron: usize) -> usize {
+        self.slot_of[layer][neuron] as usize % self.cluster_neurons
+    }
+
+    /// The neuron ids occupying `cluster`'s record, in slot order
+    /// ([`NO_NEURON`] entries are zero padding).
+    pub fn neurons_of(&self, layer: usize, cluster: u32) -> &[u32] {
+        let lo = cluster as usize * self.cluster_neurons;
+        &self.perm[layer][lo..lo + self.cluster_neurons]
+    }
+}
+
+/// Greedy cluster fill for one layer: seed each cluster with the hottest
+/// unassigned neuron, then take the most signature-similar unassigned
+/// neurons from a bounded window of the hotness order (full rescan as a
+/// fallback, so every cluster fills while neurons remain — only the last
+/// cluster can be partial).
+fn pack_layer(order: &[u32], sig: &[u64], inter: usize, cn: usize) -> Vec<u32> {
+    let clusters = inter.div_ceil(cn);
+    let mut perm = vec![NO_NEURON; clusters * cn];
+    let mut assigned = vec![false; inter];
+    let window = cn * 4;
+    let mut cursor = 0usize;
+    for c in 0..clusters {
+        while cursor < order.len() && assigned[order[cursor] as usize] {
+            cursor += 1;
+        }
+        let Some(&seed_n) = order.get(cursor) else { break };
+        assigned[seed_n as usize] = true;
+        perm[c * cn] = seed_n;
+        for filled in 1..cn {
+            let pick = best_peer(sig[seed_n as usize], sig, order, &assigned,
+                                 cursor, window)
+                .or_else(|| best_peer(sig[seed_n as usize], sig, order,
+                                      &assigned, cursor, order.len()));
+            let Some(pick) = pick else { break };
+            assigned[pick as usize] = true;
+            perm[c * cn + filled] = pick;
+        }
+    }
+    perm
+}
+
+/// Most co-activated (smallest Hamming distance to `seed_sig`) unassigned
+/// neuron among `order[cursor..cursor+window]`; ties go to the hotter
+/// (earlier-ordered) candidate.
+fn best_peer(
+    seed_sig: u64,
+    sig: &[u64],
+    order: &[u32],
+    assigned: &[bool],
+    cursor: usize,
+    window: usize,
+) -> Option<u32> {
+    let mut best: Option<(u32, u32)> = None; // (hamming, id)
+    for &cand in order.iter().skip(cursor).take(window) {
+        if assigned[cand as usize] {
+            continue;
+        }
+        let d = (seed_sig ^ sig[cand as usize]).count_ones();
+        let better = match best {
+            None => true,
+            Some((bd, _)) => d < bd,
+        };
+        if better {
+            best = Some((d, cand));
+        }
+    }
+    best.map(|(_, id)| id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::offload::store::tests::tiny_dims;
+
+    fn dims_and_weights() -> (ModelDims, Weights) {
+        let dims = tiny_dims();
+        let w = Weights::generate(&dims, 7);
+        (dims, w)
+    }
+
+    #[test]
+    fn identity_layout_is_a_valid_permutation() {
+        let l = ClusterLayout::identity(2, 10, 4);
+        assert_eq!(l.clusters_per_layer(), 3);
+        for layer in 0..2 {
+            for n in 0..10 {
+                let c = l.cluster_of(layer, n);
+                let s = l.slot_in_cluster(layer, n);
+                assert_eq!(l.neurons_of(layer, c)[s], n as u32);
+                assert_eq!(c as usize, n / 4);
+            }
+            // trailing padding slots are marked
+            assert_eq!(l.neurons_of(layer, 2)[2..], [NO_NEURON, NO_NEURON]);
+        }
+    }
+
+    #[test]
+    fn co_activation_layout_is_a_valid_permutation_and_deterministic() {
+        let (dims, w) = dims_and_weights();
+        let a = ClusterLayout::co_activation(&dims, &w, 8, 32, 13);
+        let b = ClusterLayout::co_activation(&dims, &w, 8, 32, 13);
+        assert_eq!(a.perm, b.perm, "layout must be deterministic in seed");
+        assert_eq!(a.layers(), dims.layers);
+        assert_eq!(a.clusters_per_layer(), dims.inter.div_ceil(8));
+        // permutation property: every neuron in exactly one slot
+        for layer in 0..dims.layers {
+            let mut seen = vec![false; dims.inter];
+            for c in 0..a.clusters_per_layer() as u32 {
+                for &n in a.neurons_of(layer, c) {
+                    if n != NO_NEURON {
+                        assert!(!seen[n as usize]);
+                        seen[n as usize] = true;
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
+            // round trip through the inverse index
+            for n in 0..dims.inter {
+                let c = a.cluster_of(layer, n);
+                let s = a.slot_in_cluster(layer, n);
+                assert_eq!(a.neurons_of(layer, c)[s], n as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn from_perm_rejects_duplicates_and_gaps() {
+        // neuron 0 twice, neuron 1 missing
+        let bad = vec![vec![0u32, 0, 2, 3]];
+        assert!(ClusterLayout::from_perm(bad, 4, 2).is_err());
+        let short = vec![vec![0u32, 1]];
+        assert!(ClusterLayout::from_perm(short, 4, 2).is_err());
+        let ok = vec![vec![2u32, 0, 3, 1]];
+        let l = ClusterLayout::from_perm(ok, 4, 2).unwrap();
+        assert_eq!(l.cluster_of(0, 2), 0);
+        assert_eq!(l.cluster_of(0, 1), 1);
+        assert_eq!(l.slot_in_cluster(0, 3), 0);
+    }
+}

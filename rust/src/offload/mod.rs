@@ -1,0 +1,291 @@
+//! Neuron offload engine: predictor-gated, flash-backed FFN cluster
+//! streaming (§4.2–§4.3).
+//!
+//! The subsystem has three parts:
+//!
+//! - [`store`]: the cluster-granular flash file ([`NeuronStore`], built
+//!   offline by `pi2 offload-pack`) read through the UFS-throttled
+//!   storage backend;
+//! - [`layout`]: the RIPPLE-style co-activation ordering that decides
+//!   which neurons share a record ([`ClusterLayout`]);
+//! - this module: [`OffloadPolicy`], the per-step residency + routing
+//!   planner both engines call with the predicted-active neuron set.
+//!
+//! The policy drives the existing segmented [`NeuronCache`] at *cluster*
+//! granularity — the hot prefix of clusters is pinned resident, cold
+//! clusters share one cross-layer LRU bounded by the resident budget —
+//! and classifies each needed cluster dense (≥ threshold of its neurons
+//! active → the batched "NPU" path) or sparse (CPU path), the routing
+//! split of §4.1.2. Classification and residency affect *which records
+//! move and where the work is billed*, never which neurons are computed:
+//! that set comes from the predictor alone, which is what makes
+//! offload-on and offload-off token streams byte-identical.
+
+pub mod layout;
+pub mod store;
+
+pub use layout::{ClusterLayout, NO_NEURON};
+pub use store::NeuronStore;
+
+use crate::cache::{Access, NeuronCache};
+use crate::serve::EngineStats;
+use crate::xpu::Unit;
+
+/// Shape + budget of a cluster-granular residency domain.
+#[derive(Debug, Clone)]
+pub struct OffloadConfig {
+    pub layers: usize,
+    pub clusters_per_layer: usize,
+    pub cluster_neurons: usize,
+    /// Always-resident cluster prefix per layer (the hot set's clusters).
+    pub hot_clusters: usize,
+    /// Cold-cluster LRU capacity, in clusters, across all layers — the
+    /// resident-neuron budget expressed in the unit of I/O.
+    pub resident_clusters: usize,
+    /// A cluster with at least this fraction of its neurons active is
+    /// dense: it rides the batched NPU path; sparser clusters take the
+    /// CPU gather path (§4.1.2).
+    pub dense_threshold: f64,
+    /// Bytes moved per streamed cluster record.
+    pub record_bytes: u64,
+}
+
+/// What one layer's decode step must do about its active clusters.
+#[derive(Debug, Default)]
+pub struct OffloadPlan {
+    /// Needed clusters already resident (hot prefix or cold LRU hit).
+    pub resident: Vec<u32>,
+    /// Needed clusters to stream from flash this step, ascending.
+    pub fetch: Vec<u32>,
+    /// Global cluster ids the LRU dropped to make room (owners of
+    /// record buffers must free them).
+    pub evicted: Vec<u32>,
+    /// Dense-classified clusters (NPU path).
+    pub dense: Vec<u32>,
+    /// Sparse-classified clusters (CPU path).
+    pub sparse: Vec<u32>,
+}
+
+/// Counters the serving layer surfaces (`stats` command, `ServeReport`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OffloadStats {
+    pub cluster_hits: u64,
+    pub cluster_misses: u64,
+    pub bytes_streamed: u64,
+    /// Seconds the stream spent on cluster I/O.
+    pub io_s: f64,
+    /// Portion of `io_s` hidden behind compute by the pipeline.
+    pub io_hidden_s: f64,
+    /// Exposed stall: I/O the compute path had to wait out.
+    pub stall_s: f64,
+    pub dense_clusters: u64,
+    pub sparse_clusters: u64,
+}
+
+impl OffloadStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.cluster_hits + self.cluster_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cluster_hits as f64 / total as f64
+        }
+    }
+
+    /// Fraction of cluster I/O hidden behind compute (1.0 = fully
+    /// overlapped, 0.0 = every byte stalled the step).
+    pub fn overlap_ratio(&self) -> f64 {
+        if self.io_s <= 0.0 {
+            0.0
+        } else {
+            (self.io_hidden_s / self.io_s).clamp(0.0, 1.0)
+        }
+    }
+
+    /// Copy into the engine-stats surface the coordinator diffs.
+    pub fn export(&self, st: &mut EngineStats) {
+        st.offload_cluster_hits = self.cluster_hits;
+        st.offload_cluster_misses = self.cluster_misses;
+        st.offload_bytes_streamed = self.bytes_streamed;
+        st.offload_io_s = self.io_s;
+        st.offload_io_hidden_s = self.io_hidden_s;
+        st.offload_stall_s = self.stall_s;
+    }
+}
+
+/// Per-step residency + routing planner over the segmented neuron cache,
+/// at cluster granularity. One instance per engine; both engines feed it
+/// the same predicted-active sets, so hit/miss arithmetic is
+/// equivalence-testable without PJRT.
+#[derive(Debug)]
+pub struct OffloadPolicy {
+    cache: NeuronCache,
+    cfg: OffloadConfig,
+    pub stats: OffloadStats,
+}
+
+impl OffloadPolicy {
+    pub fn new(cfg: OffloadConfig) -> OffloadPolicy {
+        let cache = NeuronCache::new(
+            cfg.layers,
+            cfg.clusters_per_layer,
+            cfg.hot_clusters.min(cfg.clusters_per_layer),
+            cfg.resident_clusters,
+        );
+        OffloadPolicy { cache, cfg, stats: OffloadStats::default() }
+    }
+
+    pub fn config(&self) -> &OffloadConfig {
+        &self.cfg
+    }
+
+    /// Global id of a layer-local cluster (the key record owners index
+    /// their buffers by — matches `OffloadPlan::evicted`).
+    pub fn global_id(&self, layer: usize, cluster: u32) -> u32 {
+        self.cache.id(layer, cluster as usize)
+    }
+
+    /// Which execution unit a cluster with `active` of its neurons
+    /// predicted rides: dense clusters batch well on the NPU, sparse
+    /// ones gather on the CPU (§4.1.2).
+    pub fn route(&self, active: usize) -> Unit {
+        if (active as f64)
+            >= self.cfg.dense_threshold * self.cfg.cluster_neurons as f64
+        {
+            Unit::Npu
+        } else {
+            Unit::Cpu
+        }
+    }
+
+    /// Plan one layer's step: `active` is (layer-local cluster id,
+    /// predicted-active neuron count) pairs in ascending cluster order.
+    /// Touches the residency LRU, so call exactly once per layer per
+    /// step.
+    pub fn plan_layer<I>(&mut self, layer: usize, active: I) -> OffloadPlan
+    where
+        I: IntoIterator<Item = (u32, usize)>,
+    {
+        let mut plan = OffloadPlan::default();
+        for (cluster, count) in active {
+            match self.cache.access(layer, cluster as usize) {
+                Access::Hit => plan.resident.push(cluster),
+                Access::Miss { evicted } => {
+                    plan.fetch.push(cluster);
+                    if let Some(gone) = evicted {
+                        plan.evicted.push(gone);
+                    }
+                }
+            }
+            if self.route(count) == Unit::Npu {
+                plan.dense.push(cluster);
+            } else {
+                plan.sparse.push(cluster);
+            }
+        }
+        self.stats.cluster_hits += plan.resident.len() as u64;
+        self.stats.cluster_misses += plan.fetch.len() as u64;
+        self.stats.bytes_streamed +=
+            plan.fetch.len() as u64 * self.cfg.record_bytes;
+        self.stats.dense_clusters += plan.dense.len() as u64;
+        self.stats.sparse_clusters += plan.sparse.len() as u64;
+        plan
+    }
+
+    /// Account one step's cluster-stream timing: `io_s` seconds of I/O of
+    /// which `hidden_s` ran under compute; the rest is exposed stall.
+    pub fn record_io(&mut self, io_s: f64, hidden_s: f64) {
+        let hidden = hidden_s.clamp(0.0, io_s.max(0.0));
+        self.stats.io_s += io_s.max(0.0);
+        self.stats.io_hidden_s += hidden;
+        self.stats.stall_s += (io_s - hidden).max(0.0);
+    }
+
+    /// Residency hit/miss counters of the underlying segmented cache.
+    pub fn cache_counts(&self) -> (u64, u64) {
+        (self.cache.hits, self.cache.misses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(hot: usize, resident: usize) -> OffloadPolicy {
+        OffloadPolicy::new(OffloadConfig {
+            layers: 2,
+            clusters_per_layer: 8,
+            cluster_neurons: 4,
+            hot_clusters: hot,
+            resident_clusters: resident,
+            dense_threshold: 0.5,
+            record_bytes: 1024,
+        })
+    }
+
+    #[test]
+    fn hot_prefix_always_resident_cold_misses_then_hits() {
+        let mut p = policy(2, 4);
+        let plan = p.plan_layer(0, [(0u32, 4), (1, 1), (5, 2)]);
+        // clusters 0,1 are in the hot prefix; 5 is a cold first touch
+        assert_eq!(plan.resident, vec![0, 1]);
+        assert_eq!(plan.fetch, vec![5]);
+        // second step: 5 is now resident
+        let plan = p.plan_layer(0, [(5u32, 2)]);
+        assert_eq!(plan.resident, vec![5]);
+        assert!(plan.fetch.is_empty());
+        assert_eq!(p.stats.cluster_hits, 3);
+        assert_eq!(p.stats.cluster_misses, 1);
+        assert_eq!(p.stats.bytes_streamed, 1024);
+    }
+
+    #[test]
+    fn resident_budget_evicts_lru_and_reports_owners() {
+        let mut p = policy(0, 2);
+        let a = p.global_id(0, 2);
+        p.plan_layer(0, [(2u32, 1)]);
+        p.plan_layer(0, [(3u32, 1)]);
+        // third cold cluster exceeds the 2-cluster budget: the oldest
+        // (cluster 2) is evicted and its global id handed back
+        let plan = p.plan_layer(1, [(4u32, 1)]);
+        assert_eq!(plan.evicted, vec![a]);
+        // cluster 2 is cold again
+        let plan = p.plan_layer(0, [(2u32, 1)]);
+        assert_eq!(plan.fetch, vec![2]);
+    }
+
+    #[test]
+    fn dense_sparse_routing_follows_threshold() {
+        let mut p = policy(0, 8);
+        assert_eq!(p.route(4), Unit::Npu);
+        assert_eq!(p.route(2), Unit::Npu); // 2/4 == 0.5 threshold
+        assert_eq!(p.route(1), Unit::Cpu);
+        let plan = p.plan_layer(0, [(0u32, 4), (1, 1), (2, 3)]);
+        assert_eq!(plan.dense, vec![0, 2]);
+        assert_eq!(plan.sparse, vec![1]);
+        assert_eq!(p.stats.dense_clusters, 2);
+        assert_eq!(p.stats.sparse_clusters, 1);
+    }
+
+    #[test]
+    fn io_accounting_splits_hidden_and_stall() {
+        let mut p = policy(0, 8);
+        p.record_io(2.0, 1.5);
+        p.record_io(1.0, 2.0); // hidden clamps to io
+        assert!((p.stats.io_s - 3.0).abs() < 1e-12);
+        assert!((p.stats.io_hidden_s - 2.5).abs() < 1e-12);
+        assert!((p.stats.stall_s - 0.5).abs() < 1e-12);
+        assert!((p.stats.overlap_ratio() - 2.5 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_budget_streams_every_cold_cluster_every_step() {
+        let mut p = policy(1, 0);
+        for _ in 0..3 {
+            let plan = p.plan_layer(0, [(0u32, 1), (6, 1)]);
+            assert_eq!(plan.resident, vec![0]);
+            assert_eq!(plan.fetch, vec![6]);
+        }
+        assert_eq!(p.stats.hit_rate(), 0.5);
+    }
+}

@@ -1,0 +1,365 @@
+//! `NeuronStore`: the flash-resident cluster file behind the offload path.
+//!
+//! The bundle-layout weight file (`model::weights::WeightFile`) is laid
+//! out per neuron in index order — right for the hot prefix's one big
+//! sequential prefill read, wrong for decode-time cold streaming, where
+//! the unit of I/O is the *cluster* (§4.3) and the neurons worth
+//! co-locating are the co-activated ones, not the adjacent ones. `pi2
+//! offload-pack` rewrites the FFN weights into this store offline;
+//! serving opens it read-only through [`FlashFile`]/[`ThrottledFile`] so
+//! decode experiences phone-flash latencies when throttling is on.
+//!
+//! File format (all integers little-endian):
+//!
+//! ```text
+//! magic    8 bytes   b"PI2NCLU1"
+//! header   4 × u64   hidden, inter, layers, cluster_neurons
+//! perm     layers × clusters_per_layer × cluster_neurons × u32
+//!          cluster-slot → neuron id tables ([`NO_NEURON`] = padding)
+//! records  layers × clusters_per_layer fixed-size cluster records,
+//!          each cluster_neurons × (3·hidden+1) f32 bundles in slot
+//!          order (gate row | up row | bias | down column), padding
+//!          slots zero-filled
+//! ```
+//!
+//! Records are fixed-size and cluster-aligned, so a residency miss is
+//! exactly one positioned read of `record_bytes()` at
+//! [`NeuronStore::cluster_offset`] — the random-read block size the UFS
+//! model's bandwidth curves key on.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::CoreClass;
+use crate::model::{ModelDims, Weights};
+use crate::offload::layout::{ClusterLayout, NO_NEURON};
+use crate::storage::{FlashFile, ThrottledFile, UfsModel};
+
+pub const STORE_MAGIC: &[u8; 8] = b"PI2NCLU1";
+
+const HEADER_BYTES: u64 = 8 + 4 * 8;
+
+/// Read handle over a packed cluster store.
+#[derive(Debug)]
+pub struct NeuronStore {
+    file: ThrottledFile,
+    pub hidden: usize,
+    pub inter: usize,
+    pub layers: usize,
+    layout: ClusterLayout,
+    records_base: u64,
+}
+
+impl NeuronStore {
+    /// Write the cluster store for `weights` under `layout`. Returns the
+    /// file length in bytes.
+    pub fn pack(
+        dims: &ModelDims,
+        weights: &Weights,
+        layout: &ClusterLayout,
+        path: &Path,
+    ) -> Result<u64> {
+        ensure!(
+            layout.layers() == dims.layers && layout.inter == dims.inter,
+            "layout shape {}x{} does not match model {}x{}",
+            layout.layers(),
+            layout.inter,
+            dims.layers,
+            dims.inter
+        );
+        let bundle_floats = 3 * dims.hidden + 1;
+        let file = File::create(path)
+            .with_context(|| format!("create cluster store {}", path.display()))?;
+        let mut w = BufWriter::new(file);
+        w.write_all(STORE_MAGIC)?;
+        for v in [
+            dims.hidden as u64,
+            dims.inter as u64,
+            dims.layers as u64,
+            layout.cluster_neurons as u64,
+        ] {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        for layer in &layout.perm {
+            for &slot in layer {
+                w.write_all(&slot.to_le_bytes())?;
+            }
+        }
+        let zero_bundle = vec![0f32; bundle_floats];
+        let mut written = HEADER_BYTES
+            + (layout.layers() * layout.clusters_per_layer()
+                * layout.cluster_neurons) as u64
+                * 4;
+        for l in 0..dims.layers {
+            for c in 0..layout.clusters_per_layer() as u32 {
+                for &n in layout.neurons_of(l, c) {
+                    let bundle;
+                    let src = if n == NO_NEURON {
+                        &zero_bundle
+                    } else {
+                        bundle = weights.bundle(l, n as usize);
+                        ensure!(
+                            bundle.len() == bundle_floats,
+                            "layer {l} neuron {n}: bundle of {} floats, \
+                             expected {bundle_floats}",
+                            bundle.len()
+                        );
+                        &bundle
+                    };
+                    for v in src {
+                        w.write_all(&v.to_le_bytes())?;
+                    }
+                    written += bundle_floats as u64 * 4;
+                }
+            }
+        }
+        w.flush()?;
+        Ok(written)
+    }
+
+    /// Open a packed store for reading through the UFS-throttled backend
+    /// (callers disable throttling via [`NeuronStore::set_throttle`]).
+    pub fn open(path: &Path, model: UfsModel, core: CoreClass) -> Result<Self> {
+        let file = FlashFile::open(path)?;
+        let mut head = [0u8; HEADER_BYTES as usize];
+        file.read_at(0, &mut head)
+            .with_context(|| format!("read store header {}", path.display()))?;
+        ensure!(
+            &head[..8] == STORE_MAGIC,
+            "{} is not a cluster store (bad magic)",
+            path.display()
+        );
+        let u = |i: usize| {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&head[8 + i * 8..16 + i * 8]);
+            u64::from_le_bytes(b) as usize
+        };
+        let (hidden, inter, layers, cluster_neurons) = (u(0), u(1), u(2), u(3));
+        ensure!(
+            hidden > 0 && inter > 0 && layers > 0 && cluster_neurons > 0,
+            "{}: degenerate store header {hidden}x{inter}x{layers}/{cluster_neurons}",
+            path.display()
+        );
+        let clusters = inter.div_ceil(cluster_neurons);
+        let slots = clusters * cluster_neurons;
+        let mut perm = Vec::with_capacity(layers);
+        for l in 0..layers {
+            let mut bytes = vec![0u8; slots * 4];
+            let off = HEADER_BYTES + (l * slots) as u64 * 4;
+            file.read_at(off, &mut bytes).with_context(|| {
+                format!("read layer {l} permutation table of {}", path.display())
+            })?;
+            perm.push(
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            );
+        }
+        let layout = ClusterLayout::from_perm(perm, inter, cluster_neurons)
+            .with_context(|| {
+                format!("{}: corrupt permutation tables", path.display())
+            })?;
+        let records_base = HEADER_BYTES + (layers * slots) as u64 * 4;
+        let expect =
+            records_base + (layers * slots * (3 * hidden + 1)) as u64 * 4;
+        ensure!(
+            file.len() == expect,
+            "{}: {} bytes on disk, header implies {expect}",
+            path.display(),
+            file.len()
+        );
+        Ok(NeuronStore {
+            file: ThrottledFile::new(file, model, core),
+            hidden,
+            inter,
+            layers,
+            layout,
+            records_base,
+        })
+    }
+
+    pub fn layout(&self) -> &ClusterLayout {
+        &self.layout
+    }
+
+    pub fn clusters_per_layer(&self) -> usize {
+        self.layout.clusters_per_layer()
+    }
+
+    /// Floats per neuron bundle: gate row + up row + bias + down column.
+    pub fn bundle_floats(&self) -> usize {
+        3 * self.hidden + 1
+    }
+
+    /// Floats per cluster record.
+    pub fn record_floats(&self) -> usize {
+        self.layout.cluster_neurons * self.bundle_floats()
+    }
+
+    /// Bytes per cluster record — the offload path's random-read block
+    /// size.
+    pub fn record_bytes(&self) -> u64 {
+        self.record_floats() as u64 * 4
+    }
+
+    pub fn cluster_offset(&self, layer: usize, cluster: u32) -> u64 {
+        let per_layer = self.clusters_per_layer() as u64;
+        self.records_base
+            + (layer as u64 * per_layer + cluster as u64) * self.record_bytes()
+    }
+
+    /// One positioned read of the whole cluster record (slot-ordered
+    /// bundles; use [`ClusterLayout::slot_in_cluster`] to index).
+    pub fn read_cluster(&self, layer: usize, cluster: u32) -> Result<Vec<f32>> {
+        ensure!(
+            layer < self.layers && (cluster as usize) < self.clusters_per_layer(),
+            "cluster {cluster} of layer {layer} outside a {}x{} store",
+            self.layers,
+            self.clusters_per_layer()
+        );
+        self.file
+            .read_f32s(self.cluster_offset(layer, cluster), self.record_floats())
+    }
+
+    /// The bundle of `slot` within a record returned by `read_cluster`.
+    pub fn bundle_in_record<'a>(&self, record: &'a [f32], slot: usize) -> &'a [f32] {
+        let bf = self.bundle_floats();
+        &record[slot * bf..(slot + 1) * bf]
+    }
+
+    /// Disable (or re-enable) the UFS latency injection on reads.
+    pub fn set_throttle(&mut self, on: bool) {
+        self.file.throttle = on;
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::config::oneplus_12;
+    use crate::storage::FlashReadError;
+
+    /// Small dims shared by the offload test modules.
+    pub(crate) fn tiny_dims() -> ModelDims {
+        ModelDims {
+            hidden: 16,
+            inter: 32,
+            layers: 2,
+            heads: 4,
+            kv_heads: 2,
+            vocab: 32,
+            seq_max: 8,
+            prefill_chunk: 4,
+            batches: vec![1],
+            hot_ks: vec![16],
+            kv_block: 4,
+            kv_blocks: 3,
+        }
+    }
+
+    fn tmppath(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!(
+            "pi2_store_{tag}_{}",
+            std::process::id()
+        ))
+    }
+
+    fn open_raw(path: &Path) -> NeuronStore {
+        let mut s =
+            NeuronStore::open(path, UfsModel::new(oneplus_12().ufs),
+                              CoreClass::Big)
+                .unwrap();
+        s.set_throttle(false);
+        s
+    }
+
+    #[test]
+    fn pack_open_roundtrip_preserves_every_bundle() {
+        let dims = tiny_dims();
+        let w = Weights::generate(&dims, 11);
+        for (tag, layout) in [
+            ("id", ClusterLayout::identity(dims.layers, dims.inter, 8)),
+            ("coact", ClusterLayout::co_activation(&dims, &w, 8, 32, 11)),
+        ] {
+            let path = tmppath(tag);
+            let len = NeuronStore::pack(&dims, &w, &layout, &path).unwrap();
+            assert_eq!(len, std::fs::metadata(&path).unwrap().len());
+            let store = open_raw(&path);
+            assert_eq!(
+                (store.hidden, store.inter, store.layers),
+                (dims.hidden, dims.inter, dims.layers)
+            );
+            assert_eq!(store.layout().perm, layout.perm);
+            for l in 0..dims.layers {
+                for n in 0..dims.inter {
+                    let c = store.layout().cluster_of(l, n);
+                    let s = store.layout().slot_in_cluster(l, n);
+                    let rec = store.read_cluster(l, c).unwrap();
+                    assert_eq!(
+                        store.bundle_in_record(&rec, s),
+                        &w.bundle(l, n)[..],
+                        "layer {l} neuron {n} via cluster {c} slot {s} ({tag})"
+                    );
+                }
+            }
+            std::fs::remove_file(path).ok();
+        }
+    }
+
+    #[test]
+    fn partial_trailing_cluster_is_zero_padded() {
+        let mut dims = tiny_dims();
+        dims.inter = 30; // 30 neurons over 8-neuron clusters → last holds 6
+        let w = Weights::generate(&dims, 3);
+        let layout = ClusterLayout::identity(dims.layers, dims.inter, 8);
+        let path = tmppath("pad");
+        NeuronStore::pack(&dims, &w, &layout, &path).unwrap();
+        let store = open_raw(&path);
+        assert_eq!(store.clusters_per_layer(), 4);
+        let rec = store.read_cluster(0, 3).unwrap();
+        // slots 6..8 are padding: all-zero bundles
+        assert!(store.bundle_in_record(&rec, 6).iter().all(|&v| v == 0.0));
+        assert!(store.bundle_in_record(&rec, 7).iter().all(|&v| v == 0.0));
+        // slot 5 holds neuron 29
+        assert_eq!(store.bundle_in_record(&rec, 5), &w.bundle(0, 29)[..]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn truncated_store_fails_typed_at_open_or_read() {
+        let dims = tiny_dims();
+        let w = Weights::generate(&dims, 5);
+        let layout = ClusterLayout::identity(dims.layers, dims.inter, 8);
+        let path = tmppath("trunc");
+        let len = NeuronStore::pack(&dims, &w, &layout, &path).unwrap();
+        // chop the last record: open's length check must reject it
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..(len - 64) as usize]).unwrap();
+        let err = NeuronStore::open(
+            &path, UfsModel::new(oneplus_12().ufs), CoreClass::Big)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("on disk"), "{err:#}");
+        // and a raw out-of-range read through the backend stays typed
+        let f = FlashFile::open(&path).unwrap();
+        let mut buf = vec![0u8; 128];
+        let err = f.read_at(len - 64, &mut buf).unwrap_err();
+        assert!(err.downcast_ref::<FlashReadError>().is_some());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bad_magic_is_rejected() {
+        let path = tmppath("magic");
+        std::fs::write(&path, b"NOTASTORE_______________________________")
+            .unwrap();
+        let err = NeuronStore::open(
+            &path, UfsModel::new(oneplus_12().ufs), CoreClass::Big)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("bad magic"), "{err:#}");
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -192,7 +192,7 @@ fn schedule_des(
                     .iter()
                     .position(|&(_, s)| barrier_ok(s, gate_done))
                 {
-                    let (i, s) = ready_io.remove(pos).unwrap();
+                    let Some((i, s)) = ready_io.remove(pos) else { break };
                     let d = duration(&tasks[i], s);
                     io_free = false;
                     io_busy += d;
@@ -208,7 +208,7 @@ fn schedule_des(
                 else {
                     break;
                 };
-                let (i, s) = ready_c.remove(pos).unwrap();
+                let Some((i, s)) = ready_c.remove(pos) else { break };
                 let d = duration(&tasks[i], s);
                 if free_c == threads {
                     // compute was fully idle until now

@@ -213,6 +213,18 @@ pub struct EngineStats {
     pub decode_s: f64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Cluster-granular offload counters (all zero when the engine runs
+    /// without the `offload::OffloadPolicy` streaming path).
+    pub offload_cluster_hits: u64,
+    pub offload_cluster_misses: u64,
+    /// Bytes of cluster records streamed from flash.
+    pub offload_bytes_streamed: u64,
+    /// Engine seconds of cluster I/O.
+    pub offload_io_s: f64,
+    /// Portion of `offload_io_s` hidden behind compute.
+    pub offload_io_hidden_s: f64,
+    /// Exposed cluster-I/O stall the decode path waited out.
+    pub offload_stall_s: f64,
 }
 
 impl EngineStats {
@@ -231,6 +243,26 @@ impl EngineStats {
             0.0
         } else {
             self.decode_tokens as f64 / self.decode_s
+        }
+    }
+
+    /// Cluster-residency hit rate of the offload streaming path.
+    pub fn offload_hit_rate(&self) -> f64 {
+        let n = self.offload_cluster_hits + self.offload_cluster_misses;
+        if n == 0 {
+            0.0
+        } else {
+            self.offload_cluster_hits as f64 / n as f64
+        }
+    }
+
+    /// Fraction of cluster I/O hidden behind compute (0.0 when the
+    /// offload path never streamed).
+    pub fn offload_overlap_ratio(&self) -> f64 {
+        if self.offload_io_s <= 0.0 {
+            0.0
+        } else {
+            (self.offload_io_hidden_s / self.offload_io_s).clamp(0.0, 1.0)
         }
     }
 }

@@ -10,10 +10,55 @@ use std::os::unix::io::AsRawFd;
 use std::path::Path;
 use std::time::{Duration, Instant};
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{Context, Error, Result};
 
 use crate::config::CoreClass;
 use crate::storage::{IoPattern, UfsModel};
+
+/// What went wrong with a positioned read.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlashReadErrorKind {
+    /// The requested range extends past the end of the file.
+    OutOfRange,
+    /// `pread` returned 0 or -1 before the full range was read.
+    ShortRead,
+}
+
+/// Typed positioned-read failure: callers on the offload path (and the
+/// lint's typed-error discipline) need the exact failing range, not a
+/// formatted string — a `ShortRead` at a cluster-record offset means a
+/// truncated/corrupt store, an `OutOfRange` a caller arithmetic bug.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlashReadError {
+    pub kind: FlashReadErrorKind,
+    /// Byte offset the failing read started at (for `ShortRead`, the
+    /// first byte that could not be read).
+    pub offset: u64,
+    /// Bytes still requested at `offset`.
+    pub len: usize,
+    /// Total file length the range was checked against.
+    pub file_len: u64,
+}
+
+impl std::fmt::Display for FlashReadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.kind {
+            FlashReadErrorKind::OutOfRange => write!(
+                f,
+                "read past EOF: offset {} + {} bytes > file length {}",
+                self.offset, self.len, self.file_len
+            ),
+            FlashReadErrorKind::ShortRead => write!(
+                f,
+                "pread failed or hit EOF at offset {} ({} bytes still \
+                 unread of a {}-byte file)",
+                self.offset, self.len, self.file_len
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FlashReadError {}
 
 /// Positioned-read file handle (thread-safe: pread carries its own offset).
 #[derive(Debug)]
@@ -48,12 +93,14 @@ impl FlashFile {
     /// whose length bounds every byte `pread` may write.
     #[allow(unsafe_code)]
     pub fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
-        ensure!(
-            offset + buf.len() as u64 <= self.len,
-            "read past EOF: offset {offset} + {} > {}",
-            buf.len(),
-            self.len
-        );
+        if offset + buf.len() as u64 > self.len {
+            return Err(Error::new(FlashReadError {
+                kind: FlashReadErrorKind::OutOfRange,
+                offset,
+                len: buf.len(),
+                file_len: self.len,
+            }));
+        }
         let mut done = 0usize;
         while done < buf.len() {
             let n = unsafe {
@@ -64,7 +111,14 @@ impl FlashFile {
                     (offset + done as u64) as libc::off_t,
                 )
             };
-            ensure!(n > 0, "pread failed or hit EOF at {}", offset + done as u64);
+            if n <= 0 {
+                return Err(Error::new(FlashReadError {
+                    kind: FlashReadErrorKind::ShortRead,
+                    offset: offset + done as u64,
+                    len: buf.len() - done,
+                    file_len: self.len,
+                }));
+            }
             done += n as usize;
         }
         Ok(())
@@ -175,12 +229,20 @@ mod tests {
     }
 
     #[test]
-    fn read_past_eof_errors() {
+    fn read_past_eof_errors_are_typed_with_range_context() {
         let path = tmpfile(&[0u8; 8]);
         let f = FlashFile::open(&path).unwrap();
         let mut buf = [0u8; 16];
-        assert!(f.read_at(0, &mut buf).is_err());
-        assert!(f.read_at(9, &mut buf[..1]).is_err());
+        let err = f.read_at(0, &mut buf).unwrap_err();
+        let fre = err.downcast_ref::<FlashReadError>().unwrap();
+        assert_eq!(fre.kind, FlashReadErrorKind::OutOfRange);
+        assert_eq!((fre.offset, fre.len, fre.file_len), (0, 16, 8));
+        let err = f.read_at(9, &mut buf[..1]).unwrap_err();
+        let fre = err.downcast_ref::<FlashReadError>().unwrap();
+        assert_eq!(fre.kind, FlashReadErrorKind::OutOfRange);
+        assert_eq!((fre.offset, fre.len, fre.file_len), (9, 1, 8));
+        // the message still carries the range for humans
+        assert!(format!("{fre}").contains("offset 9"), "{fre}");
         std::fs::remove_file(path).ok();
     }
 

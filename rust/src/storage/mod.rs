@@ -16,7 +16,9 @@
 
 pub mod flash_file;
 
-pub use flash_file::{FlashFile, ThrottledFile};
+pub use flash_file::{
+    FlashFile, FlashReadError, FlashReadErrorKind, ThrottledFile,
+};
 
 use crate::config::{CoreClass, UfsConfig};
 
