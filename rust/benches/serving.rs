@@ -13,13 +13,25 @@
 //! admission stalls the in-flight streams for the newcomer's whole
 //! prompt; with `prefill_chunk = N` the prompt installs N tokens at a
 //! time between decode steps, bounding the stall.
+//!
+//! The concurrency scenario drives the real TCP serving path — accept
+//! loop, per-connection reader/writer threads, the shared admission
+//! queue — with 1/4/16 concurrent clients and records client-observed
+//! TTFT, server-side queue wait, and shed counts to
+//! `BENCH_serve_concurrency.json`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
 
 use powerinfer2::config::{bamboo_7b, oneplus_12, RuntimeConfig};
-use powerinfer2::coordinator::{Coordinator, ScheduleMode};
+use powerinfer2::coordinator::{Coordinator, ScheduleMode, Server};
 use powerinfer2::engine::SimEngine;
 use powerinfer2::serve::{Engine, InferenceRequest};
 use powerinfer2::trace::{mixed_length_mix, with_poisson_arrivals, Request, TaskKind};
 use powerinfer2::util::json::{arr, num, obj, s, Json};
+use powerinfer2::util::stats::Samples;
 
 fn main() {
     println!("# bench: serving scheduler (sim engine, mixed-length trace)");
@@ -182,4 +194,138 @@ fn main() {
     ]);
     std::fs::write("BENCH_decode_offload.json", format!("{out}\n")).unwrap();
     println!("wrote BENCH_decode_offload.json");
+
+    // concurrent connection serving over real sockets: N clients, each
+    // streaming a few requests back-to-back through the shared admission
+    // queue. The queue depth is kept tight (8) so the 16-client point
+    // actually exercises load shedding — shed requests are answered with
+    // a typed {"error","code":"shed"} line and retried by the client,
+    // which is the protocol's backpressure loop.
+    println!("# bench: concurrent connection serving (TCP, shared admission queue)");
+    const PER_CLIENT: usize = 4;
+    const QUEUE_DEPTH: usize = 8;
+    let mut rows = Vec::new();
+    for clients in [1usize, 4, 16] {
+        let cfg = RuntimeConfig { max_batch: 4, ..Default::default() };
+        let mut server =
+            Server::<SimEngine>::sim(oneplus_12(), bamboo_7b(), cfg);
+        server.set_limits(32, 0, QUEUE_DEPTH);
+        let (ready_tx, ready_rx) = mpsc::channel();
+        let server_thread = std::thread::spawn(move || {
+            server.run("127.0.0.1:0", Some(ready_tx)).unwrap();
+        });
+        let addr = ready_rx.recv().unwrap();
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                std::thread::spawn(move || {
+                    let mut conn = TcpStream::connect(addr).unwrap();
+                    let mut reader =
+                        BufReader::new(conn.try_clone().unwrap());
+                    let mut ttfts = Vec::new();
+                    let (mut tokens, mut sheds) = (0usize, 0usize);
+                    for r in 0..PER_CLIENT {
+                        let req = format!(
+                            "{{\"prompt\": \"client {c} request {r}\", \
+                             \"max_tokens\": 8, \"stream\": true}}"
+                        );
+                        let sent = Instant::now();
+                        let mut retries = 0usize;
+                        'attempt: loop {
+                            writeln!(conn, "{req}").unwrap();
+                            let mut first = true;
+                            loop {
+                                let mut line = String::new();
+                                assert!(
+                                    reader.read_line(&mut line).unwrap() > 0,
+                                    "server hung up mid-request"
+                                );
+                                let ev = Json::parse(&line).unwrap();
+                                if ev.get("error").as_str().is_some() {
+                                    // typed refusal: breathe and retry
+                                    sheds += 1;
+                                    retries += 1;
+                                    assert!(retries < 500, "shed forever");
+                                    std::thread::sleep(
+                                        Duration::from_millis(2),
+                                    );
+                                    continue 'attempt;
+                                }
+                                if first {
+                                    ttfts.push(
+                                        sent.elapsed().as_secs_f64() * 1e3,
+                                    );
+                                    first = false;
+                                }
+                                match ev.get("event").as_str() {
+                                    Some("token") => tokens += 1,
+                                    Some("done") => break 'attempt,
+                                    _ => {}
+                                }
+                            }
+                        }
+                    }
+                    (ttfts, tokens, sheds)
+                })
+            })
+            .collect();
+        let mut ttft = Samples::default();
+        let (mut tokens, mut client_sheds) = (0usize, 0usize);
+        for h in handles {
+            let (t, toks, sheds) = h.join().unwrap();
+            for v in t {
+                ttft.push(v);
+            }
+            tokens += toks;
+            client_sheds += sheds;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        // server-side queue percentiles and shed counter, then shutdown
+        let mut ctl = TcpStream::connect(addr).unwrap();
+        let mut creader = BufReader::new(ctl.try_clone().unwrap());
+        writeln!(ctl, "{{\"cmd\": \"stats\"}}").unwrap();
+        let mut line = String::new();
+        creader.read_line(&mut line).unwrap();
+        let stats = Json::parse(&line).unwrap();
+        writeln!(ctl, "{{\"cmd\": \"shutdown\"}}").unwrap();
+        let mut ack = String::new();
+        let _ = creader.read_line(&mut ack);
+        server_thread.join().unwrap();
+        let q = stats.get("queue");
+        let qw50 = q.get("wait_ms_p50").as_f64().unwrap_or(0.0);
+        let qw99 = q.get("wait_ms_p99").as_f64().unwrap_or(0.0);
+        let shed = q.get("shed").as_f64().unwrap_or(0.0);
+        let (t50, t99) =
+            (ttft.percentile(50.0), ttft.percentile(99.0));
+        let tok_s = tokens as f64 / wall.max(1e-9);
+        println!(
+            "clients {clients:>2}: {tok_s:>7.1} tok/s wall  TTFT p50 \
+             {t50:>6.1}ms p99 {t99:>6.1}ms  queue-wait p50 {qw50:>6.1}ms \
+             p99 {qw99:>6.1}ms  shed {shed:>3.0} (clients saw {client_sheds})"
+        );
+        rows.push(obj(vec![
+            ("clients", num(clients as f64)),
+            ("requests", num((clients * PER_CLIENT) as f64)),
+            ("wall_s", num(wall)),
+            ("tok_s", num(tok_s)),
+            ("ttft_ms_p50", num(t50)),
+            ("ttft_ms_p99", num(t99)),
+            ("queue_wait_ms_p50", num(qw50)),
+            ("queue_wait_ms_p99", num(qw99)),
+            ("shed", num(shed)),
+        ]));
+    }
+    let out = obj(vec![
+        ("bench", s("serve_concurrency")),
+        ("engine", s("sim")),
+        ("model", s("bamboo-7b")),
+        ("device", s("oneplus12")),
+        ("max_batch", num(4.0)),
+        ("queue_depth", num(QUEUE_DEPTH as f64)),
+        ("per_client_requests", num(PER_CLIENT as f64)),
+        ("scenarios", arr(rows)),
+    ]);
+    std::fs::write("BENCH_serve_concurrency.json", format!("{out}\n"))
+        .unwrap();
+    println!("wrote BENCH_serve_concurrency.json");
 }

@@ -3,7 +3,7 @@
 //! A dependency-free, line/token-level scanner (no syn, no regex — the
 //! offline crate set has neither) with just enough of a lexer to tell
 //! code from strings and comments and to track `#[cfg(test)]` regions
-//! by brace depth. Four rules, each of which encodes a repo contract
+//! by brace depth. Five rules, each of which encodes a repo contract
 //! clippy cannot express:
 //!
 //! - **hot-path-unwrap** — no `.unwrap()` / `.expect(` in the serving
@@ -31,6 +31,14 @@
 //!   strings: the scheduler downcasts to tell "defer and retry after a
 //!   retire" from a real error, and a stringly-typed failure silently
 //!   breaks that dispatch.
+//! - **thread-containment** — no `thread::spawn(` outside
+//!   `coordinator/` (tests exempt, as everywhere). The serving
+//!   architecture funnels every shared-state mutation through the
+//!   single scheduler thread; a thread spawned from engine/pool code
+//!   would reintroduce exactly the cross-thread mutation the model
+//!   checker's serialized interleavings assume away. Scoped helper
+//!   parallelism (`thread::scope`) inside an engine step is fine — it
+//!   cannot outlive the call that owns the borrow.
 //!
 //! An allow annotation without a rule name or a justification is itself
 //! a diagnostic (**bad-allow**): exceptions are part of the reviewed
@@ -84,13 +92,15 @@ pub const RULE_HOT_PATH_UNWRAP: &str = "hot-path-unwrap";
 pub const RULE_UNSAFE_CODE: &str = "unsafe-code";
 pub const RULE_KV_ENCAPSULATION: &str = "kv-encapsulation";
 pub const RULE_TYPED_POOL_ERROR: &str = "typed-pool-error";
+pub const RULE_THREAD_CONTAINMENT: &str = "thread-containment";
 pub const RULE_BAD_ALLOW: &str = "bad-allow";
 
-const ALL_RULES: [&str; 4] = [
+const ALL_RULES: [&str; 5] = [
     RULE_HOT_PATH_UNWRAP,
     RULE_UNSAFE_CODE,
     RULE_KV_ENCAPSULATION,
     RULE_TYPED_POOL_ERROR,
+    RULE_THREAD_CONTAINMENT,
 ];
 
 /// One violation, addressed like a compiler diagnostic.
@@ -537,6 +547,23 @@ pub fn lint_source(rel: &str, source: &str) -> Vec<Diagnostic> {
                 });
             }
         }
+        if !rel.starts_with("coordinator/")
+            && lv.code.contains("thread::spawn(")
+            && !allowed(lineno, RULE_THREAD_CONTAINMENT)
+        {
+            diags.push(Diagnostic {
+                file: rel.to_string(),
+                line: lineno,
+                rule: RULE_THREAD_CONTAINMENT,
+                message: "thread::spawn outside coordinator/ — long-lived \
+                          threads belong to the connection-serving layer, \
+                          where every shared-state mutation funnels \
+                          through the scheduler thread the model checker \
+                          verifies; use scoped parallelism \
+                          (thread::scope) for intra-call fan-out"
+                    .into(),
+            });
+        }
     }
     diags
 }
@@ -729,6 +756,41 @@ fn f(x: Option<u32>) -> u32 {
         let two = "fn f() -> E {\n    anyhow!(\n        \"pool dry\"\n    )\n}\n";
         let diags = lint_source("engine/real.rs", two);
         assert_eq!(diags.len(), 1, "{diags:?}");
+    }
+
+    #[test]
+    fn thread_spawn_outside_coordinator_is_flagged() {
+        let src = "fn f() { std::thread::spawn(|| {}); }\n";
+        let diags = lint_source("engine/mod.rs", src);
+        assert_eq!(rules_at(&diags, 1), vec![RULE_THREAD_CONTAINMENT]);
+        // the connection-serving layer owns its threads
+        assert!(lint_source("coordinator/server.rs", src).is_empty());
+        // non-hot-path first-party code is still not a place for free
+        // threads
+        let diags = lint_source("experiments/mod.rs", src);
+        assert_eq!(rules_at(&diags, 1), vec![RULE_THREAD_CONTAINMENT]);
+        // scoped fan-out inside an engine step is fine
+        let scoped = "fn f() { std::thread::scope(|s| { s.spawn(|| {}); }); }\n";
+        assert!(lint_source("engine/real.rs", scoped).is_empty());
+        // tests may spawn helper clients freely
+        let test_src = "\
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        std::thread::spawn(|| {}).join().unwrap();
+    }
+}
+";
+        assert!(lint_source("serve/mod.rs", test_src).is_empty());
+        // a justified allow suppresses it
+        let allowed = "\
+fn f() {
+    // pi2-lint: allow(thread-containment): detached best-effort logger
+    std::thread::spawn(|| {});
+}
+";
+        assert!(lint_source("engine/mod.rs", allowed).is_empty());
     }
 
     #[test]

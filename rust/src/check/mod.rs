@@ -7,18 +7,26 @@
 //!   `rust/src` enforcing repo-specific rules clippy cannot express —
 //!   no `unwrap()`/`expect()` on serving hot paths, no `unsafe` outside
 //!   the storage allowlist, no raw [`crate::kv::KvPool`] internals
-//!   touched outside `kv/`, and typed (downcastable) errors at
-//!   pool-pressure sites. Violations are `file:line` diagnostics and a
+//!   touched outside `kv/`, typed (downcastable) errors at
+//!   pool-pressure sites, and no `thread::spawn` outside
+//!   `coordinator/` (the connection-serving layer owns the repo's
+//!   long-lived threads). Violations are `file:line` diagnostics and a
 //!   non-zero exit.
-//! - [`model`]: a deterministic, bounded-depth exhaustive model checker
-//!   over the request lifecycle: every interleaving of
+//! - [`model`]: deterministic, bounded-depth exhaustive model checkers.
+//!   The lifecycle checker drives every interleaving of
 //!   `{admit, admit_deferred, prefill_chunk, step, retire, abort,
 //!   pool-exhaustion}` on a [`crate::coordinator::Coordinator`] over
 //!   [`crate::engine::SimEngine`], with
 //!   [`crate::kv::KvPool::check_invariants`] and
 //!   [`crate::coordinator::Coordinator::check_invariants`] asserted
-//!   after **every** transition. A failing interleaving is reported as
-//!   a replayable schedule.
+//!   after **every** transition. The connection checker drives the
+//!   layer the TCP server uses — the shared admission queue, the
+//!   scheduler pump, disconnect aborts — over every interleaving of
+//!   `{connect, submit, disconnect, pump}`, auditing
+//!   [`crate::coordinator::Coordinator::check_online_invariants`] plus
+//!   token-routing and typed-refusal consistency. A failing
+//!   interleaving is reported as a replayable schedule; each checker
+//!   carries a planted-bug self-test.
 //!
 //! The point of landing this before the concurrency roadmap items
 //! (multi-threaded serving, watermark/preemption admission) is that

@@ -25,6 +25,14 @@
 //! [`SimFault::LeakLeaseOnRetire`] makes `retire` drop a lease without
 //! releasing it, and [`leak_self_test`] must catch that with a
 //! replayable schedule — `pi2 check` fails if it does not.
+//!
+//! A second, connection-level model ([`ConnOp`], [`conn_explore`])
+//! drives the layer the TCP server uses — the shared admission queue,
+//! the scheduler pump, and disconnect aborts — over every interleaving
+//! of `{connect, submit, disconnect, pump}`, with its own planted-fault
+//! self-test ([`abort_leak_self_test`]: a lease leaked on
+//! disconnect-mid-prefill must be caught by a schedule containing a
+//! disconnect).
 
 use std::collections::{HashSet, VecDeque};
 use std::fmt;
@@ -33,10 +41,12 @@ use std::fmt::Write as _;
 use anyhow::{anyhow, Result};
 
 use crate::config::{bamboo_7b, oneplus_12, RuntimeConfig};
-use crate::coordinator::Coordinator;
+use crate::coordinator::{
+    AdmissionLimits, AdmissionReject, ClientId, ClientSink, Coordinator,
+};
 use crate::engine::{SimEngine, SimFault};
 use crate::kv::KvPoolError;
-use crate::serve::{Engine, InferenceRequest};
+use crate::serve::{Engine, InferenceRequest, Session, TokenEvent};
 
 /// One lifecycle transition the checker can drive. `r` indexes into
 /// [`ModelConfig::requests`].
@@ -601,6 +611,514 @@ pub fn leak_self_test() -> ModelConfig {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Connection-level model: the server's concurrent-serving contract.
+//
+// The lifecycle checker above drives the engine directly. The connection
+// checker drives the layer the TCP server actually uses — the shared
+// admission queue ([`Coordinator::submit`]), the scheduler pump
+// ([`Coordinator::pump`]), and disconnect aborts
+// ([`Coordinator::abort_client`]) — and exhausts every interleaving of
+// `{connect, submit, disconnect, pump}` across a handful of clients.
+// The server's reader/writer threads funnel every mutation through the
+// single scheduler thread, so these serialized interleavings are exactly
+// the realizable ones. Audited after every transition:
+// [`Coordinator::check_online_invariants`] (engine + pool + queue
+// bookkeeping), plus: no event is ever routed to a disconnected client,
+// a disconnected client has nothing left in flight, and every typed
+// refusal ([`AdmissionReject`]) is consistent with the gauges it quotes.
+// ---------------------------------------------------------------------------
+
+/// One connection-level transition. `c` indexes into
+/// [`ConnModelConfig::clients`]; each client submits its requests in
+/// order, so `submit(c)` means "client c submits its next request".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConnOp {
+    /// Client `c` connects (registers with the scheduler).
+    Connect(usize),
+    /// Client `c` submits its next request through the shared queue.
+    Submit(usize),
+    /// Client `c` hangs up: every queued and in-flight request it owns
+    /// is aborted — including mid-prefill, the lease-rollback path.
+    Disconnect(usize),
+    /// One scheduler pump: admission refill, one chunked-prefill
+    /// budget, one decode step, token routing.
+    Pump,
+}
+
+impl fmt::Display for ConnOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConnOp::Connect(c) => write!(f, "connect(c{c})"),
+            ConnOp::Submit(c) => write!(f, "submit(c{c})"),
+            ConnOp::Disconnect(c) => write!(f, "disconnect(c{c})"),
+            ConnOp::Pump => write!(f, "pump"),
+        }
+    }
+}
+
+/// Render a connection schedule as the replayable one-liner printed on
+/// failure.
+pub fn format_conn_schedule(schedule: &[ConnOp]) -> String {
+    let mut s = String::new();
+    for (i, op) in schedule.iter().enumerate() {
+        if i > 0 {
+            s.push_str("; ");
+        }
+        let _ = write!(s, "{op}");
+    }
+    s
+}
+
+/// Where one modeled connection is. Disconnect is terminal — the server
+/// assigns a fresh [`ClientId`] per TCP connection, so "reconnect" is a
+/// new client, not a phase transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ConnPhase {
+    Fresh,
+    Connected,
+    Gone,
+}
+
+/// One bounded connection world to exhaust.
+#[derive(Debug, Clone)]
+pub struct ConnModelConfig {
+    pub name: &'static str,
+    /// `clients[c]` = the requests client `c` submits, in order.
+    pub clients: Vec<Vec<LifecycleSpec>>,
+    pub pool_blocks: usize,
+    pub block_tokens: usize,
+    pub max_batch: usize,
+    /// Chunked-prefill budget ([`Coordinator::with_prefill_chunk`]);
+    /// 0 = synchronous admission.
+    pub chunk: usize,
+    /// Shared-queue limits: depth shedding and the per-client fairness
+    /// cap (0 = unbounded).
+    pub limits: AdmissionLimits,
+    pub max_depth: usize,
+    pub max_states: usize,
+    pub fault: SimFault,
+}
+
+/// A failing connection interleaving, replayable via [`conn_replay`].
+#[derive(Debug, Clone)]
+pub struct ConnViolation {
+    pub schedule: Vec<ConnOp>,
+    pub message: String,
+}
+
+/// Outcome of one [`conn_explore`] run.
+#[derive(Debug, Clone)]
+pub struct ConnExploreReport {
+    pub name: &'static str,
+    pub states: usize,
+    pub transitions: usize,
+    pub max_depth_reached: usize,
+    pub complete: bool,
+    pub violation: Option<ConnViolation>,
+}
+
+/// The checker's [`ClientSink`]: records nothing, verifies routing — an
+/// event delivered for a client that is not currently connected is a
+/// scheduler bug (the server would write it to the wrong socket, or to
+/// a closed one).
+struct ConnSink<'a> {
+    connected: &'a [bool],
+    misrouted: Option<String>,
+}
+
+impl ConnSink<'_> {
+    fn check(&mut self, client: ClientId, what: &str, id: u64) {
+        let ok = (client as usize) < self.connected.len()
+            && self.connected[client as usize];
+        if !ok && self.misrouted.is_none() {
+            self.misrouted = Some(format!(
+                "{what} event for request {id} routed to disconnected \
+                 client c{client}"
+            ));
+        }
+    }
+}
+
+impl ClientSink for ConnSink<'_> {
+    fn on_token(&mut self, client: ClientId, ev: &TokenEvent) -> bool {
+        self.check(client, "token", ev.request_id);
+        true
+    }
+
+    fn on_done(&mut self, client: ClientId, sess: &Session) {
+        self.check(client, "done", sess.id);
+    }
+
+    fn on_reject(
+        &mut self,
+        client: ClientId,
+        request_id: u64,
+        _error: &str,
+        _code: &str,
+    ) {
+        self.check(client, "reject", request_id);
+    }
+}
+
+/// The connection checker's state: a real coordinator with online
+/// serving started, plus each modeled connection's phase and submit
+/// cursor.
+struct ConnWorld {
+    coord: Coordinator<SimEngine>,
+    conns: Vec<ConnPhase>,
+    next_req: Vec<usize>,
+}
+
+impl ConnWorld {
+    fn new(cfg: &ConnModelConfig) -> ConnWorld {
+        let mut spec = bamboo_7b();
+        spec.layers = 2;
+        spec.inter = 2048;
+        let rt = RuntimeConfig {
+            max_batch: cfg.max_batch,
+            kv_block_tokens: cfg.block_tokens,
+            kv_pool_blocks: cfg.pool_blocks,
+            seed: 0,
+            ..Default::default()
+        };
+        let mut engine = SimEngine::new(oneplus_12(), spec, rt);
+        engine.inject_fault(cfg.fault);
+        let mut coord = Coordinator::new(engine).with_prefill_chunk(cfg.chunk);
+        coord.start_online(cfg.limits);
+        ConnWorld {
+            coord,
+            conns: vec![ConnPhase::Fresh; cfg.clients.len()],
+            next_req: vec![0; cfg.clients.len()],
+        }
+    }
+
+    fn connected_mask(&self) -> Vec<bool> {
+        self.conns.iter().map(|p| *p == ConnPhase::Connected).collect()
+    }
+
+    /// Every operation legal from this state. `pump` is only offered
+    /// while the scheduler has work (queued or live requests) — an idle
+    /// pump is a no-op and would only widen the frontier.
+    fn enabled(&self, cfg: &ConnModelConfig) -> Vec<ConnOp> {
+        let mut ops = Vec::new();
+        for (c, phase) in self.conns.iter().enumerate() {
+            match phase {
+                ConnPhase::Fresh => ops.push(ConnOp::Connect(c)),
+                ConnPhase::Connected => {
+                    if self.next_req[c] < cfg.clients[c].len() {
+                        ops.push(ConnOp::Submit(c));
+                    }
+                    ops.push(ConnOp::Disconnect(c));
+                }
+                ConnPhase::Gone => {}
+            }
+        }
+        if !self.coord.online_idle() {
+            ops.push(ConnOp::Pump);
+        }
+        ops
+    }
+
+    /// Drive one transition. `Ok(false)` = a typed admission refusal
+    /// (legal: the client is told to retry; the submit cursor does not
+    /// advance), `Err` = invariant / contract violation.
+    fn apply(&mut self, op: ConnOp, cfg: &ConnModelConfig) -> Result<bool> {
+        match op {
+            ConnOp::Connect(c) => {
+                self.conns[c] = ConnPhase::Connected;
+                Ok(true)
+            }
+            ConnOp::Submit(c) => {
+                let r = self.next_req[c];
+                let spec = &cfg.clients[c][r];
+                let req = InferenceRequest::new(
+                    (c * 100 + r) as u64,
+                    spec.prompt.clone(),
+                    spec.max_tokens,
+                );
+                match self.coord.submit(c as ClientId, req)? {
+                    None => {
+                        self.next_req[c] = r + 1;
+                        Ok(true)
+                    }
+                    Some(AdmissionReject::ClientCap { in_flight, cap }) => {
+                        let gauge = self.coord.online_in_flight(c as ClientId);
+                        if gauge != in_flight || in_flight < cap {
+                            return Err(anyhow!(
+                                "client_cap refusal inconsistent: quoted \
+                                 {in_flight}/{cap}, gauge reads {gauge}"
+                            ));
+                        }
+                        Ok(false)
+                    }
+                    Some(AdmissionReject::Shed { depth, max_depth }) => {
+                        let queued = self.coord.online_queued();
+                        if queued != depth || depth < max_depth {
+                            return Err(anyhow!(
+                                "shed refusal inconsistent: quoted \
+                                 {depth}/{max_depth}, queue holds {queued}"
+                            ));
+                        }
+                        Ok(false)
+                    }
+                }
+            }
+            ConnOp::Disconnect(c) => {
+                self.conns[c] = ConnPhase::Gone;
+                self.coord
+                    .abort_client(c as ClientId)
+                    .map_err(|e| e.context(format!("disconnect(c{c})")))?;
+                Ok(true)
+            }
+            ConnOp::Pump => {
+                let connected = self.connected_mask();
+                let mut sink =
+                    ConnSink { connected: &connected, misrouted: None };
+                let progressed = self
+                    .coord
+                    .pump(&mut sink)
+                    .map_err(|e| e.context("pump"))?;
+                if let Some(m) = sink.misrouted {
+                    return Err(anyhow!(m));
+                }
+                Ok(progressed)
+            }
+        }
+    }
+
+    /// The audit after every transition: the full coordinator/engine/
+    /// pool online-invariant stack, plus the connection-level contract
+    /// that a disconnected client has nothing left in flight.
+    fn audit(&self) -> Result<()> {
+        self.coord.check_online_invariants()?;
+        for (c, phase) in self.conns.iter().enumerate() {
+            if *phase == ConnPhase::Gone {
+                let n = self.coord.online_in_flight(c as ClientId);
+                if n != 0 {
+                    return Err(anyhow!(
+                        "disconnected client c{c} still has {n} requests \
+                         in flight"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Canonical fingerprint for visited-state dedup: per-connection
+    /// phase + submit cursor + in-flight gauge, queue depth, every
+    /// occupied slot's (owner, id, emitted, pending-prompt remainder),
+    /// and the pool triple. The pending remainder is read with a
+    /// zero-budget `prefill_chunk` probe (a no-op by contract) — the
+    /// deferred path leases the whole prompt up front, so pool
+    /// occupancy alone cannot distinguish chunk progress.
+    fn signature(&mut self) -> String {
+        let mut sig = String::new();
+        for (c, phase) in self.conns.iter().enumerate() {
+            let ch = match phase {
+                ConnPhase::Fresh => 'f',
+                ConnPhase::Connected => 'c',
+                ConnPhase::Gone => 'g',
+            };
+            let _ = write!(
+                sig,
+                "{ch}{}.{},",
+                self.next_req[c],
+                self.coord.online_in_flight(c as ClientId)
+            );
+        }
+        let _ = write!(sig, "|q{}", self.coord.online_queued());
+        for (slot, client, id, toks, pending) in self.coord.online_slots() {
+            let rem = if pending {
+                self.coord
+                    .engine
+                    .prefill_chunk(slot, 0)
+                    .map_or(0, |p| p.remaining)
+            } else {
+                0
+            };
+            let _ = write!(sig, "|s{slot}:c{client}:r{id}:t{toks}:p{rem}");
+        }
+        let (free, leases, shared) =
+            self.coord.engine.kv_pool().map_or((0, 0, 0), |s| {
+                (s.free_blocks, s.active_leases, s.shared_blocks)
+            });
+        let _ = write!(sig, "|{free},{leases},{shared}");
+        sig
+    }
+}
+
+/// Exhaustively explore every reachable interleaving of `cfg`'s
+/// connections up to the configured bounds — the connection-level
+/// sibling of [`explore`], with the same replay-prefix BFS and the same
+/// replayable-violation contract ([`conn_replay`]).
+pub fn conn_explore(cfg: &ConnModelConfig) -> ConnExploreReport {
+    let mut report = ConnExploreReport {
+        name: cfg.name,
+        states: 0,
+        transitions: 0,
+        max_depth_reached: 0,
+        complete: true,
+        violation: None,
+    };
+    let mut root = ConnWorld::new(cfg);
+    if let Err(e) = root.audit() {
+        report.violation = Some(ConnViolation {
+            schedule: Vec::new(),
+            message: format!("{e:#}"),
+        });
+        return report;
+    }
+    let mut seen: HashSet<String> = HashSet::new();
+    seen.insert(root.signature());
+    report.states = 1;
+    let mut frontier: VecDeque<Vec<ConnOp>> = VecDeque::new();
+    frontier.push_back(Vec::new());
+    while let Some(prefix) = frontier.pop_front() {
+        if prefix.len() >= cfg.max_depth {
+            report.complete = false;
+            continue;
+        }
+        let mut node = ConnWorld::new(cfg);
+        for &op in &prefix {
+            if node.apply(op, cfg).is_err() {
+                report.violation = Some(ConnViolation {
+                    schedule: prefix.clone(),
+                    message: "schedule replay diverged (engine \
+                              nondeterminism)"
+                        .into(),
+                });
+                return report;
+            }
+        }
+        for op in node.enabled(cfg) {
+            report.transitions += 1;
+            let mut next = ConnWorld::new(cfg);
+            for &p in &prefix {
+                let _ = next.apply(p, cfg);
+            }
+            let mut schedule = prefix.clone();
+            schedule.push(op);
+            let advanced = match next.apply(op, cfg) {
+                Ok(advanced) => advanced,
+                Err(e) => {
+                    report.violation = Some(ConnViolation {
+                        schedule,
+                        message: format!("{e:#}"),
+                    });
+                    return report;
+                }
+            };
+            if let Err(e) = next.audit() {
+                report.violation = Some(ConnViolation {
+                    schedule,
+                    message: format!("{e:#}"),
+                });
+                return report;
+            }
+            if !advanced {
+                continue; // typed refusal: audited, no new state
+            }
+            if seen.insert(next.signature()) {
+                report.states += 1;
+                report.max_depth_reached =
+                    report.max_depth_reached.max(schedule.len());
+                if report.states >= cfg.max_states {
+                    report.complete = false;
+                    return report;
+                }
+                frontier.push_back(schedule);
+            }
+        }
+    }
+    report
+}
+
+/// Re-drive one connection schedule against a fresh world, auditing
+/// after every operation — the reproduction command for a reported
+/// [`ConnViolation`].
+pub fn conn_replay(cfg: &ConnModelConfig, schedule: &[ConnOp]) -> Result<()> {
+    let mut w = ConnWorld::new(cfg);
+    w.audit()?;
+    for (i, &op) in schedule.iter().enumerate() {
+        w.apply(op, cfg)
+            .and_then(|_| w.audit())
+            .map_err(|e| e.context(format!("at step {i}: {op}")))?;
+    }
+    Ok(())
+}
+
+/// The bounded connection worlds `pi2 check` exhausts: the full
+/// connect/submit/disconnect/pump interleaving space with chunked
+/// prefill (so disconnect-mid-prefill schedules are reachable), and the
+/// shedding regime where the queue-depth and per-client caps refuse
+/// work.
+pub fn conn_suite() -> Vec<ConnModelConfig> {
+    vec![
+        // two clients racing connect/submit/disconnect against the
+        // pump, chunked prefill on: covers disconnect-mid-prefill,
+        // disconnect-mid-decode, disconnect-while-queued, and token
+        // routing across concurrent streams
+        ConnModelConfig {
+            name: "conn-interleavings",
+            clients: vec![
+                vec![LifecycleSpec::new(4, 2)],
+                vec![LifecycleSpec::new(2, 2)],
+            ],
+            pool_blocks: 32,
+            block_tokens: 2,
+            max_batch: 2,
+            chunk: 2,
+            limits: AdmissionLimits { queue_depth: 0, client_cap: 0 },
+            max_depth: 14,
+            max_states: 20_000,
+            fault: SimFault::None,
+        },
+        // tight limits on a one-slot engine: every typed-refusal path
+        // (queue shed, per-client cap) fires and must quote gauges
+        // consistently; disconnects must release in-flight budget so
+        // the other client's submits stop being refused
+        ConnModelConfig {
+            name: "conn-shedding",
+            clients: vec![
+                vec![LifecycleSpec::new(2, 1), LifecycleSpec::new(2, 1)],
+                vec![LifecycleSpec::new(2, 1)],
+            ],
+            pool_blocks: 16,
+            block_tokens: 2,
+            max_batch: 1,
+            chunk: 0,
+            limits: AdmissionLimits { queue_depth: 1, client_cap: 1 },
+            max_depth: 16,
+            max_states: 20_000,
+            fault: SimFault::None,
+        },
+    ]
+}
+
+/// A connection world with a deliberately broken engine
+/// ([`SimFault::LeakLeaseOnAbort`]: retiring a slot mid-prefill drops
+/// its lease instead of releasing it — exactly the bug a sloppy
+/// disconnect handler would have). [`conn_explore`] must catch it with
+/// a replayable schedule containing a disconnect, which is the
+/// connection checker proving it actually exercises the
+/// disconnect-mid-prefill rollback.
+pub fn abort_leak_self_test() -> ConnModelConfig {
+    ConnModelConfig {
+        name: "planted-abort-leak",
+        clients: vec![vec![LifecycleSpec::new(6, 1)]],
+        pool_blocks: 16,
+        block_tokens: 2,
+        max_batch: 1,
+        chunk: 2,
+        limits: AdmissionLimits { queue_depth: 0, client_cap: 0 },
+        max_depth: 8,
+        max_states: 2_000,
+        fault: SimFault::LeakLeaseOnAbort,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -710,5 +1228,121 @@ mod tests {
             assert!(cfg.max_depth <= 16, "{}: depth bound too deep", cfg.name);
             assert!(cfg.fault == SimFault::None);
         }
+    }
+
+    fn tiny_conn() -> ConnModelConfig {
+        ConnModelConfig {
+            name: "tiny-conn",
+            clients: vec![
+                vec![LifecycleSpec::new(2, 1)],
+                vec![LifecycleSpec::new(2, 1)],
+            ],
+            pool_blocks: 16,
+            block_tokens: 2,
+            max_batch: 2,
+            chunk: 0,
+            limits: AdmissionLimits { queue_depth: 0, client_cap: 0 },
+            max_depth: 10,
+            max_states: 5_000,
+            fault: SimFault::None,
+        }
+    }
+
+    #[test]
+    fn tiny_conn_world_explores_completely_without_violation() {
+        let cfg = tiny_conn();
+        let rep = conn_explore(&cfg);
+        assert!(rep.violation.is_none(), "{:?}", rep.violation);
+        assert!(rep.complete, "bounds truncated a tiny connection world");
+        assert!(rep.states > 10, "only {} states reached", rep.states);
+        // both clients completing, and both disconnecting mid-flight,
+        // are reachable and replay clean
+        let both_complete = [
+            ConnOp::Connect(0),
+            ConnOp::Submit(0),
+            ConnOp::Connect(1),
+            ConnOp::Submit(1),
+            ConnOp::Pump,
+            ConnOp::Disconnect(0),
+            ConnOp::Disconnect(1),
+        ];
+        conn_replay(&cfg, &both_complete).expect("completion schedule");
+        let abort_queued = [
+            ConnOp::Connect(0),
+            ConnOp::Submit(0),
+            ConnOp::Disconnect(0),
+        ];
+        conn_replay(&cfg, &abort_queued).expect("abort-while-queued");
+    }
+
+    #[test]
+    fn conn_suite_worlds_are_clean() {
+        for cfg in conn_suite() {
+            let rep = conn_explore(&cfg);
+            assert!(
+                rep.violation.is_none(),
+                "{}: {:?}",
+                cfg.name,
+                rep.violation
+            );
+            assert!(rep.states > 20, "{}: trivial space", cfg.name);
+        }
+    }
+
+    #[test]
+    fn conn_shedding_world_refuses_and_recovers() {
+        // the shedding config must actually drive typed refusals:
+        // client 0 fills its cap, a second submit is refused (no state
+        // change), and after completion the submit succeeds
+        let cfg = conn_suite()
+            .into_iter()
+            .find(|c| c.name == "conn-shedding")
+            .expect("conn-shedding in suite");
+        let mut w = ConnWorld::new(&cfg);
+        w.apply(ConnOp::Connect(0), &cfg).unwrap();
+        assert!(w.apply(ConnOp::Submit(0), &cfg).unwrap());
+        // cap = 1: the second submit is a typed refusal, not an error
+        assert!(!w.apply(ConnOp::Submit(0), &cfg).unwrap());
+        w.audit().unwrap();
+        assert!(w.apply(ConnOp::Pump, &cfg).unwrap());
+        // first request completed (max_tokens 1): cap budget released
+        assert!(w.apply(ConnOp::Submit(0), &cfg).unwrap());
+        w.audit().unwrap();
+    }
+
+    #[test]
+    fn planted_abort_leak_is_caught_via_a_disconnect_schedule() {
+        let cfg = abort_leak_self_test();
+        let rep = conn_explore(&cfg);
+        let v = rep.violation.expect("planted abort leak must be caught");
+        assert!(
+            v.schedule
+                .iter()
+                .any(|op| matches!(op, ConnOp::Disconnect(_))),
+            "leak only fires on disconnect-mid-prefill; schedule was: {}",
+            format_conn_schedule(&v.schedule)
+        );
+        // the reported schedule reproduces the violation verbatim
+        conn_replay(&cfg, &v.schedule)
+            .expect_err("violating schedule must replay to a failure");
+        // the same world with the fault removed is clean: the checker
+        // flags the planted bug, not the harness
+        let clean = ConnModelConfig { fault: SimFault::None, ..cfg };
+        let rep = conn_explore(&clean);
+        assert!(rep.violation.is_none(), "{:?}", rep.violation);
+    }
+
+    #[test]
+    fn conn_schedules_format_replayably() {
+        let s = [
+            ConnOp::Connect(0),
+            ConnOp::Submit(0),
+            ConnOp::Pump,
+            ConnOp::Disconnect(0),
+        ];
+        assert_eq!(
+            format_conn_schedule(&s),
+            "connect(c0); submit(c0); pump; disconnect(c0)"
+        );
     }
 }

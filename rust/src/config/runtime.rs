@@ -80,6 +80,20 @@ pub struct RuntimeConfig {
     /// fraction of its neurons predicted active rides the NPU path
     /// (§4.1.2); below it, the CPU gather path.
     pub offload_dense_threshold: f64,
+    /// Max simultaneous TCP connections the server registers; further
+    /// connects get a structured `{"error","code":"max_clients"}` line
+    /// and are closed. Phone-class default: a handful of local apps, not
+    /// a datacenter fleet. CLI: `pi2 serve --max-clients N`.
+    pub max_clients: usize,
+    /// Per-client in-flight (queued + active) request cap on the shared
+    /// admission queue — the fairness knob that stops one connection
+    /// from monopolizing the engine (0 = uncapped). CLI:
+    /// `pi2 serve --client-cap N`.
+    pub client_inflight_cap: usize,
+    /// Max depth of the shared admission queue across all clients;
+    /// submissions beyond it are shed with `{"error","code":"shed"}`
+    /// (0 = unbounded). CLI: `pi2 serve --queue-depth N`.
+    pub admission_queue_depth: usize,
 }
 
 impl Default for RuntimeConfig {
@@ -105,6 +119,9 @@ impl Default for RuntimeConfig {
             offload_streaming: false,
             offload_resident_clusters: 0,
             offload_dense_threshold: 0.5,
+            max_clients: 8,
+            client_inflight_cap: 2,
+            admission_queue_depth: 64,
         }
     }
 }
@@ -210,6 +227,15 @@ impl RuntimeConfig {
         if let Some(v) = j.get("offload_dense_threshold").as_f64() {
             self.offload_dense_threshold = v;
         }
+        if let Some(v) = j.get("max_clients").as_usize() {
+            self.max_clients = v;
+        }
+        if let Some(v) = j.get("client_inflight_cap").as_usize() {
+            self.client_inflight_cap = v;
+        }
+        if let Some(v) = j.get("admission_queue_depth").as_usize() {
+            self.admission_queue_depth = v;
+        }
         if let Some(v) = j.get("bundling").as_bool() {
             self.bundling = v;
         }
@@ -282,7 +308,9 @@ mod tests {
                 "kv_block_tokens": 8, "kv_pool_blocks": 40,
                 "prefill_chunk": 24, "offload_streaming": true,
                 "offload_resident_clusters": 96,
-                "offload_dense_threshold": 0.25}"#,
+                "offload_dense_threshold": 0.25,
+                "max_clients": 3, "client_inflight_cap": 5,
+                "admission_queue_depth": 7}"#,
         )
         .unwrap();
         c.apply_json(&j);
@@ -297,5 +325,16 @@ mod tests {
         assert!(c.offload_streaming);
         assert_eq!(c.offload_resident_clusters, 96);
         assert!((c.offload_dense_threshold - 0.25).abs() < 1e-12);
+        assert_eq!(c.max_clients, 3);
+        assert_eq!(c.client_inflight_cap, 5);
+        assert_eq!(c.admission_queue_depth, 7);
+    }
+
+    #[test]
+    fn default_serving_caps_are_phone_class() {
+        let c = RuntimeConfig::default();
+        assert_eq!(c.max_clients, 8);
+        assert_eq!(c.client_inflight_cap, 2);
+        assert_eq!(c.admission_queue_depth, 64);
     }
 }

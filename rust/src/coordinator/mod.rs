@@ -31,10 +31,11 @@ pub mod server;
 pub use server::Server;
 
 use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
 use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::engine::real::{RealEngine, RealEngineOptions};
 use crate::kv::KvPoolError;
@@ -121,6 +122,27 @@ pub struct ServeReport {
     pub offload_overlap_ratio: f64,
     /// Exposed cluster-I/O stall time (engine seconds) this call.
     pub offload_stall_s: f64,
+    /// Depth of the shared admission queue, sampled at every submission
+    /// (cross-connection backpressure signal).
+    pub queue_depth: Samples,
+    /// Submit → slot-admission wait per admitted request (ms), across
+    /// all connections.
+    pub queue_wait_ms: Samples,
+    /// Requests shed because the shared admission queue was at max
+    /// depth ([`AdmissionReject::Shed`]).
+    pub shed: u64,
+    /// Requests refused because the owning client was at its in-flight
+    /// cap ([`AdmissionReject::ClientCap`]).
+    pub client_cap_rejections: u64,
+    /// Requests whose worst-case KV demand exceeds the whole pool,
+    /// refused with a structured reply on the online path.
+    pub rejected_unservable: u64,
+    /// In-flight requests cancelled by client disconnect or slow-client
+    /// abort.
+    pub aborted_requests: u64,
+    /// Per-client serving counters on the online (multi-connection)
+    /// path; batch serving books everything under client 0.
+    pub clients: BTreeMap<ClientId, ClientStats>,
 }
 
 impl ServeReport {
@@ -138,9 +160,187 @@ impl ServeReport {
     }
 }
 
+/// Identity of one connected client on the shared admission path. The
+/// server assigns these per TCP connection; batch serving uses 0.
+pub type ClientId = u64;
+
+/// Per-client serving counters, reported in [`ServeReport::clients`]
+/// and the server's `stats` command.
+#[derive(Debug, Clone, Default)]
+pub struct ClientStats {
+    pub submitted: u64,
+    pub completed: u64,
+    /// Typed refusals: queue shed, per-client cap, or unservable.
+    pub rejected: u64,
+    /// Requests cancelled by disconnect or slow-client abort.
+    pub aborted: u64,
+    /// Tokens delivered across this client's completed requests.
+    pub tokens: u64,
+}
+
+/// Typed admission refusal from the shared queue. The serving layer
+/// answers the client with a structured `{"error","code"}` line instead
+/// of dropping the connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionReject {
+    /// The global admission queue is at max depth: load-shed.
+    Shed { depth: usize, max_depth: usize },
+    /// The client already has its cap's worth of requests in flight.
+    ClientCap { in_flight: usize, cap: usize },
+}
+
+impl AdmissionReject {
+    /// Wire code for the structured error reply.
+    pub fn code(&self) -> &'static str {
+        match self {
+            AdmissionReject::Shed { .. } => "shed",
+            AdmissionReject::ClientCap { .. } => "client_cap",
+        }
+    }
+}
+
+impl fmt::Display for AdmissionReject {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdmissionReject::Shed { depth, max_depth } => write!(
+                f,
+                "admission queue at max depth ({depth}/{max_depth}): \
+                 request shed, retry later"
+            ),
+            AdmissionReject::ClientCap { in_flight, cap } => write!(
+                f,
+                "client at in-flight cap ({in_flight}/{cap}): wait for a \
+                 completion before submitting more"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AdmissionReject {}
+
+/// Limits on the shared admission queue (0 = unbounded).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AdmissionLimits {
+    /// Max queued (not yet admitted) requests across all clients.
+    pub queue_depth: usize,
+    /// Max in-flight (queued + active) requests per client — the
+    /// fairness cap that stops one client from monopolizing the queue.
+    pub client_cap: usize,
+}
+
+struct QueuedReq {
+    client: ClientId,
+    req: InferenceRequest,
+}
+
+/// The single global admission point: every connection's requests pass
+/// through this arrival-ordered queue before touching the engine.
+#[derive(Default)]
+struct AdmissionQueue {
+    pending: VecDeque<QueuedReq>,
+    limits: AdmissionLimits,
+    /// Queued + active requests per client (entries removed at zero, so
+    /// the map is exactly the set of clients with work in flight).
+    in_flight: BTreeMap<ClientId, usize>,
+}
+
+impl AdmissionQueue {
+    fn submit(
+        &mut self,
+        client: ClientId,
+        req: InferenceRequest,
+    ) -> std::result::Result<(), AdmissionReject> {
+        let in_flight = self.in_flight.get(&client).copied().unwrap_or(0);
+        if self.limits.client_cap > 0 && in_flight >= self.limits.client_cap {
+            return Err(AdmissionReject::ClientCap {
+                in_flight,
+                cap: self.limits.client_cap,
+            });
+        }
+        if self.limits.queue_depth > 0
+            && self.pending.len() >= self.limits.queue_depth
+        {
+            return Err(AdmissionReject::Shed {
+                depth: self.pending.len(),
+                max_depth: self.limits.queue_depth,
+            });
+        }
+        *self.in_flight.entry(client).or_insert(0) += 1;
+        self.pending.push_back(QueuedReq { client, req });
+        Ok(())
+    }
+
+    /// One request of `client` left the in-flight set (completed,
+    /// aborted, or refused after queueing).
+    fn release(&mut self, client: ClientId) {
+        if let Some(n) = self.in_flight.get_mut(&client) {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                self.in_flight.remove(&client);
+            }
+        }
+    }
+
+    /// Drop every queued request of `client`; returns how many.
+    fn purge_client(&mut self, client: ClientId) -> usize {
+        let before = self.pending.len();
+        self.pending.retain(|q| q.client != client);
+        let purged = before - self.pending.len();
+        for _ in 0..purged {
+            self.release(client);
+        }
+        purged
+    }
+}
+
+/// Where the online scheduler routes per-client output. The server's
+/// implementation forwards to each connection's writer queue; the model
+/// checker's implementation audits routing.
+pub trait ClientSink {
+    /// Deliver one token event to `client`. Returning `false` means the
+    /// client can no longer accept events (hung up, or its send queue is
+    /// full): the scheduler aborts the client's in-flight work instead
+    /// of ever blocking the decode loop on one connection.
+    fn on_token(&mut self, client: ClientId, ev: &TokenEvent) -> bool;
+    /// A request completed; `sess` is its final record.
+    fn on_done(&mut self, client: ClientId, sess: &Session);
+    /// A request was refused after queueing (unservable on an idle
+    /// engine); `code` is the structured error code.
+    fn on_reject(&mut self, client: ClientId, request_id: u64, error: &str, code: &str);
+}
+
+/// Bridges the online pump to a batch [`TokenSink`]: the first sink
+/// error is captured and ends the serve call, exactly like the old
+/// single-path scheduler.
+struct BatchSink<'a, S: TokenSink> {
+    inner: &'a mut S,
+    err: Option<anyhow::Error>,
+}
+
+impl<S: TokenSink> ClientSink for BatchSink<'_, S> {
+    fn on_token(&mut self, _client: ClientId, ev: &TokenEvent) -> bool {
+        if self.err.is_some() {
+            return false;
+        }
+        match self.inner.on_token(ev) {
+            Ok(()) => true,
+            Err(e) => {
+                self.err = Some(e);
+                false
+            }
+        }
+    }
+
+    fn on_done(&mut self, _client: ClientId, _sess: &Session) {}
+
+    fn on_reject(&mut self, _c: ClientId, _id: u64, _e: &str, _code: &str) {}
+}
+
 /// One in-flight sequence from the scheduler's point of view.
 struct ActiveSeq {
     id: u64,
+    /// Owning client on the shared admission path (0 in batch serving).
+    client: ClientId,
     prompt_tokens: usize,
     max_tokens: usize,
     tokens: Vec<u32>,
@@ -184,6 +384,7 @@ impl ActiveSeq {
         }
         ActiveSeq {
             id: req.id,
+            client: 0,
             prompt_tokens: req.prompt.len(),
             max_tokens,
             tokens: Vec::new(),
@@ -259,7 +460,13 @@ fn fill_offload_report(
         (s1.offload_stall_s - s0.offload_stall_s).max(0.0);
 }
 
-fn close_session(report: &mut ServeReport, seq: ActiveSeq, finish: FinishReason) {
+/// Record a finished sequence's metrics and build its [`Session`]. The
+/// caller decides where the session goes (report vs client sink).
+fn close_session(
+    report: &mut ServeReport,
+    seq: ActiveSeq,
+    finish: FinishReason,
+) -> Session {
     let metrics = RequestMetrics {
         queue_s: seq.queue_s,
         prefill_s: seq.prefill_s,
@@ -269,13 +476,93 @@ fn close_session(report: &mut ServeReport, seq: ActiveSeq, finish: FinishReason)
         ttft_s: seq.ttft_s,
     };
     report.serving.record(&metrics);
-    report.sessions.push(Session {
+    Session {
         id: seq.id,
         prompt_tokens: seq.prompt_tokens,
         tokens: seq.tokens,
         finish,
         metrics,
-    });
+    }
+}
+
+/// Book one completed sequence: per-client counters, metrics, and the
+/// session record (kept in the report for batch serving, handed to the
+/// sink for online serving).
+fn finish_one(
+    st: &mut OnlineState,
+    sink: &mut dyn ClientSink,
+    seq: ActiveSeq,
+    finish: FinishReason,
+) {
+    let client = seq.client;
+    st.queue.release(client);
+    let tokens = seq.tokens.len() as u64;
+    let sess = close_session(&mut st.report, seq, finish);
+    let cs = st.report.clients.entry(client).or_default();
+    cs.completed += 1;
+    cs.tokens += tokens;
+    if st.keep_sessions {
+        st.report.sessions.push(sess);
+    } else {
+        sink.on_done(client, &sess);
+    }
+}
+
+/// State of an online (multi-connection) serve: the shared admission
+/// queue plus the continuous scheduler's slot bookkeeping, held across
+/// [`Coordinator::pump`] calls.
+struct OnlineState {
+    queue: AdmissionQueue,
+    active: Vec<Option<ActiveSeq>>,
+    live: usize,
+    /// Set when the engine refused an admission for lack of KV pool
+    /// blocks; cleared by the next retire (which frees blocks).
+    pool_blocked: bool,
+    idle_steps: usize,
+    t0: Instant,
+    clock0: f64,
+    /// Engine stats snapshot at start, for engine-second totals.
+    s0: EngineStats,
+    report: ServeReport,
+    /// Batch mode keeps completed sessions in the report; online mode
+    /// hands them to the sink and stores nothing.
+    keep_sessions: bool,
+    /// Batch mode: an unservable request on an idle engine is a hard
+    /// error; online mode answers the owning client and keeps serving.
+    strict_unservable: bool,
+    /// Online mode stamps `submit_s` at submission; batch mode keeps
+    /// the caller's arrival-trace clock.
+    stamp_submit: bool,
+}
+
+impl OnlineState {
+    fn new(
+        s0: EngineStats,
+        cap: usize,
+        limits: AdmissionLimits,
+        keep_sessions: bool,
+        strict_unservable: bool,
+        stamp_submit: bool,
+    ) -> OnlineState {
+        OnlineState {
+            queue: AdmissionQueue {
+                pending: VecDeque::new(),
+                limits,
+                in_flight: BTreeMap::new(),
+            },
+            active: (0..cap).map(|_| None).collect(),
+            live: 0,
+            pool_blocked: false,
+            idle_steps: 0,
+            t0: Instant::now(),
+            clock0: s0.prefill_s + s0.decode_s,
+            s0,
+            report: ServeReport::default(),
+            keep_sessions,
+            strict_unservable,
+            stamp_submit,
+        }
+    }
 }
 
 /// The scheduler: one engine, one policy, a queue of requests in, a
@@ -291,16 +578,27 @@ pub struct Coordinator<E: Engine> {
     /// budget of N, no in-flight stream ever waits for more than N
     /// prompt tokens of newcomers between its decode steps.
     pub prefill_chunk: usize,
+    /// Online serving state ([`Coordinator::start_online`] …
+    /// [`Coordinator::finish_online`]); `None` outside an online serve.
+    /// Batch serving drives the same machinery internally, so the
+    /// arrival-clock queue plus typed pool-pressure deferral is the one
+    /// admission point for both paths.
+    online: Option<OnlineState>,
 }
 
 impl<E: Engine> Coordinator<E> {
     /// Continuous batching by default — the redesign's reason to exist.
     pub fn new(engine: E) -> Self {
-        Coordinator { engine, mode: ScheduleMode::Continuous, prefill_chunk: 0 }
+        Coordinator {
+            engine,
+            mode: ScheduleMode::Continuous,
+            prefill_chunk: 0,
+            online: None,
+        }
     }
 
     pub fn with_mode(engine: E, mode: ScheduleMode) -> Self {
-        Coordinator { engine, mode, prefill_chunk: 0 }
+        Coordinator { engine, mode, prefill_chunk: 0, online: None }
     }
 
     /// Enable chunked prefill with a per-iteration token budget.
@@ -354,6 +652,7 @@ impl<E: Engine> Coordinator<E> {
         if result.is_err() {
             // an aborted serve (sink hung up, engine error) must not leak
             // occupied slots into the next serve call
+            self.online = None;
             for slot in 0..self.engine.capacity() {
                 let _ = self.engine.retire(slot);
             }
@@ -379,218 +678,521 @@ impl<E: Engine> Coordinator<E> {
         st.prefill_s + st.decode_s - clock0
     }
 
-    fn serve_continuous<S: TokenSink>(
-        &mut self,
-        requests: &[InferenceRequest],
-        sink: &mut S,
-    ) -> Result<ServeReport> {
-        let t0 = Instant::now();
-        let s0 = self.engine.stats();
-        let clock0 = s0.prefill_s + s0.decode_s;
-        let mut report = ServeReport::default();
+    /// Begin online (multi-connection) serving: requests enter through
+    /// [`Coordinator::submit`] under `limits`, the server drives
+    /// [`Coordinator::pump`], and completed sessions go to the
+    /// [`ClientSink`] instead of accumulating in the report.
+    pub fn start_online(&mut self, limits: AdmissionLimits) {
         let cap = self.engine.capacity().max(1);
-        let mut queue: VecDeque<&InferenceRequest> = requests.iter().collect();
-        let mut active: Vec<Option<ActiveSeq>> = (0..cap).map(|_| None).collect();
-        let mut live = 0usize;
-        let mut idle_steps = 0usize;
-        // set when the engine refused an admission for lack of KV pool
-        // blocks; cleared by the next retire (which frees blocks)
-        let mut pool_blocked = false;
-        while live > 0 || !queue.is_empty() {
-            // admission at decode-step granularity: refill every free slot
-            // with requests that have arrived (queue is in submit order) —
-            // gated on pool pressure as well as slot availability
-            while live < cap && !pool_blocked {
-                let arrived = queue
-                    .front()
-                    .is_some_and(|r| r.submit_s <= t0.elapsed().as_secs_f64());
-                if !arrived {
-                    break;
+        self.online = Some(OnlineState::new(
+            self.engine.stats(),
+            cap,
+            limits,
+            false,
+            false,
+            true,
+        ));
+    }
+
+    /// Submit a request on behalf of `client` through the shared
+    /// admission queue. `Ok(Some(reject))` is a typed refusal (queue
+    /// shed or per-client cap) the caller answers with a structured
+    /// error line; queue state is untouched by a refusal.
+    pub fn submit(
+        &mut self,
+        client: ClientId,
+        mut req: InferenceRequest,
+    ) -> Result<Option<AdmissionReject>> {
+        let Some(st) = self.online.as_mut() else {
+            bail!("online serving is not started (call start_online first)");
+        };
+        if st.stamp_submit {
+            req.submit_s = st.t0.elapsed().as_secs_f64();
+        }
+        st.report.clients.entry(client).or_default().submitted += 1;
+        match st.queue.submit(client, req) {
+            Ok(()) => {
+                st.report.queue_depth.push(st.queue.pending.len() as f64);
+                Ok(None)
+            }
+            Err(rej) => {
+                match rej {
+                    AdmissionReject::Shed { .. } => st.report.shed += 1,
+                    AdmissionReject::ClientCap { .. } => {
+                        st.report.client_cap_rejections += 1
+                    }
                 }
-                let Some(req) = queue.pop_front() else { break };
-                let queue_s =
-                    (t0.elapsed().as_secs_f64() - req.submit_s).max(0.0);
-                let admit_t0 = Instant::now();
-                // chunked prefill on: claim the slot and lease now, and
-                // install the prompt between decode steps below, so the
-                // admission itself stalls nobody
-                let admitted = if self.prefill_chunk > 0 {
-                    self.engine.admit_deferred(req)
-                } else {
-                    self.engine.admit(req)
-                };
-                let adm = match admitted {
-                    Ok(adm) => adm,
-                    Err(e) if e.downcast_ref::<KvPoolError>().is_some() => {
-                        // KV pool pressure: with sequences in flight this
-                        // is transient — requeue and retry after the next
-                        // retire. With nothing in flight it can never
-                        // resolve (the request alone exceeds the pool);
-                        // keep the typed error downcastable so the server
-                        // can answer the client instead of dropping it.
-                        if live == 0 {
+                st.report.clients.entry(client).or_default().rejected += 1;
+                Ok(Some(rej))
+            }
+        }
+    }
+
+    /// Abort everything `client` has in flight: queued requests are
+    /// purged and active slots retired (rolling back KV leases, even
+    /// mid-prefill — the disconnect-mid-prefill path the model checker
+    /// audits). Returns how many requests were cancelled.
+    pub fn abort_client(&mut self, client: ClientId) -> Result<usize> {
+        let Some(mut st) = self.online.take() else {
+            bail!("online serving is not started");
+        };
+        let r = self.abort_client_inner(&mut st, client);
+        self.online = Some(st);
+        r
+    }
+
+    fn abort_client_inner(
+        &mut self,
+        st: &mut OnlineState,
+        client: ClientId,
+    ) -> Result<usize> {
+        let mut n = st.queue.purge_client(client);
+        for slot in 0..st.active.len() {
+            if !st.active[slot].as_ref().is_some_and(|s| s.client == client) {
+                continue;
+            }
+            st.active[slot] = None;
+            st.live -= 1;
+            self.engine.retire(slot)?;
+            // the retire returned blocks to the KV pool: deferred
+            // admissions are worth retrying
+            st.pool_blocked = false;
+            st.queue.release(client);
+            n += 1;
+        }
+        if n > 0 {
+            st.report.aborted_requests += n as u64;
+            st.report.clients.entry(client).or_default().aborted += n as u64;
+        }
+        Ok(n)
+    }
+
+    /// One scheduling iteration of the shared admission path: admit
+    /// arrived requests (deferring on pool pressure), advance chunked
+    /// prefills, run one decode step, and route every token to its
+    /// owning client through `sink`. Returns whether any engine work
+    /// happened — `false` means the caller may sleep.
+    pub fn pump(&mut self, sink: &mut dyn ClientSink) -> Result<bool> {
+        let Some(mut st) = self.online.take() else {
+            bail!("online serving is not started (call start_online first)");
+        };
+        let r = self.pump_inner(&mut st, sink);
+        self.online = Some(st);
+        r
+    }
+
+    fn pump_inner(
+        &mut self,
+        st: &mut OnlineState,
+        sink: &mut dyn ClientSink,
+    ) -> Result<bool> {
+        let cap = self.engine.capacity().max(1);
+        let mut progressed = false;
+        // clients whose sink refused an event this iteration: aborted
+        // below, never blocked on
+        let mut dead: Vec<ClientId> = Vec::new();
+        // admission at decode-step granularity: refill every free slot
+        // with requests that have arrived (queue is in submit order) —
+        // gated on pool pressure as well as slot availability
+        while st.live < cap && !st.pool_blocked {
+            let arrived = st.queue.pending.front().is_some_and(|q| {
+                q.req.submit_s <= st.t0.elapsed().as_secs_f64()
+            });
+            if !arrived {
+                break;
+            }
+            let Some(QueuedReq { client, req }) = st.queue.pending.pop_front()
+            else {
+                break;
+            };
+            let queue_s =
+                (st.t0.elapsed().as_secs_f64() - req.submit_s).max(0.0);
+            let admit_t0 = Instant::now();
+            // chunked prefill on: claim the slot and lease now, and
+            // install the prompt between decode steps below, so the
+            // admission itself stalls nobody
+            let admitted = if self.prefill_chunk > 0 {
+                self.engine.admit_deferred(&req)
+            } else {
+                self.engine.admit(&req)
+            };
+            let adm = match admitted {
+                Ok(adm) => adm,
+                Err(e) if e.downcast_ref::<KvPoolError>().is_some() => {
+                    // KV pool pressure: with sequences in flight this is
+                    // transient — requeue and retry after the next
+                    // retire. With nothing in flight it can never
+                    // resolve (the request alone exceeds the pool);
+                    // batch serving fails fast, online serving answers
+                    // the owning client and keeps going.
+                    if st.live == 0 {
+                        if st.strict_unservable {
                             return Err(e.context(format!(
                                 "request {} cannot be admitted",
                                 req.id
                             )));
                         }
-                        queue.push_front(req);
-                        report.kv_admission_stalls += 1;
-                        pool_blocked = true;
-                        break;
-                    }
-                    Err(e) => return Err(e),
-                };
-                let prefill_s = admit_t0.elapsed().as_secs_f64();
-                report.prefill_tokens += req.prompt.len();
-                let mut seq = ActiveSeq::new(
-                    req, queue_s, prefill_s,
-                    self.engine.decode_budget(adm.slot));
-                if let Some(tok) = adm.first_token {
-                    seq.tokens.push(tok);
-                    seq.mark_first_token(t0.elapsed().as_secs_f64());
-                    record_itl(
-                        &mut seq,
-                        self.engine_clock(clock0),
-                        &mut report.serving,
-                    );
-                    let done = seq.tokens.len() >= seq.max_tokens;
-                    emit(sink, &seq, tok, 0, done.then_some(FinishReason::Length))?;
-                    if done {
-                        seq.mark_done();
-                        self.engine.retire(adm.slot)?;
-                        close_session(&mut report, seq, FinishReason::Length);
+                        st.queue.release(client);
+                        st.report.rejected_unservable += 1;
+                        st.report
+                            .clients
+                            .entry(client)
+                            .or_default()
+                            .rejected += 1;
+                        sink.on_reject(
+                            client,
+                            req.id,
+                            &format!(
+                                "request {} cannot be admitted: {e:#}",
+                                req.id
+                            ),
+                            "bad_request",
+                        );
+                        progressed = true;
                         continue;
                     }
-                } else {
-                    report.deferred_admissions += 1;
-                    seq.pending_prefill = true;
+                    st.queue.pending.push_front(QueuedReq { client, req });
+                    st.report.kv_admission_stalls += 1;
+                    st.pool_blocked = true;
+                    break;
                 }
-                active[adm.slot] = Some(seq);
-                live += 1;
+                Err(e) => return Err(e),
+            };
+            let prefill_s = admit_t0.elapsed().as_secs_f64();
+            st.report.prefill_tokens += req.prompt.len();
+            st.report.queue_wait_ms.push(queue_s * 1e3);
+            let mut seq = ActiveSeq::new(
+                &req,
+                queue_s,
+                prefill_s,
+                self.engine.decode_budget(adm.slot),
+            );
+            seq.client = client;
+            progressed = true;
+            if let Some(tok) = adm.first_token {
+                seq.tokens.push(tok);
+                seq.mark_first_token(st.t0.elapsed().as_secs_f64());
+                record_itl(
+                    &mut seq,
+                    self.engine_clock(st.clock0),
+                    &mut st.report.serving,
+                );
+                let done = seq.tokens.len() >= seq.max_tokens;
+                let ev = TokenEvent {
+                    request_id: seq.id,
+                    token: tok,
+                    index: 0,
+                    finish: done.then_some(FinishReason::Length),
+                };
+                if !dead.contains(&client) && !sink.on_token(client, &ev) {
+                    dead.push(client);
+                }
+                if done {
+                    seq.mark_done();
+                    self.engine.retire(adm.slot)?;
+                    finish_one(st, sink, seq, FinishReason::Length);
+                    continue;
+                }
+            } else {
+                st.report.deferred_admissions += 1;
+                seq.pending_prefill = true;
             }
-            if live == 0 {
+            st.active[adm.slot] = Some(seq);
+            st.live += 1;
+        }
+        if st.live == 0 {
+            self.drain_dead(st, &mut dead)?;
+            return Ok(progressed);
+        }
+        // advance pending (chunked) prefills under the per-iteration
+        // token budget: in-flight streams' next decode step is never
+        // more than one budget's worth of newcomer prompt away — the
+        // serving-layer instance of the paper's decompose-and-overlap
+        // principle (§4.1.1)
+        if self.prefill_chunk > 0 {
+            let mut budget = self.prefill_chunk;
+            for slot in 0..cap {
+                if budget == 0 {
+                    break;
+                }
+                if !st.active[slot].as_ref().is_some_and(|s| s.pending_prefill)
+                {
+                    continue;
+                }
+                let chunk_t0 = Instant::now();
+                let progress = self.engine.prefill_chunk(slot, budget)?;
+                st.report.prefill_chunks += 1;
+                budget = budget.saturating_sub(progress.installed);
+                let now_clock = self.engine_clock(st.clock0);
+                let done_budget = self.engine.decode_budget(slot);
+                let Some(seq) = st.active[slot].as_mut() else { continue };
+                seq.prefill_s += chunk_t0.elapsed().as_secs_f64();
+                if progress.installed == 0 && progress.first_token.is_none() {
+                    // a no-progress engine must not be spun on
+                    break;
+                }
+                let Some(tok) = progress.first_token else { continue };
+                // prompt fully installed: the slot decodes from here;
+                // clamp max_tokens to the now-known context budget
+                // exactly as a synchronous admission would
+                seq.pending_prefill = false;
+                if let Some(b) = done_budget {
+                    seq.max_tokens = seq.max_tokens.min(1 + b);
+                }
+                seq.tokens.push(tok);
+                seq.mark_first_token(st.t0.elapsed().as_secs_f64());
+                record_itl(seq, now_clock, &mut st.report.serving);
+                let done = seq.tokens.len() >= seq.max_tokens;
+                let client = seq.client;
+                let ev = TokenEvent {
+                    request_id: seq.id,
+                    token: tok,
+                    index: 0,
+                    finish: done.then_some(FinishReason::Length),
+                };
+                if !dead.contains(&client) && !sink.on_token(client, &ev) {
+                    dead.push(client);
+                }
+                if done {
+                    let Some(mut seq) = st.active[slot].take() else {
+                        continue;
+                    };
+                    seq.mark_done();
+                    st.live -= 1;
+                    self.engine.retire(slot)?;
+                    st.pool_blocked = false;
+                    finish_one(st, sink, seq, FinishReason::Length);
+                }
+            }
+        }
+        let step_t0 = Instant::now();
+        let toks = self.engine.step()?;
+        st.report
+            .step_latency_ms
+            .push(step_t0.elapsed().as_secs_f64() * 1e3);
+        // the trait allows slots with in-flight (deferred) prefill to
+        // be absent from a step; only a persistent stall is an error
+        if toks.is_empty() {
+            st.idle_steps += 1;
+            ensure!(
+                st.idle_steps < 10_000,
+                "engine stalled: {} active sequences produced no tokens \
+                 for {} consecutive steps",
+                st.live,
+                st.idle_steps
+            );
+            self.drain_dead(st, &mut dead)?;
+            return Ok(true);
+        }
+        st.idle_steps = 0;
+        let now_clock = self.engine_clock(st.clock0);
+        for (slot, tok) in toks {
+            // a slot whose row of the context window is exhausted ends
+            // its sequence on the token it just received; other slots
+            // keep decoding (budgets are per-slot, and retiring this
+            // one reclaims its row for the next admission)
+            let exhausted = self.engine.decode_budget(slot) == Some(0);
+            let Some(seq) = st.active.get_mut(slot).and_then(|s| s.as_mut())
+            else {
+                continue;
+            };
+            seq.tokens.push(tok);
+            seq.mark_first_token(st.t0.elapsed().as_secs_f64());
+            record_itl(seq, now_clock, &mut st.report.serving);
+            st.report.decode_tokens += 1;
+            let index = seq.tokens.len() - 1;
+            let done = seq.tokens.len() >= seq.max_tokens || exhausted;
+            let client = seq.client;
+            let ev = TokenEvent {
+                request_id: seq.id,
+                token: tok,
+                index,
+                finish: done.then_some(FinishReason::Length),
+            };
+            if !dead.contains(&client) && !sink.on_token(client, &ev) {
+                dead.push(client);
+            }
+            if done {
+                let Some(mut seq) = st.active[slot].take() else { continue };
+                seq.mark_done();
+                st.live -= 1;
+                self.engine.retire(slot)?;
+                st.pool_blocked = false;
+                finish_one(st, sink, seq, FinishReason::Length);
+            }
+        }
+        self.drain_dead(st, &mut dead)?;
+        Ok(true)
+    }
+
+    /// Abort every client whose sink refused an event this iteration.
+    fn drain_dead(
+        &mut self,
+        st: &mut OnlineState,
+        dead: &mut Vec<ClientId>,
+    ) -> Result<()> {
+        for c in dead.drain(..) {
+            self.abort_client_inner(st, c)?;
+        }
+        Ok(())
+    }
+
+    /// Live (admitted, not yet finished) sequences in the online serve.
+    pub fn online_active(&self) -> usize {
+        self.online.as_ref().map_or(0, |st| st.live)
+    }
+
+    /// Requests queued (submitted, not yet admitted) in the online serve.
+    pub fn online_queued(&self) -> usize {
+        self.online.as_ref().map_or(0, |st| st.queue.pending.len())
+    }
+
+    /// Nothing queued and nothing live.
+    pub fn online_idle(&self) -> bool {
+        self.online_active() == 0 && self.online_queued() == 0
+    }
+
+    /// Queued + active requests of one client (the fairness-cap gauge).
+    pub fn online_in_flight(&self, client: ClientId) -> usize {
+        self.online.as_ref().map_or(0, |st| {
+            st.queue.in_flight.get(&client).copied().unwrap_or(0)
+        })
+    }
+
+    /// The running online report (counters, percentiles) — `None`
+    /// outside an online serve.
+    pub fn online_report_mut(&mut self) -> Option<&mut ServeReport> {
+        self.online.as_mut().map(|st| &mut st.report)
+    }
+
+    /// Structural snapshot of the online scheduler — (slot, owning
+    /// client, request id, emitted tokens, prefill pending) per occupied
+    /// slot. The model checker keys its state signatures on this.
+    pub fn online_slots(&self) -> Vec<(SlotId, ClientId, u64, usize, bool)> {
+        let Some(st) = &self.online else { return Vec::new() };
+        st.active
+            .iter()
+            .enumerate()
+            .filter_map(|(slot, seq)| {
+                seq.as_ref().map(|s| {
+                    (slot, s.client, s.id, s.tokens.len(), s.pending_prefill)
+                })
+            })
+            .collect()
+    }
+
+    /// Seconds until the queue head's arrival instant (negative if it
+    /// already arrived); `None` when the queue is empty.
+    fn online_next_wait_s(&self) -> Option<f64> {
+        let st = self.online.as_ref()?;
+        let front = st.queue.pending.front()?;
+        Some(front.req.submit_s - st.t0.elapsed().as_secs_f64())
+    }
+
+    /// Stop online serving and return the aggregate report with
+    /// engine-second totals and offload deltas against the start
+    /// snapshot.
+    pub fn finish_online(&mut self) -> Result<ServeReport> {
+        let Some(mut st) = self.online.take() else {
+            bail!("online serving is not started");
+        };
+        let s1 = self.engine.stats();
+        st.report.prefill_s = s1.prefill_s - st.s0.prefill_s;
+        st.report.decode_s = s1.decode_s - st.s0.decode_s;
+        fill_offload_report(&mut st.report, &st.s0, &s1);
+        st.report.wall_s = st.t0.elapsed().as_secs_f64();
+        Ok(st.report)
+    }
+
+    /// The online extension of [`Coordinator::check_invariants`]: the
+    /// engine/KV audit plus cross-checks of the shared admission queue's
+    /// bookkeeping against the actual queued/active population.
+    pub fn check_online_invariants(&self) -> Result<()> {
+        self.check_invariants()?;
+        let Some(st) = &self.online else { return Ok(()) };
+        let occupied = st.active.iter().flatten().count();
+        ensure!(
+            occupied == st.live,
+            "scheduler live count ({}) disagrees with occupied slots ({})",
+            st.live,
+            occupied
+        );
+        ensure!(
+            self.engine.active() == st.live,
+            "engine reports {} occupied slots but the online scheduler \
+             tracks {} live sequences",
+            self.engine.active(),
+            st.live
+        );
+        let mut counts: BTreeMap<ClientId, usize> = BTreeMap::new();
+        for q in &st.queue.pending {
+            *counts.entry(q.client).or_insert(0) += 1;
+        }
+        for s in st.active.iter().flatten() {
+            *counts.entry(s.client).or_insert(0) += 1;
+        }
+        ensure!(
+            counts == st.queue.in_flight,
+            "per-client in-flight accounting {:?} disagrees with the \
+             actual queued+active population {:?}",
+            st.queue.in_flight,
+            counts
+        );
+        Ok(())
+    }
+
+    /// Continuous batching over an arrival trace, implemented as the
+    /// online machinery driven by a single client: unbounded limits,
+    /// the caller's arrival clock honored, sessions kept in the report.
+    /// The admission path is shared with the server, not duplicated —
+    /// which is what keeps batch and online token streams byte-identical.
+    fn serve_continuous<S: TokenSink>(
+        &mut self,
+        requests: &[InferenceRequest],
+        sink: &mut S,
+    ) -> Result<ServeReport> {
+        let cap = self.engine.capacity().max(1);
+        self.online = Some(OnlineState::new(
+            self.engine.stats(),
+            cap,
+            AdmissionLimits::default(),
+            true,
+            true,
+            false,
+        ));
+        for req in requests {
+            // unbounded limits: batch submission cannot be refused
+            self.submit(0, req.clone())?;
+        }
+        let mut bridge = BatchSink { inner: sink, err: None };
+        loop {
+            let worked = match self.pump(&mut bridge) {
+                Ok(w) => w,
+                Err(e) => {
+                    self.online = None;
+                    return Err(e);
+                }
+            };
+            if let Some(e) = bridge.err.take() {
+                self.online = None;
+                return Err(e);
+            }
+            if self.online_idle() {
+                break;
+            }
+            if !worked {
                 // nothing in flight: sleep toward the next arrival
                 // instead of spinning on the clock
-                if let Some(req) = queue.front() {
-                    let wait = req.submit_s - t0.elapsed().as_secs_f64();
+                if let Some(wait) = self.online_next_wait_s() {
                     if wait > 0.0 {
                         std::thread::sleep(Duration::from_secs_f64(
                             wait.min(0.05),
                         ));
                     }
                 }
-                continue;
-            }
-            // advance pending (chunked) prefills under the per-iteration
-            // token budget: in-flight streams' next decode step is never
-            // more than one budget's worth of newcomer prompt away — the
-            // serving-layer instance of the paper's decompose-and-overlap
-            // principle (§4.1.1)
-            if self.prefill_chunk > 0 {
-                let mut budget = self.prefill_chunk;
-                for slot in 0..cap {
-                    if budget == 0 {
-                        break;
-                    }
-                    if !active[slot]
-                        .as_ref()
-                        .is_some_and(|s| s.pending_prefill)
-                    {
-                        continue;
-                    }
-                    let chunk_t0 = Instant::now();
-                    let progress = self.engine.prefill_chunk(slot, budget)?;
-                    report.prefill_chunks += 1;
-                    budget = budget.saturating_sub(progress.installed);
-                    let now_clock = self.engine_clock(clock0);
-                    let done_budget = self.engine.decode_budget(slot);
-                    let Some(seq) = active[slot].as_mut() else { continue };
-                    seq.prefill_s += chunk_t0.elapsed().as_secs_f64();
-                    if progress.installed == 0
-                        && progress.first_token.is_none()
-                    {
-                        // a no-progress engine must not be spun on
-                        break;
-                    }
-                    let Some(tok) = progress.first_token else { continue };
-                    // prompt fully installed: the slot decodes from here;
-                    // clamp max_tokens to the now-known context budget
-                    // exactly as a synchronous admission would
-                    seq.pending_prefill = false;
-                    if let Some(b) = done_budget {
-                        seq.max_tokens = seq.max_tokens.min(1 + b);
-                    }
-                    seq.tokens.push(tok);
-                    seq.mark_first_token(t0.elapsed().as_secs_f64());
-                    record_itl(seq, now_clock, &mut report.serving);
-                    let done = seq.tokens.len() >= seq.max_tokens;
-                    emit(sink, seq, tok, 0, done.then_some(FinishReason::Length))?;
-                    if done {
-                        let Some(mut seq) = active[slot].take() else {
-                            continue;
-                        };
-                        seq.mark_done();
-                        live -= 1;
-                        self.engine.retire(slot)?;
-                        pool_blocked = false;
-                        close_session(&mut report, seq, FinishReason::Length);
-                    }
-                }
-            }
-            let st = Instant::now();
-            let toks = self.engine.step()?;
-            report.step_latency_ms.push(st.elapsed().as_secs_f64() * 1e3);
-            // the trait allows slots with in-flight (deferred) prefill to
-            // be absent from a step; only a persistent stall is an error
-            if toks.is_empty() {
-                idle_steps += 1;
-                ensure!(
-                    idle_steps < 10_000,
-                    "engine stalled: {live} active sequences produced no \
-                     tokens for {idle_steps} consecutive steps"
-                );
-                continue;
-            }
-            idle_steps = 0;
-            let now_clock = self.engine_clock(clock0);
-            for (slot, tok) in toks {
-                // a slot whose row of the context window is exhausted ends
-                // its sequence on the token it just received; other slots
-                // keep decoding (budgets are per-slot, and retiring this
-                // one reclaims its row for the next admission)
-                let exhausted = self.engine.decode_budget(slot) == Some(0);
-                let Some(seq) = active.get_mut(slot).and_then(|s| s.as_mut())
-                else {
-                    continue;
-                };
-                seq.tokens.push(tok);
-                seq.mark_first_token(t0.elapsed().as_secs_f64());
-                record_itl(seq, now_clock, &mut report.serving);
-                report.decode_tokens += 1;
-                let index = seq.tokens.len() - 1;
-                let done = seq.tokens.len() >= seq.max_tokens || exhausted;
-                emit(sink, seq, tok, index, done.then_some(FinishReason::Length))?;
-                if done {
-                    let Some(mut seq) = active[slot].take() else {
-                        continue;
-                    };
-                    seq.mark_done();
-                    live -= 1;
-                    self.engine.retire(slot)?;
-                    // the retire returned blocks to the KV pool: deferred
-                    // admissions are worth retrying
-                    pool_blocked = false;
-                    close_session(&mut report, seq, FinishReason::Length);
-                }
             }
         }
-        let s1 = self.engine.stats();
-        report.prefill_s = s1.prefill_s - s0.prefill_s;
-        report.decode_s = s1.decode_s - s0.decode_s;
-        fill_offload_report(&mut report, &s0, &s1);
-        report.wall_s = t0.elapsed().as_secs_f64();
-        Ok(report)
+        self.finish_online()
     }
 
     fn serve_lockstep<S: TokenSink>(
@@ -715,7 +1317,8 @@ impl<E: Engine> Coordinator<E> {
             for (slot, seq) in seqs {
                 // idempotent: finished members were already retired
                 self.engine.retire(slot)?;
-                close_session(&mut report, seq, FinishReason::Length);
+                let sess = close_session(&mut report, seq, FinishReason::Length);
+                report.sessions.push(sess);
             }
         }
         let s1 = self.engine.stats();
@@ -980,5 +1583,163 @@ mod tests {
         // the third request queued behind a full engine
         assert!(q.queue_ms.percentile(100.0) >= q.queue_ms.percentile(0.0));
         assert!(q.ttft_ms.percentile(50.0) > 0.0);
+    }
+
+    /// Test [`ClientSink`]: records routing instead of writing sockets.
+    #[derive(Default)]
+    struct RecordSink {
+        events: Vec<(ClientId, u64, u32)>,
+        done: Vec<(ClientId, u64)>,
+        rejects: Vec<(ClientId, u64, String)>,
+    }
+
+    impl ClientSink for RecordSink {
+        fn on_token(&mut self, client: ClientId, ev: &TokenEvent) -> bool {
+            self.events.push((client, ev.request_id, ev.token));
+            true
+        }
+        fn on_done(&mut self, client: ClientId, sess: &Session) {
+            self.done.push((client, sess.id));
+        }
+        fn on_reject(&mut self, client: ClientId, id: u64, _e: &str, code: &str) {
+            self.rejects.push((client, id, code.to_string()));
+        }
+    }
+
+    #[test]
+    fn online_submit_enforces_the_per_client_cap() {
+        let mut c = Coordinator::new(sim(1));
+        c.start_online(AdmissionLimits { queue_depth: 0, client_cap: 1 });
+        assert!(c
+            .submit(7, InferenceRequest::new(0, vec![1, 2], 2))
+            .unwrap()
+            .is_none());
+        let rej = c
+            .submit(7, InferenceRequest::new(1, vec![1, 2], 2))
+            .unwrap()
+            .unwrap();
+        assert_eq!(rej.code(), "client_cap");
+        // another client is unaffected by 7's cap
+        assert!(c
+            .submit(8, InferenceRequest::new(2, vec![1], 2))
+            .unwrap()
+            .is_none());
+        assert_eq!(c.online_in_flight(7), 1);
+        assert_eq!(c.online_queued(), 2);
+        c.check_online_invariants().unwrap();
+        let report = c.finish_online().unwrap();
+        assert_eq!(report.client_cap_rejections, 1);
+        assert_eq!(report.clients[&7].rejected, 1);
+        assert_eq!(report.clients[&7].submitted, 2);
+    }
+
+    #[test]
+    fn online_submit_sheds_at_queue_depth() {
+        let mut c = Coordinator::new(sim(1));
+        c.start_online(AdmissionLimits { queue_depth: 1, client_cap: 0 });
+        assert!(c
+            .submit(1, InferenceRequest::new(0, vec![1], 2))
+            .unwrap()
+            .is_none());
+        let rej = c
+            .submit(2, InferenceRequest::new(1, vec![1], 2))
+            .unwrap()
+            .unwrap();
+        assert_eq!(rej.code(), "shed");
+        assert!(matches!(
+            rej,
+            AdmissionReject::Shed { depth: 1, max_depth: 1 }
+        ));
+        // a refusal leaves queue state untouched
+        c.check_online_invariants().unwrap();
+        let report = c.finish_online().unwrap();
+        assert_eq!(report.shed, 1);
+        assert_eq!(report.clients[&2].rejected, 1);
+    }
+
+    #[test]
+    fn abort_client_mid_prefill_rolls_back_the_lease() {
+        let engine = SimEngine::new(
+            oneplus_12(),
+            bamboo_7b(),
+            RuntimeConfig { max_batch: 2, ..Default::default() },
+        );
+        let mut c = Coordinator::new(engine).with_prefill_chunk(2);
+        c.start_online(AdmissionLimits::default());
+        // 6-token prompt, 2-token chunks: after one pump the prompt is
+        // still installing — the disconnect hits mid-prefill
+        let req = InferenceRequest::new(0, vec![1, 2, 3, 4, 5, 6], 4);
+        assert!(c.submit(3, req).unwrap().is_none());
+        let mut sink = RecordSink::default();
+        c.pump(&mut sink).unwrap();
+        let slots = c.online_slots();
+        assert_eq!(slots.len(), 1);
+        assert!(slots[0].4, "prefill should still be pending after one pump");
+        assert_eq!(c.abort_client(3).unwrap(), 1);
+        c.check_online_invariants().unwrap();
+        let pool = c.engine.kv_pool().unwrap();
+        assert_eq!(
+            pool.free_blocks, pool.total_blocks,
+            "mid-prefill abort leaked lease blocks"
+        );
+        assert_eq!(c.online_active(), 0);
+        let report = c.finish_online().unwrap();
+        assert_eq!(report.aborted_requests, 1);
+        assert_eq!(report.clients[&3].aborted, 1);
+        assert!(sink.events.is_empty(), "aborted request emitted tokens");
+    }
+
+    #[test]
+    fn online_pump_routes_tokens_to_owning_clients() {
+        let mut c = Coordinator::new(sim(2));
+        c.start_online(AdmissionLimits::default());
+        c.submit(10, InferenceRequest::new(0, vec![1, 2, 3], 3)).unwrap();
+        c.submit(20, InferenceRequest::new(1, vec![4, 5], 4)).unwrap();
+        let mut sink = RecordSink::default();
+        while !c.online_idle() {
+            c.pump(&mut sink).unwrap();
+        }
+        let report = c.finish_online().unwrap();
+        // every event carries its owner, never the other client
+        assert!(sink.events.iter().filter(|e| e.1 == 0).all(|e| e.0 == 10));
+        assert!(sink.events.iter().filter(|e| e.1 == 1).all(|e| e.0 == 20));
+        assert_eq!(sink.events.iter().filter(|e| e.1 == 0).count(), 3);
+        assert_eq!(sink.events.iter().filter(|e| e.1 == 1).count(), 4);
+        assert_eq!(sink.done.len(), 2);
+        assert!(sink.rejects.is_empty());
+        assert_eq!(report.clients[&10].completed, 1);
+        assert_eq!(report.clients[&10].tokens, 3);
+        assert_eq!(report.clients[&20].tokens, 4);
+        // online mode hands sessions to the sink, not the report
+        assert!(report.sessions.is_empty());
+        assert_eq!(c.engine.active(), 0);
+    }
+
+    #[test]
+    fn online_streams_match_solo_runs() {
+        // the shared admission path must not perturb token streams: a
+        // request served alongside another client is byte-identical to
+        // the same request served solo
+        let solo = {
+            let mut c = Coordinator::new(sim(2));
+            let report = c.serve_collect(&reqs(&[5])).unwrap();
+            report.session(0).unwrap().tokens.clone()
+        };
+        let mut c = Coordinator::new(sim(2));
+        c.start_online(AdmissionLimits::default());
+        c.submit(1, InferenceRequest::new(0, vec![1, 2, 3], 5)).unwrap();
+        c.submit(2, InferenceRequest::new(7, vec![9, 9, 9], 6)).unwrap();
+        let mut sink = RecordSink::default();
+        while !c.online_idle() {
+            c.pump(&mut sink).unwrap();
+        }
+        c.finish_online().unwrap();
+        let online: Vec<u32> = sink
+            .events
+            .iter()
+            .filter(|e| e.1 == 0)
+            .map(|e| e.2)
+            .collect();
+        assert_eq!(online, solo, "batched online stream diverged from solo");
     }
 }

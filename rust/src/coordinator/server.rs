@@ -10,47 +10,53 @@
 //! token as the engine produces it, then a terminal `done` event:
 //!   → {"prompt": "text", "max_tokens": 4, "stream": true}
 //!   ← {"event": "token", "id": 0, "index": 0, "token": 17, "text": "…"}
-//!   ← {"event": "token", "id": 0, "index": 1, "token": 3,  "text": "…"}
 //!   ← …
-//!   ← {"event": "token", "id": 0, "index": 3, "token": 9, "text": "…",
-//!      "finish": "length"}
-//!   ← {"event": "done", "id": 0, "text": "...", "tokens": [..],
-//!      "finish": "length", "queue_s": .., "prefill_s": .., "decode_s": ..,
-//!      "total_s": ..}
+//!   ← {"event": "done", "id": 0, "text": "...", "tokens": [..], ..}
 //!
-//! Commands:
-//!   → {"cmd": "stats"}
-//!   ← {"served": N, "decode_tps": .., "cache_hit_rate": ..,
-//!      "queue_ms": {"p50": .., "p90": .., "p99": ..},
-//!      "prefill_ms": {..}, "decode_ms": {..}, "ttft_ms": {..},
-//!      "itl_ms": {"p50": .., "p99": .., "max": ..},
-//!      "kv": {"blocks_total": .., "blocks_free": .., "occupancy": ..,
-//!             "share_rate": .., "shared_blocks": .., "alloc_stalls": ..,
-//!             "cow_copies": ..}}       (engines with a paged KV pool)
-//!   → {"cmd": "shutdown"}   ← {"ok": true}
+//! Commands: {"cmd": "stats"} and {"cmd": "shutdown"} as before; `stats`
+//! now also reports the shared admission queue (`queue`: depth/wait
+//! percentiles, shed and cap-rejection counts) and the connection layer
+//! (`clients`: connected count, accept-error counter, per-client
+//! request/token totals).
 //!
-//! Malformed input never silently drops the connection: every bad line —
-//! unparseable JSON, a non-object request, a wrong-typed field, an
-//! unknown command — gets a structured one-line reply
-//! `{"error": "...", "code": "bad_json" | "bad_request"}` and the
-//! connection stays open for the next line.
+//! Connection model: a dedicated accept thread hands each connection to
+//! the scheduler thread, which spawns one reader thread (parses lines
+//! into messages) and one writer thread (drains a bounded per-connection
+//! outbound queue) per client. All requests from all connections funnel
+//! through the `Coordinator`'s single shared admission queue
+//! ([`Coordinator::submit`]); the scheduler pumps the engine and routes
+//! each token event to the owning connection's writer. The decode loop
+//! never blocks on a socket: a client whose outbound queue is full (it
+//! stopped reading) is aborted — its queued requests purged, its active
+//! slots retired with the KV lease rolled back (even mid-prefill) — and
+//! its connection closed. Disconnects take the same abort path.
 //!
-//! Single-threaded accept loop (mobile serving is one-app-one-model;
-//! concurrency lives in the engine's slots, not in connection handling).
+//! Typed refusals keep the wire structured end to end:
+//!   - `{"error", "code": "shed"}` — shared admission queue at max depth
+//!   - `{"error", "code": "client_cap"}` — per-client in-flight cap hit
+//!   - `{"error", "code": "max_clients"}` — connection limit, then close
+//!   - `{"error", "code": "bad_json" | "bad_request"}` — malformed input
+//!     (never silently drops the connection)
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::config::{DeviceConfig, ModelSpec, RuntimeConfig};
-use crate::coordinator::{Coordinator, RealEnginePool, ScheduleMode};
+use crate::coordinator::{
+    AdmissionLimits, ClientId, ClientSink, Coordinator, RealEnginePool,
+    ScheduleMode, ServeReport,
+};
 use crate::engine::real::{RealEngine, RealEngineOptions};
 use crate::engine::SimEngine;
-use crate::kv::KvPoolError;
-use crate::metrics::ServingMetrics;
-use crate::serve::{Engine, FnSink, InferenceRequest, Session, TokenEvent};
+use crate::serve::{Engine, InferenceRequest, Session, TokenEvent};
 use crate::tokenizer::Tokenizer;
 use crate::util::json::{self, Json};
 use crate::util::stats::Samples;
@@ -58,6 +64,19 @@ use crate::util::stats::Samples;
 /// Upper bound on a single request's `max_tokens` (the sim engine has no
 /// intrinsic context limit to clamp against).
 const MAX_TOKENS_CAP: usize = 4096;
+
+/// Bounded per-connection outbound queue (lines). A client that stops
+/// reading fills this and is aborted instead of ever blocking the
+/// decode loop.
+const OUTBOUND_QUEUE_LINES: usize = 256;
+
+/// Accept-thread poll interval while the listener has nothing pending.
+const ACCEPT_POLL_MS: u64 = 5;
+
+/// Bounded backoff window for accept errors (doubles from min to max,
+/// resets on the next successful accept).
+const ACCEPT_BACKOFF_MIN_MS: u64 = 10;
+const ACCEPT_BACKOFF_MAX_MS: u64 = 1000;
 
 /// Fallback BPE training corpus, used only when the artifacts dir has no
 /// `tokenizer.json`.
@@ -96,12 +115,252 @@ fn error_json(msg: &str, code: &str) -> Json {
     json::obj(vec![("error", json::s(msg)), ("code", json::s(code))])
 }
 
+/// JSON record of a completed session (the non-streaming reply body, or
+/// the terminal `done` event in streaming mode).
+fn session_json(tokenizer: &Tokenizer, sess: &Session, event: Option<&str>) -> Json {
+    let m = &sess.metrics;
+    let mut fields = Vec::new();
+    if let Some(ev) = event {
+        fields.push(("event", json::s(ev)));
+    }
+    fields.extend([
+        ("id", json::num(sess.id as f64)),
+        ("text", json::s(&tokenizer.decode(&sess.tokens))),
+        ("tokens", Json::Arr(
+            sess.tokens.iter().map(|&t| json::num(t as f64)).collect())),
+        ("finish", json::s(sess.finish.as_str())),
+        ("queue_s", json::num(m.queue_s)),
+        ("prefill_s", json::num(m.prefill_s)),
+        ("decode_s", json::num(m.decode_s)),
+        ("total_s", json::num(m.queue_s + m.prefill_s + m.decode_s)),
+    ]);
+    json::obj(fields)
+}
+
+/// Everything the per-connection threads send to the scheduler thread.
+/// `Connect` carries the connection's writer half; the scheduler spawns
+/// the reader itself, so a client's first `Line` can never arrive before
+/// its registration.
+enum ServerMsg {
+    Connect {
+        client: ClientId,
+        outbound: mpsc::SyncSender<String>,
+        stream: TcpStream,
+        writer: thread::JoinHandle<()>,
+    },
+    Line { client: ClientId, line: String },
+    ReadError { client: ClientId, msg: String },
+    Hangup { client: ClientId },
+}
+
+/// One registered connection from the scheduler's point of view.
+struct Conn {
+    outbound: mpsc::SyncSender<String>,
+    stream: TcpStream,
+    reader: thread::JoinHandle<()>,
+    writer: thread::JoinHandle<()>,
+}
+
+/// Per-request routing record: which connection owns a submitted request
+/// and whether it asked for streaming events.
+struct ReqMeta {
+    client: ClientId,
+    stream: bool,
+}
+
+/// Accept thread: non-blocking accept with a bounded error backoff (an
+/// accept-error storm must neither spin hot nor go invisible — the
+/// counter is surfaced in `stats`). Each accepted connection gets its
+/// writer thread here; registration and the reader are the scheduler's.
+fn accept_loop(
+    listener: TcpListener,
+    tx: mpsc::Sender<ServerMsg>,
+    stop: Arc<AtomicBool>,
+    accept_errors: Arc<AtomicU64>,
+) {
+    let mut next_client: ClientId = 1;
+    let mut backoff = Duration::from_millis(ACCEPT_BACKOFF_MIN_MS);
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                backoff = Duration::from_millis(ACCEPT_BACKOFF_MIN_MS);
+                if stream.set_nonblocking(false).is_err() {
+                    accept_errors.fetch_add(1, Ordering::SeqCst);
+                    continue;
+                }
+                let wstream = match stream.try_clone() {
+                    Ok(s) => s,
+                    Err(_) => {
+                        accept_errors.fetch_add(1, Ordering::SeqCst);
+                        continue;
+                    }
+                };
+                let (out_tx, out_rx) =
+                    mpsc::sync_channel::<String>(OUTBOUND_QUEUE_LINES);
+                let writer =
+                    thread::spawn(move || writer_loop(wstream, out_rx));
+                let client = next_client;
+                next_client += 1;
+                let msg = ServerMsg::Connect {
+                    client,
+                    outbound: out_tx,
+                    stream,
+                    writer,
+                };
+                if tx.send(msg).is_err() {
+                    return; // scheduler gone
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(ACCEPT_POLL_MS));
+            }
+            Err(e) => {
+                accept_errors.fetch_add(1, Ordering::SeqCst);
+                eprintln!("accept error: {e} (backing off {backoff:?})");
+                thread::sleep(backoff);
+                backoff = (backoff * 2)
+                    .min(Duration::from_millis(ACCEPT_BACKOFF_MAX_MS));
+            }
+        }
+    }
+}
+
+/// Writer thread: drain the connection's outbound queue onto the socket.
+/// Exits when the queue's sender is dropped or the socket breaks.
+fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<String>) {
+    while let Ok(line) = rx.recv() {
+        if writeln!(stream, "{line}").is_err() {
+            break;
+        }
+    }
+}
+
+/// Reader thread: parse the connection into lines for the scheduler.
+/// Every exit path tells the scheduler why, so the connection's in-flight
+/// work is always aborted and its resources reclaimed.
+fn reader_loop(client: ClientId, stream: TcpStream, tx: mpsc::Sender<ServerMsg>) {
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        match line {
+            Ok(l) => {
+                if tx.send(ServerMsg::Line { client, line: l }).is_err() {
+                    return;
+                }
+            }
+            Err(e) => {
+                let _ = tx.send(ServerMsg::ReadError {
+                    client,
+                    msg: e.to_string(),
+                });
+                return;
+            }
+        }
+    }
+    let _ = tx.send(ServerMsg::Hangup { client });
+}
+
+/// Deregister and close one connection. `graceful` drains the outbound
+/// queue (bounded wait) before shutting the socket down, so a queued
+/// goodbye still reaches the client; abortive close shuts down first to
+/// unblock a writer stuck on a full socket.
+fn close_conn(
+    conns: &mut BTreeMap<ClientId, Conn>,
+    meta: &mut BTreeMap<u64, ReqMeta>,
+    client: ClientId,
+    graceful: bool,
+) {
+    meta.retain(|_, m| m.client != client);
+    let Some(conn) = conns.remove(&client) else { return };
+    let Conn { outbound, stream, reader, writer } = conn;
+    if !graceful {
+        let _ = stream.shutdown(Shutdown::Both);
+    }
+    drop(outbound); // writer drains what's queued, then exits
+    if graceful {
+        let deadline = Instant::now() + Duration::from_millis(500);
+        while !writer.is_finished() && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(1));
+        }
+        let _ = stream.shutdown(Shutdown::Both);
+    }
+    let _ = writer.join();
+    let _ = reader.join();
+}
+
+/// Routes scheduler output to the owning connection's writer queue. A
+/// full queue or a vanished connection marks the client dead: the run
+/// loop aborts its in-flight work and closes its socket, and the decode
+/// loop never blocks on one slow client.
+struct RouteSink<'a> {
+    conns: &'a mut BTreeMap<ClientId, Conn>,
+    meta: &'a mut BTreeMap<u64, ReqMeta>,
+    tokenizer: &'a Tokenizer,
+    dead: Vec<ClientId>,
+}
+
+impl RouteSink<'_> {
+    fn push(&mut self, client: ClientId, line: String) -> bool {
+        let ok = self
+            .conns
+            .get(&client)
+            .is_some_and(|c| c.outbound.try_send(line).is_ok());
+        if !ok && !self.dead.contains(&client) {
+            self.dead.push(client);
+        }
+        ok
+    }
+}
+
+impl ClientSink for RouteSink<'_> {
+    fn on_token(&mut self, client: ClientId, ev: &TokenEvent) -> bool {
+        let stream = self
+            .meta
+            .get(&ev.request_id)
+            .is_some_and(|m| m.stream);
+        if !stream {
+            // non-streaming requests answer once, at on_done
+            return self.conns.contains_key(&client)
+                && !self.dead.contains(&client);
+        }
+        let mut fields = vec![
+            ("event", json::s("token")),
+            ("id", json::num(ev.request_id as f64)),
+            ("index", json::num(ev.index as f64)),
+            ("token", json::num(ev.token as f64)),
+            ("text", json::s(&self.tokenizer.decode(&[ev.token]))),
+        ];
+        if let Some(fin) = ev.finish {
+            fields.push(("finish", json::s(fin.as_str())));
+        }
+        self.push(client, json::obj(fields).to_string())
+    }
+
+    fn on_done(&mut self, client: ClientId, sess: &Session) {
+        let stream = self
+            .meta
+            .remove(&sess.id)
+            .is_some_and(|m| m.stream);
+        let body = session_json(self.tokenizer, sess, stream.then_some("done"));
+        self.push(client, body.to_string());
+    }
+
+    fn on_reject(&mut self, client: ClientId, request_id: u64, error: &str, code: &str) {
+        self.meta.remove(&request_id);
+        self.push(client, error_json(error, code).to_string());
+    }
+}
+
 pub struct Server<E: Engine> {
     coord: Coordinator<E>,
     tokenizer: Tokenizer,
     next_id: u64,
-    served: usize,
-    serving: ServingMetrics,
+    /// Connection registry cap; further connects get a typed refusal.
+    max_clients: usize,
+    /// Shared-admission-queue limits handed to the coordinator.
+    limits: AdmissionLimits,
+    /// Accept-loop error counter (shared with the accept thread),
+    /// surfaced in `stats` so error storms are visible to monitoring.
+    accept_errors: Arc<AtomicU64>,
 }
 
 impl Server<RealEngine> {
@@ -136,27 +395,41 @@ impl Server<RealEngine> {
 
 impl Server<SimEngine> {
     /// Simulation-backed server: the full line protocol over modeled
-    /// decode, no artifacts required.
+    /// decode, no artifacts required. The config's connection caps
+    /// (`max_clients`, `client_inflight_cap`, `admission_queue_depth`)
+    /// apply.
     pub fn sim(
         dev: DeviceConfig,
         spec: ModelSpec,
         cfg: RuntimeConfig,
     ) -> Server<SimEngine> {
-        Server::new(
+        let (max_clients, client_cap, queue_depth) = (
+            cfg.max_clients,
+            cfg.client_inflight_cap,
+            cfg.admission_queue_depth,
+        );
+        let mut server = Server::new(
             SimEngine::new(dev, spec, cfg),
             Tokenizer::train(FALLBACK_CORPUS, 64),
-        )
+        );
+        server.set_limits(max_clients, client_cap, queue_depth);
+        server
     }
 }
 
 impl<E: Engine> Server<E> {
     pub fn new(engine: E, tokenizer: Tokenizer) -> Server<E> {
+        let defaults = RuntimeConfig::default();
         Server {
             coord: Coordinator::new(engine),
             tokenizer,
             next_id: 0,
-            served: 0,
-            serving: ServingMetrics::default(),
+            max_clients: defaults.max_clients.max(1),
+            limits: AdmissionLimits {
+                queue_depth: defaults.admission_queue_depth,
+                client_cap: defaults.client_inflight_cap,
+            },
+            accept_errors: Arc::new(AtomicU64::new(0)),
         }
     }
 
@@ -170,117 +443,392 @@ impl<E: Engine> Server<E> {
         self.coord.prefill_chunk = tokens;
     }
 
+    /// Connection and admission caps: `max_clients` simultaneous
+    /// connections (≥ 1), `client_cap` in-flight requests per client and
+    /// `queue_depth` shared queue depth (0 = uncapped).
+    pub fn set_limits(
+        &mut self,
+        max_clients: usize,
+        client_cap: usize,
+        queue_depth: usize,
+    ) {
+        self.max_clients = max_clients.max(1);
+        self.limits = AdmissionLimits { queue_depth, client_cap };
+    }
+
     /// Bind and serve until a shutdown command arrives. Sends the bound
     /// address through `ready` once listening (for tests / launchers).
+    ///
+    /// Thread topology: one accept thread, one reader + one writer
+    /// thread per connection, and the calling thread as the scheduler —
+    /// the only thread that touches the `Coordinator`, so the shared
+    /// admission queue needs no locks and every interleaving the model
+    /// checker explores is one the scheduler can actually produce.
     pub fn run(
         &mut self,
         addr: &str,
-        ready: Option<std::sync::mpsc::Sender<std::net::SocketAddr>>,
+        ready: Option<mpsc::Sender<SocketAddr>>,
     ) -> Result<()> {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("bind {addr}"))?;
+        listener
+            .set_nonblocking(true)
+            .context("set listener non-blocking")?;
         if let Some(tx) = ready {
             let _ = tx.send(listener.local_addr()?);
         }
-        for stream in listener.incoming() {
-            // a broken connection (aborted before accept, client hung up
-            // mid-stream, engine error) must not take the server down
-            let stream = match stream {
-                Ok(s) => s,
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::channel::<ServerMsg>();
+        let accept_handle = {
+            let tx = tx.clone();
+            let stop = Arc::clone(&stop);
+            let errors = Arc::clone(&self.accept_errors);
+            thread::spawn(move || accept_loop(listener, tx, stop, errors))
+        };
+        self.coord.start_online(self.limits);
+        let mut conns: BTreeMap<ClientId, Conn> = BTreeMap::new();
+        let mut meta: BTreeMap<u64, ReqMeta> = BTreeMap::new();
+        let mut orphans: Vec<(TcpStream, thread::JoinHandle<()>)> = Vec::new();
+        let mut result: Result<()> = Ok(());
+        let mut idle = false;
+        'serve: loop {
+            // drain inbound messages; block briefly only when the engine
+            // has nothing to do (a Line wakes the scheduler immediately)
+            let mut msgs: Vec<ServerMsg> = Vec::new();
+            if idle {
+                match rx.recv_timeout(Duration::from_millis(10)) {
+                    Ok(m) => msgs.push(m),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break 'serve,
+                }
+            }
+            while let Ok(m) = rx.try_recv() {
+                msgs.push(m);
+            }
+            for msg in msgs {
+                match self.handle_msg(msg, &mut conns, &mut meta, &tx, &mut orphans)
+                {
+                    Ok(true) => break 'serve, // shutdown requested
+                    Ok(false) => {}
+                    Err(e) => {
+                        result = Err(e);
+                        break 'serve;
+                    }
+                }
+            }
+            let mut sink = RouteSink {
+                conns: &mut conns,
+                meta: &mut meta,
+                tokenizer: &self.tokenizer,
+                dead: Vec::new(),
+            };
+            let pumped = self.coord.pump(&mut sink);
+            let dead = sink.dead;
+            let worked = match pumped {
+                Ok(w) => w,
                 Err(e) => {
-                    eprintln!("accept error: {e}");
-                    continue;
+                    result = Err(e);
+                    break 'serve;
                 }
             };
-            match self.handle_connection(stream) {
-                Ok(true) => break, // shutdown requested
-                Ok(false) => {}
-                Err(e) => eprintln!("connection error: {e:#}"),
+            for c in dead {
+                // the coordinator already aborted sink-refused clients;
+                // this close is idempotent for them
+                let _ = self.coord.abort_client(c);
+                close_conn(&mut conns, &mut meta, c, false);
             }
+            idle = !worked;
+        }
+        // teardown: stop accepting, adopt stragglers, close everything
+        stop.store(true, Ordering::SeqCst);
+        let _ = accept_handle.join();
+        while let Ok(msg) = rx.try_recv() {
+            if let ServerMsg::Connect { outbound, stream, writer, .. } = msg {
+                drop(outbound);
+                let _ = stream.shutdown(Shutdown::Both);
+                orphans.push((stream, writer));
+            }
+        }
+        let clients: Vec<ClientId> = conns.keys().copied().collect();
+        for c in clients {
+            let _ = self.coord.abort_client(c);
+            close_conn(&mut conns, &mut meta, c, true);
+        }
+        for (stream, writer) in orphans {
+            let _ = stream.shutdown(Shutdown::Both);
+            let _ = writer.join();
+        }
+        let _ = self.coord.finish_online();
+        result
+    }
+
+    /// Process one message from the connection threads. Returns true when
+    /// a client requested shutdown.
+    fn handle_msg(
+        &mut self,
+        msg: ServerMsg,
+        conns: &mut BTreeMap<ClientId, Conn>,
+        meta: &mut BTreeMap<u64, ReqMeta>,
+        tx: &mpsc::Sender<ServerMsg>,
+        orphans: &mut Vec<(TcpStream, thread::JoinHandle<()>)>,
+    ) -> Result<bool> {
+        match msg {
+            ServerMsg::Connect { client, outbound, stream, writer } => {
+                if conns.len() >= self.max_clients {
+                    // typed refusal, then close: the client learns why
+                    let _ = outbound.try_send(
+                        error_json(
+                            &format!(
+                                "server at max_clients ({}): retry later",
+                                self.max_clients
+                            ),
+                            "max_clients",
+                        )
+                        .to_string(),
+                    );
+                    drop(outbound); // writer flushes the refusal, exits
+                    let _ = stream.shutdown(Shutdown::Read);
+                    orphans.push((stream, writer));
+                    return Ok(false);
+                }
+                let rstream = match stream.try_clone() {
+                    Ok(s) => s,
+                    Err(_) => {
+                        self.accept_errors.fetch_add(1, Ordering::SeqCst);
+                        drop(outbound);
+                        let _ = stream.shutdown(Shutdown::Both);
+                        orphans.push((stream, writer));
+                        return Ok(false);
+                    }
+                };
+                let rtx = tx.clone();
+                let reader =
+                    thread::spawn(move || reader_loop(client, rstream, rtx));
+                conns.insert(client, Conn { outbound, stream, reader, writer });
+                Ok(false)
+            }
+            ServerMsg::Line { client, line } => {
+                self.handle_line(client, &line, conns, meta)
+            }
+            ServerMsg::ReadError { client, msg } => {
+                if conns.contains_key(&client) {
+                    self.coord.abort_client(client)?;
+                    if let Some(c) = conns.get(&client) {
+                        // a broken read (e.g. invalid UTF-8 on the wire)
+                        // gets a structured goodbye, not a silent hang-up
+                        let _ = c.outbound.try_send(
+                            error_json(
+                                &format!("read error: {msg}"),
+                                "bad_request",
+                            )
+                            .to_string(),
+                        );
+                    }
+                    close_conn(conns, meta, client, true);
+                }
+                Ok(false)
+            }
+            ServerMsg::Hangup { client } => {
+                if conns.contains_key(&client) {
+                    // disconnect aborts everything in flight — including
+                    // a sequence still installing its prompt, whose KV
+                    // lease is rolled back mid-prefill
+                    self.coord.abort_client(client)?;
+                    close_conn(conns, meta, client, false);
+                }
+                Ok(false)
+            }
+        }
+    }
+
+    /// One protocol line from a registered client. Returns true on a
+    /// shutdown command.
+    fn handle_line(
+        &mut self,
+        client: ClientId,
+        line: &str,
+        conns: &mut BTreeMap<ClientId, Conn>,
+        meta: &mut BTreeMap<u64, ReqMeta>,
+    ) -> Result<bool> {
+        if line.trim().is_empty() {
+            return Ok(false);
+        }
+        let req = match Json::parse(line) {
+            Ok(j) => j,
+            Err(e) => {
+                self.reply(
+                    conns,
+                    meta,
+                    client,
+                    error_json(&format!("bad json: {e}"), "bad_json"),
+                )?;
+                return Ok(false);
+            }
+        };
+        if req.as_obj().is_none() {
+            self.reply(
+                conns,
+                meta,
+                client,
+                error_json("request must be a JSON object", "bad_request"),
+            )?;
+            return Ok(false);
+        }
+        match (req.get("cmd").as_str(), req.get("cmd") != &Json::Null) {
+            (Some("shutdown"), _) => {
+                self.reply(
+                    conns,
+                    meta,
+                    client,
+                    json::obj(vec![("ok", Json::Bool(true))]),
+                )?;
+                Ok(true)
+            }
+            (Some("stats"), _) => {
+                let stats = self.stats_json(conns.len());
+                self.reply(conns, meta, client, stats)?;
+                Ok(false)
+            }
+            (Some(other), _) => {
+                self.reply(
+                    conns,
+                    meta,
+                    client,
+                    error_json(
+                        &format!(
+                            "unknown cmd '{other}' (expected stats \
+                             or shutdown)"
+                        ),
+                        "bad_request",
+                    ),
+                )?;
+                Ok(false)
+            }
+            (None, true) => {
+                // "cmd" present but not a string
+                self.reply(
+                    conns,
+                    meta,
+                    client,
+                    error_json("cmd must be a string", "bad_request"),
+                )?;
+                Ok(false)
+            }
+            (None, false) => {
+                self.submit_request(client, &req, conns, meta)?;
+                Ok(false)
+            }
+        }
+    }
+
+    /// Queue one reply line to a client's writer. A client too slow to
+    /// take even control replies is aborted and closed, like any other
+    /// slow client.
+    fn reply(
+        &mut self,
+        conns: &mut BTreeMap<ClientId, Conn>,
+        meta: &mut BTreeMap<u64, ReqMeta>,
+        client: ClientId,
+        body: Json,
+    ) -> Result<()> {
+        let ok = match conns.get(&client) {
+            Some(c) => c.outbound.try_send(body.to_string()).is_ok(),
+            None => return Ok(()),
+        };
+        if !ok {
+            self.coord.abort_client(client)?;
+            close_conn(conns, meta, client, false);
         }
         Ok(())
     }
 
-    /// Returns true if the client requested shutdown.
-    fn handle_connection(&mut self, stream: TcpStream) -> Result<bool> {
-        let mut writer = stream.try_clone()?;
-        let reader = BufReader::new(stream);
-        for line in reader.lines() {
-            let line = match line {
-                Ok(l) => l,
-                Err(e) => {
-                    // a broken read (e.g. invalid UTF-8 on the wire) gets
-                    // a structured goodbye instead of a silent hang-up
-                    let _ = writeln!(
-                        writer,
-                        "{}",
-                        error_json(&format!("read error: {e}"), "bad_request")
-                    );
-                    return Ok(false);
-                }
-            };
-            if line.trim().is_empty() {
-                continue;
+    /// Validate one inference request and submit it through the shared
+    /// admission queue; typed refusals (shed, client cap) answer the
+    /// client with a structured error line.
+    fn submit_request(
+        &mut self,
+        client: ClientId,
+        req: &Json,
+        conns: &mut BTreeMap<ClientId, Conn>,
+        meta: &mut BTreeMap<u64, ReqMeta>,
+    ) -> Result<()> {
+        let prompt_text = match req.get("prompt").as_str() {
+            Some(p) => p,
+            None => {
+                let msg = if req.get("prompt") == &Json::Null {
+                    "missing field 'prompt' (string)"
+                } else {
+                    "prompt must be a string"
+                };
+                return self.reply(
+                    conns,
+                    meta,
+                    client,
+                    error_json(msg, "bad_request"),
+                );
             }
-            let req = match Json::parse(&line) {
-                Ok(j) => j,
-                Err(e) => {
-                    writeln!(
-                        writer,
-                        "{}",
-                        error_json(&format!("bad json: {e}"), "bad_json")
-                    )?;
-                    continue;
-                }
-            };
-            if req.as_obj().is_none() {
-                writeln!(
-                    writer,
-                    "{}",
-                    error_json("request must be a JSON object", "bad_request")
-                )?;
-                continue;
-            }
-            match (req.get("cmd").as_str(), req.get("cmd") != &Json::Null) {
-                (Some("shutdown"), _) => {
-                    writeln!(writer, "{}", json::obj(vec![("ok", Json::Bool(true))]))?;
-                    return Ok(true);
-                }
-                (Some("stats"), _) => {
-                    let stats = self.stats_json();
-                    writeln!(writer, "{stats}")?;
-                }
-                (Some(other), _) => {
-                    writeln!(
-                        writer,
-                        "{}",
+        };
+        // hard server-side cap: the sim engine has no context window to
+        // clamp an unbounded client max_tokens against
+        let max_tokens = match req.get("max_tokens") {
+            Json::Null => 16,
+            v => match v.as_usize() {
+                Some(n) => n.clamp(1, MAX_TOKENS_CAP),
+                None => {
+                    return self.reply(
+                        conns,
+                        meta,
+                        client,
                         error_json(
-                            &format!(
-                                "unknown cmd '{other}' (expected stats \
-                                 or shutdown)"
-                            ),
+                            "max_tokens must be a non-negative integer",
                             "bad_request",
-                        )
-                    )?;
+                        ),
+                    );
                 }
-                (None, true) => {
-                    // "cmd" present but not a string
-                    writeln!(
-                        writer,
-                        "{}",
-                        error_json("cmd must be a string", "bad_request")
-                    )?;
+            },
+        };
+        let stream = match req.get("stream") {
+            Json::Null => false,
+            v => match v.as_bool() {
+                Some(b) => b,
+                None => {
+                    return self.reply(
+                        conns,
+                        meta,
+                        client,
+                        error_json("stream must be a boolean", "bad_request"),
+                    );
                 }
-                (None, false) => self.complete(&req, &mut writer)?,
-            }
+            },
+        };
+        let id = self.next_id;
+        self.next_id += 1;
+        let vocab = self.coord.engine.vocab();
+        let prompt_ids = self.tokenizer.encode_clamped(prompt_text, vocab);
+        let mut ireq = InferenceRequest::new(id, prompt_ids, max_tokens);
+        // stream equivalence with solo runs: the token stream is a
+        // function of the request id, not of scheduling or connection
+        ireq.params.seed = id;
+        meta.insert(id, ReqMeta { client, stream });
+        if let Some(rej) = self.coord.submit(client, ireq)? {
+            meta.remove(&id);
+            return self.reply(
+                conns,
+                meta,
+                client,
+                error_json(&rej.to_string(), rej.code()),
+            );
         }
-        Ok(false)
+        Ok(())
     }
 
-    /// The `stats` command body: engine counters (cache hit-rate, decode
-    /// throughput) plus per-request lifecycle latency percentiles.
-    fn stats_json(&mut self) -> Json {
+    /// The `stats` command body: engine counters plus the online serve's
+    /// request-lifecycle percentiles, shared-queue gauges, and per-client
+    /// connection counters.
+    fn stats_json(&mut self, connected: usize) -> Json {
         let engine = self.coord.engine.stats();
+        let accept_errors = self.accept_errors.load(Ordering::SeqCst) as f64;
+        let max_clients = self.max_clients;
         fn pct(s: &mut Samples) -> Json {
             let p = |s: &mut Samples, q: f64| {
                 if s.is_empty() { 0.0 } else { s.percentile(q) }
@@ -291,10 +839,15 @@ impl<E: Engine> Server<E> {
                 ("p99", json::num(p(s, 99.0))),
             ])
         }
+        let mut empty = ServeReport::default();
+        let report = match self.coord.online_report_mut() {
+            Some(r) => r,
+            None => &mut empty,
+        };
         // per-slot inter-token latency on the engine clock: p50/p99/max,
         // the tail the --prefill-chunk knob exists to bound
         let itl = {
-            let s = &mut self.serving.itl_ms;
+            let s = &mut report.serving.itl_ms;
             let p = |s: &mut Samples, q: f64| {
                 if s.is_empty() { 0.0 } else { s.percentile(q) }
             };
@@ -304,15 +857,60 @@ impl<E: Engine> Server<E> {
                 ("max", json::num(p(s, 100.0))),
             ])
         };
+        // shared admission queue: cross-connection depth and wait
+        // percentiles plus the typed-refusal counters
+        let queue_obj = {
+            let p = |s: &mut Samples, q: f64| {
+                if s.is_empty() { 0.0 } else { s.percentile(q) }
+            };
+            json::obj(vec![
+                ("depth_p50", json::num(p(&mut report.queue_depth, 50.0))),
+                ("depth_max", json::num(p(&mut report.queue_depth, 100.0))),
+                ("wait_ms_p50", json::num(p(&mut report.queue_wait_ms, 50.0))),
+                ("wait_ms_p99", json::num(p(&mut report.queue_wait_ms, 99.0))),
+                ("shed", json::num(report.shed as f64)),
+                (
+                    "client_cap_rejections",
+                    json::num(report.client_cap_rejections as f64),
+                ),
+                ("aborted", json::num(report.aborted_requests as f64)),
+                (
+                    "kv_admission_stalls",
+                    json::num(report.kv_admission_stalls as f64),
+                ),
+            ])
+        };
+        let per_client: Vec<Json> = report
+            .clients
+            .iter()
+            .map(|(id, cs)| {
+                json::obj(vec![
+                    ("id", json::num(*id as f64)),
+                    ("submitted", json::num(cs.submitted as f64)),
+                    ("completed", json::num(cs.completed as f64)),
+                    ("rejected", json::num(cs.rejected as f64)),
+                    ("aborted", json::num(cs.aborted as f64)),
+                    ("tokens", json::num(cs.tokens as f64)),
+                ])
+            })
+            .collect();
+        let clients_obj = json::obj(vec![
+            ("connected", json::num(connected as f64)),
+            ("max", json::num(max_clients as f64)),
+            ("accept_errors", json::num(accept_errors)),
+            ("per_client", Json::Arr(per_client)),
+        ]);
         let mut fields = vec![
-            ("served", json::num(self.served as f64)),
+            ("served", json::num(report.serving.requests() as f64)),
             ("decode_tps", json::num(engine.decode_tps())),
             ("cache_hit_rate", json::num(engine.cache_hit_rate())),
-            ("queue_ms", pct(&mut self.serving.queue_ms)),
-            ("prefill_ms", pct(&mut self.serving.prefill_ms)),
-            ("decode_ms", pct(&mut self.serving.decode_ms)),
-            ("ttft_ms", pct(&mut self.serving.ttft_ms)),
+            ("queue_ms", pct(&mut report.serving.queue_ms)),
+            ("prefill_ms", pct(&mut report.serving.prefill_ms)),
+            ("decode_ms", pct(&mut report.serving.decode_ms)),
+            ("ttft_ms", pct(&mut report.serving.ttft_ms)),
             ("itl_ms", itl),
+            ("queue", queue_obj),
+            ("clients", clients_obj),
         ];
         // cluster-offload streaming counters (engines serving with the
         // offload policy; absent otherwise so old clients see no change)
@@ -350,130 +948,6 @@ impl<E: Engine> Server<E> {
             ));
         }
         json::obj(fields)
-    }
-
-    fn session_json(&self, sess: &Session, event: Option<&str>) -> Json {
-        let m = &sess.metrics;
-        let mut fields = Vec::new();
-        if let Some(ev) = event {
-            fields.push(("event", json::s(ev)));
-        }
-        fields.extend([
-            ("id", json::num(sess.id as f64)),
-            ("text", json::s(&self.tokenizer.decode(&sess.tokens))),
-            ("tokens", Json::Arr(
-                sess.tokens.iter().map(|&t| json::num(t as f64)).collect())),
-            ("finish", json::s(sess.finish.as_str())),
-            ("queue_s", json::num(m.queue_s)),
-            ("prefill_s", json::num(m.prefill_s)),
-            ("decode_s", json::num(m.decode_s)),
-            ("total_s", json::num(m.queue_s + m.prefill_s + m.decode_s)),
-        ]);
-        json::obj(fields)
-    }
-
-    fn complete(&mut self, req: &Json, writer: &mut TcpStream) -> Result<()> {
-        let prompt_text = match req.get("prompt").as_str() {
-            Some(p) => p,
-            None => {
-                let msg = if req.get("prompt") == &Json::Null {
-                    "missing field 'prompt' (string)"
-                } else {
-                    "prompt must be a string"
-                };
-                writeln!(writer, "{}", error_json(msg, "bad_request"))?;
-                return Ok(());
-            }
-        };
-        // hard server-side cap: the sim engine has no context window, so
-        // an unbounded client max_tokens would hold the single-threaded
-        // accept loop forever
-        let max_tokens = match req.get("max_tokens") {
-            Json::Null => 16,
-            v => match v.as_usize() {
-                Some(n) => n.clamp(1, MAX_TOKENS_CAP),
-                None => {
-                    writeln!(
-                        writer,
-                        "{}",
-                        error_json(
-                            "max_tokens must be a non-negative integer",
-                            "bad_request",
-                        )
-                    )?;
-                    return Ok(());
-                }
-            },
-        };
-        let stream = match req.get("stream") {
-            Json::Null => false,
-            v => match v.as_bool() {
-                Some(b) => b,
-                None => {
-                    writeln!(
-                        writer,
-                        "{}",
-                        error_json("stream must be a boolean", "bad_request")
-                    )?;
-                    return Ok(());
-                }
-            },
-        };
-        let id = self.next_id;
-        self.next_id += 1;
-        let vocab = self.coord.engine.vocab();
-        let prompt_ids = self.tokenizer.encode_clamped(prompt_text, vocab);
-        let mut ireq = InferenceRequest::new(id, prompt_ids, max_tokens);
-        ireq.params.seed = id;
-        let requests = [ireq];
-        let result = if stream {
-            let tokenizer = &self.tokenizer;
-            let mut w = writer.try_clone()?;
-            let mut sink = FnSink(move |ev: &TokenEvent| -> Result<()> {
-                let mut fields = vec![
-                    ("event", json::s("token")),
-                    ("id", json::num(ev.request_id as f64)),
-                    ("index", json::num(ev.index as f64)),
-                    ("token", json::num(ev.token as f64)),
-                    ("text", json::s(&tokenizer.decode(&[ev.token]))),
-                ];
-                if let Some(fin) = ev.finish {
-                    fields.push(("finish", json::s(fin.as_str())));
-                }
-                writeln!(w, "{}", json::obj(fields))?;
-                Ok(())
-            });
-            self.coord.serve(&requests, &mut sink)
-        } else {
-            self.coord.serve_collect(&requests)
-        };
-        let report = match result {
-            Ok(r) => r,
-            // a request whose KV demand exceeds the whole pool can never
-            // be served: tell the client (structured, connection kept)
-            // instead of tearing the connection down
-            Err(e) if e.downcast_ref::<KvPoolError>().is_some() => {
-                writeln!(
-                    writer,
-                    "{}",
-                    error_json(
-                        &format!("cannot serve request: {e:#}"),
-                        "bad_request",
-                    )
-                )?;
-                return Ok(());
-            }
-            Err(e) => return Err(e),
-        };
-        let sess = report.session(id).context("request produced no session")?;
-        self.served += 1;
-        self.serving.record(&sess.metrics);
-        // fold this serve call's inter-token gaps into the server-lifetime
-        // distribution the stats command reports
-        self.serving.itl_ms.extend_from(&report.serving.itl_ms);
-        let event = stream.then_some("done");
-        writeln!(writer, "{}", self.session_json(sess, event))?;
-        Ok(())
     }
 }
 
@@ -534,6 +1008,11 @@ mod tests {
             itl.get("max").as_f64().unwrap()
                 >= itl.get("p50").as_f64().unwrap()
         );
+        // connection-layer stats: one connected client, zero accept errors
+        let clients = responses[1].get("clients");
+        assert_eq!(clients.get("connected").as_usize(), Some(1));
+        assert_eq!(clients.get("accept_errors").as_usize(), Some(0));
+        assert_eq!(clients.get("per_client").as_arr().unwrap().len(), 1);
         assert_eq!(responses[2].get("ok"), &Json::Bool(true));
     }
 
@@ -675,6 +1154,126 @@ mod tests {
         );
         assert_eq!(responses[1].get("tokens").as_arr().unwrap().len(), 2);
         assert_eq!(responses[2].get("ok"), &Json::Bool(true));
+    }
+
+    #[test]
+    fn slow_client_isolation() {
+        // client A asks for a long stream and never reads: its outbound
+        // queue fills and it is aborted; client B keeps completing
+        // requests throughout — one stalled connection blocks nobody
+        let cfg = RuntimeConfig { max_batch: 2, ..Default::default() };
+        let mut server = Server::sim(oneplus_12(), bamboo_7b(), cfg);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let client_handle = std::thread::spawn(move || {
+            let addr = rx.recv().unwrap();
+            let mut slow = std::net::TcpStream::connect(addr).unwrap();
+            writeln!(
+                slow,
+                r#"{{"prompt": "stall", "max_tokens": 4096, "stream": true}}"#
+            )
+            .unwrap();
+            // never read from `slow`
+            let mut conn = std::net::TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut lens = Vec::new();
+            for i in 0..5 {
+                let r = chat(
+                    &mut conn,
+                    &mut reader,
+                    &format!(r#"{{"prompt": "fast {i}", "max_tokens": 3}}"#),
+                );
+                lens.push(r.get("tokens").as_arr().map(|a| a.len()));
+            }
+            let stats = chat(&mut conn, &mut reader, r#"{"cmd": "stats"}"#);
+            let ok = chat(&mut conn, &mut reader, r#"{"cmd": "shutdown"}"#);
+            drop(slow);
+            (lens, stats, ok)
+        });
+        server.run("127.0.0.1:0", Some(tx)).unwrap();
+        let (lens, stats, ok) = client_handle.join().unwrap();
+        for l in lens {
+            assert_eq!(l, Some(3), "fast client's request was truncated");
+        }
+        assert!(stats.get("served").as_usize().unwrap() >= 5);
+        assert_eq!(ok.get("ok"), &Json::Bool(true));
+    }
+
+    #[test]
+    fn disconnect_mid_prefill_releases_kv_blocks() {
+        // a client submits a chunked-prefill request and disconnects
+        // before the prompt finishes installing: the abort path must
+        // roll the partial KV lease back to the pool
+        let cfg = RuntimeConfig { max_batch: 2, ..Default::default() };
+        let mut server = Server::sim(oneplus_12(), bamboo_7b(), cfg);
+        server.set_prefill_chunk(2);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let client_handle = std::thread::spawn(move || {
+            let addr = rx.recv().unwrap();
+            {
+                let mut doomed = std::net::TcpStream::connect(addr).unwrap();
+                writeln!(
+                    doomed,
+                    r#"{{"prompt": "a long prompt that installs in chunks", "max_tokens": 8}}"#
+                )
+                .unwrap();
+                // dropped here: disconnect while (or before) installing
+            }
+            let mut conn = std::net::TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let r1 = chat(&mut conn, &mut reader,
+                          r#"{"prompt": "x", "max_tokens": 2}"#);
+            let stats = chat(&mut conn, &mut reader, r#"{"cmd": "stats"}"#);
+            let ok = chat(&mut conn, &mut reader, r#"{"cmd": "shutdown"}"#);
+            vec![r1, stats, ok]
+        });
+        server.run("127.0.0.1:0", Some(tx)).unwrap();
+        let responses = client_handle.join().unwrap();
+        assert_eq!(responses[0].get("tokens").as_arr().unwrap().len(), 2);
+        let kv = responses[1].get("kv");
+        let total = kv.get("blocks_total").as_f64().unwrap();
+        assert_eq!(
+            kv.get("blocks_free").as_f64(),
+            Some(total),
+            "disconnect leaked KV blocks: {:?}",
+            responses[1]
+        );
+        assert_eq!(responses[2].get("ok"), &Json::Bool(true));
+    }
+
+    #[test]
+    fn max_clients_refusal_is_typed() {
+        let cfg = RuntimeConfig {
+            max_batch: 2,
+            max_clients: 1,
+            ..Default::default()
+        };
+        let mut server = Server::sim(oneplus_12(), bamboo_7b(), cfg);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let client_handle = std::thread::spawn(move || {
+            let addr = rx.recv().unwrap();
+            let mut first = std::net::TcpStream::connect(addr).unwrap();
+            let mut first_reader = BufReader::new(first.try_clone().unwrap());
+            // complete a request first, proving the first connection is
+            // registered before the second connects
+            let r1 = chat(&mut first, &mut first_reader,
+                          r#"{"prompt": "x", "max_tokens": 2}"#);
+            let second = std::net::TcpStream::connect(addr).unwrap();
+            let mut second_reader = BufReader::new(second);
+            let mut line = String::new();
+            second_reader.read_line(&mut line).unwrap();
+            let refusal = Json::parse(&line).unwrap();
+            let ok = chat(&mut first, &mut first_reader, r#"{"cmd": "shutdown"}"#);
+            (r1, refusal, ok)
+        });
+        server.run("127.0.0.1:0", Some(tx)).unwrap();
+        let (r1, refusal, ok) = client_handle.join().unwrap();
+        assert_eq!(r1.get("tokens").as_arr().unwrap().len(), 2);
+        assert_eq!(refusal.get("code").as_str(), Some("max_clients"));
+        assert!(
+            refusal.get("error").as_str().unwrap().contains("max_clients"),
+            "{refusal:?}"
+        );
+        assert_eq!(ok.get("ok"), &Json::Bool(true));
     }
 
     #[test]

@@ -94,6 +94,11 @@ pub enum SimFault {
     /// it — the classic lease leak: refcounts stay up, blocks never
     /// return to the free list, and the pool slowly starves.
     LeakLeaseOnRetire,
+    /// `retire` leaks the lease only when the slot's prompt is still
+    /// installing — the disconnect-mid-prefill abort path. Normal
+    /// completions retire cleanly, so only the concurrent-connection
+    /// checker's `disconnect` interleavings can expose it.
+    LeakLeaseOnAbort,
 }
 
 /// Per-slot state of an admitted sequence on the simulation engine: a
@@ -919,6 +924,10 @@ impl Engine for SimEngine {
                 // planted bug: the slot empties but the lease is dropped
                 // without releasing its blocks — refcounts stay up forever
                 SimFault::LeakLeaseOnRetire => drop(s.lease),
+                // planted bug: only a mid-prefill abort (pending prompt
+                // tokens) leaks; completed sequences retire correctly
+                SimFault::LeakLeaseOnAbort if s.pending > 0 => drop(s.lease),
+                SimFault::LeakLeaseOnAbort => self.kv_pool.release(s.lease),
             }
         }
         Ok(())

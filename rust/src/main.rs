@@ -63,16 +63,22 @@ USAGE:
   pi2 check     [--src DIR] [--lint-only] [--model-only]
                 repo-specific lint rules over first-party sources
                 (hot-path unwrap ban, unsafe allowlist, KV encapsulation,
-                typed pool errors) plus the bounded exhaustive lifecycle
-                model checker; non-zero exit on any diagnostic
+                typed pool errors, thread containment) plus the bounded
+                exhaustive model checkers — request lifecycles AND
+                connection interleavings (connect/submit/disconnect/pump),
+                each with a planted-bug self-test; non-zero exit on any
+                diagnostic
   pi2 serve     [--addr HOST:PORT] [--engine real|sim] [--artifacts DIR]
                 [--mode continuous|lockstep] [--slots N] [--device D]
                 [--model M] [--throttle] [--kv-blocks N]
                 [--prefill-chunk N] [--offload-stream]
-                [--resident-clusters N]
-                line-protocol TCP server; streams tokens with
-                {{\"stream\": true}}. --engine real runs the PJRT engine
-                (needs artifacts), --engine sim the simulation engine.
+                [--resident-clusters N] [--max-clients N]
+                [--client-cap N] [--queue-depth N]
+                line-protocol TCP server, one reader/writer thread pair
+                per connection funneling into one shared admission
+                queue; streams tokens with {{\"stream\": true}}.
+                --engine real runs the PJRT engine (needs artifacts),
+                --engine sim the simulation engine.
                 --prefill-chunk N installs new prompts N tokens at a
                 time between decode steps (two-phase admission), so an
                 admission never stalls in-flight streams for a whole
@@ -80,7 +86,13 @@ USAGE:
                 --offload-stream reads cold FFN weights as co-activation
                 cluster records (exact: token streams are byte-identical
                 to the bundle path); --resident-clusters caps the
-                resident cold-cluster budget across all layers
+                resident cold-cluster budget across all layers.
+                --max-clients bounds concurrent connections (default 8),
+                --client-cap the per-client in-flight requests (default
+                2), --queue-depth the shared admission queue (default
+                64; 0 = unbounded) — excess work is refused with typed
+                {{\"error\",\"code\"}} replies (max_clients, client_cap,
+                shed), never a dropped connection
 
 DEVICES: oneplus12 (default), ace2
 MODELS:  bamboo-7b (default), mistral-7b, qwen2-7b, llama-13b, mixtral-47b
@@ -212,6 +224,49 @@ fn cmd_serve(args: &Args) -> i32 {
         },
         None => None,
     };
+    // connection-serving caps (both engines; the sim path can also set
+    // them via --config): --max-clients bounds accepted connections,
+    // --client-cap the per-client in-flight requests, --queue-depth the
+    // shared admission queue (0 = unbounded for the latter two)
+    let max_clients = match args.opt("max-clients") {
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Some(n),
+            _ => {
+                eprintln!(
+                    "invalid --max-clients '{s}' (expected a positive \
+                     integer)"
+                );
+                return 2;
+            }
+        },
+        None => None,
+    };
+    let client_cap = match args.opt("client-cap") {
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) => Some(n),
+            Err(_) => {
+                eprintln!(
+                    "invalid --client-cap '{s}' (expected a non-negative \
+                     integer; 0 = unbounded)"
+                );
+                return 2;
+            }
+        },
+        None => None,
+    };
+    let queue_depth = match args.opt("queue-depth") {
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) => Some(n),
+            Err(_) => {
+                eprintln!(
+                    "invalid --queue-depth '{s}' (expected a non-negative \
+                     integer; 0 = unbounded)"
+                );
+                return 2;
+            }
+        },
+        None => None,
+    };
     // cluster-granular offload streaming (both engines; the sim path can
     // also set it via --config's "offload_streaming")
     let offload_stream = args.flag("offload-stream");
@@ -284,6 +339,12 @@ fn cmd_serve(args: &Args) -> i32 {
             };
             server.set_mode(mode);
             server.set_prefill_chunk(prefill_chunk.unwrap_or(0));
+            let rt = RuntimeConfig::default();
+            server.set_limits(
+                max_clients.unwrap_or(rt.max_clients),
+                client_cap.unwrap_or(rt.client_inflight_cap),
+                queue_depth.unwrap_or(rt.admission_queue_depth),
+            );
             println!("serving (real engine, {} scheduling) on {addr} — one \
                       JSON request per line; {{\"cmd\":\"shutdown\"}} to stop",
                      mode.as_str());
@@ -307,9 +368,17 @@ fn cmd_serve(args: &Args) -> i32 {
                 cfg.offload_resident_clusters = n;
             }
             let cfg_chunk = cfg.prefill_chunk;
+            let cfg_caps =
+                (cfg.max_clients, cfg.client_inflight_cap,
+                 cfg.admission_queue_depth);
             let mut server = Server::<SimEngine>::sim(dev, spec, cfg);
             server.set_mode(mode);
             server.set_prefill_chunk(prefill_chunk.unwrap_or(cfg_chunk));
+            server.set_limits(
+                max_clients.unwrap_or(cfg_caps.0),
+                client_cap.unwrap_or(cfg_caps.1),
+                queue_depth.unwrap_or(cfg_caps.2),
+            );
             println!("serving (sim engine, {} scheduling) on {addr} — one \
                       JSON request per line; {{\"cmd\":\"shutdown\"}} to stop",
                      mode.as_str());
@@ -488,6 +557,68 @@ fn cmd_check(args: &Args) -> i32 {
                 println!(
                     "  {}: planted lease leak was NOT caught — the model \
                      checker is broken",
+                    self_test.name
+                );
+                failed = true;
+            }
+        }
+
+        println!("== pi2 model check: connection interleavings ==");
+        for cfg in model::conn_suite() {
+            let rep = model::conn_explore(&cfg);
+            match &rep.violation {
+                None => {
+                    println!(
+                        "  {}: {} states, {} transitions audited, depth {} \
+                         ({})",
+                        rep.name,
+                        rep.states,
+                        rep.transitions,
+                        rep.max_depth_reached,
+                        if rep.complete { "exhaustive" } else { "bounded" }
+                    );
+                }
+                Some(v) => {
+                    println!("  {}: INVARIANT VIOLATION", rep.name);
+                    println!("    {}", v.message);
+                    println!(
+                        "    replay: {}",
+                        model::format_conn_schedule(&v.schedule)
+                    );
+                    failed = true;
+                }
+            }
+        }
+        // same honesty contract at the connection level: a lease leaked
+        // on disconnect-mid-prefill MUST be caught, and the violating
+        // schedule must actually contain a disconnect
+        let self_test = model::abort_leak_self_test();
+        match model::conn_explore(&self_test).violation {
+            Some(v)
+                if v.schedule
+                    .iter()
+                    .any(|op| matches!(op, model::ConnOp::Disconnect(_))) =>
+            {
+                println!(
+                    "  {}: planted bug caught (replay: {})",
+                    self_test.name,
+                    model::format_conn_schedule(&v.schedule)
+                );
+            }
+            Some(v) => {
+                println!(
+                    "  {}: planted abort leak caught WITHOUT a disconnect \
+                     (replay: {}) — the connection checker is not \
+                     exercising the rollback path",
+                    self_test.name,
+                    model::format_conn_schedule(&v.schedule)
+                );
+                failed = true;
+            }
+            None => {
+                println!(
+                    "  {}: planted abort leak was NOT caught — the \
+                     connection checker is broken",
                     self_test.name
                 );
                 failed = true;
