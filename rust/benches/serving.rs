@@ -14,6 +14,11 @@
 //! prompt; with `prefill_chunk = N` the prompt installs N tokens at a
 //! time between decode steps, bounding the stall.
 //!
+//! The watermark scenario pits optimistic (evict-and-recompute) KV
+//! admission against worst-case reservation on the same tight pool and
+//! records admitted concurrency, preemption/restore counts, recompute
+//! tokens, and TTFT percentiles to `BENCH_kv_preemption.json`.
+//!
 //! The concurrency scenario drives the real TCP serving path — accept
 //! loop, per-connection reader/writer threads, the shared admission
 //! queue — with 1/4/16 concurrent clients and records client-observed
@@ -138,6 +143,92 @@ fn main() {
             pool.share_rate() * 100.0,
         );
     }
+
+    // watermark KV admission vs worst-case reservation on the same tight
+    // pool: reservation gates each admission on every in-flight row's
+    // remaining worst-case growth, so the pool caps live concurrency
+    // well below max_batch; watermark admission leases only the prompt's
+    // blocks and admits while the pool sits below the watermark, letting
+    // decode growth run to exhaustion where the scheduler preempts a
+    // victim and restores it later by recompute. The trade the JSON
+    // records: strictly more admitted concurrency (peak_live) for
+    // recompute work and inflated TTFT on the preempted sequences.
+    println!("# bench: watermark KV admission (evict-and-recompute vs worst-case reservation)");
+    let wm_requests: Vec<InferenceRequest> = (0..12)
+        .map(|id| InferenceRequest::new(id, vec![id as u32 + 1, 2, 3, 4], 8))
+        .collect();
+    let mut wm_rows = Vec::new();
+    let mut wm_peaks = Vec::new();
+    for (label, frac) in [("reservation", 0.0f64), ("watermark-0.75", 0.75)] {
+        let cfg = RuntimeConfig {
+            max_batch: 4,
+            kv_block_tokens: 4,
+            kv_pool_blocks: 8,
+            kv_watermark_frac: frac,
+            ..Default::default()
+        };
+        let engine = SimEngine::new(oneplus_12(), bamboo_7b(), cfg);
+        let mut coord = Coordinator::new(engine).with_kv_watermark(frac);
+        let mut report = coord.serve_collect(&wm_requests).unwrap();
+        let (t50, t99) = (
+            report.serving.ttft_ms.percentile(50.0),
+            report.serving.ttft_ms.percentile(99.0),
+        );
+        let tp99 = if report.ttft_preempted_ms.is_empty() {
+            0.0
+        } else {
+            report.ttft_preempted_ms.percentile(99.0)
+        };
+        println!(
+            "{label:>14}: peak live {:>2}  {:>3} preemptions \
+             {:>3} restores  {:>4} recompute tok  {:>7.1} tok/s  \
+             TTFT p50 {t50:>6.1}ms p99 {t99:>6.1}ms \
+             (preempted p99 {tp99:>6.1}ms)",
+            report.peak_live,
+            report.preemptions,
+            report.restores,
+            report.recompute_tokens,
+            report.decode_tps(),
+        );
+        wm_peaks.push(report.peak_live);
+        wm_rows.push(obj(vec![
+            ("scenario", s(label)),
+            ("kv_watermark_frac", num(frac)),
+            ("peak_live", num(report.peak_live as f64)),
+            ("preemptions", num(report.preemptions as f64)),
+            ("restores", num(report.restores as f64)),
+            ("recompute_tokens", num(report.recompute_tokens as f64)),
+            ("kv_admission_stalls", num(report.kv_admission_stalls as f64)),
+            ("decode_tps", num(report.decode_tps())),
+            ("ttft_ms_p50", num(t50)),
+            ("ttft_ms_p99", num(t99)),
+            ("ttft_preempted_ms_p99", num(tp99)),
+        ]));
+    }
+    assert!(
+        wm_peaks[1] > wm_peaks[0],
+        "watermark admission must admit strictly more concurrency than \
+         worst-case reservation ({} vs {})",
+        wm_peaks[1],
+        wm_peaks[0],
+    );
+    println!(
+        "admitted concurrency: {} (watermark) vs {} (reservation)",
+        wm_peaks[1], wm_peaks[0],
+    );
+    let out = obj(vec![
+        ("bench", s("kv_preemption")),
+        ("engine", s("sim")),
+        ("model", s("bamboo-7b")),
+        ("device", s("oneplus12")),
+        ("max_batch", num(4.0)),
+        ("kv_pool_blocks", num(8.0)),
+        ("kv_block_tokens", num(4.0)),
+        ("requests", num(wm_requests.len() as f64)),
+        ("scenarios", arr(wm_rows)),
+    ]);
+    std::fs::write("BENCH_kv_preemption.json", format!("{out}\n")).unwrap();
+    println!("wrote BENCH_kv_preemption.json");
 
     // offload streaming: cluster-granular cold-FFN residency at capped
     // resident budgets (64 and 512 clusters, well below the full FFN)

@@ -3,7 +3,7 @@
 //! A dependency-free, line/token-level scanner (no syn, no regex — the
 //! offline crate set has neither) with just enough of a lexer to tell
 //! code from strings and comments and to track `#[cfg(test)]` regions
-//! by brace depth. Five rules, each of which encodes a repo contract
+//! by brace depth. Seven rules, each of which encodes a repo contract
 //! clippy cannot express:
 //!
 //! - **hot-path-unwrap** — no `.unwrap()` / `.expect(` in the serving
@@ -39,6 +39,21 @@
 //!   checker's serialized interleavings assume away. Scoped helper
 //!   parallelism (`thread::scope`) inside an engine step is fine — it
 //!   cannot outlive the call that owns the borrow.
+//! - **lock-discipline** — in `coordinator/`, no `Mutex`/`RwLock` guard
+//!   may be held across a channel send/recv, a blocking socket call, or
+//!   a `.join()`. The scheduler thread owning all shared state is what
+//!   lets the model checker's serialized interleavings stand in for the
+//!   real thread schedule; a lock held across a blocking rendezvous is
+//!   the classic shape that deadlocks it (send blocks on a full channel
+//!   whose consumer needs the lock). Tracked by binding name and brace
+//!   depth — a guard dies when its block closes or it is `drop`ped.
+//! - **channel-discipline** — no unbounded `mpsc::channel()` in
+//!   first-party serving code (the hot-path modules): a producer that
+//!   can never block is a queue that can grow without bound under
+//!   backpressure, which on a phone is an OOM kill. Use
+//!   `mpsc::sync_channel(n)` and pick `n` deliberately; genuinely
+//!   unbounded cases (e.g. a rendezvous the producer count bounds by
+//!   construction) carry a justified allow.
 //!
 //! An allow annotation without a rule name or a justification is itself
 //! a diagnostic (**bad-allow**): exceptions are part of the reviewed
@@ -87,20 +102,37 @@ const KV_INTERNALS: [&str; 7] = [
 /// Keywords that mark an error string as a pool-pressure site.
 const POOL_WORDS: [&str; 2] = ["pool", "exhaust"];
 
+/// Calls that block the current thread on another thread's progress —
+/// exactly what must never happen while a lock guard is live in the
+/// connection-serving layer.
+const BLOCKING_CALLS: [&str; 7] = [
+    ".send(",
+    ".recv(",
+    ".recv_timeout(",
+    ".join()",
+    ".accept()",
+    ".read_line(",
+    ".write_all(",
+];
+
 /// Rule identifiers, as written in `pi2-lint: allow(<rule>)`.
 pub const RULE_HOT_PATH_UNWRAP: &str = "hot-path-unwrap";
 pub const RULE_UNSAFE_CODE: &str = "unsafe-code";
 pub const RULE_KV_ENCAPSULATION: &str = "kv-encapsulation";
 pub const RULE_TYPED_POOL_ERROR: &str = "typed-pool-error";
 pub const RULE_THREAD_CONTAINMENT: &str = "thread-containment";
+pub const RULE_LOCK_DISCIPLINE: &str = "lock-discipline";
+pub const RULE_CHANNEL_DISCIPLINE: &str = "channel-discipline";
 pub const RULE_BAD_ALLOW: &str = "bad-allow";
 
-const ALL_RULES: [&str; 5] = [
+const ALL_RULES: [&str; 7] = [
     RULE_HOT_PATH_UNWRAP,
     RULE_UNSAFE_CODE,
     RULE_KV_ENCAPSULATION,
     RULE_TYPED_POOL_ERROR,
     RULE_THREAD_CONTAINMENT,
+    RULE_LOCK_DISCIPLINE,
+    RULE_CHANNEL_DISCIPLINE,
 ];
 
 /// One violation, addressed like a compiler diagnostic.
@@ -419,6 +451,56 @@ fn has_unsafe_token(code: &str) -> bool {
     false
 }
 
+/// Does `code` call the unbounded `channel` constructor? Token-boundary
+/// aware so `sync_channel(` (preceding `_`) and identifiers that merely
+/// contain the word do not match; both `channel()` and the
+/// turbofished `channel::<T>()` form do.
+fn has_unbounded_channel(code: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut from = 0usize;
+    while let Some(pos) = code[from..].find("channel") {
+        let start = from + pos;
+        let end = start + "channel".len();
+        let pre = start == 0
+            || !(bytes[start - 1].is_ascii_alphanumeric()
+                || bytes[start - 1] == b'_');
+        let tail = &code[end..];
+        if pre && (tail.starts_with('(') || tail.starts_with("::<")) {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+/// The binding a lock guard lands in, if the line binds one:
+/// `let [mut] name = …`, `if let Ok(name) = …`, `while let Some(name)`.
+/// Lines that lock into a temporary (no `let`) drop the guard at the
+/// end of the statement, so they are not tracked across lines.
+fn guard_binding(code: &str) -> Option<String> {
+    let pos = code.find("let ")?;
+    let rest = code[pos + 4..].trim_start();
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+    let rest = rest
+        .strip_prefix("Ok(")
+        .or_else(|| rest.strip_prefix("Some("))
+        .unwrap_or(rest);
+    let name: String = rest
+        .chars()
+        .take_while(|c| c.is_alphanumeric() || *c == '_')
+        .collect();
+    (!name.is_empty() && name != "_").then_some(name)
+}
+
+/// A lock guard known to be live: the binding it sits in, the brace
+/// depth its scope ends at, and the line it was taken on (for the
+/// diagnostic).
+struct LiveGuard {
+    name: String,
+    depth: usize,
+    line: usize,
+}
+
 /// Lint one file's source. `rel` is its path relative to the source
 /// root, `/`-separated — rule applicability keys off it.
 pub fn lint_source(rel: &str, source: &str) -> Vec<Diagnostic> {
@@ -473,10 +555,83 @@ pub fn lint_source(rel: &str, source: &str) -> Vec<Diagnostic> {
         allows.get(&line).is_some_and(|rs| rs.iter().any(|r| r == rule))
     };
 
+    // lock-discipline state (coordinator/ only): guards tracked by
+    // binding name and the brace depth their scope dies at. Depth
+    // tracking has to see every line — test regions included — to keep
+    // scopes aligned with the file.
+    let in_coord = rel.starts_with("coordinator/");
+    let mut brace_depth = 0usize;
+    let mut guards: Vec<LiveGuard> = Vec::new();
+
     for (idx, lv) in lines.iter().enumerate() {
         let lineno = idx + 1;
+        if in_coord {
+            let locks_here = !lv.in_test && lv.code.contains(".lock()");
+            if (!guards.is_empty() || locks_here)
+                && !lv.in_test
+                && !allowed(lineno, RULE_LOCK_DISCIPLINE)
+            {
+                if let Some(call) =
+                    BLOCKING_CALLS.iter().find(|c| lv.code.contains(*c))
+                {
+                    let since = guards
+                        .last()
+                        .map(|g| g.line)
+                        .unwrap_or(lineno);
+                    diags.push(Diagnostic {
+                        file: rel.to_string(),
+                        line: lineno,
+                        rule: RULE_LOCK_DISCIPLINE,
+                        message: format!(
+                            "blocking call `{call}` while a lock guard \
+                             (taken on line {since}) is live — release \
+                             the guard before any channel/socket \
+                             rendezvous, or justify with `pi2-lint: \
+                             allow(lock-discipline): ...`"
+                        ),
+                    });
+                }
+            }
+            guards.retain(|g| {
+                !lv.code.contains(&format!("drop({})", g.name))
+            });
+            for c in lv.code.chars() {
+                match c {
+                    '{' => brace_depth += 1,
+                    '}' => brace_depth = brace_depth.saturating_sub(1),
+                    _ => {}
+                }
+            }
+            if locks_here {
+                if let Some(name) = guard_binding(&lv.code) {
+                    guards.push(LiveGuard {
+                        name,
+                        depth: brace_depth,
+                        line: lineno,
+                    });
+                }
+            }
+            guards.retain(|g| brace_depth >= g.depth);
+        }
         if lv.in_test {
             continue; // `#[cfg(test)]` regions may panic freely
+        }
+        if hot_path
+            && has_unbounded_channel(&lv.code)
+            && !allowed(lineno, RULE_CHANNEL_DISCIPLINE)
+        {
+            diags.push(Diagnostic {
+                file: rel.to_string(),
+                line: lineno,
+                rule: RULE_CHANNEL_DISCIPLINE,
+                message: "unbounded mpsc::channel() in serving code — a \
+                          producer that never blocks is a queue that \
+                          grows without bound under backpressure; use \
+                          sync_channel(n) with a deliberate bound, or \
+                          justify with `pi2-lint: \
+                          allow(channel-discipline): ...`"
+                    .into(),
+            });
         }
         if hot_path
             && (lv.code.contains(".unwrap()") || lv.code.contains(".expect("))
@@ -791,6 +946,99 @@ fn f() {
 }
 ";
         assert!(lint_source("engine/mod.rs", allowed).is_empty());
+    }
+
+    #[test]
+    fn lock_guard_across_blocking_call_is_flagged() {
+        let src = "\
+fn f(m: &std::sync::Mutex<u32>, tx: &Sender<u32>) {
+    let st = m.lock().map_err(|_| ()).ok();
+    tx.send(1).ok();
+}
+";
+        let diags = lint_source("coordinator/server.rs", src);
+        assert_eq!(rules_at(&diags, 3), vec![RULE_LOCK_DISCIPLINE]);
+        assert!(diags[0].message.contains("line 2"), "{}", diags[0].message);
+        // the same shape outside coordinator/ is out of scope
+        assert!(lint_source("experiments/mod.rs", src).is_empty());
+        // dropping the guard before the send is the fix, and passes
+        let fixed = "\
+fn f(m: &std::sync::Mutex<u32>, tx: &Sender<u32>) {
+    let st = m.lock().map_err(|_| ()).ok();
+    drop(st);
+    tx.send(1).ok();
+}
+";
+        assert!(lint_source("coordinator/server.rs", fixed).is_empty());
+        // …as does a guard whose block closes first
+        let scoped = "\
+fn f(m: &std::sync::Mutex<u32>, tx: &Sender<u32>) {
+    {
+        let st = m.lock().map_err(|_| ()).ok();
+        let _ = st;
+    }
+    tx.send(1).ok();
+}
+";
+        assert!(lint_source("coordinator/server.rs", scoped).is_empty());
+        // a justified allow suppresses it
+        let allowed = "\
+fn f(m: &std::sync::Mutex<u32>, tx: &Sender<u32>) {
+    let st = m.lock().map_err(|_| ()).ok();
+    // pi2-lint: allow(lock-discipline): rendezvous channel, consumer never locks
+    tx.send(1).ok();
+}
+";
+        assert!(lint_source("coordinator/server.rs", allowed).is_empty());
+        // join() while locked is the other deadlock shape
+        let join = "\
+fn f(m: &std::sync::Mutex<u32>, h: std::thread::JoinHandle<()>) {
+    if let Ok(g) = m.lock() {
+        h.join().ok();
+        let _ = g;
+    }
+}
+";
+        let diags = lint_source("coordinator/server.rs", join);
+        assert_eq!(rules_at(&diags, 3), vec![RULE_LOCK_DISCIPLINE]);
+    }
+
+    #[test]
+    fn unbounded_channel_in_serving_code_is_flagged() {
+        let src = "fn f() { let (tx, rx) = std::sync::mpsc::channel::<u32>(); }\n";
+        let diags = lint_source("coordinator/server.rs", src);
+        assert_eq!(rules_at(&diags, 1), vec![RULE_CHANNEL_DISCIPLINE]);
+        let plain = "fn f() { let (tx, rx) = mpsc::channel(); }\n";
+        let diags = lint_source("engine/real.rs", plain);
+        assert_eq!(rules_at(&diags, 1), vec![RULE_CHANNEL_DISCIPLINE]);
+        // the bounded constructor is the sanctioned one
+        let bounded = "fn f() { let (tx, rx) = mpsc::sync_channel::<u32>(64); }\n";
+        assert!(lint_source("coordinator/server.rs", bounded).is_empty());
+        // identifiers containing the word are not the constructor
+        let ident = "fn f(channel_depth: usize) -> usize { channel_depth }\n";
+        assert!(lint_source("coordinator/server.rs", ident).is_empty());
+        // outside the hot-path modules the rule does not apply
+        assert!(lint_source("experiments/mod.rs", src).is_empty());
+        // tests may wire up unbounded harness channels freely
+        let test_src = "\
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let (tx, rx) = std::sync::mpsc::channel::<u32>();
+        drop((tx, rx));
+    }
+}
+";
+        assert!(lint_source("coordinator/server.rs", test_src).is_empty());
+        // a justified allow suppresses it
+        let allowed = "\
+fn f() {
+    // pi2-lint: allow(channel-discipline): one message per worker by construction
+    let (tx, rx) = mpsc::channel::<u32>();
+}
+";
+        assert!(lint_source("engine/real.rs", allowed).is_empty());
     }
 
     #[test]

@@ -8,32 +8,43 @@
 //!   no `unwrap()`/`expect()` on serving hot paths, no `unsafe` outside
 //!   the storage allowlist, no raw [`crate::kv::KvPool`] internals
 //!   touched outside `kv/`, typed (downcastable) errors at
-//!   pool-pressure sites, and no `thread::spawn` outside
-//!   `coordinator/` (the connection-serving layer owns the repo's
-//!   long-lived threads). Violations are `file:line` diagnostics and a
-//!   non-zero exit.
+//!   pool-pressure sites, no `thread::spawn` outside `coordinator/`
+//!   (the connection-serving layer owns the repo's long-lived threads),
+//!   no lock guard held across a channel/socket rendezvous in
+//!   `coordinator/` (the deadlock shape the serialized scheduler rules
+//!   out), and no unbounded `mpsc::channel()` in serving code (bounded
+//!   `sync_channel` only — backpressure, not unbounded heap growth).
+//!   Violations are `file:line` diagnostics and a non-zero exit.
 //! - [`model`]: deterministic, bounded-depth exhaustive model checkers.
 //!   The lifecycle checker drives every interleaving of
 //!   `{admit, admit_deferred, prefill_chunk, step, retire, abort,
-//!   pool-exhaustion}` on a [`crate::coordinator::Coordinator`] over
+//!   preempt, restore, pool-exhaustion}` on a
+//!   [`crate::coordinator::Coordinator`] over
 //!   [`crate::engine::SimEngine`], with
 //!   [`crate::kv::KvPool::check_invariants`] and
 //!   [`crate::coordinator::Coordinator::check_invariants`] asserted
-//!   after **every** transition. The connection checker drives the
+//!   after **every** transition — including the watermark-admission
+//!   worlds where eviction (`preempt`) and recompute (`restore`) are
+//!   the only path to completion. The connection checker drives the
 //!   layer the TCP server uses — the shared admission queue, the
 //!   scheduler pump, disconnect aborts — over every interleaving of
 //!   `{connect, submit, disconnect, pump}`, auditing
 //!   [`crate::coordinator::Coordinator::check_online_invariants`] plus
 //!   token-routing and typed-refusal consistency. A failing
 //!   interleaving is reported as a replayable schedule; each checker
-//!   carries a planted-bug self-test.
+//!   carries planted-bug self-tests (leaked lease on retire, abort,
+//!   and preempt; double release on restore). Past the exhaustive
+//!   depth bound, [`model::fuzz`] / [`model::conn_fuzz`] drive seeded
+//!   randomized long-horizon schedules with the same per-transition
+//!   audit (`pi2 check --fuzz <n> [--seed s]`).
 //!
 //! The point of landing this before the concurrency roadmap items
 //! (multi-threaded serving, watermark/preemption admission) is that
 //! those are exactly the changes that turn latent lifecycle bugs —
 //! leaked leases, double frees, panics tearing down a serving thread —
 //! into production incidents. The checker is the substrate they are
-//! verified against.
+//! verified against: watermark preemption landed gated on the
+//! `preempt`/`restore` worlds above.
 
 pub mod lint;
 pub mod model;

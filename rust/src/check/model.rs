@@ -6,12 +6,17 @@
 //! silently break from any of the half-dozen code paths that touch a
 //! slot. This module checks them *exhaustively* over a small world: it
 //! enumerates every interleaving of
-//! `{admit, admit_deferred, prefill_chunk, step, retire, abort}` (plus
-//! the implicit pool-exhaustion "blocked" transitions) for a handful of
-//! concurrent request lifecycles driven through a real
-//! [`Coordinator`]`<`[`SimEngine`]`>`, and asserts
+//! `{admit, admit_deferred, prefill_chunk, step, retire, abort,
+//! preempt, restore}` (plus the implicit pool-exhaustion "blocked"
+//! transitions) for a handful of concurrent request lifecycles driven
+//! through a real [`Coordinator`]`<`[`SimEngine`]`>`, and asserts
 //! [`Coordinator::check_invariants`] — which folds in
 //! [`crate::kv::KvPool::check_invariants`] — after **every** transition.
+//! Worlds with [`ModelConfig::watermark`] set run the engine under
+//! watermark (optimistic, evict-and-recompute) KV admission and offer
+//! the preempt/restore pair: evict a live sequence's KV, then re-admit
+//! it via prefill recompute over its prompt plus the tokens it already
+//! emitted.
 //!
 //! The search is breadth-first over operation schedules with
 //! visited-state deduplication, so each reachable state is audited once.
@@ -21,10 +26,20 @@
 //! a violation is reported as the exact operation list that reproduces
 //! it ([`ExploreReport::violation`], re-run with [`replay`]).
 //!
-//! The checker's own honesty is tested by planting a bug:
+//! The checker's own honesty is tested by planting bugs:
 //! [`SimFault::LeakLeaseOnRetire`] makes `retire` drop a lease without
 //! releasing it, and [`leak_self_test`] must catch that with a
-//! replayable schedule — `pi2 check` fails if it does not.
+//! replayable schedule — `pi2 check` fails if it does not. The
+//! preemption paths have their own planted faults:
+//! [`SimFault::LeakLeaseOnPreempt`] ([`preempt_leak_self_test`]) and
+//! [`SimFault::DoubleReleaseOnRestore`]
+//! ([`restore_double_release_self_test`]).
+//!
+//! Beyond the exhaustive depth bound, [`fuzz`] (and [`conn_fuzz`] for
+//! the connection model) drives seeded randomized long-horizon
+//! schedules through the same enabled-ops/apply/audit machinery —
+//! `pi2 check --fuzz <n> [--seed s]` — with the same replayable
+//! violation contract.
 //!
 //! A second, connection-level model ([`ConnOp`], [`conn_explore`])
 //! drives the layer the TCP server uses — the shared admission queue,
@@ -63,8 +78,15 @@ pub enum Op {
     Step,
     /// Retire a finished request (emitted its full token budget).
     Retire(usize),
-    /// Cancel an unfinished request (pending or mid-decode).
+    /// Cancel an unfinished request (pending, mid-decode, or preempted).
     Abort(usize),
+    /// Evict a live request under watermark admission: its KV is
+    /// released and it waits for [`Op::Restore`].
+    Preempt(usize),
+    /// Re-admit a preempted request, recomputing its KV over prompt +
+    /// already-emitted tokens (the resumed stream must stay
+    /// byte-identical).
+    Restore(usize),
 }
 
 impl fmt::Display for Op {
@@ -76,6 +98,8 @@ impl fmt::Display for Op {
             Op::Step => write!(f, "step"),
             Op::Retire(r) => write!(f, "retire(r{r})"),
             Op::Abort(r) => write!(f, "abort(r{r})"),
+            Op::Preempt(r) => write!(f, "preempt(r{r})"),
+            Op::Restore(r) => write!(f, "restore(r{r})"),
         }
     }
 }
@@ -100,6 +124,10 @@ enum Phase {
     Pending { slot: usize, installed: usize },
     /// Emitting tokens (`emitted` counts the first token too).
     Decoding { slot: usize, emitted: usize },
+    /// Evicted under watermark pressure: holds no slot and no lease;
+    /// its emitted tokens live in the world's side table until
+    /// [`Op::Restore`] recomputes them.
+    Preempted,
     Done,
 }
 
@@ -140,6 +168,11 @@ pub struct ModelConfig {
     pub max_states: usize,
     /// Planted engine bug, [`SimFault::None`] for real checking.
     pub fault: SimFault,
+    /// KV watermark admission fraction. 0.0 = worst-case reservation
+    /// (preempt/restore never offered); above 0.0 the engine admits
+    /// optimistically and the checker drives every preempt/restore
+    /// interleaving.
+    pub watermark: f64,
 }
 
 /// A failing interleaving: the exact schedule to hand to [`replay`]
@@ -172,6 +205,11 @@ pub struct ExploreReport {
 struct World {
     coord: Coordinator<SimEngine>,
     phases: Vec<Phase>,
+    /// Actual token values each request has emitted, in order — the
+    /// payload a restore recomputes from ([`Engine::admit_restored`]
+    /// takes the values, not a count), and what lets the checker prove
+    /// the resumed stream picks up exactly where the eviction cut it.
+    emitted: Vec<Vec<u32>>,
 }
 
 impl World {
@@ -186,6 +224,7 @@ impl World {
             max_batch: cfg.max_batch,
             kv_block_tokens: cfg.block_tokens,
             kv_pool_blocks: cfg.pool_blocks,
+            kv_watermark_frac: cfg.watermark,
             seed: 0,
             ..Default::default()
         };
@@ -194,6 +233,7 @@ impl World {
         World {
             coord: Coordinator::new(engine),
             phases: vec![Phase::Queued; cfg.requests.len()],
+            emitted: vec![Vec::new(); cfg.requests.len()],
         }
     }
 
@@ -243,13 +283,29 @@ impl World {
                 Phase::Pending { .. } => {
                     ops.push(Op::PrefillChunk(r));
                     ops.push(Op::Abort(r));
+                    if cfg.watermark > 0.0 {
+                        // eviction mid-(re)install: the lease rolls back
+                        // and the whole prompt recomputes on restore
+                        ops.push(Op::Preempt(r));
+                    }
                 }
                 Phase::Decoding { emitted, .. } => {
                     if emitted >= max_tokens {
                         ops.push(Op::Retire(r));
                     } else {
                         ops.push(Op::Abort(r));
+                        if cfg.watermark > 0.0 {
+                            ops.push(Op::Preempt(r));
+                        }
                     }
+                }
+                Phase::Preempted => {
+                    if live < cfg.max_batch {
+                        ops.push(Op::Restore(r));
+                    }
+                    // a disconnect can drop a sequence parked for
+                    // restore; it holds no engine resources
+                    ops.push(Op::Abort(r));
                 }
                 Phase::Done => {}
             }
@@ -274,13 +330,16 @@ impl World {
                 let req = World::request(cfg, r);
                 match self.coord.engine.admit(&req) {
                     Ok(adm) => {
-                        if adm.first_token.is_none() {
+                        let Some(tok) = adm.first_token else {
                             return Err(anyhow!(
                                 "admit(r{r}) returned no first token"
                             ));
-                        }
-                        self.phases[r] =
-                            Phase::Decoding { slot: adm.slot, emitted: 1 };
+                        };
+                        self.emitted[r].push(tok);
+                        self.phases[r] = Phase::Decoding {
+                            slot: adm.slot,
+                            emitted: self.emitted[r].len(),
+                        };
                         Ok(true)
                     }
                     Err(e) if is_pool_pressure(&e) => Ok(false),
@@ -316,8 +375,12 @@ impl World {
                     .map_err(|e| {
                         e.context(format!("prefill_chunk(r{r})"))
                     })?;
-                self.phases[r] = if p.first_token.is_some() {
-                    Phase::Decoding { slot, emitted: 1 }
+                self.phases[r] = if let Some(tok) = p.first_token {
+                    // a restored request's install completion emits its
+                    // *next* token — the side table length, not a
+                    // constant 1, is the emitted count
+                    self.emitted[r].push(tok);
+                    Phase::Decoding { slot, emitted: self.emitted[r].len() }
                 } else {
                     Phase::Pending { slot, installed: installed + p.installed }
                 };
@@ -325,7 +388,7 @@ impl World {
             }
             Op::Step => match self.coord.engine.step() {
                 Ok(toks) => {
-                    for &(slot, _) in &toks {
+                    for &(slot, tok) in &toks {
                         let r = self.phases.iter().position(|p| {
                             matches!(p, Phase::Decoding { slot: s, .. }
                                      if *s == slot)
@@ -336,6 +399,7 @@ impl World {
                                  no decoding request owns"
                             ));
                         };
+                        self.emitted[r].push(tok);
                         if let Phase::Decoding { emitted, .. } =
                             &mut self.phases[r]
                         {
@@ -363,6 +427,13 @@ impl World {
                 let slot = match self.phases[r] {
                     Phase::Pending { slot, .. }
                     | Phase::Decoding { slot, .. } => slot,
+                    Phase::Preempted if matches!(op, Op::Abort(_)) => {
+                        // a preempted request holds no slot and no
+                        // lease — aborting it just drops the parked
+                        // restore, like a disconnect purging the queue
+                        self.phases[r] = Phase::Done;
+                        return Ok(true);
+                    }
                     _ => {
                         return Err(anyhow!(
                             "{op} driven on a request with no slot"
@@ -375,6 +446,39 @@ impl World {
                     .map_err(|e| e.context(format!("{op}")))?;
                 self.phases[r] = Phase::Done;
                 Ok(true)
+            }
+            Op::Preempt(r) => {
+                let slot = match self.phases[r] {
+                    Phase::Pending { slot, .. }
+                    | Phase::Decoding { slot, .. } => slot,
+                    _ => {
+                        return Err(anyhow!(
+                            "preempt(r{r}) driven on a request with no slot"
+                        ))
+                    }
+                };
+                self.coord
+                    .engine
+                    .preempt(slot)
+                    .map_err(|e| e.context(format!("preempt(r{r})")))?;
+                self.phases[r] = Phase::Preempted;
+                Ok(true)
+            }
+            Op::Restore(r) => {
+                let req = World::request(cfg, r);
+                match self.coord.engine.admit_restored(&req, &self.emitted[r])
+                {
+                    Ok(adm) => {
+                        // the restore defers its prefill: the extended
+                        // prompt recomputes via Op::PrefillChunk, and
+                        // install completion emits the *next* token
+                        self.phases[r] =
+                            Phase::Pending { slot: adm.slot, installed: 0 };
+                        Ok(true)
+                    }
+                    Err(e) if is_pool_pressure(&e) => Ok(false),
+                    Err(e) => Err(e.context(format!("restore(r{r})"))),
+                }
             }
         }
     }
@@ -398,17 +502,28 @@ impl World {
 
     /// Canonical state fingerprint for visited-state deduplication:
     /// every request's phase plus the pool occupancy triple. Blocked
-    /// transitions leave it unchanged, which is what dedups them.
+    /// transitions leave it unchanged, which is what dedups them. The
+    /// emitted-token count rides along in the pending and preempted
+    /// encodings: a restored install and a fresh install can otherwise
+    /// collide (same slot, same progress, block-rounded pool triple)
+    /// while their futures differ.
     fn signature(&self) -> String {
         let mut sig = String::new();
-        for p in &self.phases {
+        for (r, p) in self.phases.iter().enumerate() {
             match p {
                 Phase::Queued => sig.push('q'),
                 Phase::Pending { slot, installed } => {
-                    let _ = write!(sig, "p{slot}.{installed}");
+                    let _ = write!(
+                        sig,
+                        "p{slot}.{installed}.{}",
+                        self.emitted[r].len()
+                    );
                 }
                 Phase::Decoding { slot, emitted } => {
                     let _ = write!(sig, "d{slot}.{emitted}");
+                }
+                Phase::Preempted => {
+                    let _ = write!(sig, "e{}", self.emitted[r].len());
                 }
                 Phase::Done => sig.push('x'),
             }
@@ -555,6 +670,7 @@ pub fn default_suite() -> Vec<ModelConfig> {
             max_depth: 14,
             max_states: 20_000,
             fault: SimFault::None,
+            watermark: 0.0,
         },
         // two-phase admission: pending prompts advance chunk-by-chunk
         // while a neighbour decodes — the regime the mid-flight
@@ -570,6 +686,7 @@ pub fn default_suite() -> Vec<ModelConfig> {
             max_depth: 12,
             max_states: 20_000,
             fault: SimFault::None,
+            watermark: 0.0,
         },
         // tight pool: admissions block on typed pool pressure until a
         // retire frees blocks — the deferral path under exhaustion
@@ -588,6 +705,24 @@ pub fn default_suite() -> Vec<ModelConfig> {
             max_depth: 12,
             max_states: 20_000,
             fault: SimFault::None,
+            watermark: 0.0,
+        },
+        // watermark admission on a pool too small for both sequences'
+        // decode growth: every interleaving of eviction (from decoding
+        // *and* mid-restore-install) and restore-by-recompute is
+        // audited, including the step-blocked-until-preempt regime
+        ModelConfig {
+            name: "watermark-preemption",
+            requests: vec![LifecycleSpec::new(2, 2), LifecycleSpec::new(2, 2)],
+            pool_blocks: 3,
+            block_tokens: 2,
+            max_batch: 2,
+            chunk: 0,
+            deferred: false,
+            max_depth: 16,
+            max_states: 20_000,
+            fault: SimFault::None,
+            watermark: 0.99,
         },
     ]
 }
@@ -608,7 +743,109 @@ pub fn leak_self_test() -> ModelConfig {
         max_depth: 6,
         max_states: 2_000,
         fault: SimFault::LeakLeaseOnRetire,
+        watermark: 0.0,
     }
+}
+
+/// A watermark world with an engine that drops the KV lease on the floor
+/// during preemption ([`SimFault::LeakLeaseOnPreempt`]) instead of
+/// releasing it. The leak is only reachable through an `preempt(..)`
+/// transition, so catching it proves the checker actually exercises the
+/// eviction arm of the new op alphabet.
+pub fn preempt_leak_self_test() -> ModelConfig {
+    ModelConfig {
+        name: "planted-preempt-leak",
+        requests: vec![LifecycleSpec::new(2, 2), LifecycleSpec::new(2, 2)],
+        pool_blocks: 8,
+        block_tokens: 2,
+        max_batch: 2,
+        chunk: 0,
+        deferred: false,
+        max_depth: 6,
+        max_states: 2_000,
+        fault: SimFault::LeakLeaseOnPreempt,
+        watermark: 0.9,
+    }
+}
+
+/// A watermark world with an engine that releases a stale clone of the
+/// evicted sequence's lease when the sequence is readmitted
+/// ([`SimFault::DoubleReleaseOnRestore`]) — the classic
+/// refcount-goes-negative bug. Only a `restore(..)` transition reaches
+/// the fault, so this self-test pins the recompute arm of the alphabet.
+pub fn restore_double_release_self_test() -> ModelConfig {
+    ModelConfig {
+        name: "planted-restore-double-release",
+        requests: vec![LifecycleSpec::new(2, 2), LifecycleSpec::new(2, 2)],
+        pool_blocks: 8,
+        block_tokens: 2,
+        max_batch: 2,
+        chunk: 0,
+        deferred: false,
+        max_depth: 8,
+        max_states: 2_000,
+        fault: SimFault::DoubleReleaseOnRestore,
+        watermark: 0.9,
+    }
+}
+
+/// Outcome of one seeded fuzz run over a lifecycle world: randomized
+/// long-horizon schedules past [`explore`]'s exhaustive depth bound,
+/// audited with the same invariant stack after every transition.
+#[derive(Debug)]
+pub struct FuzzReport {
+    pub name: &'static str,
+    /// Schedules actually driven (a violation stops the run early).
+    pub schedules: usize,
+    /// Total transitions applied across all schedules.
+    pub transitions: usize,
+    /// Longest schedule driven before quiescence or the horizon.
+    pub longest: usize,
+    pub violation: Option<Violation>,
+}
+
+/// Drive `schedules` seeded random walks over `cfg`'s world, each up to
+/// `8 × max_depth` transitions — far past the exhaustive bound — picking
+/// uniformly among the enabled operations at every step and running the
+/// full audit after each one. Deterministic for a fixed `(cfg, seed)`,
+/// and any violation's schedule replays verbatim via [`replay`].
+pub fn fuzz(cfg: &ModelConfig, schedules: usize, seed: u64) -> FuzzReport {
+    let mut report = FuzzReport {
+        name: cfg.name,
+        schedules: 0,
+        transitions: 0,
+        longest: 0,
+        violation: None,
+    };
+    let mut rng = crate::util::prng::Rng::new(seed);
+    let horizon = cfg.max_depth.saturating_mul(8).max(8);
+    for _ in 0..schedules {
+        report.schedules += 1;
+        let mut w = World::new(cfg);
+        if let Err(e) = w.audit() {
+            report.violation =
+                Some(Violation { schedule: Vec::new(), message: format!("{e:#}") });
+            return report;
+        }
+        let mut schedule: Vec<Op> = Vec::new();
+        while schedule.len() < horizon {
+            let ops = w.enabled(cfg);
+            if ops.is_empty() {
+                break; // quiescent: every request reached Done
+            }
+            let op = ops[rng.below(ops.len())];
+            schedule.push(op);
+            report.transitions += 1;
+            if let Err(e) = w.apply(op, cfg).and_then(|_| w.audit()) {
+                report.longest = report.longest.max(schedule.len());
+                report.violation =
+                    Some(Violation { schedule, message: format!("{e:#}") });
+                return report;
+            }
+        }
+        report.longest = report.longest.max(schedule.len());
+    }
+    report
 }
 
 // ---------------------------------------------------------------------------
@@ -1119,6 +1356,68 @@ pub fn abort_leak_self_test() -> ConnModelConfig {
     }
 }
 
+/// Outcome of one seeded fuzz run over a connection world — the
+/// connection-level sibling of [`FuzzReport`].
+#[derive(Debug)]
+pub struct ConnFuzzReport {
+    pub name: &'static str,
+    pub schedules: usize,
+    pub transitions: usize,
+    pub longest: usize,
+    pub violation: Option<ConnViolation>,
+}
+
+/// Drive `schedules` seeded random walks over `cfg`'s connection world,
+/// each up to `8 × max_depth` transitions, with the full audit after
+/// every one — the connection-level sibling of [`fuzz`]. Deterministic
+/// for a fixed `(cfg, seed)`; violations replay via [`conn_replay`].
+pub fn conn_fuzz(
+    cfg: &ConnModelConfig,
+    schedules: usize,
+    seed: u64,
+) -> ConnFuzzReport {
+    let mut report = ConnFuzzReport {
+        name: cfg.name,
+        schedules: 0,
+        transitions: 0,
+        longest: 0,
+        violation: None,
+    };
+    let mut rng = crate::util::prng::Rng::new(seed);
+    let horizon = cfg.max_depth.saturating_mul(8).max(8);
+    for _ in 0..schedules {
+        report.schedules += 1;
+        let mut w = ConnWorld::new(cfg);
+        if let Err(e) = w.audit() {
+            report.violation = Some(ConnViolation {
+                schedule: Vec::new(),
+                message: format!("{e:#}"),
+            });
+            return report;
+        }
+        let mut schedule: Vec<ConnOp> = Vec::new();
+        while schedule.len() < horizon {
+            let ops = w.enabled(cfg);
+            if ops.is_empty() {
+                break; // quiescent: all clients gone or drained, idle pump
+            }
+            let op = ops[rng.below(ops.len())];
+            schedule.push(op);
+            report.transitions += 1;
+            if let Err(e) = w.apply(op, cfg).and_then(|_| w.audit()) {
+                report.longest = report.longest.max(schedule.len());
+                report.violation = Some(ConnViolation {
+                    schedule,
+                    message: format!("{e:#}"),
+                });
+                return report;
+            }
+        }
+        report.longest = report.longest.max(schedule.len());
+    }
+    report
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1135,6 +1434,7 @@ mod tests {
             max_depth: 8,
             max_states: 2_000,
             fault: SimFault::None,
+            watermark: 0.0,
         }
     }
 
@@ -1209,6 +1509,102 @@ mod tests {
     }
 
     #[test]
+    fn watermark_world_is_clean_and_preemption_completes() {
+        let cfg = default_suite()
+            .into_iter()
+            .find(|c| c.name == "watermark-preemption")
+            .expect("watermark-preemption in suite");
+        let rep = explore(&cfg);
+        assert!(rep.violation.is_none(), "{:?}", rep.violation);
+        assert!(rep.complete, "bounds truncated the watermark world");
+        // the pool (3 blocks) cannot hold both sequences' decode growth:
+        // with both admitted every step blocks, and the only path to
+        // completion runs through evict-and-recompute. This schedule is
+        // that path — preempt r1, finish r0, restore r1 with its emitted
+        // token folded into the recompute prompt, finish r1.
+        let evict_and_recompute = [
+            Op::Admit(0),
+            Op::Admit(1),
+            Op::Preempt(1),
+            Op::Step,
+            Op::Retire(0),
+            Op::Restore(1),
+            Op::PrefillChunk(1),
+            Op::PrefillChunk(1),
+            Op::PrefillChunk(1),
+            Op::Retire(1),
+        ];
+        replay(&cfg, &evict_and_recompute)
+            .expect("evict-and-recompute completion schedule");
+    }
+
+    #[test]
+    fn planted_preempt_leak_is_caught_via_a_preempt_schedule() {
+        let cfg = preempt_leak_self_test();
+        let rep = explore(&cfg);
+        let v = rep.violation.expect("planted preempt leak must be caught");
+        assert!(
+            v.schedule.iter().any(|op| matches!(op, Op::Preempt(_))),
+            "leak only fires on eviction; schedule was: {}",
+            format_schedule(&v.schedule)
+        );
+        replay(&cfg, &v.schedule)
+            .expect_err("violating schedule must replay to a failure");
+    }
+
+    #[test]
+    fn planted_restore_double_release_is_caught_via_a_restore_schedule() {
+        let cfg = restore_double_release_self_test();
+        let rep = explore(&cfg);
+        let v = rep.violation.expect("planted double release must be caught");
+        assert!(
+            v.schedule.iter().any(|op| matches!(op, Op::Restore(_))),
+            "double release only fires on recompute; schedule was: {}",
+            format_schedule(&v.schedule)
+        );
+        replay(&cfg, &v.schedule)
+            .expect_err("violating schedule must replay to a failure");
+    }
+
+    #[test]
+    fn fuzz_keeps_clean_worlds_clean_past_the_exhaustive_bound() {
+        for cfg in default_suite() {
+            let rep = fuzz(&cfg, 8, 0xC0FFEE);
+            assert!(
+                rep.violation.is_none(),
+                "{}: {:?}",
+                cfg.name,
+                rep.violation
+            );
+            assert_eq!(rep.schedules, 8);
+            // a walk ends at quiescence (every request Done) or at the
+            // 8×max_depth horizon — either way it must have gone somewhere
+            assert!(rep.longest > 0, "{}: fuzz drove no transitions", cfg.name);
+        }
+    }
+
+    #[test]
+    fn fuzz_is_deterministic_for_a_fixed_seed() {
+        let cfg = tiny_clean();
+        let a = fuzz(&cfg, 4, 7);
+        let b = fuzz(&cfg, 4, 7);
+        assert_eq!(a.transitions, b.transitions);
+        assert_eq!(a.longest, b.longest);
+    }
+
+    #[test]
+    fn fuzz_catches_the_planted_preempt_leak() {
+        let cfg = preempt_leak_self_test();
+        let rep = fuzz(&cfg, 64, 0xF00D);
+        let v = rep
+            .violation
+            .expect("64 random schedules must trip the preempt leak");
+        assert!(v.schedule.iter().any(|op| matches!(op, Op::Preempt(_))));
+        replay(&cfg, &v.schedule)
+            .expect_err("fuzz schedule must replay to a failure");
+    }
+
+    #[test]
     fn schedules_format_replayably() {
         let s = [Op::AdmitDeferred(0), Op::PrefillChunk(0), Op::Step,
                  Op::Abort(1)];
@@ -1221,9 +1617,9 @@ mod tests {
     #[test]
     fn default_suite_names_are_distinct_and_bounded() {
         let suite = default_suite();
-        assert_eq!(suite.len(), 3);
+        assert_eq!(suite.len(), 4);
         let names: HashSet<_> = suite.iter().map(|c| c.name).collect();
-        assert_eq!(names.len(), 3);
+        assert_eq!(names.len(), 4);
         for cfg in &suite {
             assert!(cfg.max_depth <= 16, "{}: depth bound too deep", cfg.name);
             assert!(cfg.fault == SimFault::None);
@@ -1330,6 +1726,28 @@ mod tests {
         let clean = ConnModelConfig { fault: SimFault::None, ..cfg };
         let rep = conn_explore(&clean);
         assert!(rep.violation.is_none(), "{:?}", rep.violation);
+    }
+
+    #[test]
+    fn conn_fuzz_keeps_clean_worlds_clean_and_catches_the_abort_leak() {
+        for cfg in conn_suite() {
+            let rep = conn_fuzz(&cfg, 8, 0xBEEF);
+            assert!(
+                rep.violation.is_none(),
+                "{}: {:?}",
+                cfg.name,
+                rep.violation
+            );
+            assert_eq!(rep.schedules, 8);
+        }
+        let cfg = abort_leak_self_test();
+        let rep = conn_fuzz(&cfg, 64, 0xBEEF);
+        let v = rep
+            .violation
+            .expect("64 random schedules must trip the abort leak");
+        assert!(v.schedule.iter().any(|op| matches!(op, ConnOp::Disconnect(_))));
+        conn_replay(&cfg, &v.schedule)
+            .expect_err("fuzz schedule must replay to a failure");
     }
 
     #[test]

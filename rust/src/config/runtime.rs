@@ -94,6 +94,15 @@ pub struct RuntimeConfig {
     /// submissions beyond it are shed with `{"error","code":"shed"}`
     /// (0 = unbounded). CLI: `pi2 serve --queue-depth N`.
     pub admission_queue_depth: usize,
+    /// High-watermark KV admission (evict-and-recompute): admit new
+    /// sequences while pool occupancy stays below this fraction of the
+    /// leasable blocks, with *no* worst-case reservation; on pool
+    /// exhaustion mid-decode the scheduler preempts the
+    /// most-recently-admitted sequence, requeues it, and restores it
+    /// later by recomputing its KV via chunked prefill. 0.0 (default)
+    /// keeps worst-case-reservation admission. CLI:
+    /// `pi2 serve --kv-watermark F`.
+    pub kv_watermark_frac: f64,
 }
 
 impl Default for RuntimeConfig {
@@ -122,6 +131,7 @@ impl Default for RuntimeConfig {
             max_clients: 8,
             client_inflight_cap: 2,
             admission_queue_depth: 64,
+            kv_watermark_frac: 0.0,
         }
     }
 }
@@ -236,6 +246,9 @@ impl RuntimeConfig {
         if let Some(v) = j.get("admission_queue_depth").as_usize() {
             self.admission_queue_depth = v;
         }
+        if let Some(v) = j.get("kv_watermark_frac").as_f64() {
+            self.kv_watermark_frac = v;
+        }
         if let Some(v) = j.get("bundling").as_bool() {
             self.bundling = v;
         }
@@ -310,7 +323,8 @@ mod tests {
                 "offload_resident_clusters": 96,
                 "offload_dense_threshold": 0.25,
                 "max_clients": 3, "client_inflight_cap": 5,
-                "admission_queue_depth": 7}"#,
+                "admission_queue_depth": 7,
+                "kv_watermark_frac": 0.875}"#,
         )
         .unwrap();
         c.apply_json(&j);
@@ -328,6 +342,7 @@ mod tests {
         assert_eq!(c.max_clients, 3);
         assert_eq!(c.client_inflight_cap, 5);
         assert_eq!(c.admission_queue_depth, 7);
+        assert!((c.kv_watermark_frac - 0.875).abs() < 1e-12);
     }
 
     #[test]

@@ -140,6 +140,25 @@ pub struct ServeReport {
     /// In-flight requests cancelled by client disconnect or slow-client
     /// abort.
     pub aborted_requests: u64,
+    /// Peak concurrently-live sequences — the admitted-concurrency
+    /// gauge watermark admission exists to raise over worst-case
+    /// reservation.
+    pub peak_live: usize,
+    /// Watermark admission only: live sequences evicted (KV released,
+    /// requeued) because decode-time growth exhausted the pool.
+    pub preemptions: u64,
+    /// Preempted sequences re-admitted, their KV recomputed via prefill
+    /// over the extended (prompt + emitted) token sequence.
+    pub restores: u64,
+    /// Tokens re-installed by restore recomputes. Prefix sharing may
+    /// serve many of these from still-published blocks, but they are
+    /// all booked here: this is the recompute bill the watermark policy
+    /// pays for its extra admitted concurrency.
+    pub recompute_tokens: usize,
+    /// TTFT (ms) of sequences that were preempted at least once —
+    /// compare its p99 against `serving.ttft_ms` for the tail-latency
+    /// inflation evict-and-recompute costs.
+    pub ttft_preempted_ms: Samples,
     /// Per-client serving counters on the online (multi-connection)
     /// path; batch serving books everything under client 0.
     pub clients: BTreeMap<ClientId, ClientStats>,
@@ -231,6 +250,21 @@ pub struct AdmissionLimits {
 struct QueuedReq {
     client: ClientId,
     req: InferenceRequest,
+    /// `Some` when this entry is a preempted sequence waiting to be
+    /// restored (watermark admission): the tokens it already emitted and
+    /// the latency bookkeeping it carries across the eviction.
+    preempted: Option<PreemptedSeq>,
+}
+
+/// Stream state a preempted sequence carries through the queue so its
+/// restore resumes the byte stream (and the latency accounting) exactly
+/// where the eviction cut it.
+struct PreemptedSeq {
+    tokens: Vec<u32>,
+    queue_s: f64,
+    prefill_s: f64,
+    ttft_s: f64,
+    last_tok_clock: Option<f64>,
 }
 
 /// The single global admission point: every connection's requests pass
@@ -266,7 +300,7 @@ impl AdmissionQueue {
             });
         }
         *self.in_flight.entry(client).or_insert(0) += 1;
-        self.pending.push_back(QueuedReq { client, req });
+        self.pending.push_back(QueuedReq { client, req, preempted: None });
         Ok(())
     }
 
@@ -364,6 +398,17 @@ struct ActiveSeq {
     /// (per-slot inter-token latency is the gap between consecutive
     /// stamps).
     last_tok_clock: Option<f64>,
+    /// Admission order stamp — the preemption victim is the
+    /// most-recently-admitted sequence (least progress to throw away;
+    /// the FCFS head keeps its slot).
+    admit_seq: u64,
+    /// Watermark admission only: the original request, kept so a
+    /// preemption can requeue the sequence for restore. `None` under
+    /// worst-case reservation, where preemption never happens.
+    origin: Option<InferenceRequest>,
+    /// Preempted at least once — routes this sequence's TTFT into
+    /// `ServeReport::ttft_preempted_ms`.
+    was_preempted: bool,
 }
 
 impl ActiveSeq {
@@ -397,6 +442,9 @@ impl ActiveSeq {
             finished: false,
             pending_prefill: false,
             last_tok_clock: None,
+            admit_seq: 0,
+            origin: None,
+            was_preempted: false,
         }
     }
 
@@ -497,6 +545,9 @@ fn finish_one(
     let client = seq.client;
     st.queue.release(client);
     let tokens = seq.tokens.len() as u64;
+    if seq.was_preempted {
+        st.report.ttft_preempted_ms.push(seq.ttft_s * 1e3);
+    }
     let sess = close_session(&mut st.report, seq, finish);
     let cs = st.report.clients.entry(client).or_default();
     cs.completed += 1;
@@ -533,6 +584,8 @@ struct OnlineState {
     /// Online mode stamps `submit_s` at submission; batch mode keeps
     /// the caller's arrival-trace clock.
     stamp_submit: bool,
+    /// Monotone admission stamp feeding [`ActiveSeq::admit_seq`].
+    admit_counter: u64,
 }
 
 impl OnlineState {
@@ -561,6 +614,7 @@ impl OnlineState {
             keep_sessions,
             strict_unservable,
             stamp_submit,
+            admit_counter: 0,
         }
     }
 }
@@ -578,6 +632,13 @@ pub struct Coordinator<E: Engine> {
     /// budget of N, no in-flight stream ever waits for more than N
     /// prompt tokens of newcomers between its decode steps.
     pub prefill_chunk: usize,
+    /// Watermark admission fraction mirrored from the engine config
+    /// (`kv_watermark_frac`). 0.0 = worst-case reservation: admissions
+    /// reserve their full growth and decode can never exhaust the pool.
+    /// Above 0.0 the scheduler admits optimistically and answers
+    /// decode-time exhaustion by evicting the most-recently-admitted
+    /// sequence and restoring it later via prefill recompute.
+    pub kv_watermark: f64,
     /// Online serving state ([`Coordinator::start_online`] …
     /// [`Coordinator::finish_online`]); `None` outside an online serve.
     /// Batch serving drives the same machinery internally, so the
@@ -593,17 +654,33 @@ impl<E: Engine> Coordinator<E> {
             engine,
             mode: ScheduleMode::Continuous,
             prefill_chunk: 0,
+            kv_watermark: 0.0,
             online: None,
         }
     }
 
     pub fn with_mode(engine: E, mode: ScheduleMode) -> Self {
-        Coordinator { engine, mode, prefill_chunk: 0, online: None }
+        Coordinator {
+            engine,
+            mode,
+            prefill_chunk: 0,
+            kv_watermark: 0.0,
+            online: None,
+        }
     }
 
     /// Enable chunked prefill with a per-iteration token budget.
     pub fn with_prefill_chunk(mut self, tokens: usize) -> Self {
         self.prefill_chunk = tokens;
+        self
+    }
+
+    /// Enable watermark (optimistic, evict-and-recompute) admission.
+    /// Must match the engine's `kv_watermark_frac` — the engine gates
+    /// admissions at the watermark, the scheduler answers decode-time
+    /// exhaustion with preempt/restore.
+    pub fn with_kv_watermark(mut self, frac: f64) -> Self {
+        self.kv_watermark = frac;
         self
     }
 
@@ -801,7 +878,8 @@ impl<E: Engine> Coordinator<E> {
             if !arrived {
                 break;
             }
-            let Some(QueuedReq { client, req }) = st.queue.pending.pop_front()
+            let Some(QueuedReq { client, req, preempted }) =
+                st.queue.pending.pop_front()
             else {
                 break;
             };
@@ -810,8 +888,12 @@ impl<E: Engine> Coordinator<E> {
             let admit_t0 = Instant::now();
             // chunked prefill on: claim the slot and lease now, and
             // install the prompt between decode steps below, so the
-            // admission itself stalls nobody
-            let admitted = if self.prefill_chunk > 0 {
+            // admission itself stalls nobody. A restore re-admits the
+            // extended (prompt + emitted) sequence the same deferred
+            // way; the pending-prefill loop below recomputes its KV.
+            let admitted = if let Some(p) = &preempted {
+                self.engine.admit_restored(&req, &p.tokens)
+            } else if self.prefill_chunk > 0 {
                 self.engine.admit_deferred(&req)
             } else {
                 self.engine.admit(&req)
@@ -826,6 +908,16 @@ impl<E: Engine> Coordinator<E> {
                     // batch serving fails fast, online serving answers
                     // the owning client and keeps going.
                     if st.live == 0 {
+                        if preempted.is_some() {
+                            // a preempted sequence physically fit at
+                            // eviction time, so a restore on an idle
+                            // engine can only fail on an accounting
+                            // bug — surface it, never reject
+                            return Err(e.context(format!(
+                                "request {} cannot be restored",
+                                req.id
+                            )));
+                        }
                         if st.strict_unservable {
                             return Err(e.context(format!(
                                 "request {} cannot be admitted",
@@ -851,7 +943,9 @@ impl<E: Engine> Coordinator<E> {
                         progressed = true;
                         continue;
                     }
-                    st.queue.pending.push_front(QueuedReq { client, req });
+                    st.queue
+                        .pending
+                        .push_front(QueuedReq { client, req, preempted });
                     st.report.kv_admission_stalls += 1;
                     st.pool_blocked = true;
                     break;
@@ -859,16 +953,44 @@ impl<E: Engine> Coordinator<E> {
                 Err(e) => return Err(e),
             };
             let prefill_s = admit_t0.elapsed().as_secs_f64();
-            st.report.prefill_tokens += req.prompt.len();
-            st.report.queue_wait_ms.push(queue_s * 1e3);
-            let mut seq = ActiveSeq::new(
-                &req,
-                queue_s,
-                prefill_s,
-                self.engine.decode_budget(adm.slot),
-            );
-            seq.client = client;
             progressed = true;
+            let mut seq = if let Some(p) = preempted {
+                // restore: the recompute bill is the whole extended
+                // sequence; latency bookkeeping carries across the
+                // eviction (queue wait was booked at first admission)
+                st.report.restores += 1;
+                st.report.recompute_tokens +=
+                    req.prompt.len() + p.tokens.len();
+                st.report.prefill_tokens += req.prompt.len() + p.tokens.len();
+                let mut seq = ActiveSeq::new(
+                    &req,
+                    p.queue_s,
+                    p.prefill_s + prefill_s,
+                    None,
+                );
+                seq.tokens = p.tokens;
+                seq.ttft_s = p.ttft_s;
+                seq.last_tok_clock = p.last_tok_clock;
+                seq.was_preempted = true;
+                seq
+            } else {
+                st.report.prefill_tokens += req.prompt.len();
+                st.report.queue_wait_ms.push(queue_s * 1e3);
+                ActiveSeq::new(
+                    &req,
+                    queue_s,
+                    prefill_s,
+                    self.engine.decode_budget(adm.slot),
+                )
+            };
+            seq.client = client;
+            seq.admit_seq = st.admit_counter;
+            st.admit_counter += 1;
+            if self.kv_watermark > 0.0 {
+                // keep the original request so a preemption can requeue
+                // this sequence for restore
+                seq.origin = Some(req);
+            }
             if let Some(tok) = adm.first_token {
                 seq.tokens.push(tok);
                 seq.mark_first_token(st.t0.elapsed().as_secs_f64());
@@ -881,7 +1003,7 @@ impl<E: Engine> Coordinator<E> {
                 let ev = TokenEvent {
                     request_id: seq.id,
                     token: tok,
-                    index: 0,
+                    index: seq.tokens.len() - 1,
                     finish: done.then_some(FinishReason::Length),
                 };
                 if !dead.contains(&client) && !sink.on_token(client, &ev) {
@@ -894,11 +1016,14 @@ impl<E: Engine> Coordinator<E> {
                     continue;
                 }
             } else {
-                st.report.deferred_admissions += 1;
+                if !seq.was_preempted {
+                    st.report.deferred_admissions += 1;
+                }
                 seq.pending_prefill = true;
             }
             st.active[adm.slot] = Some(seq);
             st.live += 1;
+            st.report.peak_live = st.report.peak_live.max(st.live);
         }
         if st.live == 0 {
             self.drain_dead(st, &mut dead)?;
@@ -908,9 +1033,18 @@ impl<E: Engine> Coordinator<E> {
         // token budget: in-flight streams' next decode step is never
         // more than one budget's worth of newcomer prompt away — the
         // serving-layer instance of the paper's decompose-and-overlap
-        // principle (§4.1.1)
-        if self.prefill_chunk > 0 {
-            let mut budget = self.prefill_chunk;
+        // principle (§4.1.1). With prefill_chunk == 0 (synchronous
+        // admission) a restore still lands here pending — it installs
+        // in one unbudgeted go, matching the synchronous admission its
+        // sequence originally got.
+        let has_pending =
+            st.active.iter().flatten().any(|s| s.pending_prefill);
+        if has_pending {
+            let mut budget = if self.prefill_chunk > 0 {
+                self.prefill_chunk
+            } else {
+                usize::MAX
+            };
             for slot in 0..cap {
                 if budget == 0 {
                     break;
@@ -934,10 +1068,14 @@ impl<E: Engine> Coordinator<E> {
                 let Some(tok) = progress.first_token else { continue };
                 // prompt fully installed: the slot decodes from here;
                 // clamp max_tokens to the now-known context budget
-                // exactly as a synchronous admission would
+                // exactly as a synchronous admission would. A restored
+                // sequence already carries its emitted tokens, so the
+                // achievable total is those plus this token plus the
+                // remaining decode budget.
                 seq.pending_prefill = false;
                 if let Some(b) = done_budget {
-                    seq.max_tokens = seq.max_tokens.min(1 + b);
+                    seq.max_tokens =
+                        seq.max_tokens.min(seq.tokens.len() + 1 + b);
                 }
                 seq.tokens.push(tok);
                 seq.mark_first_token(st.t0.elapsed().as_secs_f64());
@@ -947,7 +1085,7 @@ impl<E: Engine> Coordinator<E> {
                 let ev = TokenEvent {
                     request_id: seq.id,
                     token: tok,
-                    index: 0,
+                    index: seq.tokens.len() - 1,
                     finish: done.then_some(FinishReason::Length),
                 };
                 if !dead.contains(&client) && !sink.on_token(client, &ev) {
@@ -966,7 +1104,24 @@ impl<E: Engine> Coordinator<E> {
             }
         }
         let step_t0 = Instant::now();
-        let toks = self.engine.step()?;
+        let toks = match self.engine.step() {
+            Ok(toks) => toks,
+            Err(e)
+                if self.kv_watermark > 0.0
+                    && e.downcast_ref::<KvPoolError>().is_some()
+                    && st.live >= 2 =>
+            {
+                // watermark admission's decode-time exhaustion: evict
+                // the most-recently-admitted sequence and retry the
+                // step next pump. Gated on live >= 2 — preempting the
+                // only sequence would restore it into the same full
+                // pool and spin forever, so that case is a hard error.
+                self.preempt_one(st)?;
+                self.drain_dead(st, &mut dead)?;
+                return Ok(true);
+            }
+            Err(e) => return Err(e),
+        };
         st.report
             .step_latency_ms
             .push(step_t0.elapsed().as_secs_f64() * 1e3);
@@ -1023,6 +1178,52 @@ impl<E: Engine> Coordinator<E> {
         }
         self.drain_dead(st, &mut dead)?;
         Ok(true)
+    }
+
+    /// Evict one live sequence to relieve KV pool exhaustion: release
+    /// its blocks through [`Engine::preempt`] and requeue it at the
+    /// queue head for restore-by-recompute. The victim is the
+    /// most-recently-admitted sequence — least progress to throw away,
+    /// and the FCFS head keeps its slot. The queue's in-flight count is
+    /// untouched (the request never left the system), and
+    /// `pool_blocked` stays set: the freed blocks belong to the
+    /// still-live sequences' decode first, not to new admissions.
+    fn preempt_one(&mut self, st: &mut OnlineState) -> Result<()> {
+        let slot = st
+            .active
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|s| (i, s.admit_seq)))
+            .max_by_key(|&(_, stamp)| stamp)
+            .map(|(i, _)| i)
+            .ok_or_else(|| {
+                anyhow!("KV pool exhausted with no live sequence to preempt")
+            })?;
+        let Some(seq) = st.active[slot].take() else {
+            bail!("preemption victim slot {slot} is vacant");
+        };
+        st.live -= 1;
+        self.engine.preempt(slot)?;
+        let Some(req) = seq.origin else {
+            bail!(
+                "sequence {} has no origin request to requeue (preemption \
+                 requires watermark admission)",
+                seq.id
+            );
+        };
+        st.report.preemptions += 1;
+        st.queue.pending.push_front(QueuedReq {
+            client: seq.client,
+            req,
+            preempted: Some(PreemptedSeq {
+                tokens: seq.tokens,
+                queue_s: seq.queue_s,
+                prefill_s: seq.prefill_s,
+                ttft_s: seq.ttft_s,
+                last_tok_clock: seq.last_tok_clock,
+            }),
+        });
+        Ok(())
     }
 
     /// Abort every client whose sink refused an event this iteration.
@@ -1446,6 +1647,7 @@ mod tests {
     use crate::config::{bamboo_7b, oneplus_12, RuntimeConfig};
     use crate::engine::SimEngine;
     use crate::serve::CollectSink;
+    use crate::util::prng::Rng;
 
     fn sim(max_batch: usize) -> SimEngine {
         let cfg = RuntimeConfig { max_batch, ..Default::default() };
@@ -1741,5 +1943,160 @@ mod tests {
             .map(|e| e.2)
             .collect();
         assert_eq!(online, solo, "batched online stream diverged from solo");
+    }
+
+    fn watermark_cfg(seed: u64) -> RuntimeConfig {
+        RuntimeConfig {
+            max_batch: 4,
+            kv_block_tokens: 4,
+            kv_pool_blocks: 8,
+            kv_watermark_frac: 0.75,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    fn watermark_coord(seed: u64) -> Coordinator<SimEngine> {
+        let cfg = watermark_cfg(seed);
+        let frac = cfg.kv_watermark_frac;
+        Coordinator::new(SimEngine::new(oneplus_12(), bamboo_7b(), cfg))
+            .with_kv_watermark(frac)
+    }
+
+    #[test]
+    fn preempted_streams_match_solo_runs() {
+        // pool sized so concurrent decode growth must exhaust it: 4
+        // sequences each grow to 3 blocks (12 > 8). Watermark admission
+        // lets all of them in; the scheduler preempts and restores under
+        // pressure — and every stream must still be byte-identical to
+        // the same request served alone, where nothing is ever evicted.
+        let requests: Vec<InferenceRequest> = (0..4)
+            .map(|id| {
+                InferenceRequest::new(id, vec![id as u32 + 1, 2, 3, 4], 8)
+            })
+            .collect();
+        let mut c = watermark_coord(0);
+        let report = c.serve_collect(&requests).unwrap();
+        assert!(
+            report.preemptions > 0,
+            "pool pressure never forced a preemption"
+        );
+        assert_eq!(
+            report.preemptions, report.restores,
+            "every eviction must be matched by a restore"
+        );
+        assert!(report.recompute_tokens > 0);
+        assert!(!report.ttft_preempted_ms.is_empty());
+        assert_eq!(report.sessions.len(), 4);
+        for req in &requests {
+            let solo = {
+                let mut alone = watermark_coord(0);
+                let r = alone.serve_collect(std::slice::from_ref(req)).unwrap();
+                assert_eq!(
+                    r.preemptions, 0,
+                    "a solo request must never be preempted"
+                );
+                r.session(req.id).unwrap().tokens.clone()
+            };
+            let shared = &report.session(req.id).unwrap().tokens;
+            assert_eq!(
+                shared, &solo,
+                "request {} diverged after preemption/restore",
+                req.id
+            );
+        }
+        // no lease survived the serve
+        let pool = c.engine.kv_pool().unwrap();
+        assert_eq!(pool.free_blocks, 8, "leaked pool blocks");
+    }
+
+    #[test]
+    fn preempted_streams_match_solo_runs_with_chunked_prefill() {
+        // same property with deferred admission: a restore's recompute
+        // goes through the chunked-prefill loop instead of the
+        // synchronous path
+        let requests: Vec<InferenceRequest> = (0..4)
+            .map(|id| {
+                InferenceRequest::new(id, vec![id as u32 + 1, 2, 3, 4], 8)
+            })
+            .collect();
+        let mut c = watermark_coord(0).with_prefill_chunk(2);
+        let report = c.serve_collect(&requests).unwrap();
+        assert!(report.preemptions > 0);
+        for req in &requests {
+            let solo = {
+                let mut alone = watermark_coord(0).with_prefill_chunk(2);
+                let r = alone.serve_collect(std::slice::from_ref(req)).unwrap();
+                r.session(req.id).unwrap().tokens.clone()
+            };
+            assert_eq!(
+                &report.session(req.id).unwrap().tokens,
+                &solo,
+                "request {} diverged (chunked restore)",
+                req.id
+            );
+        }
+    }
+
+    #[test]
+    fn prop_watermark_admission_invariants() {
+        // hand-rolled property test: a seeded churn of {submit, pump,
+        // preempt, abort/disconnect} against the online path, with the
+        // full pool + scheduler audit after every single operation. The
+        // preempt arm evicts directly rather than waiting for organic
+        // exhaustion: any live sequence must be evictable at any
+        // instant without corrupting the books.
+        let mut rng = Rng::new(0x9E37);
+        for round in 0..6 {
+            let mut c = watermark_coord(round);
+            c.start_online(AdmissionLimits::default());
+            let mut sink = RecordSink::default();
+            let mut next_id = 0u64;
+            for _ in 0..120 {
+                match rng.below(8) {
+                    0 | 1 | 2 => {
+                        let client = (1 + rng.below(3)) as ClientId;
+                        let prompt: Vec<u32> = (0..rng.range(1, 6))
+                            .map(|i| i as u32 + 1)
+                            .collect();
+                        let req = InferenceRequest::new(
+                            next_id,
+                            prompt,
+                            1 + rng.below(6),
+                        );
+                        next_id += 1;
+                        c.submit(client, req).unwrap();
+                    }
+                    3 | 4 | 5 => {
+                        c.pump(&mut sink).unwrap();
+                    }
+                    6 => {
+                        let mut st = c.online.take().unwrap();
+                        if st.live > 0 {
+                            c.preempt_one(&mut st).unwrap();
+                        }
+                        c.online = Some(st);
+                    }
+                    _ => {
+                        let client = (1 + rng.below(3)) as ClientId;
+                        c.abort_client(client).unwrap();
+                    }
+                }
+                c.check_online_invariants().unwrap();
+            }
+            // drain: everything still in flight (including preempted
+            // sequences parked in the queue) must complete cleanly
+            while !c.online_idle() {
+                c.pump(&mut sink).unwrap();
+                c.check_online_invariants().unwrap();
+            }
+            c.finish_online().unwrap();
+            assert_eq!(c.engine.active(), 0);
+            let pool = c.engine.kv_pool().unwrap();
+            assert_eq!(
+                pool.free_blocks, 8,
+                "round {round}: leaked pool blocks"
+            );
+        }
     }
 }

@@ -70,6 +70,13 @@ const MAX_TOKENS_CAP: usize = 4096;
 /// decode loop.
 const OUTBOUND_QUEUE_LINES: usize = 256;
 
+/// Bounded scheduler inbound queue (messages from the accept and reader
+/// threads). The scheduler never sends to itself, so a full queue can
+/// only block connection threads — backpressure on noisy clients, never
+/// a self-deadlock — while an unbounded queue would let a flood of
+/// inbound lines grow the heap without limit.
+const INBOUND_QUEUE_MSGS: usize = 256;
+
 /// Accept-thread poll interval while the listener has nothing pending.
 const ACCEPT_POLL_MS: u64 = 5;
 
@@ -174,7 +181,7 @@ struct ReqMeta {
 /// writer thread here; registration and the reader are the scheduler's.
 fn accept_loop(
     listener: TcpListener,
-    tx: mpsc::Sender<ServerMsg>,
+    tx: mpsc::SyncSender<ServerMsg>,
     stop: Arc<AtomicBool>,
     accept_errors: Arc<AtomicU64>,
 ) {
@@ -238,7 +245,11 @@ fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<String>) {
 /// Reader thread: parse the connection into lines for the scheduler.
 /// Every exit path tells the scheduler why, so the connection's in-flight
 /// work is always aborted and its resources reclaimed.
-fn reader_loop(client: ClientId, stream: TcpStream, tx: mpsc::Sender<ServerMsg>) {
+fn reader_loop(
+    client: ClientId,
+    stream: TcpStream,
+    tx: mpsc::SyncSender<ServerMsg>,
+) {
     let reader = BufReader::new(stream);
     for line in reader.lines() {
         match line {
@@ -408,11 +419,13 @@ impl Server<SimEngine> {
             cfg.client_inflight_cap,
             cfg.admission_queue_depth,
         );
+        let watermark = cfg.kv_watermark_frac;
         let mut server = Server::new(
             SimEngine::new(dev, spec, cfg),
             Tokenizer::train(FALLBACK_CORPUS, 64),
         );
         server.set_limits(max_clients, client_cap, queue_depth);
+        server.set_kv_watermark(watermark);
         server
     }
 }
@@ -441,6 +454,15 @@ impl<E: Engine> Server<E> {
     /// iteration between decode steps); 0 = synchronous admission.
     pub fn set_prefill_chunk(&mut self, tokens: usize) {
         self.coord.prefill_chunk = tokens;
+    }
+
+    /// Watermark admission fraction ([`RuntimeConfig::kv_watermark_frac`]):
+    /// > 0 enables optimistic admission with evict-and-recompute
+    /// preemption; 0 keeps worst-case reservation. Must match the
+    /// engine's own config or admission and preemption disagree on
+    /// policy.
+    pub fn set_kv_watermark(&mut self, frac: f64) {
+        self.coord.kv_watermark = frac;
     }
 
     /// Connection and admission caps: `max_clients` simultaneous
@@ -478,7 +500,7 @@ impl<E: Engine> Server<E> {
             let _ = tx.send(listener.local_addr()?);
         }
         let stop = Arc::new(AtomicBool::new(false));
-        let (tx, rx) = mpsc::channel::<ServerMsg>();
+        let (tx, rx) = mpsc::sync_channel::<ServerMsg>(INBOUND_QUEUE_MSGS);
         let accept_handle = {
             let tx = tx.clone();
             let stop = Arc::clone(&stop);
@@ -569,7 +591,7 @@ impl<E: Engine> Server<E> {
         msg: ServerMsg,
         conns: &mut BTreeMap<ClientId, Conn>,
         meta: &mut BTreeMap<u64, ReqMeta>,
-        tx: &mpsc::Sender<ServerMsg>,
+        tx: &mpsc::SyncSender<ServerMsg>,
         orphans: &mut Vec<(TcpStream, thread::JoinHandle<()>)>,
     ) -> Result<bool> {
         match msg {
@@ -910,6 +932,25 @@ impl<E: Engine> Server<E> {
             ("ttft_ms", pct(&mut report.serving.ttft_ms)),
             ("itl_ms", itl),
             ("queue", queue_obj),
+            // watermark preemption: eviction/recompute counters and the
+            // TTFT tail preempted requests actually saw (zeroes when
+            // worst-case reservation is in force)
+            (
+                "preemption",
+                json::obj(vec![
+                    ("preemptions", json::num(report.preemptions as f64)),
+                    ("restores", json::num(report.restores as f64)),
+                    (
+                        "recompute_tokens",
+                        json::num(report.recompute_tokens as f64),
+                    ),
+                    ("peak_live", json::num(report.peak_live as f64)),
+                    (
+                        "ttft_preempted_ms",
+                        pct(&mut report.ttft_preempted_ms),
+                    ),
+                ]),
+            ),
             ("clients", clients_obj),
         ];
         // cluster-offload streaming counters (engines serving with the

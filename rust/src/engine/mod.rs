@@ -28,7 +28,7 @@ use crate::cache::{Access, MemoryBudget, NeuronCache};
 use crate::config::{
     CoreClass, DeviceConfig, ModelSpec, PipelineMode, RuntimeConfig, XpuMode,
 };
-use crate::kv::{pool_err, violation, KvLease, KvPool, KvPoolStats};
+use crate::kv::{pool_err, violation, KvLease, KvPool, KvPoolError, KvPoolStats};
 use crate::metrics::{RunMetrics, StepMetrics};
 use crate::offload::{OffloadConfig, OffloadPolicy};
 use crate::pipeline::{schedule, ClusterTask};
@@ -99,6 +99,17 @@ pub enum SimFault {
     /// completions retire cleanly, so only the concurrent-connection
     /// checker's `disconnect` interleavings can expose it.
     LeakLeaseOnAbort,
+    /// `preempt` frees the slot but drops the KV lease without
+    /// releasing it, while plain `retire` stays correct — the
+    /// eviction-path lease leak only the lifecycle checker's
+    /// `preempt` interleavings can expose.
+    LeakLeaseOnPreempt,
+    /// `admit_restored` re-runs the release logic on the lease it just
+    /// installed — a double release: the restored slot keeps its
+    /// membership while the pool's refcounts and free list say the
+    /// blocks are gone. Preempt itself stays correct, so only a
+    /// `preempt` followed by a `restore` can expose it.
+    DoubleReleaseOnRestore,
 }
 
 /// Per-slot state of an admitted sequence on the simulation engine: a
@@ -218,6 +229,82 @@ impl SimEngine {
     /// engine that is actually broken.
     pub fn inject_fault(&mut self, fault: SimFault) {
         self.fault = fault;
+    }
+
+    /// Shared admission body behind [`Engine::admit_deferred`] and
+    /// [`Engine::admit_restored`]. Two admission policies:
+    ///
+    /// - worst-case reservation (default): reserve every in-flight
+    ///   sequence's worst-case growth (and this one's) so admission
+    ///   under pool pressure fails with a typed, deferrable error
+    ///   instead of letting a later decode step exhaust the pool. The
+    ///   arithmetic is [`KvPool::admit_reserve`] — the same the real
+    ///   engine uses, which keeps scheduler behavior under memory
+    ///   pressure identical across backends.
+    /// - watermark (`cfg.kv_watermark_frac > 0`): optimistic,
+    ///   evict-and-recompute admission — no reservation; admit while
+    ///   the pool sits below the high watermark and let decode-time
+    ///   growth run to exhaustion, where the scheduler preempts a
+    ///   victim and restores it later via recompute.
+    ///
+    /// `relax_watermark` is the restore path's escape hatch: a resumed
+    /// sequence carries its emitted tokens in the prompt, so it can sit
+    /// above the watermark even on an otherwise idle pool. Gating the
+    /// restore on the watermark would starve it forever; restores skip
+    /// the gate and rely on the pool's physical free-block check.
+    fn admit_slot(
+        &mut self,
+        req: &InferenceRequest,
+        relax_watermark: bool,
+    ) -> Result<Admission> {
+        let slot = self
+            .slots
+            .iter()
+            .position(Option::is_none)
+            .ok_or_else(|| {
+                anyhow!("engine full: all {} slots occupied", self.slots.len())
+            })?;
+        let (demand_blocks, reserve) = if self.cfg.kv_watermark_frac > 0.0 {
+            let needed = self.kv_pool.blocks_for(req.prompt.len().max(1));
+            if !relax_watermark
+                && self
+                    .kv_pool
+                    .above_watermark(self.cfg.kv_watermark_frac, needed)
+            {
+                return Err(pool_err(KvPoolError::Exhausted {
+                    needed,
+                    free: self.kv_pool.free_blocks(),
+                }));
+            }
+            (needed, 0)
+        } else {
+            self.kv_pool.admit_reserve(
+                req.prompt.len(),
+                req.params.max_tokens,
+                None,
+                self.slots
+                    .iter()
+                    .flatten()
+                    .map(|s| (s.demand_blocks, s.lease.blocks().len())),
+            )
+        };
+        // unpublished: the prompt's blocks must not be shareable until
+        // its (possibly chunked) install completes — prefill_chunk
+        // publishes them with the first token
+        let lease = self
+            .kv_pool
+            .admit_unpublished(&req.prompt, reserve)
+            .map_err(pool_err)?;
+        let info = lease.info();
+        let rng = self.slot_stream(req);
+        self.slots[slot] = Some(SimSlot {
+            rng,
+            lease,
+            demand_blocks,
+            pending: req.prompt.len().max(1),
+            prompt: req.prompt.clone(),
+        });
+        Ok(Admission { slot, first_token: None, lease: Some(info) })
     }
 
     pub fn offloading(&self) -> bool {
@@ -768,46 +855,7 @@ impl Engine for SimEngine {
     /// [`Engine::prefill_chunk`] calls. The slot holds its lease but
     /// sits out decode steps until the prompt completes.
     fn admit_deferred(&mut self, req: &InferenceRequest) -> Result<Admission> {
-        let slot = self
-            .slots
-            .iter()
-            .position(Option::is_none)
-            .ok_or_else(|| {
-                anyhow!("engine full: all {} slots occupied", self.slots.len())
-            })?;
-        // lease the prompt's KV blocks from the shared pool, reserving
-        // every in-flight sequence's worst-case growth (and this one's)
-        // so admission under pool pressure fails with a typed, deferrable
-        // error instead of letting a later decode step exhaust the pool.
-        // The arithmetic is KvPool::admit_reserve — the same the real
-        // engine uses, which keeps scheduler behavior under memory
-        // pressure identical across backends.
-        let (demand_blocks, reserve) = self.kv_pool.admit_reserve(
-            req.prompt.len(),
-            req.params.max_tokens,
-            None,
-            self.slots
-                .iter()
-                .flatten()
-                .map(|s| (s.demand_blocks, s.lease.blocks().len())),
-        );
-        // unpublished: the prompt's blocks must not be shareable until
-        // its (possibly chunked) install completes — prefill_chunk
-        // publishes them with the first token
-        let lease = self
-            .kv_pool
-            .admit_unpublished(&req.prompt, reserve)
-            .map_err(pool_err)?;
-        let info = lease.info();
-        let rng = self.slot_stream(req);
-        self.slots[slot] = Some(SimSlot {
-            rng,
-            lease,
-            demand_blocks,
-            pending: req.prompt.len().max(1),
-            prompt: req.prompt.clone(),
-        });
-        Ok(Admission { slot, first_token: None, lease: Some(info) })
+        self.admit_slot(req, false)
     }
 
     /// Advance a pending prompt by up to `budget` tokens, modeling each
@@ -928,9 +976,67 @@ impl Engine for SimEngine {
                 // tokens) leaks; completed sequences retire correctly
                 SimFault::LeakLeaseOnAbort if s.pending > 0 => drop(s.lease),
                 SimFault::LeakLeaseOnAbort => self.kv_pool.release(s.lease),
+                _ => self.kv_pool.release(s.lease),
             }
         }
         Ok(())
+    }
+
+    /// Evict a slot under pool pressure: identical to [`Engine::retire`]
+    /// on the correct path (the lease goes back to the pool so the
+    /// blocks are reusable immediately), with its own planted-fault arm
+    /// so the checker can prove it audits the eviction path separately
+    /// from ordinary retirement.
+    fn preempt(&mut self, slot: SlotId) -> Result<()> {
+        ensure!(
+            slot < self.slots.len(),
+            "slot {slot} out of range (capacity {})",
+            self.slots.len()
+        );
+        if let Some(s) = self.slots[slot].take() {
+            match self.fault {
+                // planted bug: the eviction path drops the lease without
+                // releasing its blocks — the preempt-only lease leak
+                SimFault::LeakLeaseOnPreempt => drop(s.lease),
+                _ => self.kv_pool.release(s.lease),
+            }
+        }
+        Ok(())
+    }
+
+    /// Re-admit a preempted sequence. The extended-prompt arithmetic is
+    /// the trait default's; what the sim adds is stream continuity: the
+    /// slot's deterministic generator is keyed only by (request id,
+    /// sampling seed, engine seed), so after re-admission it is
+    /// fast-forwarded past the `emitted` draws the sequence already
+    /// produced — the resumed stream is byte-identical to a run that
+    /// was never preempted.
+    fn admit_restored(
+        &mut self,
+        req: &InferenceRequest,
+        emitted: &[u32],
+    ) -> Result<Admission> {
+        let mut r = req.clone();
+        r.prompt.extend_from_slice(emitted);
+        r.params.max_tokens =
+            req.params.max_tokens.saturating_sub(emitted.len()).max(1);
+        let adm = self.admit_slot(&r, true)?;
+        let vocab = self.spec.vocab;
+        if let Some(s) = self.slots[adm.slot].as_mut() {
+            for _ in 0..emitted.len() {
+                s.rng.below(vocab);
+            }
+        }
+        if self.fault == SimFault::DoubleReleaseOnRestore {
+            // planted bug: the restore path re-runs the release logic on
+            // the lease it just installed — refcounts and the free list
+            // say the blocks are gone while the slot keeps its membership
+            if let Some(s) = self.slots[adm.slot].as_ref() {
+                let ghost = s.lease.clone();
+                self.kv_pool.release(ghost);
+            }
+        }
+        Ok(adm)
     }
 
     fn stats(&self) -> EngineStats {

@@ -28,7 +28,7 @@ use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::cache::{Access, NeuronCache};
 use crate::config::CoreClass;
-use crate::kv::{pool_err, violation, KvLease, KvPool, KvPoolStats};
+use crate::kv::{pool_err, violation, KvLease, KvPool, KvPoolError, KvPoolStats};
 use crate::metrics::{RunMetrics, StepMetrics};
 use crate::model::{ModelDims, Predictor, WeightFile, Weights};
 use crate::offload::{ClusterLayout, NeuronStore, OffloadConfig, OffloadPolicy};
@@ -73,6 +73,13 @@ pub struct RealEngineOptions {
     /// Dense/sparse routing threshold (affects stats/billing only; the
     /// computed set never changes).
     pub offload_dense_threshold: f64,
+    /// High-watermark admission fraction (0 = worst-case reservation).
+    /// When set, admission leases only the prompt's blocks and refuses
+    /// (typed, downcastable) above `frac` of the leasable pool;
+    /// decode-time growth runs to exhaustion, where `step` surfaces a
+    /// typed pool error and the scheduler preempts a victim and
+    /// restores it later via recompute. CLI: `pi2 serve --kv-watermark`.
+    pub kv_watermark_frac: f64,
 }
 
 impl Default for RealEngineOptions {
@@ -89,6 +96,7 @@ impl Default for RealEngineOptions {
             offload_cluster_neurons: 8,
             offload_resident_clusters: 64,
             offload_dense_threshold: 0.5,
+            kv_watermark_frac: 0.0,
         }
     }
 }
@@ -514,6 +522,65 @@ impl RealEngine {
         )
     }
 
+    /// Shared admission body for the deferred and restored paths: claim
+    /// a vacant row, lease the prompt, and record the pending prefill.
+    /// Reservation policy follows [`RealEngineOptions::kv_watermark_frac`]:
+    /// zero means worst-case reservation ([`Self::admit_reserve`]);
+    /// positive means optimistic watermark admission — lease only the
+    /// prompt's blocks, refuse (typed, downcastable) above the
+    /// watermark, and let decode-time growth run to exhaustion, where
+    /// `step` surfaces a typed pool error and the scheduler preempts a
+    /// victim. `relax_watermark` is the restore path's escape hatch: a
+    /// resumed sequence carries its emitted tokens in its prompt and
+    /// would otherwise starve behind the gate, so restores skip it and
+    /// rely on the pool's physical free-block check.
+    fn admit_row(
+        &mut self,
+        req: &InferenceRequest,
+        relax_watermark: bool,
+    ) -> Result<Admission> {
+        let slot = (0..self.batch)
+            .find(|&r| !self.row_occupied(r))
+            .ok_or_else(|| {
+                anyhow!("engine full: all {} rows occupied", self.batch)
+            })?;
+        let idle = !(0..self.batch).any(|r| self.row_occupied(r));
+        if idle
+            && (self.row_pos.iter().any(|&p| p > 0)
+                || self.leases.iter().any(Option::is_some))
+        {
+            // idle engine with stale direct-use state: full reset
+            self.reset()?;
+        }
+        let prompt = self.prompt_window(&req.prompt).to_vec();
+        ensure!(!prompt.is_empty(), "empty prompt");
+        let (demand, reserve) = if self.opts.kv_watermark_frac > 0.0 {
+            let needed = self.pool.blocks_for(prompt.len());
+            if !relax_watermark
+                && self
+                    .pool
+                    .above_watermark(self.opts.kv_watermark_frac, needed)
+            {
+                return Err(pool_err(KvPoolError::Exhausted {
+                    needed,
+                    free: self.pool.free_blocks(),
+                }));
+            }
+            (needed, 0)
+        } else {
+            // reserve every in-flight row's remaining worst-case growth
+            // (and this sequence's own) so active decodes can always get
+            // their next block — pool pressure surfaces here, as a typed
+            // error
+            self.admit_reserve(prompt.len(), req.params.max_tokens)
+        };
+        self.lease_row(slot, &prompt, reserve)?;
+        self.slot_demand[slot] = demand;
+        self.pending[slot] = Some(PendingPrefill { prompt, installed: 0 });
+        let lease = self.leases[slot].as_ref().map(|l| l.info());
+        Ok(Admission { slot, first_token: None, lease })
+    }
+
     /// Lease the prompt's blocks for row `row`, sharing identical prompt
     /// prefixes already resident (installed *and published*) in the
     /// pool. `reserve` keeps blocks free for in-flight rows' growth.
@@ -663,6 +730,7 @@ impl RealEngine {
         let mut arrived: HashMap<usize, Vec<f32>> = HashMap::new();
         if !misses.is_empty() {
             let io_start = std::time::Instant::now();
+            // pi2-lint: allow(channel-discipline): scoped rendezvous — at most |misses| messages per step by construction, and the consumer drains in the same scope
             let (tx, rx) = mpsc::channel::<(usize, Vec<f32>)>();
             let wfile = &self.wfile;
             let flash = &self.flash;
@@ -766,6 +834,7 @@ impl RealEngine {
         let mut arrived: HashMap<u32, Vec<f32>> = HashMap::new();
         if !plan.fetch.is_empty() {
             let io_start = std::time::Instant::now();
+            // pi2-lint: allow(channel-discipline): scoped rendezvous — at most |plan.fetch| messages per step by construction, and the consumer drains in the same scope
             let (tx, rx) = mpsc::channel::<(u32, Vec<f32>)>();
             let fetch_ref = &plan.fetch;
             std::thread::scope(|scope| {
@@ -1363,31 +1432,26 @@ impl Engine for RealEngine {
     /// row rides decode steps against the reserved scratch block exactly
     /// like a vacant row, so in-flight sequences are untouched.
     fn admit_deferred(&mut self, req: &InferenceRequest) -> Result<Admission> {
-        let slot = (0..self.batch)
-            .find(|&r| !self.row_occupied(r))
-            .ok_or_else(|| {
-                anyhow!("engine full: all {} rows occupied", self.batch)
-            })?;
-        let idle = !(0..self.batch).any(|r| self.row_occupied(r));
-        if idle
-            && (self.row_pos.iter().any(|&p| p > 0)
-                || self.leases.iter().any(Option::is_some))
-        {
-            // idle engine with stale direct-use state: full reset
-            self.reset()?;
-        }
-        let prompt = self.prompt_window(&req.prompt).to_vec();
-        ensure!(!prompt.is_empty(), "empty prompt");
-        // reserve every in-flight row's remaining worst-case growth (and
-        // this sequence's own) so active decodes can always get their
-        // next block — pool pressure surfaces here, as a typed error
-        let (demand, reserve) =
-            self.admit_reserve(prompt.len(), req.params.max_tokens);
-        self.lease_row(slot, &prompt, reserve)?;
-        self.slot_demand[slot] = demand;
-        self.pending[slot] = Some(PendingPrefill { prompt, installed: 0 });
-        let lease = self.leases[slot].as_ref().map(|l| l.info());
-        Ok(Admission { slot, first_token: None, lease })
+        self.admit_row(req, false)
+    }
+
+    /// Restore a preempted sequence by recomputing its KV from the
+    /// extended prompt (original prompt + emitted tokens). Skips the
+    /// watermark gate — see [`Self::admit_row`] — so a restore can land
+    /// on an otherwise idle pool that still sits above the watermark.
+    /// The real engine's next token depends only on the installed token
+    /// sequence, so the resumed stream is byte-identical to an
+    /// uninterrupted run.
+    fn admit_restored(
+        &mut self,
+        req: &InferenceRequest,
+        emitted: &[u32],
+    ) -> Result<Admission> {
+        let mut r = req.clone();
+        r.prompt.extend_from_slice(emitted);
+        r.params.max_tokens =
+            req.params.max_tokens.saturating_sub(emitted.len()).max(1);
+        self.admit_row(&r, true)
     }
 
     /// Advance a pending prompt by up to `budget` tokens between decode
@@ -2160,6 +2224,68 @@ mod tests {
         }
         assert_eq!(c.engine.active(), 0);
         assert_eq!(c.engine.kv_pool().unwrap().free_blocks, 7);
+        std::fs::remove_file(wp).ok();
+    }
+
+    #[test]
+    fn preempted_streams_match_solo_runs_on_the_real_engine() {
+        // acceptance (watermark admission on the real engine): a
+        // 3-block pool under `kv_watermark_frac = 0.75` (limit 2)
+        // admits two sequences at one prompt block each, but both need
+        // 3 blocks to finish — decode growth must exhaust the pool, so
+        // the scheduler evicts a victim and later recomputes it. Every
+        // stream must still be byte-identical to the same request
+        // served alone on the same weights, where nothing is evicted.
+        let Some(dir) = artifacts() else { return };
+        let wp = weight_path("wmark");
+        let o = RealEngineOptions {
+            kv_blocks: 3,
+            kv_watermark_frac: 0.75,
+            ..opts(false, 128)
+        };
+        // distinct first tokens: no prefix sharing muddies the pool math
+        let requests: Vec<InferenceRequest> = (0..3)
+            .map(|id| {
+                InferenceRequest::new(id, vec![5 + id as u32, 2, 9, 4], 8)
+            })
+            .collect();
+        let e = RealEngine::new(dir, &wp, 2, o.clone()).unwrap();
+        let mut c =
+            crate::coordinator::Coordinator::new(e).with_kv_watermark(0.75);
+        let report = c.serve_collect(&requests).unwrap();
+        assert!(
+            report.preemptions > 0,
+            "pool pressure never forced a preemption"
+        );
+        assert_eq!(
+            report.preemptions, report.restores,
+            "every eviction must be matched by a restore"
+        );
+        assert!(report.recompute_tokens > 0);
+        assert!(!report.ttft_preempted_ms.is_empty());
+        assert_eq!(report.sessions.len(), requests.len());
+        for req in &requests {
+            let solo = {
+                let se = RealEngine::new(dir, &wp, 2, o.clone()).unwrap();
+                let mut alone = crate::coordinator::Coordinator::new(se)
+                    .with_kv_watermark(0.75);
+                let r =
+                    alone.serve_collect(std::slice::from_ref(req)).unwrap();
+                assert_eq!(
+                    r.preemptions, 0,
+                    "a solo request must never be preempted"
+                );
+                r.session(req.id).unwrap().tokens.clone()
+            };
+            assert_eq!(
+                &report.session(req.id).unwrap().tokens,
+                &solo,
+                "request {} diverged after preemption/restore",
+                req.id
+            );
+        }
+        assert_eq!(c.engine.active(), 0);
+        assert_eq!(c.engine.kv_pool().unwrap().free_blocks, 3, "leaked");
         std::fs::remove_file(wp).ok();
     }
 

@@ -257,6 +257,24 @@ impl KvPool {
         tokens.div_ceil(self.block_tokens)
     }
 
+    /// High-watermark admission probe: would taking `needed` more
+    /// blocks push the in-use count above `frac` of the leasable
+    /// blocks? `frac <= 0` disables the watermark (never above).
+    /// Optimistic (evict-and-recompute) admission uses this in place of
+    /// worst-case reservation: `needed` is the prompt's block demand —
+    /// an upper bound, since prefix sharing may serve part of it for
+    /// free — and decode-time growth is left to run to exhaustion,
+    /// where the scheduler preempts a victim and recomputes it later.
+    pub fn above_watermark(&self, frac: f64, needed: usize) -> bool {
+        if frac <= 0.0 {
+            return false;
+        }
+        let total = self.refcount.len() - 1;
+        let limit = ((total as f64 * frac.min(1.0)).floor() as usize).max(1);
+        let in_use = total - self.free.len();
+        in_use + needed > limit
+    }
+
     pub fn stats(&self) -> KvPoolStats {
         KvPoolStats {
             block_tokens: self.block_tokens,

@@ -61,17 +61,26 @@ USAGE:
                 reordered into RIPPLE-style co-activation clusters
                 (default out: <weights>.clusters)
   pi2 check     [--src DIR] [--lint-only] [--model-only]
+                [--fuzz N] [--seed S]
                 repo-specific lint rules over first-party sources
                 (hot-path unwrap ban, unsafe allowlist, KV encapsulation,
-                typed pool errors, thread containment) plus the bounded
-                exhaustive model checkers — request lifecycles AND
-                connection interleavings (connect/submit/disconnect/pump),
-                each with a planted-bug self-test; non-zero exit on any
-                diagnostic
+                typed pool errors, thread containment, lock discipline —
+                no guard held across a channel/socket rendezvous in
+                coordinator/ — and channel discipline — bounded
+                sync_channel only in serving code) plus the bounded
+                exhaustive model checkers — request lifecycles including
+                watermark preempt/restore worlds AND connection
+                interleavings (connect/submit/disconnect/pump), each
+                with planted-bug self-tests (leaked lease on retire,
+                abort, and preempt; double release on restore); --fuzz N
+                additionally drives N seeded randomized long-horizon
+                schedules per world past the exhaustive depth bound
+                (--seed S for a specific seed); non-zero exit on any
+                diagnostic, violations print replayable schedules
   pi2 serve     [--addr HOST:PORT] [--engine real|sim] [--artifacts DIR]
                 [--mode continuous|lockstep] [--slots N] [--device D]
                 [--model M] [--throttle] [--kv-blocks N]
-                [--prefill-chunk N] [--offload-stream]
+                [--prefill-chunk N] [--kv-watermark F] [--offload-stream]
                 [--resident-clusters N] [--max-clients N]
                 [--client-cap N] [--queue-depth N]
                 line-protocol TCP server, one reader/writer thread pair
@@ -83,6 +92,12 @@ USAGE:
                 time between decode steps (two-phase admission), so an
                 admission never stalls in-flight streams for a whole
                 prompt; 0 (default) prefills synchronously inside admit.
+                --kv-watermark F admits optimistically while the KV pool
+                sits below fraction F instead of reserving worst-case
+                growth; when decode growth exhausts the pool the
+                scheduler preempts a victim and restores it later by
+                recompute (streams stay byte-identical); 0 (default)
+                keeps worst-case reservation.
                 --offload-stream reads cold FFN weights as co-activation
                 cluster records (exact: token streams are byte-identical
                 to the bundle path); --resident-clusters caps the
@@ -267,6 +282,24 @@ fn cmd_serve(args: &Args) -> i32 {
         },
         None => None,
     };
+    // high-watermark KV admission (both engines; the sim path can also
+    // set it via --config's "kv_watermark_frac"): admit optimistically
+    // while the pool sits below the watermark instead of reserving
+    // worst-case growth, and evict-and-recompute a victim when decode
+    // growth exhausts the pool. 0 = worst-case reservation (default).
+    let kv_watermark = match args.opt("kv-watermark") {
+        Some(s) => match s.parse::<f64>() {
+            Ok(f) if (0.0..=1.0).contains(&f) => Some(f),
+            _ => {
+                eprintln!(
+                    "invalid --kv-watermark '{s}' (expected a fraction \
+                     in [0, 1])"
+                );
+                return 2;
+            }
+        },
+        None => None,
+    };
     // cluster-granular offload streaming (both engines; the sim path can
     // also set it via --config's "offload_streaming")
     let offload_stream = args.flag("offload-stream");
@@ -316,6 +349,9 @@ fn cmd_serve(args: &Args) -> i32 {
             if let Some(n) = resident_clusters {
                 opts.offload_resident_clusters = n;
             }
+            if let Some(f) = kv_watermark {
+                opts.kv_watermark_frac = f;
+            }
             println!("compiling NPU graph table…");
             let slots = match args.opt("slots") {
                 Some(s) => match s.parse::<usize>() {
@@ -339,6 +375,9 @@ fn cmd_serve(args: &Args) -> i32 {
             };
             server.set_mode(mode);
             server.set_prefill_chunk(prefill_chunk.unwrap_or(0));
+            if let Some(f) = kv_watermark {
+                server.set_kv_watermark(f);
+            }
             let rt = RuntimeConfig::default();
             server.set_limits(
                 max_clients.unwrap_or(rt.max_clients),
@@ -363,6 +402,9 @@ fn cmd_serve(args: &Args) -> i32 {
             let mut cfg = base_config(args);
             if offload_stream {
                 cfg.offload_streaming = true;
+            }
+            if let Some(f) = kv_watermark {
+                cfg.kv_watermark_frac = f;
             }
             if let Some(n) = resident_clusters {
                 cfg.offload_resident_clusters = n;
@@ -562,6 +604,73 @@ fn cmd_check(args: &Args) -> i32 {
                 failed = true;
             }
         }
+        // the preemption alphabet checking itself: a lease leaked on the
+        // eviction path MUST be caught via a schedule that actually
+        // contains a preempt, and a double release on the recompute path
+        // via one that contains a restore — else the checker is not
+        // exercising the watermark ops it claims to cover
+        let self_test = model::preempt_leak_self_test();
+        match model::explore(&self_test).violation {
+            Some(v)
+                if v.schedule
+                    .iter()
+                    .any(|op| matches!(op, model::Op::Preempt(_))) =>
+            {
+                println!(
+                    "  {}: planted bug caught (replay: {})",
+                    self_test.name,
+                    model::format_schedule(&v.schedule)
+                );
+            }
+            Some(v) => {
+                println!(
+                    "  {}: planted preempt leak caught WITHOUT a preempt \
+                     (replay: {}) — the checker is not exercising eviction",
+                    self_test.name,
+                    model::format_schedule(&v.schedule)
+                );
+                failed = true;
+            }
+            None => {
+                println!(
+                    "  {}: planted preempt leak was NOT caught — the \
+                     eviction arm of the model checker is broken",
+                    self_test.name
+                );
+                failed = true;
+            }
+        }
+        let self_test = model::restore_double_release_self_test();
+        match model::explore(&self_test).violation {
+            Some(v)
+                if v.schedule
+                    .iter()
+                    .any(|op| matches!(op, model::Op::Restore(_))) =>
+            {
+                println!(
+                    "  {}: planted bug caught (replay: {})",
+                    self_test.name,
+                    model::format_schedule(&v.schedule)
+                );
+            }
+            Some(v) => {
+                println!(
+                    "  {}: planted double release caught WITHOUT a restore \
+                     (replay: {}) — the checker is not exercising recompute",
+                    self_test.name,
+                    model::format_schedule(&v.schedule)
+                );
+                failed = true;
+            }
+            None => {
+                println!(
+                    "  {}: planted double release was NOT caught — the \
+                     recompute arm of the model checker is broken",
+                    self_test.name
+                );
+                failed = true;
+            }
+        }
 
         println!("== pi2 model check: connection interleavings ==");
         for cfg in model::conn_suite() {
@@ -622,6 +731,68 @@ fn cmd_check(args: &Args) -> i32 {
                     self_test.name
                 );
                 failed = true;
+            }
+        }
+
+        // seeded fuzz mode: randomized long-horizon schedules past the
+        // exhaustive depth bound, same per-transition invariant audit.
+        // Deterministic for a fixed seed, so a CI failure reproduces
+        // locally with the same --fuzz/--seed pair; any violation prints
+        // the replayable schedule.
+        if let Some(n) = args.opt("fuzz") {
+            let Ok(n) = n.parse::<usize>() else {
+                eprintln!(
+                    "invalid --fuzz '{n}' (expected a schedule count)"
+                );
+                return 2;
+            };
+            let seed = args.opt_u64("seed", 0x9E3779B97F4A7C15);
+            println!(
+                "== pi2 model fuzz: {n} schedules per world, seed {seed:#x} =="
+            );
+            for cfg in model::default_suite() {
+                let rep = model::fuzz(&cfg, n, seed);
+                match &rep.violation {
+                    None => {
+                        println!(
+                            "  {}: {} schedules, {} transitions audited, \
+                             longest {}",
+                            rep.name, rep.schedules, rep.transitions,
+                            rep.longest
+                        );
+                    }
+                    Some(v) => {
+                        println!("  {}: INVARIANT VIOLATION", rep.name);
+                        println!("    {}", v.message);
+                        println!(
+                            "    replay: {}",
+                            model::format_schedule(&v.schedule)
+                        );
+                        failed = true;
+                    }
+                }
+            }
+            for cfg in model::conn_suite() {
+                let rep = model::conn_fuzz(&cfg, n, seed);
+                match &rep.violation {
+                    None => {
+                        println!(
+                            "  {}: {} schedules, {} transitions audited, \
+                             longest {}",
+                            rep.name, rep.schedules, rep.transitions,
+                            rep.longest
+                        );
+                    }
+                    Some(v) => {
+                        println!("  {}: INVARIANT VIOLATION", rep.name);
+                        println!("    {}", v.message);
+                        println!(
+                            "    replay: {}",
+                            model::format_conn_schedule(&v.schedule)
+                        );
+                        failed = true;
+                    }
+                }
             }
         }
     }

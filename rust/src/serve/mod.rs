@@ -394,6 +394,37 @@ pub trait Engine {
     /// window by accumulation.
     fn retire(&mut self, slot: SlotId) -> Result<()>;
 
+    /// Evict a live slot under pool pressure: release the slot and its
+    /// KV lease exactly as [`Engine::retire`] does, with the
+    /// expectation that the caller requeues the sequence and later
+    /// re-admits it via [`Engine::admit_restored`]. Engines distinguish
+    /// the two only for accounting (and for planted-fault self-tests);
+    /// the default forwards to `retire`.
+    fn preempt(&mut self, slot: SlotId) -> Result<()> {
+        self.retire(slot)
+    }
+
+    /// Re-admit a preempted sequence by recomputing its KV: the
+    /// original request's prompt is extended with the `emitted` tokens
+    /// the sequence had already produced, and the remaining decode
+    /// budget shrinks by the same amount. The default builds the
+    /// extended request and defers its prefill — correct for any engine
+    /// whose next token depends only on the installed token sequence.
+    /// Engines with per-request generator state (see
+    /// `SimEngine`) override to fast-forward that state so the resumed
+    /// stream stays byte-identical to an uninterrupted run.
+    fn admit_restored(
+        &mut self,
+        req: &InferenceRequest,
+        emitted: &[u32],
+    ) -> Result<Admission> {
+        let mut r = req.clone();
+        r.prompt.extend_from_slice(emitted);
+        r.params.max_tokens =
+            req.params.max_tokens.saturating_sub(emitted.len()).max(1);
+        self.admit_deferred(&r)
+    }
+
     /// Decode steps still available to `slot` before that slot's row of
     /// the context window is exhausted (`None` = unbounded, e.g. the
     /// simulation engine). Budgets are per-slot: rows fill — and are
@@ -465,6 +496,18 @@ impl<E: Engine + ?Sized> Engine for Box<E> {
 
     fn retire(&mut self, slot: SlotId) -> Result<()> {
         (**self).retire(slot)
+    }
+
+    fn preempt(&mut self, slot: SlotId) -> Result<()> {
+        (**self).preempt(slot)
+    }
+
+    fn admit_restored(
+        &mut self,
+        req: &InferenceRequest,
+        emitted: &[u32],
+    ) -> Result<Admission> {
+        (**self).admit_restored(req, emitted)
     }
 
     fn decode_budget(&self, slot: SlotId) -> Option<usize> {
