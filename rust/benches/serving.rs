@@ -286,6 +286,90 @@ fn main() {
     std::fs::write("BENCH_decode_offload.json", format!("{out}\n")).unwrap();
     println!("wrote BENCH_decode_offload.json");
 
+    // fault-tolerant flash I/O: seeded transient-fault schedules over
+    // the offload streaming path. The retry/degrade policy is exact —
+    // useful token counts are identical at every fault rate — so the
+    // JSON records the price instead: retry re-billing, degraded
+    // fetches, and (for the persistent-failure run) the engine-wide
+    // DegradedMode latch that drops streaming back to resident weights
+    // mid-serve. Stalls are what advance the persistent-failure
+    // counter; transient retries never do.
+    println!("# bench: fault degradation (seeded faults over offload streaming)");
+    let mut fd_rows = Vec::new();
+    let mut fd_tokens = Vec::new();
+    let mut fd_degraded = Vec::new();
+    for (label, rate, stalls, threshold) in [
+        ("clean", 0.0f64, 0u32, 0usize),
+        ("transient-1pct", 0.01, 0, 0),
+        ("transient-10pct", 0.10, 0, 0),
+        ("persistent", 0.10, 16, 8),
+    ] {
+        let cfg = RuntimeConfig {
+            max_batch: 4,
+            offload_streaming: true,
+            offload_resident_clusters: 64,
+            io_failure_threshold: threshold,
+            ..Default::default()
+        };
+        let mut engine = SimEngine::new(oneplus_12(), bamboo_7b(), cfg);
+        engine.set_io_fault_rate(rate, 11);
+        for _ in 0..stalls {
+            engine.arm_io_stall();
+        }
+        let mut coord = Coordinator::new(engine);
+        let mut report = coord.serve_collect(&requests).unwrap();
+        let st = coord.engine.stats();
+        let ttft = &mut report.serving.ttft_ms;
+        let (t50, t99) = (ttft.percentile(50.0), ttft.percentile(99.0));
+        println!(
+            "{label:>15}: {:>7.1} tok/s  TTFT p50 {t50:>6.1}ms \
+             p99 {t99:>6.1}ms  {:>4} retries  {:>3} degraded fetches  \
+             degraded {}",
+            report.decode_tps(),
+            st.offload_io_retries,
+            st.offload_degraded_fetches,
+            st.offload_degraded,
+        );
+        fd_tokens.push(report.decode_tokens);
+        fd_degraded.push(st.offload_degraded);
+        fd_rows.push(obj(vec![
+            ("scenario", s(label)),
+            ("io_fault_rate", num(rate)),
+            ("armed_stalls", num(stalls as f64)),
+            ("io_failure_threshold", num(threshold as f64)),
+            ("decode_tps", num(report.decode_tps())),
+            ("decode_tokens", num(report.decode_tokens as f64)),
+            ("ttft_ms_p50", num(t50)),
+            ("ttft_ms_p99", num(t99)),
+            ("io_retries", num(st.offload_io_retries as f64)),
+            ("degraded_fetches", num(st.offload_degraded_fetches as f64)),
+            ("bytes_streamed", num(st.offload_bytes_streamed as f64)),
+            ("degraded", Json::Bool(st.offload_degraded)),
+        ]));
+    }
+    assert!(
+        fd_tokens.iter().all(|&t| t == fd_tokens[0]),
+        "fault handling changed useful token counts: {fd_tokens:?}"
+    );
+    assert_eq!(
+        fd_degraded,
+        vec![false, false, false, true],
+        "only the persistent run may latch DegradedMode"
+    );
+    let out = obj(vec![
+        ("bench", s("fault_degradation")),
+        ("engine", s("sim")),
+        ("model", s("bamboo-7b")),
+        ("device", s("oneplus12")),
+        ("max_batch", num(4.0)),
+        ("resident_clusters", num(64.0)),
+        ("fault_seed", num(11.0)),
+        ("scenarios", arr(fd_rows)),
+    ]);
+    std::fs::write("BENCH_fault_degradation.json", format!("{out}\n"))
+        .unwrap();
+    println!("wrote BENCH_fault_degradation.json");
+
     // concurrent connection serving over real sockets: N clients, each
     // streaming a few requests back-to-back through the shared admission
     // queue. The queue depth is kept tight (8) so the 16-client point

@@ -3,7 +3,7 @@
 //! A dependency-free, line/token-level scanner (no syn, no regex — the
 //! offline crate set has neither) with just enough of a lexer to tell
 //! code from strings and comments and to track `#[cfg(test)]` regions
-//! by brace depth. Seven rules, each of which encodes a repo contract
+//! by brace depth. Eight rules, each of which encodes a repo contract
 //! clippy cannot express:
 //!
 //! - **hot-path-unwrap** — no `.unwrap()` / `.expect(` in the serving
@@ -54,6 +54,12 @@
 //!   `mpsc::sync_channel(n)` and pick `n` deliberately; genuinely
 //!   unbounded cases (e.g. a rendezvous the producer count bounds by
 //!   construction) carry a justified allow.
+//! - **sleep-retry** — no raw `thread::sleep` in `storage/` /
+//!   `offload/`: retry backoff and modeled-latency waits must go
+//!   through the injectable [`crate::storage::Clock`] so fault-injected
+//!   tests and the model checker can run on a virtual clock and stay
+//!   deterministic (and instant). The clock's own single real sleep
+//!   site carries the one justified allow.
 //!
 //! An allow annotation without a rule name or a justification is itself
 //! a diagnostic (**bad-allow**): exceptions are part of the reviewed
@@ -123,9 +129,10 @@ pub const RULE_TYPED_POOL_ERROR: &str = "typed-pool-error";
 pub const RULE_THREAD_CONTAINMENT: &str = "thread-containment";
 pub const RULE_LOCK_DISCIPLINE: &str = "lock-discipline";
 pub const RULE_CHANNEL_DISCIPLINE: &str = "channel-discipline";
+pub const RULE_SLEEP_RETRY: &str = "sleep-retry";
 pub const RULE_BAD_ALLOW: &str = "bad-allow";
 
-const ALL_RULES: [&str; 7] = [
+const ALL_RULES: [&str; 8] = [
     RULE_HOT_PATH_UNWRAP,
     RULE_UNSAFE_CODE,
     RULE_KV_ENCAPSULATION,
@@ -133,6 +140,7 @@ const ALL_RULES: [&str; 7] = [
     RULE_THREAD_CONTAINMENT,
     RULE_LOCK_DISCIPLINE,
     RULE_CHANNEL_DISCIPLINE,
+    RULE_SLEEP_RETRY,
 ];
 
 /// One violation, addressed like a compiler diagnostic.
@@ -473,6 +481,27 @@ fn has_unbounded_channel(code: &str) -> bool {
     false
 }
 
+/// Does `code` call `thread::sleep(` directly? Token-boundary aware so
+/// identifiers merely containing the path (`my_thread::sleeper`) do not
+/// match, but both `thread::sleep(` and `std::thread::sleep(` do.
+fn has_thread_sleep(code: &str) -> bool {
+    let needle = "thread::sleep";
+    let bytes = code.as_bytes();
+    let mut from = 0usize;
+    while let Some(pos) = code[from..].find(needle) {
+        let start = from + pos;
+        let end = start + needle.len();
+        let pre = start == 0
+            || !(bytes[start - 1].is_ascii_alphanumeric()
+                || bytes[start - 1] == b'_');
+        if pre && code[end..].starts_with('(') {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
 /// The binding a lock guard lands in, if the line binds one:
 /// `let [mut] name = …`, `if let Ok(name) = …`, `while let Some(name)`.
 /// Lines that lock into a temporary (no `let`) drop the guard at the
@@ -701,6 +730,23 @@ pub fn lint_source(rel: &str, source: &str) -> Vec<Diagnostic> {
                         .into(),
                 });
             }
+        }
+        if (rel.starts_with("storage/") || rel.starts_with("offload/"))
+            && has_thread_sleep(&lv.code)
+            && !allowed(lineno, RULE_SLEEP_RETRY)
+        {
+            diags.push(Diagnostic {
+                file: rel.to_string(),
+                line: lineno,
+                rule: RULE_SLEEP_RETRY,
+                message: "raw thread::sleep in storage/offload code — \
+                          retry backoff and modeled waits must go through \
+                          the injectable Clock (storage::Clock::sleep) so \
+                          fault tests run deterministic on a virtual \
+                          clock, or justify with `pi2-lint: \
+                          allow(sleep-retry): ...`"
+                    .into(),
+            });
         }
         if !rel.starts_with("coordinator/")
             && lv.code.contains("thread::spawn(")
@@ -1039,6 +1085,42 @@ fn f() {
 }
 ";
         assert!(lint_source("engine/real.rs", allowed).is_empty());
+    }
+
+    #[test]
+    fn sleep_in_storage_or_offload_is_flagged() {
+        let src = "fn f() { std::thread::sleep(std::time::Duration::from_millis(5)); }\n";
+        let diags = lint_source("storage/fault.rs", src);
+        assert_eq!(rules_at(&diags, 1), vec![RULE_SLEEP_RETRY]);
+        let diags = lint_source("offload/store.rs", src);
+        assert_eq!(rules_at(&diags, 1), vec![RULE_SLEEP_RETRY]);
+        // outside storage/offload the rule does not apply
+        assert!(lint_source("coordinator/server.rs", src).is_empty());
+        // going through the injectable clock is the sanctioned path
+        let ok = "fn f(c: &dyn Clock) { c.sleep(Duration::from_millis(5)); }\n";
+        assert!(lint_source("storage/fault.rs", ok).is_empty());
+        // identifiers that merely contain the path are not the call
+        let ident = "fn f(my_thread: &T) { my_thread::sleeper(); }\n";
+        assert!(lint_source("storage/fault.rs", ident).is_empty());
+        // tests may block on real time freely
+        let test_src = "\
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+}
+";
+        assert!(lint_source("storage/fault.rs", test_src).is_empty());
+        // a justified allow (the clock's own real sleep site) suppresses
+        let allowed = "\
+fn f() {
+    // pi2-lint: allow(sleep-retry): the injectable clock's single real sleep site
+    std::thread::sleep(std::time::Duration::from_millis(1));
+}
+";
+        assert!(lint_source("storage/fault.rs", allowed).is_empty());
     }
 
     #[test]

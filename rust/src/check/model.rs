@@ -26,6 +26,17 @@
 //! a violation is reported as the exact operation list that reproduces
 //! it ([`ExploreReport::violation`], re-run with [`replay`]).
 //!
+//! Worlds with [`ModelConfig::offload`] set run the engine with
+//! cluster-offload streaming and extend the alphabet with the fault
+//! ops `{io_fault, io_stall, deadline_fire}`: arm a transient I/O
+//! fault (retried, re-billed once), arm an I/O-deadline stall (the
+//! fetch degrades to resident weights and advances the engine-wide
+//! [`crate::offload::DegradedMode`] latch), and fire a request's
+//! deadline mid-flight (the typed abort that must release its KV
+//! lease). The engine's byte-conservation law —
+//! `bytes_streamed + degraded·rec == (misses + retries)·rec` — is part
+//! of the invariant stack audited after every transition.
+//!
 //! The checker's own honesty is tested by planting bugs:
 //! [`SimFault::LeakLeaseOnRetire`] makes `retire` drop a lease without
 //! releasing it, and [`leak_self_test`] must catch that with a
@@ -87,6 +98,16 @@ pub enum Op {
     /// already-emitted tokens (the resumed stream must stay
     /// byte-identical).
     Restore(usize),
+    /// Arm one transient I/O fault: the next fetched cluster record
+    /// faults once and is retried (offload worlds only).
+    IoFault,
+    /// Arm one I/O-deadline stall: the next fetched cluster record
+    /// blows its read deadline and degrades to resident weights,
+    /// advancing the engine-wide latch (offload worlds only).
+    IoStall,
+    /// Fire request `r`'s deadline mid-flight: the typed abort path
+    /// ([`Engine::abort_deadline`]) that must release its KV lease.
+    DeadlineFire(usize),
 }
 
 impl fmt::Display for Op {
@@ -100,6 +121,9 @@ impl fmt::Display for Op {
             Op::Abort(r) => write!(f, "abort(r{r})"),
             Op::Preempt(r) => write!(f, "preempt(r{r})"),
             Op::Restore(r) => write!(f, "restore(r{r})"),
+            Op::IoFault => write!(f, "io_fault"),
+            Op::IoStall => write!(f, "io_stall"),
+            Op::DeadlineFire(r) => write!(f, "deadline_fire(r{r})"),
         }
     }
 }
@@ -173,6 +197,11 @@ pub struct ModelConfig {
     /// optimistically and the checker drives every preempt/restore
     /// interleaving.
     pub watermark: f64,
+    /// Run the engine with cluster-offload streaming and offer the
+    /// fault alphabet ([`Op::IoFault`], [`Op::IoStall`],
+    /// [`Op::DeadlineFire`]) so every fault/decode interleaving is
+    /// audited against the byte-conservation law and lease release.
+    pub offload: bool,
 }
 
 /// A failing interleaving: the exact schedule to hand to [`replay`]
@@ -225,6 +254,11 @@ impl World {
             kv_block_tokens: cfg.block_tokens,
             kv_pool_blocks: cfg.pool_blocks,
             kv_watermark_frac: cfg.watermark,
+            // a resident budget far under the 32 clusters/layer the
+            // shrunken spec packs: decode steps fetch on (almost) every
+            // step, so an armed fault is consumed by the next step
+            offload_streaming: cfg.offload,
+            offload_resident_clusters: if cfg.offload { 4 } else { 0 },
             seed: 0,
             ..Default::default()
         };
@@ -316,6 +350,34 @@ impl World {
         );
         if decoding_unfinished && !finished_waiting {
             ops.push(Op::Step);
+        }
+        if cfg.offload {
+            // arm at most one pending fault of each kind: the next step
+            // consumes them, so the armed-state space stays {0,1}²
+            let (faults, stalls) = self.coord.engine.armed_fault_counts();
+            if decoding_unfinished {
+                if faults == 0 {
+                    ops.push(Op::IoFault);
+                }
+                if stalls == 0 {
+                    ops.push(Op::IoStall);
+                }
+            }
+            for (r, phase) in self.phases.iter().enumerate() {
+                // a deadline can fire on anything holding a slot that
+                // is not already finished-awaiting-retire — the same
+                // set the coordinator's per-pump deadline scan aborts
+                let firable = match *phase {
+                    Phase::Pending { .. } => true,
+                    Phase::Decoding { emitted, .. } => {
+                        emitted < cfg.requests[r].max_tokens
+                    }
+                    _ => false,
+                };
+                if firable {
+                    ops.push(Op::DeadlineFire(r));
+                }
+            }
         }
         ops
     }
@@ -480,6 +542,32 @@ impl World {
                     Err(e) => Err(e.context(format!("restore(r{r})"))),
                 }
             }
+            Op::IoFault => {
+                self.coord.engine.arm_io_fault();
+                Ok(true)
+            }
+            Op::IoStall => {
+                self.coord.engine.arm_io_stall();
+                Ok(true)
+            }
+            Op::DeadlineFire(r) => {
+                let slot = match self.phases[r] {
+                    Phase::Pending { slot, .. }
+                    | Phase::Decoding { slot, .. } => slot,
+                    _ => {
+                        return Err(anyhow!(
+                            "deadline_fire(r{r}) driven on a request with \
+                             no slot"
+                        ))
+                    }
+                };
+                self.coord
+                    .engine
+                    .abort_deadline(slot)
+                    .map_err(|e| e.context(format!("deadline_fire(r{r})")))?;
+                self.phases[r] = Phase::Done;
+                Ok(true)
+            }
         }
     }
 
@@ -537,6 +625,22 @@ impl World {
                 (s.free_blocks, s.active_leases, s.shared_blocks)
             });
         let _ = write!(sig, "|{free},{leases},{shared}");
+        // armed-but-unconsumed faults and the persistent-failure latch
+        // change a state's future: two worlds differing only there must
+        // not dedup together
+        let (faults, stalls) = self.coord.engine.armed_fault_counts();
+        if faults + stalls
+            + self.coord.engine.io_failures()
+            + self.coord.engine.degraded_mode().is_degraded() as u64
+            > 0
+        {
+            let _ = write!(
+                sig,
+                "|a{faults}.{stalls}.{}.{}",
+                self.coord.engine.io_failures(),
+                self.coord.engine.degraded_mode().is_degraded() as u8
+            );
+        }
         sig
     }
 }
@@ -647,10 +751,11 @@ pub fn replay(cfg: &ModelConfig, schedule: &[Op]) -> Result<()> {
     Ok(())
 }
 
-/// The bounded worlds `pi2 check` exhausts, chosen to cover the three
+/// The bounded worlds `pi2 check` exhausts, chosen to cover the
 /// regimes that historically hide lifecycle bugs: plain concurrent
-/// lifecycles, chunked (two-phase) prefill interleaved with decode, and
-/// admission under pool exhaustion.
+/// lifecycles, chunked (two-phase) prefill interleaved with decode,
+/// admission under pool exhaustion, watermark preemption, and the
+/// fault alphabet over offload streaming.
 pub fn default_suite() -> Vec<ModelConfig> {
     vec![
         // three full lifecycles with aborts, ample pool: the pure
@@ -671,6 +776,7 @@ pub fn default_suite() -> Vec<ModelConfig> {
             max_states: 20_000,
             fault: SimFault::None,
             watermark: 0.0,
+            offload: false,
         },
         // two-phase admission: pending prompts advance chunk-by-chunk
         // while a neighbour decodes — the regime the mid-flight
@@ -687,6 +793,7 @@ pub fn default_suite() -> Vec<ModelConfig> {
             max_states: 20_000,
             fault: SimFault::None,
             watermark: 0.0,
+            offload: false,
         },
         // tight pool: admissions block on typed pool pressure until a
         // retire frees blocks — the deferral path under exhaustion
@@ -706,6 +813,7 @@ pub fn default_suite() -> Vec<ModelConfig> {
             max_states: 20_000,
             fault: SimFault::None,
             watermark: 0.0,
+            offload: false,
         },
         // watermark admission on a pool too small for both sequences'
         // decode growth: every interleaving of eviction (from decoding
@@ -723,6 +831,26 @@ pub fn default_suite() -> Vec<ModelConfig> {
             max_states: 20_000,
             fault: SimFault::None,
             watermark: 0.99,
+            offload: false,
+        },
+        // cluster-offload streaming under the fault alphabet: transient
+        // faults (retry re-billing), deadline stalls (degrade billing
+        // plus the engine-wide latch), and request-deadline fires
+        // interleaved with decode — the byte-conservation law and the
+        // deadline-abort lease release audited after every transition
+        ModelConfig {
+            name: "io-faults",
+            requests: vec![LifecycleSpec::new(2, 2), LifecycleSpec::new(2, 2)],
+            pool_blocks: 32,
+            block_tokens: 2,
+            max_batch: 2,
+            chunk: 0,
+            deferred: false,
+            max_depth: 14,
+            max_states: 20_000,
+            fault: SimFault::None,
+            watermark: 0.0,
+            offload: true,
         },
     ]
 }
@@ -744,6 +872,7 @@ pub fn leak_self_test() -> ModelConfig {
         max_states: 2_000,
         fault: SimFault::LeakLeaseOnRetire,
         watermark: 0.0,
+        offload: false,
     }
 }
 
@@ -765,6 +894,7 @@ pub fn preempt_leak_self_test() -> ModelConfig {
         max_states: 2_000,
         fault: SimFault::LeakLeaseOnPreempt,
         watermark: 0.9,
+        offload: false,
     }
 }
 
@@ -786,6 +916,52 @@ pub fn restore_double_release_self_test() -> ModelConfig {
         max_states: 2_000,
         fault: SimFault::DoubleReleaseOnRestore,
         watermark: 0.9,
+        offload: false,
+    }
+}
+
+/// An offload world with an engine whose deadline-abort path drops the
+/// KV lease on the floor ([`SimFault::LeakLeaseOnDeadlineAbort`])
+/// instead of releasing it, while plain `retire` stays correct. Only a
+/// `deadline_fire(..)` transition reaches the fault, so catching it
+/// proves the checker actually exercises the deadline-abort arm of the
+/// fault alphabet.
+pub fn deadline_leak_self_test() -> ModelConfig {
+    ModelConfig {
+        name: "planted-deadline-leak",
+        requests: vec![LifecycleSpec::new(2, 2), LifecycleSpec::new(2, 2)],
+        pool_blocks: 8,
+        block_tokens: 2,
+        max_batch: 2,
+        chunk: 0,
+        deferred: false,
+        max_depth: 6,
+        max_states: 2_000,
+        fault: SimFault::LeakLeaseOnDeadlineAbort,
+        watermark: 0.0,
+        offload: true,
+    }
+}
+
+/// An offload world with an engine that bills a retried cluster read's
+/// bytes twice ([`SimFault::DoubleCountOnRetry`]) — breaking the
+/// byte-conservation law the invariant audit checks. Only an `io_fault`
+/// transition consumed by a fetching step reaches the fault, so this
+/// self-test pins the retry-accounting arm of the alphabet.
+pub fn retry_double_count_self_test() -> ModelConfig {
+    ModelConfig {
+        name: "planted-retry-double-count",
+        requests: vec![LifecycleSpec::new(2, 2), LifecycleSpec::new(2, 2)],
+        pool_blocks: 8,
+        block_tokens: 2,
+        max_batch: 2,
+        chunk: 0,
+        deferred: false,
+        max_depth: 6,
+        max_states: 2_000,
+        fault: SimFault::DoubleCountOnRetry,
+        watermark: 0.0,
+        offload: true,
     }
 }
 
@@ -1435,6 +1611,7 @@ mod tests {
             max_states: 2_000,
             fault: SimFault::None,
             watermark: 0.0,
+            offload: false,
         }
     }
 
@@ -1567,6 +1744,80 @@ mod tests {
     }
 
     #[test]
+    fn io_fault_world_is_clean_and_covers_the_fault_alphabet() {
+        let cfg = default_suite()
+            .into_iter()
+            .find(|c| c.name == "io-faults")
+            .expect("io-faults in suite");
+        let rep = explore(&cfg);
+        assert!(rep.violation.is_none(), "{:?}", rep.violation);
+        assert!(rep.complete, "bounds truncated the io-faults world");
+        // a schedule exercising all three fault ops replays clean: an
+        // armed transient fault and an armed stall both consumed by the
+        // next fetching step, then a deadline fired on a live decode
+        let alphabet = [
+            Op::Admit(0),
+            Op::IoFault,
+            Op::IoStall,
+            Op::Step,
+            Op::Retire(0),
+            Op::Admit(1),
+            Op::DeadlineFire(1),
+        ];
+        replay(&cfg, &alphabet).expect("fault-alphabet schedule");
+    }
+
+    #[test]
+    fn planted_deadline_leak_is_caught_via_a_deadline_fire_schedule() {
+        let cfg = deadline_leak_self_test();
+        let rep = explore(&cfg);
+        let v = rep.violation.expect("planted deadline leak must be caught");
+        assert!(
+            v.schedule.iter().any(|op| matches!(op, Op::DeadlineFire(_))),
+            "leak only fires on deadline abort; schedule was: {}",
+            format_schedule(&v.schedule)
+        );
+        replay(&cfg, &v.schedule)
+            .expect_err("violating schedule must replay to a failure");
+        // the same world with the fault removed is clean: the checker
+        // flags the planted bug, not the harness
+        let clean = ModelConfig { fault: SimFault::None, ..cfg };
+        let rep = explore(&clean);
+        assert!(rep.violation.is_none(), "{:?}", rep.violation);
+    }
+
+    #[test]
+    fn planted_retry_double_count_is_caught_via_an_io_fault_schedule() {
+        let cfg = retry_double_count_self_test();
+        let rep = explore(&cfg);
+        let v = rep
+            .violation
+            .expect("planted retry double count must be caught");
+        assert!(
+            v.schedule.iter().any(|op| matches!(op, Op::IoFault)),
+            "double count only fires on a retried fetch; schedule was: {}",
+            format_schedule(&v.schedule)
+        );
+        replay(&cfg, &v.schedule)
+            .expect_err("violating schedule must replay to a failure");
+        let clean = ModelConfig { fault: SimFault::None, ..cfg };
+        let rep = explore(&clean);
+        assert!(rep.violation.is_none(), "{:?}", rep.violation);
+    }
+
+    #[test]
+    fn fuzz_covers_the_fault_alphabet_and_catches_the_double_count() {
+        let cfg = retry_double_count_self_test();
+        let rep = fuzz(&cfg, 64, 0xFA17);
+        let v = rep
+            .violation
+            .expect("64 random schedules must trip the retry double count");
+        assert!(v.schedule.iter().any(|op| matches!(op, Op::IoFault)));
+        replay(&cfg, &v.schedule)
+            .expect_err("fuzz schedule must replay to a failure");
+    }
+
+    #[test]
     fn fuzz_keeps_clean_worlds_clean_past_the_exhaustive_bound() {
         for cfg in default_suite() {
             let rep = fuzz(&cfg, 8, 0xC0FFEE);
@@ -1617,9 +1868,9 @@ mod tests {
     #[test]
     fn default_suite_names_are_distinct_and_bounded() {
         let suite = default_suite();
-        assert_eq!(suite.len(), 4);
+        assert_eq!(suite.len(), 5);
         let names: HashSet<_> = suite.iter().map(|c| c.name).collect();
-        assert_eq!(names.len(), 4);
+        assert_eq!(names.len(), 5);
         for cfg in &suite {
             assert!(cfg.max_depth <= 16, "{}: depth bound too deep", cfg.name);
             assert!(cfg.fault == SimFault::None);

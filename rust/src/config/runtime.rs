@@ -103,6 +103,29 @@ pub struct RuntimeConfig {
     /// keeps worst-case-reservation admission. CLI:
     /// `pi2 serve --kv-watermark F`.
     pub kv_watermark_frac: f64,
+    /// Writer-drain deadline on connection close, milliseconds: how long
+    /// `close_conn` waits for a connection's writer thread to flush its
+    /// queued lines before giving up (counted in `stats` as
+    /// `writer_drain_timeouts`). CLI: `pi2 serve --writer-drain-ms N`.
+    pub writer_drain_ms: u64,
+    /// Per-connection read idle timeout, milliseconds: a client that
+    /// sends no bytes for this long is disconnected so dead clients free
+    /// their reader threads (counted in `stats` as `idle_disconnects`).
+    /// 0 disables the timeout. CLI: `pi2 serve --read-idle-ms N`.
+    pub read_idle_timeout_ms: u64,
+    /// Bounded retries for transient cluster-read faults before the
+    /// fetch degrades to resident weights.
+    pub io_fault_retries: u32,
+    /// Base of the exponential retry backoff, milliseconds (always slept
+    /// through the injectable `storage::Clock`).
+    pub io_retry_backoff_ms: u64,
+    /// Per-cluster-read I/O deadline, milliseconds: a read (including
+    /// retries) that takes longer degrades that fetch. 0 = no deadline.
+    pub io_deadline_ms: u64,
+    /// Persistent-failure count at which offload streaming disables
+    /// itself engine-wide (`DegradedMode::OffloadDisabled`). 0 = never
+    /// latch.
+    pub io_failure_threshold: usize,
 }
 
 impl Default for RuntimeConfig {
@@ -132,6 +155,12 @@ impl Default for RuntimeConfig {
             client_inflight_cap: 2,
             admission_queue_depth: 64,
             kv_watermark_frac: 0.0,
+            writer_drain_ms: 500,
+            read_idle_timeout_ms: 300_000,
+            io_fault_retries: 2,
+            io_retry_backoff_ms: 5,
+            io_deadline_ms: 0,
+            io_failure_threshold: 8,
         }
     }
 }
@@ -249,6 +278,24 @@ impl RuntimeConfig {
         if let Some(v) = j.get("kv_watermark_frac").as_f64() {
             self.kv_watermark_frac = v;
         }
+        if let Some(v) = j.get("writer_drain_ms").as_usize() {
+            self.writer_drain_ms = v as u64;
+        }
+        if let Some(v) = j.get("read_idle_timeout_ms").as_usize() {
+            self.read_idle_timeout_ms = v as u64;
+        }
+        if let Some(v) = j.get("io_fault_retries").as_usize() {
+            self.io_fault_retries = v as u32;
+        }
+        if let Some(v) = j.get("io_retry_backoff_ms").as_usize() {
+            self.io_retry_backoff_ms = v as u64;
+        }
+        if let Some(v) = j.get("io_deadline_ms").as_usize() {
+            self.io_deadline_ms = v as u64;
+        }
+        if let Some(v) = j.get("io_failure_threshold").as_usize() {
+            self.io_failure_threshold = v;
+        }
         if let Some(v) = j.get("bundling").as_bool() {
             self.bundling = v;
         }
@@ -324,7 +371,10 @@ mod tests {
                 "offload_dense_threshold": 0.25,
                 "max_clients": 3, "client_inflight_cap": 5,
                 "admission_queue_depth": 7,
-                "kv_watermark_frac": 0.875}"#,
+                "kv_watermark_frac": 0.875,
+                "writer_drain_ms": 250, "read_idle_timeout_ms": 9000,
+                "io_fault_retries": 5, "io_retry_backoff_ms": 2,
+                "io_deadline_ms": 750, "io_failure_threshold": 3}"#,
         )
         .unwrap();
         c.apply_json(&j);
@@ -343,6 +393,23 @@ mod tests {
         assert_eq!(c.client_inflight_cap, 5);
         assert_eq!(c.admission_queue_depth, 7);
         assert!((c.kv_watermark_frac - 0.875).abs() < 1e-12);
+        assert_eq!(c.writer_drain_ms, 250);
+        assert_eq!(c.read_idle_timeout_ms, 9000);
+        assert_eq!(c.io_fault_retries, 5);
+        assert_eq!(c.io_retry_backoff_ms, 2);
+        assert_eq!(c.io_deadline_ms, 750);
+        assert_eq!(c.io_failure_threshold, 3);
+    }
+
+    #[test]
+    fn default_failure_model_knobs() {
+        let c = RuntimeConfig::default();
+        assert_eq!(c.writer_drain_ms, 500);
+        assert_eq!(c.read_idle_timeout_ms, 300_000);
+        assert_eq!(c.io_fault_retries, 2);
+        assert_eq!(c.io_retry_backoff_ms, 5);
+        assert_eq!(c.io_deadline_ms, 0, "no I/O deadline by default");
+        assert_eq!(c.io_failure_threshold, 8);
     }
 
     #[test]

@@ -159,6 +159,26 @@ pub struct ServeReport {
     /// compare its p99 against `serving.ttft_ms` for the tail-latency
     /// inflation evict-and-recompute costs.
     pub ttft_preempted_ms: Samples,
+    /// Requests shed at the queue head because their deadline had
+    /// already expired ([`InferenceRequest::deadline_ms`]) — they never
+    /// take a slot; the owning client gets a structured
+    /// `deadline_exceeded` refusal.
+    pub deadline_shed: u64,
+    /// Live sequences aborted mid-decode on deadline expiry: a typed
+    /// [`FinishReason::DeadlineExceeded`] finish whose abort releases
+    /// the KV lease.
+    pub deadline_aborts: u64,
+    /// Transient-fault retries the offload path absorbed this call.
+    pub offload_io_retries: u64,
+    /// Cluster records quarantined on checksum mismatch this call.
+    pub offload_quarantines: u64,
+    /// Degraded (resident-weight) fetches this call — persistent
+    /// faults / I/O deadline expiries the retry ladder could not absorb.
+    pub offload_degraded_fetches: u64,
+    /// Engine-wide degrade latch at the end of the call: offload
+    /// streaming disabled itself after too many persistent failures
+    /// ([`crate::offload::DegradedMode::OffloadDisabled`]).
+    pub offload_degraded: bool,
     /// Per-client serving counters on the online (multi-connection)
     /// path; batch serving books everything under client 0.
     pub clients: BTreeMap<ClientId, ClientStats>,
@@ -409,6 +429,10 @@ struct ActiveSeq {
     /// Preempted at least once — routes this sequence's TTFT into
     /// `ServeReport::ttft_preempted_ms`.
     was_preempted: bool,
+    /// Absolute deadline on the serve clock (`submit_s + deadline_ms`);
+    /// the pump aborts the sequence the first iteration it sees the
+    /// clock past this. `None` = no deadline.
+    deadline_s: Option<f64>,
 }
 
 impl ActiveSeq {
@@ -445,6 +469,7 @@ impl ActiveSeq {
             admit_seq: 0,
             origin: None,
             was_preempted: false,
+            deadline_s: req.deadline_s(),
         }
     }
 
@@ -506,6 +531,13 @@ fn fill_offload_report(
         if io <= 0.0 { 0.0 } else { (hidden / io).clamp(0.0, 1.0) };
     report.offload_stall_s =
         (s1.offload_stall_s - s0.offload_stall_s).max(0.0);
+    report.offload_io_retries =
+        s1.offload_io_retries - s0.offload_io_retries;
+    report.offload_quarantines =
+        s1.offload_quarantines - s0.offload_quarantines;
+    report.offload_degraded_fetches =
+        s1.offload_degraded_fetches - s0.offload_degraded_fetches;
+    report.offload_degraded = s1.offload_degraded;
 }
 
 /// Record a finished sequence's metrics and build its [`Session`]. The
@@ -883,8 +915,30 @@ impl<E: Engine> Coordinator<E> {
             else {
                 break;
             };
-            let queue_s =
-                (st.t0.elapsed().as_secs_f64() - req.submit_s).max(0.0);
+            let now_s = st.t0.elapsed().as_secs_f64();
+            if preempted.is_none() && req.expired_at(now_s) {
+                // shed-on-arrival: the deadline passed while the
+                // request queued — it never takes a slot; the owning
+                // client gets a structured refusal (a restore is
+                // already-admitted work and aborts via the scan below)
+                st.queue.release(client);
+                st.report.deadline_shed += 1;
+                st.report.clients.entry(client).or_default().rejected += 1;
+                sink.on_reject(
+                    client,
+                    req.id,
+                    &format!(
+                        "request {} deadline expired after {:.0} ms in \
+                         the admission queue",
+                        req.id,
+                        (now_s - req.submit_s).max(0.0) * 1e3
+                    ),
+                    "deadline_exceeded",
+                );
+                progressed = true;
+                continue;
+            }
+            let queue_s = (now_s - req.submit_s).max(0.0);
             let admit_t0 = Instant::now();
             // chunked prefill on: claim the slot and lease now, and
             // install the prompt between decode steps below, so the
@@ -1024,6 +1078,28 @@ impl<E: Engine> Coordinator<E> {
             st.active[adm.slot] = Some(seq);
             st.live += 1;
             st.report.peak_live = st.report.peak_live.max(st.live);
+        }
+        // per-iteration deadline enforcement: a live sequence whose
+        // deadline passed finishes with a typed `deadline_exceeded`
+        // before any further decode work is spent on it. The abort
+        // releases the KV lease (mid-prefill included) — the lifecycle
+        // checker audits exactly this release against a planted leak.
+        let now_s = st.t0.elapsed().as_secs_f64();
+        for slot in 0..cap {
+            let expired = st.active[slot]
+                .as_ref()
+                .is_some_and(|s| s.deadline_s.is_some_and(|d| now_s > d));
+            if !expired {
+                continue;
+            }
+            let Some(mut seq) = st.active[slot].take() else { continue };
+            seq.mark_done();
+            st.live -= 1;
+            self.engine.abort_deadline(slot)?;
+            st.pool_blocked = false;
+            st.report.deadline_aborts += 1;
+            progressed = true;
+            finish_one(st, sink, seq, FinishReason::DeadlineExceeded);
         }
         if st.live == 0 {
             self.drain_dead(st, &mut dead)?;
@@ -1806,6 +1882,82 @@ mod tests {
         fn on_reject(&mut self, client: ClientId, id: u64, _e: &str, code: &str) {
             self.rejects.push((client, id, code.to_string()));
         }
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_at_admission() {
+        // deadline_ms = 0 expires the instant any serve-clock time
+        // passes: the request must be refused at the queue head with a
+        // structured `deadline_exceeded`, never taking a slot
+        let mut c = Coordinator::new(sim(2));
+        c.start_online(AdmissionLimits::default());
+        let mut sink = RecordSink::default();
+        assert!(c
+            .submit(3, InferenceRequest::new(0, vec![1, 2], 4))
+            .unwrap()
+            .is_none());
+        assert!(c
+            .submit(
+                3,
+                InferenceRequest::new(1, vec![1, 2], 4).with_deadline_ms(0)
+            )
+            .unwrap()
+            .is_none());
+        while !c.online_idle() {
+            c.pump(&mut sink).unwrap();
+            c.check_online_invariants().unwrap();
+        }
+        assert_eq!(
+            sink.rejects,
+            vec![(3, 1, "deadline_exceeded".to_string())]
+        );
+        assert_eq!(sink.done, vec![(3, 0)]);
+        let report = c.finish_online().unwrap();
+        assert_eq!(report.deadline_shed, 1);
+        assert_eq!(report.deadline_aborts, 0);
+        assert_eq!(c.engine.active(), 0);
+        c.engine.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn deadline_abort_mid_decode_releases_the_lease() {
+        // admit with a generous deadline, let it expire mid-decode: the
+        // pump must finish the sequence with a typed DeadlineExceeded,
+        // release its KV lease, and keep the scheduler consistent
+        let mut c = Coordinator::new(sim(2));
+        let free0 = c.engine.kv_pool().unwrap().free_blocks;
+        c.start_online(AdmissionLimits::default());
+        let mut sink = RecordSink::default();
+        assert!(c
+            .submit(
+                5,
+                InferenceRequest::new(9, vec![1, 2, 3], 10_000)
+                    .with_deadline_ms(150)
+            )
+            .unwrap()
+            .is_none());
+        // admit + a couple of decode steps inside the deadline
+        for _ in 0..3 {
+            c.pump(&mut sink).unwrap();
+            c.check_online_invariants().unwrap();
+        }
+        assert_eq!(c.online_active(), 1, "request never admitted");
+        std::thread::sleep(Duration::from_millis(200));
+        while !c.online_idle() {
+            c.pump(&mut sink).unwrap();
+            c.check_online_invariants().unwrap();
+        }
+        assert_eq!(sink.done, vec![(5, 9)]);
+        let report = c.finish_online().unwrap();
+        assert_eq!(report.deadline_aborts, 1);
+        assert_eq!(report.deadline_shed, 0);
+        assert_eq!(c.engine.active(), 0);
+        assert_eq!(
+            c.engine.kv_pool().unwrap().free_blocks,
+            free0,
+            "deadline abort leaked KV blocks"
+        );
+        c.engine.check_invariants().unwrap();
     }
 
     #[test]

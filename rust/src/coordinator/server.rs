@@ -157,6 +157,10 @@ enum ServerMsg {
     },
     Line { client: ClientId, line: String },
     ReadError { client: ClientId, msg: String },
+    /// The connection sent nothing for the configured read idle timeout
+    /// ([`RuntimeConfig::read_idle_timeout_ms`]): a dead client must not
+    /// hold its reader thread (and registry slot) forever.
+    IdleTimeout { client: ClientId },
     Hangup { client: ClientId },
 }
 
@@ -244,12 +248,20 @@ fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<String>) {
 
 /// Reader thread: parse the connection into lines for the scheduler.
 /// Every exit path tells the scheduler why, so the connection's in-flight
-/// work is always aborted and its resources reclaimed.
+/// work is always aborted and its resources reclaimed. With
+/// `idle_timeout_ms > 0` the socket read times out after that much
+/// silence and the connection is reported idle — dead clients free
+/// their reader threads instead of parking forever in `read`.
 fn reader_loop(
     client: ClientId,
     stream: TcpStream,
     tx: mpsc::SyncSender<ServerMsg>,
+    idle_timeout_ms: u64,
 ) {
+    if idle_timeout_ms > 0 {
+        let _ = stream
+            .set_read_timeout(Some(Duration::from_millis(idle_timeout_ms)));
+    }
     let reader = BufReader::new(stream);
     for line in reader.lines() {
         match line {
@@ -257,6 +269,17 @@ fn reader_loop(
                 if tx.send(ServerMsg::Line { client, line: l }).is_err() {
                     return;
                 }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // platform-dependent kind for a timed-out socket read
+                let _ = tx.send(ServerMsg::IdleTimeout { client });
+                return;
             }
             Err(e) => {
                 let _ = tx.send(ServerMsg::ReadError {
@@ -271,31 +294,37 @@ fn reader_loop(
 }
 
 /// Deregister and close one connection. `graceful` drains the outbound
-/// queue (bounded wait) before shutting the socket down, so a queued
-/// goodbye still reaches the client; abortive close shuts down first to
-/// unblock a writer stuck on a full socket.
+/// queue for up to `drain_ms` ([`RuntimeConfig::writer_drain_ms`])
+/// before shutting the socket down, so a queued goodbye still reaches
+/// the client; abortive close shuts down first to unblock a writer
+/// stuck on a full socket. Returns whether the graceful drain timed out
+/// (surfaced in `stats` as `writer_drain_timeouts`).
 fn close_conn(
     conns: &mut BTreeMap<ClientId, Conn>,
     meta: &mut BTreeMap<u64, ReqMeta>,
     client: ClientId,
     graceful: bool,
-) {
+    drain_ms: u64,
+) -> bool {
     meta.retain(|_, m| m.client != client);
-    let Some(conn) = conns.remove(&client) else { return };
+    let Some(conn) = conns.remove(&client) else { return false };
     let Conn { outbound, stream, reader, writer } = conn;
     if !graceful {
         let _ = stream.shutdown(Shutdown::Both);
     }
     drop(outbound); // writer drains what's queued, then exits
+    let mut drain_timed_out = false;
     if graceful {
-        let deadline = Instant::now() + Duration::from_millis(500);
+        let deadline = Instant::now() + Duration::from_millis(drain_ms);
         while !writer.is_finished() && Instant::now() < deadline {
             thread::sleep(Duration::from_millis(1));
         }
+        drain_timed_out = !writer.is_finished();
         let _ = stream.shutdown(Shutdown::Both);
     }
     let _ = writer.join();
     let _ = reader.join();
+    drain_timed_out
 }
 
 /// Routes scheduler output to the owning connection's writer queue. A
@@ -372,6 +401,17 @@ pub struct Server<E: Engine> {
     /// Accept-loop error counter (shared with the accept thread),
     /// surfaced in `stats` so error storms are visible to monitoring.
     accept_errors: Arc<AtomicU64>,
+    /// Graceful-close outbound drain budget in ms
+    /// ([`RuntimeConfig::writer_drain_ms`]).
+    writer_drain_ms: u64,
+    /// Per-connection read idle timeout in ms, 0 = disabled
+    /// ([`RuntimeConfig::read_idle_timeout_ms`]).
+    read_idle_timeout_ms: u64,
+    /// Connections closed for read-idle timeout (scheduler thread only).
+    idle_disconnects: u64,
+    /// Graceful closes whose writer drain hit the budget before the
+    /// outbound queue emptied.
+    writer_drain_timeouts: u64,
 }
 
 impl Server<RealEngine> {
@@ -420,12 +460,14 @@ impl Server<SimEngine> {
             cfg.admission_queue_depth,
         );
         let watermark = cfg.kv_watermark_frac;
+        let (drain_ms, idle_ms) = (cfg.writer_drain_ms, cfg.read_idle_timeout_ms);
         let mut server = Server::new(
             SimEngine::new(dev, spec, cfg),
             Tokenizer::train(FALLBACK_CORPUS, 64),
         );
         server.set_limits(max_clients, client_cap, queue_depth);
         server.set_kv_watermark(watermark);
+        server.set_io_timeouts(drain_ms, idle_ms);
         server
     }
 }
@@ -443,7 +485,19 @@ impl<E: Engine> Server<E> {
                 client_cap: defaults.client_inflight_cap,
             },
             accept_errors: Arc::new(AtomicU64::new(0)),
+            writer_drain_ms: defaults.writer_drain_ms,
+            read_idle_timeout_ms: defaults.read_idle_timeout_ms,
+            idle_disconnects: 0,
+            writer_drain_timeouts: 0,
         }
+    }
+
+    /// Connection I/O timeouts: the graceful-close writer drain budget
+    /// and the per-connection read idle timeout (0 disables), both in
+    /// ms. CLI: `pi2 serve --writer-drain-ms / --read-idle-ms`.
+    pub fn set_io_timeouts(&mut self, writer_drain_ms: u64, read_idle_ms: u64) {
+        self.writer_drain_ms = writer_drain_ms;
+        self.read_idle_timeout_ms = read_idle_ms;
     }
 
     pub fn set_mode(&mut self, mode: ScheduleMode) {
@@ -557,7 +611,7 @@ impl<E: Engine> Server<E> {
                 // the coordinator already aborted sink-refused clients;
                 // this close is idempotent for them
                 let _ = self.coord.abort_client(c);
-                close_conn(&mut conns, &mut meta, c, false);
+                close_conn(&mut conns, &mut meta, c, false, self.writer_drain_ms);
             }
             idle = !worked;
         }
@@ -574,7 +628,9 @@ impl<E: Engine> Server<E> {
         let clients: Vec<ClientId> = conns.keys().copied().collect();
         for c in clients {
             let _ = self.coord.abort_client(c);
-            close_conn(&mut conns, &mut meta, c, true);
+            if close_conn(&mut conns, &mut meta, c, true, self.writer_drain_ms) {
+                self.writer_drain_timeouts += 1;
+            }
         }
         for (stream, writer) in orphans {
             let _ = stream.shutdown(Shutdown::Both);
@@ -624,8 +680,10 @@ impl<E: Engine> Server<E> {
                     }
                 };
                 let rtx = tx.clone();
-                let reader =
-                    thread::spawn(move || reader_loop(client, rstream, rtx));
+                let idle_ms = self.read_idle_timeout_ms;
+                let reader = thread::spawn(move || {
+                    reader_loop(client, rstream, rtx, idle_ms)
+                });
                 conns.insert(client, Conn { outbound, stream, reader, writer });
                 Ok(false)
             }
@@ -646,7 +704,33 @@ impl<E: Engine> Server<E> {
                             .to_string(),
                         );
                     }
-                    close_conn(conns, meta, client, true);
+                    if close_conn(conns, meta, client, true, self.writer_drain_ms) {
+                        self.writer_drain_timeouts += 1;
+                    }
+                }
+                Ok(false)
+            }
+            ServerMsg::IdleTimeout { client } => {
+                if conns.contains_key(&client) {
+                    // a silent connection past the idle budget: abort its
+                    // in-flight work, say goodbye, and free its threads
+                    self.coord.abort_client(client)?;
+                    self.idle_disconnects += 1;
+                    if let Some(c) = conns.get(&client) {
+                        let _ = c.outbound.try_send(
+                            error_json(
+                                &format!(
+                                    "connection idle for {} ms: closing",
+                                    self.read_idle_timeout_ms
+                                ),
+                                "idle_timeout",
+                            )
+                            .to_string(),
+                        );
+                    }
+                    if close_conn(conns, meta, client, true, self.writer_drain_ms) {
+                        self.writer_drain_timeouts += 1;
+                    }
                 }
                 Ok(false)
             }
@@ -656,7 +740,7 @@ impl<E: Engine> Server<E> {
                     // a sequence still installing its prompt, whose KV
                     // lease is rolled back mid-prefill
                     self.coord.abort_client(client)?;
-                    close_conn(conns, meta, client, false);
+                    close_conn(conns, meta, client, false, self.writer_drain_ms);
                 }
                 Ok(false)
             }
@@ -759,7 +843,7 @@ impl<E: Engine> Server<E> {
         };
         if !ok {
             self.coord.abort_client(client)?;
-            close_conn(conns, meta, client, false);
+            close_conn(conns, meta, client, false, self.writer_drain_ms);
         }
         Ok(())
     }
@@ -823,6 +907,25 @@ impl<E: Engine> Server<E> {
                 }
             },
         };
+        // optional per-request deadline: relative milliseconds from
+        // submission; 0 means "already due" (useful for shed tests)
+        let deadline_ms = match req.get("deadline_ms") {
+            Json::Null => None,
+            v => match v.as_usize() {
+                Some(n) => Some(n as u64),
+                None => {
+                    return self.reply(
+                        conns,
+                        meta,
+                        client,
+                        error_json(
+                            "deadline_ms must be a non-negative integer",
+                            "bad_request",
+                        ),
+                    );
+                }
+            },
+        };
         let id = self.next_id;
         self.next_id += 1;
         let vocab = self.coord.engine.vocab();
@@ -831,6 +934,10 @@ impl<E: Engine> Server<E> {
         // stream equivalence with solo runs: the token stream is a
         // function of the request id, not of scheduling or connection
         ireq.params.seed = id;
+        let ireq = match deadline_ms {
+            Some(ms) => ireq.with_deadline_ms(ms),
+            None => ireq,
+        };
         meta.insert(id, ReqMeta { client, stream });
         if let Some(rej) = self.coord.submit(client, ireq)? {
             meta.remove(&id);
@@ -851,6 +958,8 @@ impl<E: Engine> Server<E> {
         let engine = self.coord.engine.stats();
         let accept_errors = self.accept_errors.load(Ordering::SeqCst) as f64;
         let max_clients = self.max_clients;
+        let idle_disconnects = self.idle_disconnects as f64;
+        let writer_drain_timeouts = self.writer_drain_timeouts as f64;
         fn pct(s: &mut Samples) -> Json {
             let p = |s: &mut Samples, q: f64| {
                 if s.is_empty() { 0.0 } else { s.percentile(q) }
@@ -900,6 +1009,11 @@ impl<E: Engine> Server<E> {
                     "kv_admission_stalls",
                     json::num(report.kv_admission_stalls as f64),
                 ),
+                ("deadline_shed", json::num(report.deadline_shed as f64)),
+                (
+                    "deadline_aborts",
+                    json::num(report.deadline_aborts as f64),
+                ),
             ])
         };
         let per_client: Vec<Json> = report
@@ -920,6 +1034,8 @@ impl<E: Engine> Server<E> {
             ("connected", json::num(connected as f64)),
             ("max", json::num(max_clients as f64)),
             ("accept_errors", json::num(accept_errors)),
+            ("idle_disconnects", json::num(idle_disconnects)),
+            ("writer_drain_timeouts", json::num(writer_drain_timeouts)),
             ("per_client", Json::Arr(per_client)),
         ]);
         let mut fields = vec![
@@ -969,6 +1085,19 @@ impl<E: Engine> Server<E> {
                         json::num(engine.offload_overlap_ratio()),
                     ),
                     ("io_stall_s", json::num(engine.offload_stall_s)),
+                    (
+                        "io_retries",
+                        json::num(engine.offload_io_retries as f64),
+                    ),
+                    (
+                        "quarantines",
+                        json::num(engine.offload_quarantines as f64),
+                    ),
+                    (
+                        "degraded_fetches",
+                        json::num(engine.offload_degraded_fetches as f64),
+                    ),
+                    ("degraded", Json::Bool(engine.offload_degraded)),
                 ]),
             ));
         }
@@ -1314,6 +1443,82 @@ mod tests {
             refusal.get("error").as_str().unwrap().contains("max_clients"),
             "{refusal:?}"
         );
+        assert_eq!(ok.get("ok"), &Json::Bool(true));
+    }
+
+    #[test]
+    fn deadline_ms_is_parsed_and_enforced_over_the_wire() {
+        let responses = run_sim_client_server(|addr| {
+            let mut conn = std::net::TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            // deadline_ms: 0 is already due at admission — shed, typed
+            let r1 = chat(&mut conn, &mut reader,
+                          r#"{"prompt": "x", "max_tokens": 4, "deadline_ms": 0}"#);
+            let r2 = chat(&mut conn, &mut reader,
+                          r#"{"prompt": "x", "max_tokens": 4, "deadline_ms": "soon"}"#);
+            // a generous deadline serves normally
+            let r3 = chat(&mut conn, &mut reader,
+                          r#"{"prompt": "x", "max_tokens": 2, "deadline_ms": 60000}"#);
+            let stats = chat(&mut conn, &mut reader, r#"{"cmd": "stats"}"#);
+            let ok = chat(&mut conn, &mut reader, r#"{"cmd": "shutdown"}"#);
+            vec![r1, r2, r3, stats, ok]
+        });
+        assert_eq!(responses[0].get("code").as_str(), Some("deadline_exceeded"));
+        assert!(
+            responses[0].get("error").as_str().unwrap().contains("deadline"),
+            "{:?}",
+            responses[0]
+        );
+        assert_eq!(responses[1].get("code").as_str(), Some("bad_request"));
+        assert_eq!(responses[2].get("tokens").as_arr().unwrap().len(), 2);
+        let queue = responses[3].get("queue");
+        assert_eq!(queue.get("deadline_shed").as_usize(), Some(1));
+        assert_eq!(queue.get("deadline_aborts").as_usize(), Some(0));
+        assert_eq!(responses[4].get("ok"), &Json::Bool(true));
+    }
+
+    #[test]
+    fn idle_connection_gets_goodbye_and_is_counted() {
+        // connection 1 goes silent past the idle budget: the server says
+        // goodbye with a typed error and frees its threads; a second
+        // connection still serves and sees the disconnect counted
+        let cfg = RuntimeConfig {
+            max_batch: 2,
+            read_idle_timeout_ms: 100,
+            ..Default::default()
+        };
+        let mut server = Server::sim(oneplus_12(), bamboo_7b(), cfg);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let client_handle = std::thread::spawn(move || {
+            let addr = rx.recv().unwrap();
+            let mut idle = std::net::TcpStream::connect(addr).unwrap();
+            let mut idle_reader = BufReader::new(idle.try_clone().unwrap());
+            let r1 = chat(&mut idle, &mut idle_reader,
+                          r#"{"prompt": "x", "max_tokens": 2}"#);
+            std::thread::sleep(std::time::Duration::from_millis(300));
+            // the goodbye line, then EOF: the server closed the socket
+            let mut line = String::new();
+            idle_reader.read_line(&mut line).unwrap();
+            let goodbye = Json::parse(&line).unwrap();
+            let mut rest = String::new();
+            let eof = idle_reader.read_line(&mut rest).unwrap();
+            let mut conn = std::net::TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let stats = chat(&mut conn, &mut reader, r#"{"cmd": "stats"}"#);
+            let ok = chat(&mut conn, &mut reader, r#"{"cmd": "shutdown"}"#);
+            (r1, goodbye, eof, stats, ok)
+        });
+        server.run("127.0.0.1:0", Some(tx)).unwrap();
+        let (r1, goodbye, eof, stats, ok) = client_handle.join().unwrap();
+        assert_eq!(r1.get("tokens").as_arr().unwrap().len(), 2);
+        assert_eq!(goodbye.get("code").as_str(), Some("idle_timeout"));
+        assert!(
+            goodbye.get("error").as_str().unwrap().contains("idle"),
+            "{goodbye:?}"
+        );
+        assert_eq!(eof, 0, "socket stayed open after idle timeout");
+        let clients = stats.get("clients");
+        assert_eq!(clients.get("idle_disconnects").as_usize(), Some(1));
         assert_eq!(ok.get("ok"), &Json::Bool(true));
     }
 

@@ -30,7 +30,7 @@ use crate::config::{
 };
 use crate::kv::{pool_err, violation, KvLease, KvPool, KvPoolError, KvPoolStats};
 use crate::metrics::{RunMetrics, StepMetrics};
-use crate::offload::{OffloadConfig, OffloadPolicy};
+use crate::offload::{DegradedMode, OffloadConfig, OffloadPolicy};
 use crate::pipeline::{schedule, ClusterTask};
 use crate::planner::{Plan, Planner};
 use crate::serve::{
@@ -77,6 +77,27 @@ pub struct SimEngine {
     /// Deliberate lifecycle bug injected for checker self-tests
     /// ([`SimEngine::inject_fault`]); [`SimFault::None`] in real use.
     fault: SimFault,
+    /// Armed one-shot transient I/O faults, consumed per fetched record
+    /// at the next decode step (the checker's `io_fault` op).
+    armed_io_faults: u64,
+    /// Armed one-shot I/O-deadline stalls, consumed per fetched record
+    /// at the next decode step (the checker's `io_stall` op).
+    armed_io_stalls: u64,
+    /// Probabilistic transient-fault rate per fetched record
+    /// ([`SimEngine::set_io_fault_rate`] / `PI2_FAULT_SEED`).
+    io_fault_rate: f64,
+    /// Dedicated fault-schedule stream: never shared with the token or
+    /// activation rngs, so fault-on and fault-off runs draw identical
+    /// cold-active sets.
+    fault_rng: Rng,
+    /// Persistent-failure count (deadline-stalled fetches) driving the
+    /// engine-wide [`DegradedMode`] latch at `cfg.io_failure_threshold`.
+    io_failures: u64,
+    /// Mirrored engine-wide offload health ([`DegradedMode`]): latched
+    /// once `io_failures` crosses the threshold, after which decode
+    /// steps bypass the streaming path entirely (billing changes, token
+    /// streams do not).
+    degraded: DegradedMode,
     sv_prefill_s: f64,
     sv_decode_s: f64,
     sv_decode_tokens: u64,
@@ -110,6 +131,17 @@ pub enum SimFault {
     /// blocks are gone. Preempt itself stays correct, so only a
     /// `preempt` followed by a `restore` can expose it.
     DoubleReleaseOnRestore,
+    /// `abort_deadline` frees the slot but drops the KV lease without
+    /// releasing it, while plain `retire` stays correct — the
+    /// deadline-abort lease leak only the checker's `deadline_fire`
+    /// interleavings can expose.
+    LeakLeaseOnDeadlineAbort,
+    /// A retried cluster read bills its record bytes twice — the
+    /// retry-accounting double count that breaks the conservation law
+    /// `bytes_streamed + degraded·rec == (misses + retries)·rec` the
+    /// invariant audit checks. Only an `io_fault` interleaving can
+    /// expose it.
+    DoubleCountOnRetry,
 }
 
 /// Per-slot state of an admitted sequence on the simulation engine: a
@@ -187,6 +219,21 @@ impl SimEngine {
         let xpu = XpuModel::new(dev.clone());
         let ufs = UfsModel::new(dev.ufs.clone());
         let rng = Rng::new(cfg.seed.wrapping_mul(0x9E37_79B9));
+        // PI2_FAULT_SEED arms a seeded transient-fault schedule on the
+        // offload fetch path — the sim mirror of
+        // `storage::FaultInjector::from_env` (same env var, same 10%
+        // rate), so chaos CI drives both engines from one knob.
+        let mut io_fault_rate = 0.0;
+        let mut fault_seed = cfg.seed ^ 0xFA17;
+        if offload.is_some() {
+            if let Some(seed) = std::env::var("PI2_FAULT_SEED")
+                .ok()
+                .and_then(|v| v.parse::<u64>().ok())
+            {
+                io_fault_rate = 0.10;
+                fault_seed = seed;
+            }
+        }
         let capacity = cfg.max_batch.max(1);
         let kv_pool = KvPool::new(
             cfg.kv_pool_blocks_effective(),
@@ -214,6 +261,12 @@ impl SimEngine {
             slots: vec![None; capacity],
             kv_pool,
             fault: SimFault::default(),
+            armed_io_faults: 0,
+            armed_io_stalls: 0,
+            io_fault_rate,
+            fault_rng: Rng::new(fault_seed.wrapping_mul(0xA24B_AED4_963E_E407)),
+            io_failures: 0,
+            degraded: DegradedMode::default(),
             sv_prefill_s: 0.0,
             sv_decode_s: 0.0,
             sv_decode_tokens: 0,
@@ -229,6 +282,46 @@ impl SimEngine {
     /// engine that is actually broken.
     pub fn inject_fault(&mut self, fault: SimFault) {
         self.fault = fault;
+    }
+
+    /// Arm one transient I/O fault: the next fetched cluster record
+    /// faults once and is retried (billed as `io_retries`). The
+    /// checker's `io_fault` op.
+    pub fn arm_io_fault(&mut self) {
+        self.armed_io_faults += 1;
+    }
+
+    /// Arm one I/O-deadline stall: the next fetched cluster record blows
+    /// the read deadline and degrades to resident weights (billed as
+    /// `degraded_fetches`, counted toward the engine-wide latch). The
+    /// checker's `io_stall` op.
+    pub fn arm_io_stall(&mut self) {
+        self.armed_io_stalls += 1;
+    }
+
+    /// Armed-but-unconsumed fault/stall counts — part of the model
+    /// checker's state signature (two worlds with different pending
+    /// faults are different states).
+    pub fn armed_fault_counts(&self) -> (u64, u64) {
+        (self.armed_io_faults, self.armed_io_stalls)
+    }
+
+    /// Seeded probabilistic transient-fault schedule: each fetched
+    /// record faults independently with probability `rate`. Mirrors a
+    /// `storage::FaultInjector` programmed with `FaultSpec::transient`.
+    pub fn set_io_fault_rate(&mut self, rate: f64, seed: u64) {
+        self.io_fault_rate = rate.clamp(0.0, 1.0);
+        self.fault_rng = Rng::new(seed.wrapping_mul(0xA24B_AED4_963E_E407));
+    }
+
+    /// Mirrored engine-wide offload health.
+    pub fn degraded_mode(&self) -> DegradedMode {
+        self.degraded
+    }
+
+    /// Persistent I/O failures seen so far (drives the latch).
+    pub fn io_failures(&self) -> u64 {
+        self.io_failures
     }
 
     /// Shared admission body behind [`Engine::admit_deferred`] and
@@ -512,8 +605,14 @@ impl SimEngine {
                 if offloading {
                     let resident_frac = self.budget.resident_ffn_frac();
                     let ids: Vec<u32> = self.scratch_ids.clone();
+                    // once the engine-wide latch fires, the streaming
+                    // path is bypassed entirely: billing falls back to
+                    // the bundle-granular cache, token streams unchanged
+                    let streaming_on = !self.degraded.is_degraded();
                     if cfg.predictor {
-                        if let Some(pol) = self.offload.as_mut() {
+                        if let Some(pol) =
+                            self.offload.as_mut().filter(|_| streaming_on)
+                        {
                             let cn = pol.config().cluster_neurons.max(1) as u32;
                             let mut counts: BTreeMap<u32, usize> = BTreeMap::new();
                             for &id in &ids {
@@ -523,6 +622,52 @@ impl SimEngine {
                                 counts.into_iter().collect();
                             let plan =
                                 pol.plan_layer(layer, active.iter().copied());
+                            // Mirrored fault ladder (the checker's
+                            // io_fault/io_stall ops and PI2_FAULT_SEED
+                            // schedules): a stalled record degrades to
+                            // resident weights — its plan-billed bytes
+                            // never stream and the persistent-failure
+                            // latch advances; a transient fault costs
+                            // one retry, which re-bills its bytes once.
+                            let rec_bytes = pol.config().record_bytes;
+                            for _ in 0..plan.fetch.len() {
+                                if self.armed_io_stalls > 0 {
+                                    self.armed_io_stalls -= 1;
+                                    pol.stats.degraded_fetches += 1;
+                                    pol.stats.bytes_streamed = pol
+                                        .stats
+                                        .bytes_streamed
+                                        .saturating_sub(rec_bytes);
+                                    self.io_failures += 1;
+                                } else if self.armed_io_faults > 0 {
+                                    self.armed_io_faults -= 1;
+                                    pol.stats.io_retries += 1;
+                                    pol.stats.bytes_streamed += if self.fault
+                                        == SimFault::DoubleCountOnRetry
+                                    {
+                                        2 * rec_bytes
+                                    } else {
+                                        rec_bytes
+                                    };
+                                } else if self.io_fault_rate > 0.0
+                                    && self.fault_rng.bool(self.io_fault_rate)
+                                {
+                                    pol.stats.io_retries += 1;
+                                    pol.stats.bytes_streamed += if self.fault
+                                        == SimFault::DoubleCountOnRetry
+                                    {
+                                        2 * rec_bytes
+                                    } else {
+                                        rec_bytes
+                                    };
+                                }
+                            }
+                            if cfg.io_failure_threshold > 0
+                                && self.io_failures
+                                    >= cfg.io_failure_threshold as u64
+                            {
+                                self.degraded = DegradedMode::OffloadDisabled;
+                            }
                             let fetched: BTreeSet<u32> =
                                 plan.fetch.iter().copied().collect();
                             // bill per *neuron* so miss rates stay
@@ -982,6 +1127,27 @@ impl Engine for SimEngine {
         Ok(())
     }
 
+    /// Deadline-abort a slot: identical to [`Engine::retire`] on the
+    /// correct path (the lease goes straight back to the pool), with
+    /// its own planted-fault arm so the checker can prove it audits the
+    /// deadline path separately from ordinary retirement.
+    fn abort_deadline(&mut self, slot: SlotId) -> Result<()> {
+        ensure!(
+            slot < self.slots.len(),
+            "slot {slot} out of range (capacity {})",
+            self.slots.len()
+        );
+        if let Some(s) = self.slots[slot].take() {
+            match self.fault {
+                // planted bug: the deadline-abort path drops the lease
+                // without releasing its blocks
+                SimFault::LeakLeaseOnDeadlineAbort => drop(s.lease),
+                _ => self.kv_pool.release(s.lease),
+            }
+        }
+        Ok(())
+    }
+
     /// Evict a slot under pool pressure: identical to [`Engine::retire`]
     /// on the correct path (the lease goes back to the pool so the
     /// blocks are reusable immediately), with its own planted-fault arm
@@ -1054,6 +1220,7 @@ impl Engine for SimEngine {
         if let Some(pol) = &self.offload {
             pol.stats.export(&mut st);
         }
+        st.offload_degraded = self.degraded.is_degraded();
         st
     }
 
@@ -1099,6 +1266,29 @@ impl Engine for SimEngine {
             return Err(violation(format!(
                 "occupied slots ({active}) != active_leases ({leases})"
             )));
+        }
+        // Offload byte-conservation law: every billed streamed byte is
+        // accounted for by exactly one miss or one successful retry,
+        // minus the record-sized bills degraded fetches handed back.
+        // A retry that double-counts (the planted DoubleCountOnRetry)
+        // or a degrade that forgets the refund breaks this identity.
+        if let Some(pol) = &self.offload {
+            let rec = pol.config().record_bytes;
+            let billed =
+                pol.stats.bytes_streamed + pol.stats.degraded_fetches * rec;
+            let expect =
+                (pol.stats.cluster_misses + pol.stats.io_retries) * rec;
+            if billed != expect {
+                return Err(violation(format!(
+                    "offload byte-conservation violated: bytes_streamed \
+                     ({}) + degraded ({}) × record ({rec}) = {billed}, but \
+                     (misses ({}) + retries ({})) × record = {expect}",
+                    pol.stats.bytes_streamed,
+                    pol.stats.degraded_fetches,
+                    pol.stats.cluster_misses,
+                    pol.stats.io_retries,
+                )));
+            }
         }
         Ok(())
     }
@@ -1564,5 +1754,119 @@ mod tests {
         assert!(st.offload_io_s > 0.0, "no cluster I/O billed");
         let hr = st.offload_hit_rate();
         assert!(hr > 0.0 && hr < 1.0, "hit rate {hr}");
+    }
+
+    /// Run one request for `steps` decode steps and return its stream.
+    fn run_stream(e: &mut SimEngine, steps: usize) -> Vec<u32> {
+        use crate::serve::InferenceRequest;
+        let adm = e
+            .admit(&InferenceRequest::new(31, vec![1, 2, 3], steps + 1))
+            .unwrap();
+        let mut out = vec![adm.first_token.unwrap()];
+        for _ in 0..steps {
+            out.push(e.step().unwrap()[0].1);
+        }
+        out
+    }
+
+    #[test]
+    fn transient_io_faults_retry_without_changing_streams() {
+        let cfg = RuntimeConfig {
+            offload_streaming: true,
+            offload_resident_clusters: 24,
+            ..Default::default()
+        };
+        let mut clean = engine(cfg.clone());
+        let mut faulty = engine(cfg);
+        faulty.set_io_fault_rate(0.30, 7);
+        let a = run_stream(&mut clean, 10);
+        let b = run_stream(&mut faulty, 10);
+        assert_eq!(a, b, "transient faults changed the token stream");
+        let st = faulty.stats();
+        assert!(st.offload_io_retries > 0, "30% rate never retried");
+        assert!(!st.offload_degraded, "transients must not latch degrade");
+        // each retry billed its bytes exactly once: conservation holds
+        faulty.check_invariants().unwrap();
+        assert_eq!(clean.stats().offload_io_retries, 0);
+    }
+
+    #[test]
+    fn armed_stalls_degrade_and_latch_offload_off() {
+        let cfg = RuntimeConfig {
+            offload_streaming: true,
+            offload_resident_clusters: 24,
+            io_failure_threshold: 4,
+            ..Default::default()
+        };
+        let mut clean = engine(cfg.clone());
+        let mut faulty = engine(cfg);
+        for _ in 0..6 {
+            faulty.arm_io_stall();
+        }
+        let a = run_stream(&mut clean, 10);
+        let b = run_stream(&mut faulty, 10);
+        assert_eq!(a, b, "degradation changed the token stream");
+        let st = faulty.stats();
+        assert!(
+            st.offload_degraded_fetches >= 4,
+            "stalls did not degrade: {st:?}"
+        );
+        assert!(st.offload_degraded, "latch never fired");
+        assert_eq!(faulty.degraded_mode(), DegradedMode::OffloadDisabled);
+        assert!(faulty.io_failures() >= 4);
+        // the refunded bytes keep the conservation law intact
+        faulty.check_invariants().unwrap();
+        assert!(!clean.stats().offload_degraded);
+    }
+
+    #[test]
+    fn planted_double_count_on_retry_breaks_conservation() {
+        let mut e = engine(RuntimeConfig {
+            offload_streaming: true,
+            offload_resident_clusters: 24,
+            ..Default::default()
+        });
+        e.inject_fault(SimFault::DoubleCountOnRetry);
+        e.arm_io_fault();
+        run_stream(&mut e, 2);
+        assert!(e.stats().offload_io_retries > 0, "fault never consumed");
+        let err = e.check_invariants().unwrap_err();
+        assert!(
+            err.downcast_ref::<crate::kv::InvariantViolation>().is_some(),
+            "double count must surface as a typed violation: {err}"
+        );
+        assert!(format!("{err}").contains("byte-conservation"), "{err}");
+    }
+
+    #[test]
+    fn deadline_abort_releases_lease_and_planted_leak_is_caught() {
+        use crate::serve::InferenceRequest;
+        let cfg = RuntimeConfig {
+            max_batch: 2,
+            kv_block_tokens: 4,
+            kv_pool_blocks: 16,
+            ..Default::default()
+        };
+        let mut e = SimEngine::new(oneplus_12(), bamboo_7b(), cfg.clone());
+        let a = e.admit(&InferenceRequest::new(0, vec![1, 2, 3], 4)).unwrap();
+        e.abort_deadline(a.slot).unwrap();
+        assert_eq!(e.active(), 0);
+        assert_eq!(e.kv_pool().unwrap().free_blocks, 16, "abort leaked");
+        e.check_invariants().unwrap();
+        assert!(e.abort_deadline(9).is_err(), "out-of-range slot");
+
+        // planted leak: retire stays clean, only abort_deadline leaks
+        let mut f = SimEngine::new(oneplus_12(), bamboo_7b(), cfg);
+        f.inject_fault(SimFault::LeakLeaseOnDeadlineAbort);
+        let a = f.admit(&InferenceRequest::new(1, vec![1, 2], 4)).unwrap();
+        f.retire(a.slot).unwrap();
+        f.check_invariants().unwrap();
+        let b = f.admit(&InferenceRequest::new(2, vec![3, 4], 4)).unwrap();
+        f.abort_deadline(b.slot).unwrap();
+        let err = f.check_invariants().unwrap_err();
+        assert!(
+            err.downcast_ref::<crate::kv::InvariantViolation>().is_some(),
+            "leak must surface as a typed InvariantViolation: {err}"
+        );
     }
 }

@@ -31,12 +31,17 @@ use crate::config::CoreClass;
 use crate::kv::{pool_err, violation, KvLease, KvPool, KvPoolError, KvPoolStats};
 use crate::metrics::{RunMetrics, StepMetrics};
 use crate::model::{ModelDims, Predictor, WeightFile, Weights};
-use crate::offload::{ClusterLayout, NeuronStore, OffloadConfig, OffloadPolicy};
+use crate::offload::{
+    ClusterLayout, DegradedMode, NeuronStore, OffloadConfig, OffloadPolicy,
+    NO_NEURON,
+};
 use crate::runtime::{Runtime, Tensor, TensorData};
 use crate::serve::{
     Admission, Engine, EngineStats, InferenceRequest, PrefillProgress, SlotId,
 };
-use crate::storage::{FlashFile, ThrottledFile, UfsModel};
+use crate::storage::{
+    FaultInjector, FlashFile, RetryPolicy, ThrottledFile, UfsModel,
+};
 
 /// Options for the real engine.
 #[derive(Debug, Clone)]
@@ -80,6 +85,21 @@ pub struct RealEngineOptions {
     /// typed pool error and the scheduler preempts a victim and
     /// restores it later via recompute. CLI: `pi2 serve --kv-watermark`.
     pub kv_watermark_frac: f64,
+    /// Bounded retries for transient flash faults, per cluster read
+    /// (the store's fault ladder). CLI: `pi2 serve --io-retries`.
+    pub io_fault_retries: u32,
+    /// Exponential-backoff base between those retries, in milliseconds,
+    /// slept through the store's injectable clock.
+    /// CLI: `pi2 serve --io-backoff-ms`.
+    pub io_retry_backoff_ms: u64,
+    /// Per-read I/O deadline in milliseconds (0 = none): a read still
+    /// unresolved past it is abandoned and the record degrades to
+    /// resident weights. CLI: `pi2 serve --io-deadline-ms`.
+    pub io_deadline_ms: u64,
+    /// Degraded (resident-weight) fetches past which offload streaming
+    /// disables itself engine-wide ([`DegradedMode::OffloadDisabled`];
+    /// 0 = never latch). CLI: `pi2 serve --io-failure-threshold`.
+    pub io_failure_threshold: usize,
 }
 
 impl Default for RealEngineOptions {
@@ -97,6 +117,10 @@ impl Default for RealEngineOptions {
             offload_resident_clusters: 64,
             offload_dense_threshold: 0.5,
             kv_watermark_frac: 0.0,
+            io_fault_retries: 2,
+            io_retry_backoff_ms: 5,
+            io_deadline_ms: 0,
+            io_failure_threshold: 8,
         }
     }
 }
@@ -203,6 +227,14 @@ pub struct RealEngine {
     sv_prefill_s: f64,
     sv_decode_s: f64,
     sv_decode_tokens: u64,
+    /// Degraded (resident-weight) cluster fetches so far — persistent
+    /// flash faults and I/O-deadline expiries the retry ladder could
+    /// not absorb. Compared against `opts.io_failure_threshold`.
+    io_failures: u64,
+    /// Engine-wide degrade latch: once `OffloadDisabled`, every later
+    /// layer takes the per-neuron bundle path (byte-identical floats,
+    /// so token streams never notice). Never clears within a run.
+    degraded: DegradedMode,
 }
 
 impl RealEngine {
@@ -316,6 +348,14 @@ impl RealEngine {
                 CoreClass::Big,
             )?;
             store.set_throttle(opts.throttle_io);
+            store.set_retry_policy(RetryPolicy {
+                max_retries: opts.io_fault_retries,
+                backoff_base_s: opts.io_retry_backoff_ms as f64 / 1000.0,
+                deadline_s: opts.io_deadline_ms as f64 / 1000.0,
+            });
+            // chaos smoke: PI2_FAULT_SEED=<seed> arms the cluster-read
+            // fault site with the fixed transient/spike rates CI uses
+            store.set_fault_injector(FaultInjector::from_env());
             let policy = OffloadPolicy::new(OffloadConfig {
                 layers: dims.layers,
                 clusters_per_layer: store.clusters_per_layer(),
@@ -381,6 +421,8 @@ impl RealEngine {
             sv_prefill_s: 0.0,
             sv_decode_s: 0.0,
             sv_decode_tokens: 0,
+            io_failures: 0,
+            degraded: DegradedMode::Normal,
         };
         engine.pin_hot_tensors(engine.cache.hot_per_layer);
         engine.encode_static_literals()?;
@@ -707,7 +749,9 @@ impl RealEngine {
             set.into_iter().collect()
         };
         step.neurons_computed += active.len() as u64;
-        if self.store.is_some() {
+        // the degrade latch routes around the cluster path entirely:
+        // bundle floats are bit-identical, so only billing changes
+        if self.store.is_some() && !self.degraded.is_degraded() {
             return self.cold_ffn_clusters(layer, ffn_in, step, &active);
         }
 
@@ -830,39 +874,77 @@ impl RealEngine {
                 step.cache_hits += k as u64;
             }
         }
-        // stream missing cluster records from flash on the IO thread
+        // stream missing cluster records from flash on the IO thread,
+        // behind the full fault ladder: transient faults retry with
+        // backoff, corruption quarantines and refetches once, and a
+        // persistent failure (or I/O deadline expiry) degrades that
+        // record to resident weights — bit-identical floats rebuilt
+        // from the same bundles pack wrote, so streams cannot diverge
         let mut arrived: HashMap<u32, Vec<f32>> = HashMap::new();
+        let mut degraded_k: u64 = 0;
         if !plan.fetch.is_empty() {
+            let (r0, q0) = store.fault_counters();
             let io_start = std::time::Instant::now();
             // pi2-lint: allow(channel-discipline): scoped rendezvous — at most |plan.fetch| messages per step by construction, and the consumer drains in the same scope
-            let (tx, rx) = mpsc::channel::<(u32, Vec<f32>)>();
+            let (tx, rx) = mpsc::channel::<(u32, Vec<f32>, bool)>();
             let fetch_ref = &plan.fetch;
+            let weights = &self.weights;
             std::thread::scope(|scope| {
                 scope.spawn(move || {
                     for &c in fetch_ref {
-                        match store.read_cluster(layer, c) {
-                            Ok(data) => {
-                                if tx.send((c, data)).is_err() {
-                                    break;
-                                }
-                            }
-                            Err(_) => break,
+                        let (data, degraded) =
+                            match store.read_cluster_verified(layer, c) {
+                                Ok(data) => (data, false),
+                                Err(_) => (
+                                    synthesize_record(
+                                        store, weights, layer, c,
+                                    ),
+                                    true,
+                                ),
+                            };
+                        if tx.send((c, data, degraded)).is_err() {
+                            break;
                         }
                     }
                 });
-                for (c, data) in rx.iter() {
+                for (c, data, degraded) in rx.iter() {
+                    if degraded {
+                        degraded_k += 1;
+                    }
                     arrived.insert(c, data);
                 }
             });
             let io_s = io_start.elapsed().as_secs_f64();
             step.io_busy_s += io_s;
-            step.io_bytes += plan.fetch.len() as u64 * store.record_bytes();
-            step.io_ops += plan.fetch.len() as u64;
+            let (r1, q1) = store.fault_counters();
+            let (retries, quars) = (r1 - r0, q1 - q0);
+            // conservation law (audited on the sim engine): each retry
+            // re-bills its record's bytes once; a degraded fetch refunds
+            // the bytes plan_layer billed — flash never delivered them
+            step.io_bytes += (plan.fetch.len() as u64 + retries
+                - degraded_k)
+                * store.record_bytes();
+            step.io_ops += plan.fetch.len() as u64 + retries;
+            pol.stats.io_retries += retries;
+            pol.stats.quarantines += quars;
+            pol.stats.bytes_streamed += retries * store.record_bytes();
+            pol.stats.bytes_streamed = pol
+                .stats
+                .bytes_streamed
+                .saturating_sub(degraded_k * store.record_bytes());
+            pol.stats.degraded_fetches += degraded_k;
             // a barrier, not the overlapped pipeline: byte-identity
             // forbids reordering compute against arrivals here, so none
             // of this wall-clock I/O hides behind compute (the sim
             // engine models the overlapped schedule)
             pol.record_io(io_s, 0.0);
+        }
+        if degraded_k > 0 {
+            self.io_failures += degraded_k;
+            let thr = self.opts.io_failure_threshold;
+            if thr > 0 && self.io_failures >= thr as u64 {
+                self.degraded = DegradedMode::OffloadDisabled;
+            }
         }
         // canonical accumulation: ascending neuron id over a step-local
         // view (arrivals + the residency the plan started from)
@@ -897,6 +979,17 @@ impl RealEngine {
             self.cluster_store.remove(&gone);
         }
         Ok(y)
+    }
+
+    /// Engine-wide degrade latch: [`DegradedMode::OffloadDisabled`]
+    /// once degraded fetches pass `opts.io_failure_threshold`.
+    pub fn degraded_mode(&self) -> DegradedMode {
+        self.degraded
+    }
+
+    /// Degraded (resident-weight) cluster fetches so far.
+    pub fn io_failures(&self) -> u64 {
+        self.io_failures
     }
 
     /// One decode step for the current batch; returns next token ids.
@@ -1646,6 +1739,7 @@ impl Engine for RealEngine {
         if let Some(pol) = &self.offload {
             pol.stats.export(&mut st);
         }
+        st.offload_degraded = self.degraded.is_degraded();
         st
     }
 
@@ -1699,6 +1793,32 @@ impl Engine for RealEngine {
     }
 }
 
+/// Rebuild one cluster record from the fully-resident [`Weights`] when
+/// flash cannot serve it (persistent fault or I/O deadline expiry).
+/// Slot order and zero padding match [`NeuronStore::pack`] exactly, and
+/// [`Weights::bundle`] is the same source pack wrote from — so the
+/// degraded record is bit-identical to the one flash would have
+/// returned and the token stream cannot diverge.
+fn synthesize_record(
+    store: &NeuronStore,
+    weights: &Weights,
+    layer: usize,
+    cluster: u32,
+) -> Vec<f32> {
+    let bf = store.bundle_floats();
+    let mut rec = vec![0.0f32; store.record_floats()];
+    for (slot, &n) in
+        store.layout().neurons_of(layer, cluster).iter().enumerate()
+    {
+        if n == NO_NEURON {
+            continue;
+        }
+        let bundle = weights.bundle(layer, n as usize);
+        rec[slot * bf..(slot + 1) * bf].copy_from_slice(&bundle);
+    }
+    rec
+}
+
 /// Accumulate one cold neuron's GLU contribution into y [B,H] — the
 /// CPU-side sparse kernel of the hybrid split (§4.1.2).
 pub fn accumulate_neuron(bundle: &[f32], ffn_in: &[f32], b: usize, h: usize,
@@ -1728,6 +1848,8 @@ pub fn accumulate_neuron(bundle: &[f32], ffn_in: &[f32], b: usize, h: usize,
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    use crate::storage::{FaultSite, FaultSpec};
 
     fn artifacts() -> Option<&'static Path> {
         let p = Path::new("artifacts/selftest");
@@ -2351,6 +2473,110 @@ mod tests {
             assert!(st.offload_cluster_misses > 0, "no cluster misses");
             assert!(st.offload_bytes_streamed > 0, "no bytes streamed");
         }
+        std::fs::remove_file(&wp).ok();
+        std::fs::remove_file(wp.with_extension("clusters")).ok();
+    }
+
+    // shared harness for the fault tests: admit two requests, run five
+    // decode steps, return per-request token streams plus final stats
+    fn fault_run(
+        dir: &Path,
+        wp: &Path,
+        o: RealEngineOptions,
+        arm: impl FnOnce(&mut RealEngine),
+    ) -> (Vec<Vec<u32>>, EngineStats, DegradedMode) {
+        let reqs = [
+            InferenceRequest::new(7, vec![5, 12, 3], 6),
+            InferenceRequest::new(8, vec![2, 9], 6),
+        ];
+        let mut e = RealEngine::new(dir, wp, 2, o).unwrap();
+        arm(&mut e);
+        let mut out: Vec<Vec<u32>> = Vec::new();
+        let slots: Vec<_> = reqs
+            .iter()
+            .map(|r| {
+                let adm = e.admit(r).unwrap();
+                out.push(vec![adm.first_token.unwrap()]);
+                adm.slot
+            })
+            .collect();
+        for _ in 0..5 {
+            let toks = e.step().unwrap();
+            for (i, &slot) in slots.iter().enumerate() {
+                out[i].push(
+                    toks.iter().find(|(s, _)| *s == slot).unwrap().1,
+                );
+            }
+        }
+        e.check_invariants().unwrap();
+        let (st, dm) = (e.stats(), e.degraded_mode());
+        (out, st, dm)
+    }
+
+    #[test]
+    fn fault_injected_streaming_is_byte_identical() {
+        // acceptance: a 10% transient fault rate on the cluster-read
+        // site is fully absorbed by the retry ladder — token streams
+        // match the fault-free run byte for byte, retries are billed,
+        // and the engine never degrades
+        let Some(dir) = artifacts() else { return };
+        let wp = weight_path("fault");
+        let o = RealEngineOptions {
+            offload: true,
+            offload_resident_clusters: 16,
+            ..opts(false, 128)
+        };
+        let (clean, _, _) = fault_run(dir, &wp, o.clone(), |_| {});
+        let (faulty, st, dm) = fault_run(dir, &wp, o, |e| {
+            let inj = FaultInjector::new(7);
+            inj.set(FaultSite::ClusterRead, FaultSpec::transient(0.10));
+            let store = e.store.as_mut().unwrap();
+            store.set_fault_injector(Some(std::sync::Arc::new(inj)));
+            store.set_retry_policy(RetryPolicy {
+                max_retries: 32,
+                backoff_base_s: 0.0,
+                deadline_s: 0.0,
+            });
+        });
+        assert_eq!(clean, faulty, "fault-injected stream diverged");
+        assert!(st.offload_io_retries > 0, "no retries billed");
+        assert!(!st.offload_degraded, "degraded under transient faults");
+        assert_eq!(dm, DegradedMode::Normal);
+        std::fs::remove_file(&wp).ok();
+        std::fs::remove_file(wp.with_extension("clusters")).ok();
+    }
+
+    #[test]
+    fn persistent_faults_degrade_to_resident_weights() {
+        // acceptance: with every cluster read failing and zero retries,
+        // each fetch degrades to a resident-weight rebuild; past the
+        // failure threshold the engine latches OffloadDisabled and later
+        // layers take the bundle path — the stream still matches the
+        // fault-free run byte for byte
+        let Some(dir) = artifacts() else { return };
+        let wp = weight_path("degrade");
+        let o = RealEngineOptions {
+            offload: true,
+            offload_resident_clusters: 16,
+            io_failure_threshold: 2,
+            ..opts(false, 128)
+        };
+        let (clean, _, _) = fault_run(dir, &wp, o.clone(), |_| {});
+        let (faulty, st, dm) = fault_run(dir, &wp, o, |e| {
+            let inj = FaultInjector::new(11);
+            inj.set(FaultSite::ClusterRead, FaultSpec::transient(1.0));
+            let store = e.store.as_mut().unwrap();
+            store.set_fault_injector(Some(std::sync::Arc::new(inj)));
+            store.set_retry_policy(RetryPolicy {
+                max_retries: 0,
+                backoff_base_s: 0.0,
+                deadline_s: 0.0,
+            });
+        });
+        assert_eq!(clean, faulty, "degraded stream diverged");
+        assert!(st.offload_degraded_fetches > 0, "nothing degraded");
+        assert!(st.offload_degraded, "degrade latch never tripped");
+        assert_eq!(dm, DegradedMode::OffloadDisabled);
         std::fs::remove_file(&wp).ok();
         std::fs::remove_file(wp.with_extension("clusters")).ok();
     }

@@ -72,17 +72,24 @@ USAGE:
                 watermark preempt/restore worlds AND connection
                 interleavings (connect/submit/disconnect/pump), each
                 with planted-bug self-tests (leaked lease on retire,
-                abort, and preempt; double release on restore); --fuzz N
-                additionally drives N seeded randomized long-horizon
-                schedules per world past the exhaustive depth bound
-                (--seed S for a specific seed); non-zero exit on any
-                diagnostic, violations print replayable schedules
+                abort, preempt, and deadline-abort; double release on
+                restore; double count on retry); worlds with offload
+                streaming extend the alphabet with io_fault/io_stall/
+                deadline_fire ops auditing the byte-conservation law;
+                --fuzz N additionally drives N seeded randomized
+                long-horizon schedules per world past the exhaustive
+                depth bound (--seed S for a specific seed); non-zero
+                exit on any diagnostic, violations print replayable
+                schedules
   pi2 serve     [--addr HOST:PORT] [--engine real|sim] [--artifacts DIR]
                 [--mode continuous|lockstep] [--slots N] [--device D]
                 [--model M] [--throttle] [--kv-blocks N]
                 [--prefill-chunk N] [--kv-watermark F] [--offload-stream]
                 [--resident-clusters N] [--max-clients N]
-                [--client-cap N] [--queue-depth N]
+                [--client-cap N] [--queue-depth N] [--io-retries N]
+                [--io-backoff-ms MS] [--io-deadline-ms MS]
+                [--io-failure-threshold N] [--writer-drain-ms MS]
+                [--read-idle-ms MS]
                 line-protocol TCP server, one reader/writer thread pair
                 per connection funneling into one shared admission
                 queue; streams tokens with {{\"stream\": true}}.
@@ -107,7 +114,20 @@ USAGE:
                 2), --queue-depth the shared admission queue (default
                 64; 0 = unbounded) — excess work is refused with typed
                 {{\"error\",\"code\"}} replies (max_clients, client_cap,
-                shed), never a dropped connection
+                shed), never a dropped connection.
+                Fault tolerance: --io-retries bounds transient flash
+                read retries (default 2) with --io-backoff-ms
+                exponential backoff (default 5); --io-deadline-ms caps
+                one cluster read including retries (0 = none), past it
+                the fetch degrades to resident weights (token streams
+                stay byte-identical); --io-failure-threshold N degraded
+                fetches disable offload engine-wide (DegradedMode in
+                stats; 0 = never). Requests may carry \"deadline_ms\":
+                expired requests are shed at admission or aborted
+                mid-decode with code deadline_exceeded. Connections:
+                --read-idle-ms closes silent connections (default
+                300000; 0 = never), --writer-drain-ms bounds the
+                close-time writer drain (default 500)
 
 DEVICES: oneplus12 (default), ace2
 MODELS:  bamboo-7b (default), mistral-7b, qwen2-7b, llama-13b, mixtral-47b
@@ -206,6 +226,26 @@ fn cmd_simulate(args: &Args) -> i32 {
              m.overall_miss_rate() * 100.0);
     println!("dram bw: {:.1} GB/s mean", m.bandwidth_gbps.mean());
     0
+}
+
+/// Parse an optional numeric flag, or report it and return the exit
+/// code to propagate.
+fn opt_num<T: std::str::FromStr>(
+    args: &Args,
+    name: &str,
+) -> Result<Option<T>, i32> {
+    match args.opt(name) {
+        None => Ok(None),
+        Some(s) => match s.parse::<T>() {
+            Ok(n) => Ok(Some(n)),
+            Err(_) => {
+                eprintln!(
+                    "invalid --{name} '{s}' (expected a non-negative integer)"
+                );
+                Err(2)
+            }
+        },
+    }
 }
 
 fn cmd_serve(args: &Args) -> i32 {
@@ -316,6 +356,35 @@ fn cmd_serve(args: &Args) -> i32 {
         },
         None => None,
     };
+    // fault-tolerance knobs: bounded retry/backoff and the per-read
+    // deadline for flash cluster reads, the persistent-failure threshold
+    // that disables offload engine-wide, and the connection I/O budgets
+    // (writer drain on close, reader idle timeout; 0 disables)
+    let io_retries = match opt_num::<u32>(args, "io-retries") {
+        Ok(v) => v,
+        Err(c) => return c,
+    };
+    let io_backoff_ms = match opt_num::<u64>(args, "io-backoff-ms") {
+        Ok(v) => v,
+        Err(c) => return c,
+    };
+    let io_deadline_ms = match opt_num::<u64>(args, "io-deadline-ms") {
+        Ok(v) => v,
+        Err(c) => return c,
+    };
+    let io_failure_threshold =
+        match opt_num::<usize>(args, "io-failure-threshold") {
+            Ok(v) => v,
+            Err(c) => return c,
+        };
+    let writer_drain_ms = match opt_num::<u64>(args, "writer-drain-ms") {
+        Ok(v) => v,
+        Err(c) => return c,
+    };
+    let read_idle_ms = match opt_num::<u64>(args, "read-idle-ms") {
+        Ok(v) => v,
+        Err(c) => return c,
+    };
     let run = |err: anyhow::Error| -> i32 {
         eprintln!("server error: {err:#}");
         1
@@ -352,6 +421,18 @@ fn cmd_serve(args: &Args) -> i32 {
             if let Some(f) = kv_watermark {
                 opts.kv_watermark_frac = f;
             }
+            if let Some(n) = io_retries {
+                opts.io_fault_retries = n;
+            }
+            if let Some(n) = io_backoff_ms {
+                opts.io_retry_backoff_ms = n;
+            }
+            if let Some(n) = io_deadline_ms {
+                opts.io_deadline_ms = n;
+            }
+            if let Some(n) = io_failure_threshold {
+                opts.io_failure_threshold = n;
+            }
             println!("compiling NPU graph table…");
             let slots = match args.opt("slots") {
                 Some(s) => match s.parse::<usize>() {
@@ -384,6 +465,10 @@ fn cmd_serve(args: &Args) -> i32 {
                 client_cap.unwrap_or(rt.client_inflight_cap),
                 queue_depth.unwrap_or(rt.admission_queue_depth),
             );
+            server.set_io_timeouts(
+                writer_drain_ms.unwrap_or(rt.writer_drain_ms),
+                read_idle_ms.unwrap_or(rt.read_idle_timeout_ms),
+            );
             println!("serving (real engine, {} scheduling) on {addr} — one \
                       JSON request per line; {{\"cmd\":\"shutdown\"}} to stop",
                      mode.as_str());
@@ -408,6 +493,24 @@ fn cmd_serve(args: &Args) -> i32 {
             }
             if let Some(n) = resident_clusters {
                 cfg.offload_resident_clusters = n;
+            }
+            if let Some(n) = io_retries {
+                cfg.io_fault_retries = n;
+            }
+            if let Some(n) = io_backoff_ms {
+                cfg.io_retry_backoff_ms = n;
+            }
+            if let Some(n) = io_deadline_ms {
+                cfg.io_deadline_ms = n;
+            }
+            if let Some(n) = io_failure_threshold {
+                cfg.io_failure_threshold = n;
+            }
+            if let Some(n) = writer_drain_ms {
+                cfg.writer_drain_ms = n;
+            }
+            if let Some(n) = read_idle_ms {
+                cfg.read_idle_timeout_ms = n;
             }
             let cfg_chunk = cfg.prefill_chunk;
             let cfg_caps =
@@ -666,6 +769,75 @@ fn cmd_check(args: &Args) -> i32 {
                 println!(
                     "  {}: planted double release was NOT caught — the \
                      recompute arm of the model checker is broken",
+                    self_test.name
+                );
+                failed = true;
+            }
+        }
+        // the fault alphabet checking itself: a lease leaked on the
+        // deadline-abort path MUST be caught via a schedule that
+        // actually contains a deadline_fire, and a retry-accounting
+        // double count via one that contains an io_fault — else the
+        // checker is not exercising the fault ops it claims to cover
+        let self_test = model::deadline_leak_self_test();
+        match model::explore(&self_test).violation {
+            Some(v)
+                if v.schedule
+                    .iter()
+                    .any(|op| matches!(op, model::Op::DeadlineFire(_))) =>
+            {
+                println!(
+                    "  {}: planted bug caught (replay: {})",
+                    self_test.name,
+                    model::format_schedule(&v.schedule)
+                );
+            }
+            Some(v) => {
+                println!(
+                    "  {}: planted deadline leak caught WITHOUT a \
+                     deadline_fire (replay: {}) — the checker is not \
+                     exercising the deadline-abort path",
+                    self_test.name,
+                    model::format_schedule(&v.schedule)
+                );
+                failed = true;
+            }
+            None => {
+                println!(
+                    "  {}: planted deadline leak was NOT caught — the \
+                     deadline arm of the model checker is broken",
+                    self_test.name
+                );
+                failed = true;
+            }
+        }
+        let self_test = model::retry_double_count_self_test();
+        match model::explore(&self_test).violation {
+            Some(v)
+                if v.schedule
+                    .iter()
+                    .any(|op| matches!(op, model::Op::IoFault)) =>
+            {
+                println!(
+                    "  {}: planted bug caught (replay: {})",
+                    self_test.name,
+                    model::format_schedule(&v.schedule)
+                );
+            }
+            Some(v) => {
+                println!(
+                    "  {}: planted retry double count caught WITHOUT an \
+                     io_fault (replay: {}) — the checker is not exercising \
+                     the retry path",
+                    self_test.name,
+                    model::format_schedule(&v.schedule)
+                );
+                failed = true;
+            }
+            None => {
+                println!(
+                    "  {}: planted retry double count was NOT caught — the \
+                     fault arm of the model checker is broken",
                     self_test.name
                 );
                 failed = true;

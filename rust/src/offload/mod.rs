@@ -25,11 +25,49 @@ pub mod layout;
 pub mod store;
 
 pub use layout::{ClusterLayout, NO_NEURON};
-pub use store::NeuronStore;
+pub use store::{record_checksum, NeuronStore, StoreCorruption};
+
+use std::fmt;
 
 use crate::cache::{Access, NeuronCache};
 use crate::serve::EngineStats;
 use crate::xpu::Unit;
+
+/// Engine-wide offload health. Streaming starts [`DegradedMode::Normal`]
+/// and latches [`DegradedMode::OffloadDisabled`] once persistent flash
+/// failures cross the configured threshold: every subsequent layer step
+/// takes the resident/bundle weights path (token streams are unchanged —
+/// routing affects billing only), and the mode is surfaced through
+/// `stats` / `ServeReport` so an operator knows the device needs
+/// attention. The latch never clears within a serve run: flapping
+/// between streaming and resident on a failing device is strictly worse
+/// than settling.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum DegradedMode {
+    #[default]
+    Normal,
+    /// Offload streaming disabled engine-wide after persistent faults.
+    OffloadDisabled,
+}
+
+impl DegradedMode {
+    pub fn is_degraded(&self) -> bool {
+        *self == DegradedMode::OffloadDisabled
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DegradedMode::Normal => "normal",
+            DegradedMode::OffloadDisabled => "offload_disabled",
+        }
+    }
+}
+
+impl fmt::Display for DegradedMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
 
 /// Shape + budget of a cluster-granular residency domain.
 #[derive(Debug, Clone)]
@@ -80,6 +118,16 @@ pub struct OffloadStats {
     pub stall_s: f64,
     pub dense_clusters: u64,
     pub sparse_clusters: u64,
+    /// Transient-fault retries that succeeded (each re-read bills its
+    /// bytes once — the conservation invariant the checker audits is
+    /// `bytes_streamed == (cluster_misses + io_retries) * record_bytes`).
+    pub io_retries: u64,
+    /// Checksum-mismatch quarantine-and-refetch events.
+    pub quarantines: u64,
+    /// Cluster fetches that fell back to resident/bundle weights after
+    /// the retry ladder was exhausted (billed here, not as streamed
+    /// bytes).
+    pub degraded_fetches: u64,
 }
 
 impl OffloadStats {
@@ -110,6 +158,9 @@ impl OffloadStats {
         st.offload_io_s = self.io_s;
         st.offload_io_hidden_s = self.io_hidden_s;
         st.offload_stall_s = self.stall_s;
+        st.offload_io_retries = self.io_retries;
+        st.offload_quarantines = self.quarantines;
+        st.offload_degraded_fetches = self.degraded_fetches;
     }
 }
 

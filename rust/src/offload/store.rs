@@ -9,38 +9,104 @@
 //! serving opens it read-only through [`FlashFile`]/[`ThrottledFile`] so
 //! decode experiences phone-flash latencies when throttling is on.
 //!
-//! File format (all integers little-endian):
+//! File format v2 (all integers little-endian):
 //!
 //! ```text
-//! magic    8 bytes   b"PI2NCLU1"
-//! header   4 × u64   hidden, inter, layers, cluster_neurons
-//! perm     layers × clusters_per_layer × cluster_neurons × u32
-//!          cluster-slot → neuron id tables ([`NO_NEURON`] = padding)
-//! records  layers × clusters_per_layer fixed-size cluster records,
-//!          each cluster_neurons × (3·hidden+1) f32 bundles in slot
-//!          order (gate row | up row | bias | down column), padding
-//!          slots zero-filled
+//! magic     8 bytes   b"PI2NCLU2"
+//! header    4 × u64   hidden, inter, layers, cluster_neurons
+//! perm      layers × clusters_per_layer × cluster_neurons × u32
+//!           cluster-slot → neuron id tables ([`NO_NEURON`] = padding)
+//! records   layers × clusters_per_layer fixed-size cluster records,
+//!           each cluster_neurons × (3·hidden+1) f32 bundles in slot
+//!           order (gate row | up row | bias | down column), padding
+//!           slots zero-filled
+//! checksums layers × clusters_per_layer × u64 — one xxhash-style
+//!           checksum per record (over the f32 bit patterns), so a torn
+//!           or bit-flipped record is caught at read time instead of
+//!           silently feeding zero/garbage weights
 //! ```
+//!
+//! v1 files (magic `PI2NCLU1`, no checksum table) are rejected at open
+//! with a repack hint — serving must never run on unverifiable records.
 //!
 //! Records are fixed-size and cluster-aligned, so a residency miss is
 //! exactly one positioned read of `record_bytes()` at
 //! [`NeuronStore::cluster_offset`] — the random-read block size the UFS
-//! model's bandwidth curves key on.
+//! model's bandwidth curves key on. [`NeuronStore::read_cluster_verified`]
+//! wraps that read in the fault ladder: bounded retries with exponential
+//! backoff for transient faults, quarantine + one refetch on checksum
+//! mismatch, and a per-read I/O deadline — all timed through the
+//! injectable [`Clock`] so the ladder is deterministic under test.
 
 use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{ensure, Context, Error, Result};
 
 use crate::config::CoreClass;
 use crate::model::{ModelDims, Weights};
 use crate::offload::layout::{ClusterLayout, NO_NEURON};
+use crate::storage::fault::{
+    Clock, FaultInjector, InjectedFault, IoDeadlineExceeded, RetryPolicy,
+};
 use crate::storage::{FlashFile, ThrottledFile, UfsModel};
 
-pub const STORE_MAGIC: &[u8; 8] = b"PI2NCLU1";
+pub const STORE_MAGIC: &[u8; 8] = b"PI2NCLU2";
+/// The checksum-less v1 format — recognized only to reject it with a
+/// repack hint instead of a generic bad-magic error.
+pub const STORE_MAGIC_V1: &[u8; 8] = b"PI2NCLU1";
 
 const HEADER_BYTES: u64 = 8 + 4 * 8;
+
+/// xxhash-style 64-bit checksum over a record's f32 bit patterns.
+/// Hand-rolled (the offline crate set has no xxhash): multiply-rotate
+/// lanes plus an avalanche finish, stable across platforms because it
+/// only touches the little-endian bit patterns.
+pub fn record_checksum(record: &[f32]) -> u64 {
+    const P1: u64 = 0x9E37_79B1_85EB_CA87;
+    const P2: u64 = 0xC2B2_AE3D_27D4_EB4F;
+    const P3: u64 = 0x1656_67B1_9E37_79F9;
+    let mut h = P3 ^ (record.len() as u64).wrapping_mul(P1);
+    for &v in record {
+        h ^= u64::from(v.to_bits()).wrapping_mul(P2);
+        h = h.rotate_left(31).wrapping_mul(P1);
+    }
+    h ^= h >> 33;
+    h = h.wrapping_mul(P2);
+    h ^= h >> 29;
+    h = h.wrapping_mul(P3);
+    h ^ (h >> 32)
+}
+
+/// Typed record-corruption error: names the exact byte offset so an
+/// operator can fsck the store, and downcasts so the retry ladder can
+/// tell "quarantine and refetch" from a transient fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StoreCorruption {
+    pub layer: usize,
+    pub cluster: u32,
+    /// Byte offset of the corrupt record in the store file.
+    pub offset: u64,
+    pub stored: u64,
+    pub computed: u64,
+}
+
+impl std::fmt::Display for StoreCorruption {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "cluster {} of layer {}: record checksum mismatch at byte \
+             offset {} (stored {:#018x}, computed {:#018x})",
+            self.cluster, self.layer, self.offset, self.stored, self.computed
+        )
+    }
+}
+
+impl std::error::Error for StoreCorruption {}
 
 /// Read handle over a packed cluster store.
 #[derive(Debug)]
@@ -51,6 +117,11 @@ pub struct NeuronStore {
     pub layers: usize,
     layout: ClusterLayout,
     records_base: u64,
+    /// Per-record checksums, indexed `layer * clusters_per_layer + c`.
+    checksums: Vec<u64>,
+    retry: RetryPolicy,
+    retries: AtomicU64,
+    quarantines: AtomicU64,
 }
 
 impl NeuronStore {
@@ -93,8 +164,14 @@ impl NeuronStore {
             + (layout.layers() * layout.clusters_per_layer()
                 * layout.cluster_neurons) as u64
                 * 4;
+        let mut sums: Vec<u64> = Vec::with_capacity(
+            layout.layers() * layout.clusters_per_layer(),
+        );
+        let mut record =
+            Vec::with_capacity(layout.cluster_neurons * bundle_floats);
         for l in 0..dims.layers {
             for c in 0..layout.clusters_per_layer() as u32 {
+                record.clear();
                 for &n in layout.neurons_of(l, c) {
                     let bundle;
                     let src = if n == NO_NEURON {
@@ -112,9 +189,16 @@ impl NeuronStore {
                     for v in src {
                         w.write_all(&v.to_le_bytes())?;
                     }
+                    record.extend_from_slice(src);
                     written += bundle_floats as u64 * 4;
                 }
+                sums.push(record_checksum(&record));
             }
+        }
+        // trailing checksum table: one u64 per record, in record order
+        for s in &sums {
+            w.write_all(&s.to_le_bytes())?;
+            written += 8;
         }
         w.flush()?;
         Ok(written)
@@ -127,6 +211,12 @@ impl NeuronStore {
         let mut head = [0u8; HEADER_BYTES as usize];
         file.read_at(0, &mut head)
             .with_context(|| format!("read store header {}", path.display()))?;
+        ensure!(
+            &head[..8] != STORE_MAGIC_V1,
+            "{}: store format v1 (no per-record checksums) — stale file; \
+             repack with `pi2 offload-pack`",
+            path.display()
+        );
         ensure!(
             &head[..8] == STORE_MAGIC,
             "{} is not a cluster store (bad magic)",
@@ -164,21 +254,44 @@ impl NeuronStore {
                 format!("{}: corrupt permutation tables", path.display())
             })?;
         let records_base = HEADER_BYTES + (layers * slots) as u64 * 4;
-        let expect =
+        let n_records = layers * clusters;
+        let sums_base =
             records_base + (layers * slots * (3 * hidden + 1)) as u64 * 4;
+        let expect = sums_base + n_records as u64 * 8;
         ensure!(
             file.len() == expect,
             "{}: {} bytes on disk, header implies {expect}",
             path.display(),
             file.len()
         );
+        let mut sum_bytes = vec![0u8; n_records * 8];
+        file.read_at(sums_base, &mut sum_bytes).with_context(|| {
+            format!(
+                "read record checksum table at offset {sums_base} of {}",
+                path.display()
+            )
+        })?;
+        let checksums: Vec<u64> = sum_bytes
+            .chunks_exact(8)
+            .map(|c| {
+                let mut b = [0u8; 8];
+                b.copy_from_slice(c);
+                u64::from_le_bytes(b)
+            })
+            .collect();
+        let mut throttled = ThrottledFile::new(file, model, core);
+        throttled.set_fault_site(crate::storage::FaultSite::ClusterRead);
         Ok(NeuronStore {
-            file: ThrottledFile::new(file, model, core),
+            file: throttled,
             hidden,
             inter,
             layers,
             layout,
             records_base,
+            checksums,
+            retry: RetryPolicy::default(),
+            retries: AtomicU64::new(0),
+            quarantines: AtomicU64::new(0),
         })
     }
 
@@ -213,7 +326,10 @@ impl NeuronStore {
     }
 
     /// One positioned read of the whole cluster record (slot-ordered
-    /// bundles; use [`ClusterLayout::slot_in_cluster`] to index).
+    /// bundles; use [`ClusterLayout::slot_in_cluster`] to index),
+    /// checksum-verified: a torn or bit-flipped record surfaces as a
+    /// downcastable [`StoreCorruption`] naming the byte offset — never
+    /// as silent zero/garbage weights.
     pub fn read_cluster(&self, layer: usize, cluster: u32) -> Result<Vec<f32>> {
         ensure!(
             layer < self.layers && (cluster as usize) < self.clusters_per_layer(),
@@ -221,8 +337,76 @@ impl NeuronStore {
             self.layers,
             self.clusters_per_layer()
         );
-        self.file
-            .read_f32s(self.cluster_offset(layer, cluster), self.record_floats())
+        let offset = self.cluster_offset(layer, cluster);
+        let rec = self.file.read_f32s(offset, self.record_floats())?;
+        let idx = layer * self.clusters_per_layer() + cluster as usize;
+        let (stored, computed) = (self.checksums[idx], record_checksum(&rec));
+        if stored != computed {
+            return Err(Error::new(StoreCorruption {
+                layer,
+                cluster,
+                offset,
+                stored,
+                computed,
+            }));
+        }
+        Ok(rec)
+    }
+
+    /// [`NeuronStore::read_cluster`] behind the full fault ladder:
+    ///
+    /// 1. transient faults (injected `EIO`) retry up to
+    ///    `retry.max_retries` times with exponential backoff slept
+    ///    through the injectable clock;
+    /// 2. a checksum mismatch quarantines the record (it is never
+    ///    served) and refetches exactly once;
+    /// 3. the per-read I/O deadline (`retry.deadline_s`) bounds the
+    ///    whole ladder — on expiry the error returns immediately so the
+    ///    engine can degrade to resident weights instead of waiting.
+    pub fn read_cluster_verified(
+        &self,
+        layer: usize,
+        cluster: u32,
+    ) -> Result<Vec<f32>> {
+        let clock = self.file.clock();
+        let t0 = clock.now_s();
+        let mut attempt: u32 = 0;
+        let mut quarantined = false;
+        loop {
+            let res = self.read_cluster(layer, cluster);
+            let elapsed = clock.now_s() - t0;
+            if self.retry.expired(elapsed) {
+                // stuck read (or a ladder that ran long): the engine
+                // degrades to resident weights instead of waiting, so
+                // even a read that eventually delivered is discarded
+                return Err(Error::new(IoDeadlineExceeded {
+                    site: crate::storage::FaultSite::ClusterRead,
+                    elapsed_s: elapsed,
+                    deadline_s: self.retry.deadline_s,
+                }));
+            }
+            let err = match res {
+                Ok(rec) => return Ok(rec),
+                Err(err) => err,
+            };
+            if err.downcast_ref::<StoreCorruption>().is_some() {
+                // corrupt record: quarantine and refetch once — a second
+                // mismatch means the bytes on flash are bad, not torn
+                if quarantined {
+                    return Err(err);
+                }
+                quarantined = true;
+                self.quarantines.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            let transient = err.downcast_ref::<InjectedFault>().is_some();
+            if !transient || attempt >= self.retry.max_retries {
+                return Err(err);
+            }
+            attempt += 1;
+            self.retries.fetch_add(1, Ordering::Relaxed);
+            clock.sleep(Duration::from_secs_f64(self.retry.backoff_s(attempt)));
+        }
     }
 
     /// The bundle of `slot` within a record returned by `read_cluster`.
@@ -234,6 +418,37 @@ impl NeuronStore {
     /// Disable (or re-enable) the UFS latency injection on reads.
     pub fn set_throttle(&mut self, on: bool) {
         self.file.throttle = on;
+    }
+
+    /// Swap the time source behind throttling, backoff, and deadlines.
+    pub fn set_clock(&mut self, clock: Arc<dyn Clock>) {
+        self.file.set_clock(clock);
+    }
+
+    /// Arm (or disarm) fault injection on this store's reads.
+    pub fn set_fault_injector(&mut self, inj: Option<Arc<FaultInjector>>) {
+        self.file.set_injector(inj);
+    }
+
+    pub fn fault_injector(&self) -> Option<Arc<FaultInjector>> {
+        self.file.injector()
+    }
+
+    /// Configure the retry/backoff/deadline ladder.
+    pub fn set_retry_policy(&mut self, retry: RetryPolicy) {
+        self.retry = retry;
+    }
+
+    pub fn retry_policy(&self) -> RetryPolicy {
+        self.retry
+    }
+
+    /// (transient retries performed, checksum quarantines) so far.
+    pub fn fault_counters(&self) -> (u64, u64) {
+        (
+            self.retries.load(Ordering::Relaxed),
+            self.quarantines.load(Ordering::Relaxed),
+        )
     }
 }
 
@@ -360,6 +575,142 @@ pub(crate) mod tests {
             &path, UfsModel::new(oneplus_12().ufs), CoreClass::Big)
             .unwrap_err();
         assert!(format!("{err:#}").contains("bad magic"), "{err:#}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn v1_store_is_rejected_with_repack_hint() {
+        let dims = tiny_dims();
+        let w = Weights::generate(&dims, 5);
+        let layout = ClusterLayout::identity(dims.layers, dims.inter, 8);
+        let path = tmppath("v1");
+        NeuronStore::pack(&dims, &w, &layout, &path).unwrap();
+        // stamp the previous format's magic: the wrong-version error must
+        // name the remedy, not report a generic bad magic
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[..8].copy_from_slice(STORE_MAGIC_V1);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = NeuronStore::open(
+            &path, UfsModel::new(oneplus_12().ufs), CoreClass::Big)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("format v1"), "{msg}");
+        assert!(msg.contains("offload-pack"), "{msg}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn flipped_record_byte_fails_typed_with_offset() {
+        let dims = tiny_dims();
+        let w = Weights::generate(&dims, 9);
+        let layout = ClusterLayout::identity(dims.layers, dims.inter, 8);
+        let path = tmppath("fliprec");
+        NeuronStore::pack(&dims, &w, &layout, &path).unwrap();
+        let off = open_raw(&path).cluster_offset(1, 2);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[off as usize + 5] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let store = open_raw(&path);
+        let err = store.read_cluster(1, 2).unwrap_err();
+        let c = err.downcast_ref::<StoreCorruption>().unwrap();
+        assert_eq!((c.layer, c.cluster, c.offset), (1, 2, off));
+        assert!(format!("{c}").contains(&format!("offset {off}")), "{c}");
+        // the ladder quarantines + refetches once, then refuses to serve
+        let err = store.read_cluster_verified(1, 2).unwrap_err();
+        assert!(err.downcast_ref::<StoreCorruption>().is_some(), "{err:#}");
+        assert_eq!(store.fault_counters().1, 1, "exactly one quarantine");
+        // unaffected clusters still verify clean
+        assert!(store.read_cluster(0, 0).is_ok());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn flipped_checksum_table_byte_is_caught_at_read() {
+        let dims = tiny_dims();
+        let w = Weights::generate(&dims, 13);
+        let layout = ClusterLayout::identity(dims.layers, dims.inter, 8);
+        let path = tmppath("flipsum");
+        NeuronStore::pack(&dims, &w, &layout, &path).unwrap();
+        // the file tail is the last record's stored checksum
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let store = open_raw(&path);
+        let lc = (store.clusters_per_layer() - 1) as u32;
+        let err = store.read_cluster(store.layers - 1, lc).unwrap_err();
+        assert!(err.downcast_ref::<StoreCorruption>().is_some(), "{err:#}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn transient_faults_retry_with_backoff_through_the_clock() {
+        use crate::storage::{
+            FaultInjector, FaultSite, FaultSpec, VirtualClock,
+        };
+        use std::sync::Arc;
+        let dims = tiny_dims();
+        let w = Weights::generate(&dims, 21);
+        let layout = ClusterLayout::identity(dims.layers, dims.inter, 8);
+        let path = tmppath("retry");
+        NeuronStore::pack(&dims, &w, &layout, &path).unwrap();
+        let mut store = open_raw(&path);
+        let clock = Arc::new(VirtualClock::new());
+        store.set_clock(Arc::clone(&clock));
+        let inj = Arc::new(FaultInjector::new(5));
+        inj.set(FaultSite::ClusterRead, FaultSpec::transient(0.3));
+        store.set_fault_injector(Some(Arc::clone(&inj)));
+        store.set_retry_policy(RetryPolicy {
+            max_retries: 16,
+            backoff_base_s: 0.001,
+            deadline_s: 0.0,
+        });
+        // every record reads correct (checksum-verified) despite a 30%
+        // transient rate — the ladder absorbs the faults
+        for l in 0..dims.layers {
+            for c in 0..store.clusters_per_layer() as u32 {
+                let rec = store.read_cluster_verified(l, c).unwrap();
+                assert_eq!(rec.len(), store.record_floats());
+            }
+        }
+        let (retries, _) = store.fault_counters();
+        assert!(retries > 0, "a 30% rate over 8 records must retry");
+        assert!(clock.slept_s() > 0.0, "backoff must go through the clock");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn stuck_reads_trip_the_io_deadline_typed() {
+        use crate::storage::{
+            FaultInjector, FaultSite, FaultSpec, IoDeadlineExceeded,
+            VirtualClock,
+        };
+        use std::sync::Arc;
+        let dims = tiny_dims();
+        let w = Weights::generate(&dims, 17);
+        let layout = ClusterLayout::identity(dims.layers, dims.inter, 8);
+        let path = tmppath("stuck");
+        NeuronStore::pack(&dims, &w, &layout, &path).unwrap();
+        let mut store = open_raw(&path);
+        store.set_clock(Arc::new(VirtualClock::new()));
+        let inj = Arc::new(FaultInjector::new(2));
+        inj.set(
+            FaultSite::ClusterRead,
+            FaultSpec {
+                stuck_rate: 1.0,
+                stuck_s: 1.0,
+                ..FaultSpec::default()
+            },
+        );
+        store.set_fault_injector(Some(inj));
+        store.set_retry_policy(RetryPolicy {
+            max_retries: 2,
+            backoff_base_s: 0.001,
+            deadline_s: 0.1,
+        });
+        let err = store.read_cluster_verified(0, 0).unwrap_err();
+        let d = err.downcast_ref::<IoDeadlineExceeded>().unwrap();
+        assert!(d.elapsed_s > d.deadline_s, "{d}");
         std::fs::remove_file(path).ok();
     }
 }

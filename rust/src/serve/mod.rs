@@ -70,6 +70,14 @@ pub struct InferenceRequest {
     /// percentiles. Batches passed to `serve` must be ordered by
     /// `submit_s`.
     pub submit_s: f64,
+    /// Client deadline, milliseconds after `submit_s`. `None` = no
+    /// deadline. The coordinator sheds an already-expired request at
+    /// admission (it never takes a slot or KV lease) and aborts a
+    /// running one at the first decode step past the deadline with a
+    /// typed [`FinishReason::DeadlineExceeded`], releasing its lease.
+    /// `Some(0)` therefore means "expired on arrival" — useful for
+    /// deterministic shed tests.
+    pub deadline_ms: Option<u64>,
 }
 
 impl InferenceRequest {
@@ -80,6 +88,7 @@ impl InferenceRequest {
             prompt,
             params: SamplingParams { max_tokens: max_tokens.max(1), ..Default::default() },
             submit_s: 0.0,
+            deadline_ms: None,
         }
     }
 
@@ -87,6 +96,22 @@ impl InferenceRequest {
     pub fn at(mut self, submit_s: f64) -> Self {
         self.submit_s = submit_s.max(0.0);
         self
+    }
+
+    /// Attach a client deadline (milliseconds after submit).
+    pub fn with_deadline_ms(mut self, deadline_ms: u64) -> Self {
+        self.deadline_ms = Some(deadline_ms);
+        self
+    }
+
+    /// Absolute expiry instant on the serve clock, if a deadline is set.
+    pub fn deadline_s(&self) -> Option<f64> {
+        self.deadline_ms.map(|ms| self.submit_s + ms as f64 / 1000.0)
+    }
+
+    /// Is the request past its deadline at serve-clock time `now_s`?
+    pub fn expired_at(&self, now_s: f64) -> bool {
+        self.deadline_s().is_some_and(|d| now_s > d)
     }
 
     /// Build from a workload-trace request: synthesizes a deterministic
@@ -111,6 +136,9 @@ pub enum FinishReason {
     Stop,
     /// Evicted / aborted before completion.
     Cancelled,
+    /// Aborted because the request's `deadline_ms` expired (at admission
+    /// or mid-decode). The KV lease is released like any other retire.
+    DeadlineExceeded,
 }
 
 impl FinishReason {
@@ -119,6 +147,7 @@ impl FinishReason {
             FinishReason::Length => "length",
             FinishReason::Stop => "stop",
             FinishReason::Cancelled => "cancelled",
+            FinishReason::DeadlineExceeded => "deadline_exceeded",
         }
     }
 }
@@ -225,6 +254,16 @@ pub struct EngineStats {
     pub offload_io_hidden_s: f64,
     /// Exposed cluster-I/O stall the decode path waited out.
     pub offload_stall_s: f64,
+    /// Transient-fault retries absorbed by the cluster-read ladder.
+    pub offload_io_retries: u64,
+    /// Checksum-mismatch quarantine-and-refetch events.
+    pub offload_quarantines: u64,
+    /// Cluster fetches served from resident/bundle weights after the
+    /// retry ladder was exhausted.
+    pub offload_degraded_fetches: u64,
+    /// Engine-wide offload streaming disabled after persistent faults
+    /// ([`crate::offload::DegradedMode::OffloadDisabled`]).
+    pub offload_degraded: bool,
 }
 
 impl EngineStats {
@@ -394,6 +433,15 @@ pub trait Engine {
     /// window by accumulation.
     fn retire(&mut self, slot: SlotId) -> Result<()>;
 
+    /// Abort a slot whose request blew its deadline: release the slot
+    /// and its KV lease exactly as [`Engine::retire`] does. Engines
+    /// distinguish the two only for accounting (and for the checker's
+    /// planted leak-on-deadline-abort fault); the default forwards to
+    /// `retire`.
+    fn abort_deadline(&mut self, slot: SlotId) -> Result<()> {
+        self.retire(slot)
+    }
+
     /// Evict a live slot under pool pressure: release the slot and its
     /// KV lease exactly as [`Engine::retire`] does, with the
     /// expectation that the caller requeues the sequence and later
@@ -496,6 +544,10 @@ impl<E: Engine + ?Sized> Engine for Box<E> {
 
     fn retire(&mut self, slot: SlotId) -> Result<()> {
         (**self).retire(slot)
+    }
+
+    fn abort_deadline(&mut self, slot: SlotId) -> Result<()> {
+        (**self).abort_deadline(slot)
     }
 
     fn preempt(&mut self, slot: SlotId) -> Result<()> {
@@ -629,5 +681,23 @@ mod tests {
         assert_eq!(FinishReason::Length.as_str(), "length");
         assert_eq!(FinishReason::Stop.as_str(), "stop");
         assert_eq!(FinishReason::Cancelled.as_str(), "cancelled");
+        assert_eq!(
+            FinishReason::DeadlineExceeded.as_str(),
+            "deadline_exceeded"
+        );
+    }
+
+    #[test]
+    fn deadline_arithmetic_and_expiry() {
+        let r = InferenceRequest::new(1, vec![1], 4).at(2.0);
+        assert_eq!(r.deadline_s(), None);
+        assert!(!r.expired_at(1e9), "no deadline never expires");
+        let r = r.with_deadline_ms(500);
+        assert_eq!(r.deadline_s(), Some(2.5));
+        assert!(!r.expired_at(2.5), "expiry is strict");
+        assert!(r.expired_at(2.5 + 1e-9));
+        // deadline_ms = 0: expired the instant after submit
+        let r = InferenceRequest::new(2, vec![1], 4).with_deadline_ms(0);
+        assert!(r.expired_at(1e-9));
     }
 }

@@ -1,0 +1,450 @@
+//! Injectable fault domain for the flash I/O path.
+//!
+//! PowerInfer-2 puts flash reads on the token critical path, and phones
+//! are a hostile I/O environment (background-app contention, thermal
+//! throttling, latency spikes — see the COTS device study in PAPERS.md).
+//! This module gives the storage→offload→engine path a programmable,
+//! *deterministic* failure model:
+//!
+//! - [`Clock`]: the injectable time source. Every sleep on the storage/
+//!   offload path (UFS throttling, retry backoff, injected latency)
+//!   routes through a `Clock`, so tests and the model checker swap in
+//!   [`VirtualClock`] and stay instant and deterministic. `pi2 check`'s
+//!   `sleep-retry` lint rule enforces the routing: [`SystemClock::sleep`]
+//!   is the one justified `thread::sleep` site in `storage/`/`offload/`.
+//! - [`FaultInjector`]: a seeded, per-site programmable fault source
+//!   layered over [`crate::storage::ThrottledFile`]. It can inject
+//!   transient `EIO`-style failures, torn (short) reads, latency spikes,
+//!   and stuck reads that block past any I/O deadline. Decisions are a
+//!   pure function of (seed, draw order), so a failing schedule replays
+//!   from its seed.
+//! - [`RetryPolicy`]: the bounded-retry/exponential-backoff ladder the
+//!   verified store read uses for transient faults, plus the per-read
+//!   I/O deadline past which the engine degrades instead of waiting.
+//!
+//! `PI2_FAULT_SEED` (env) arms a default chaos profile — 10% transient
+//! faults plus occasional latency spikes on cluster reads — which CI's
+//! chaos smoke job uses to run the serving integration tests under
+//! injected faults with a fixed seed.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::prng::Rng;
+
+/// Injectable time source: real on the serving path, virtual in tests
+/// and the checker. `Debug` is required so storage handles that embed a
+/// `dyn Clock` keep their derived `Debug`.
+pub trait Clock: Send + Sync + std::fmt::Debug {
+    /// Monotonic seconds since the clock's epoch.
+    fn now_s(&self) -> f64;
+    /// Block (or virtually advance) for `d`.
+    fn sleep(&self, d: Duration);
+}
+
+/// Wall-clock [`Clock`] — the serving default.
+#[derive(Debug)]
+pub struct SystemClock {
+    t0: Instant,
+}
+
+impl SystemClock {
+    pub fn new() -> SystemClock {
+        SystemClock { t0: Instant::now() }
+    }
+}
+
+impl Default for SystemClock {
+    fn default() -> Self {
+        SystemClock::new()
+    }
+}
+
+impl Clock for SystemClock {
+    fn now_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    fn sleep(&self, d: Duration) {
+        // pi2-lint: allow(sleep-retry): the injectable clock's single
+        // real sleep site — every storage/offload backoff and throttle
+        // delay funnels through here so swapping the clock makes the
+        // whole path virtual
+        std::thread::sleep(d);
+    }
+}
+
+/// Virtual [`Clock`]: `sleep` advances time without blocking. Tests and
+/// fault schedules run in microseconds regardless of modeled latency.
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    now_us: AtomicU64,
+    /// Total virtually-slept microseconds (what a real clock would have
+    /// blocked for) — lets tests assert backoff arithmetic.
+    slept_us: AtomicU64,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock::default()
+    }
+
+    /// Seconds this clock has virtually slept so far.
+    pub fn slept_s(&self) -> f64 {
+        self.slept_us.load(Ordering::Relaxed) as f64 * 1e-6
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_s(&self) -> f64 {
+        self.now_us.load(Ordering::Relaxed) as f64 * 1e-6
+    }
+
+    fn sleep(&self, d: Duration) {
+        let us = d.as_micros().min(u128::from(u64::MAX)) as u64;
+        self.now_us.fetch_add(us, Ordering::Relaxed);
+        self.slept_us.fetch_add(us, Ordering::Relaxed);
+    }
+}
+
+/// Where on the flash path a fault is injected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultSite {
+    /// Raw positioned reads through `ThrottledFile` (weight bundles).
+    FlashRead,
+    /// Cluster-record reads through `NeuronStore`.
+    ClusterRead,
+}
+
+impl std::fmt::Display for FaultSite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaultSite::FlashRead => write!(f, "flash-read"),
+            FaultSite::ClusterRead => write!(f, "cluster-read"),
+        }
+    }
+}
+
+/// Per-site fault programming. Rates are independent probabilities per
+/// read, drawn in a fixed order (transient, short, stuck, spike) from
+/// the injector's seeded stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// Probability a read fails with a transient (retryable) error.
+    pub transient_rate: f64,
+    /// Probability a read is torn: only a prefix of the buffer lands,
+    /// the tail stays zeroed — what record checksums exist to catch.
+    pub short_read_rate: f64,
+    /// Probability a read blocks for `stuck_s` before completing —
+    /// meant to overrun the caller's I/O deadline.
+    pub stuck_rate: f64,
+    pub stuck_s: f64,
+    /// Probability of a latency spike of `spike_s` (read still succeeds).
+    pub spike_rate: f64,
+    pub spike_s: f64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            transient_rate: 0.0,
+            short_read_rate: 0.0,
+            stuck_rate: 0.0,
+            stuck_s: 0.25,
+            spike_rate: 0.0,
+            spike_s: 0.005,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Transient faults only, at `rate` — the acceptance-gate profile.
+    pub fn transient(rate: f64) -> FaultSpec {
+        FaultSpec { transient_rate: rate, ..FaultSpec::default() }
+    }
+
+    fn is_quiet(&self) -> bool {
+        self.transient_rate <= 0.0
+            && self.short_read_rate <= 0.0
+            && self.stuck_rate <= 0.0
+            && self.spike_rate <= 0.0
+    }
+}
+
+/// What the injector decided for one read.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultDecision {
+    /// Fail with a transient (retryable) error.
+    Transient,
+    /// Deliver only `keep_frac` of the buffer; zero the tail.
+    ShortRead { keep_frac: f64 },
+    /// Sleep `delay_s` through the clock, then read normally. `stuck`
+    /// marks delays programmed to overrun the caller's I/O deadline.
+    Delay { delay_s: f64, stuck: bool },
+}
+
+/// Injection counters (what actually fired), for `stats` and tests.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    pub transients: u64,
+    pub short_reads: u64,
+    pub stuck_reads: u64,
+    pub spikes: u64,
+}
+
+struct InjectorState {
+    rng: Rng,
+    specs: BTreeMap<FaultSite, FaultSpec>,
+}
+
+/// Seeded, per-site programmable fault source. Thread-safe: the I/O
+/// threads that consult it only contend on a short internal lock, and
+/// decisions are deterministic in (seed, global draw order).
+pub struct FaultInjector {
+    state: Mutex<InjectorState>,
+    transients: AtomicU64,
+    short_reads: AtomicU64,
+    stuck_reads: AtomicU64,
+    spikes: AtomicU64,
+}
+
+impl std::fmt::Debug for FaultInjector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let c = self.counts();
+        write!(f, "FaultInjector({c:?})")
+    }
+}
+
+impl FaultInjector {
+    pub fn new(seed: u64) -> FaultInjector {
+        FaultInjector {
+            state: Mutex::new(InjectorState {
+                rng: Rng::new(seed ^ 0xFA17_D0_5EED),
+                specs: BTreeMap::new(),
+            }),
+            transients: AtomicU64::new(0),
+            short_reads: AtomicU64::new(0),
+            stuck_reads: AtomicU64::new(0),
+            spikes: AtomicU64::new(0),
+        }
+    }
+
+    /// The CI chaos profile: `PI2_FAULT_SEED=<seed>` arms 10% transient
+    /// faults on cluster reads plus occasional short latency spikes.
+    /// Returns `None` when the variable is unset or unparsable.
+    pub fn from_env() -> Option<Arc<FaultInjector>> {
+        let seed: u64 = std::env::var("PI2_FAULT_SEED").ok()?.parse().ok()?;
+        let inj = FaultInjector::new(seed);
+        inj.set(
+            FaultSite::ClusterRead,
+            FaultSpec {
+                transient_rate: 0.10,
+                spike_rate: 0.02,
+                spike_s: 2e-4,
+                ..FaultSpec::default()
+            },
+        );
+        Some(Arc::new(inj))
+    }
+
+    /// Program `site`; a quiet (all-zero) spec disarms it.
+    pub fn set(&self, site: FaultSite, spec: FaultSpec) {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        if spec.is_quiet() {
+            st.specs.remove(&site);
+        } else {
+            st.specs.insert(site, spec);
+        }
+    }
+
+    /// Decide one read's fate. `None` = read proceeds untouched.
+    pub fn decide(&self, site: FaultSite) -> Option<FaultDecision> {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        let spec = *st.specs.get(&site)?;
+        // fixed draw order keeps schedules replayable from the seed
+        if st.rng.bool(spec.transient_rate) {
+            drop(st);
+            self.transients.fetch_add(1, Ordering::Relaxed);
+            return Some(FaultDecision::Transient);
+        }
+        if st.rng.bool(spec.short_read_rate) {
+            let frac = 0.25 + 0.5 * st.rng.f64();
+            drop(st);
+            self.short_reads.fetch_add(1, Ordering::Relaxed);
+            return Some(FaultDecision::ShortRead { keep_frac: frac });
+        }
+        if st.rng.bool(spec.stuck_rate) {
+            let s = spec.stuck_s;
+            drop(st);
+            self.stuck_reads.fetch_add(1, Ordering::Relaxed);
+            return Some(FaultDecision::Delay { delay_s: s, stuck: true });
+        }
+        if st.rng.bool(spec.spike_rate) {
+            let s = spec.spike_s;
+            drop(st);
+            self.spikes.fetch_add(1, Ordering::Relaxed);
+            return Some(FaultDecision::Delay { delay_s: s, stuck: false });
+        }
+        None
+    }
+
+    /// What has fired so far.
+    pub fn counts(&self) -> FaultCounts {
+        FaultCounts {
+            transients: self.transients.load(Ordering::Relaxed),
+            short_reads: self.short_reads.load(Ordering::Relaxed),
+            stuck_reads: self.stuck_reads.load(Ordering::Relaxed),
+            spikes: self.spikes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Typed injected-fault error: the retry ladder downcasts to this to
+/// tell a retryable transient from a real storage failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InjectedFault {
+    pub site: FaultSite,
+    /// Byte offset of the faulted read.
+    pub offset: u64,
+}
+
+impl std::fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "injected transient I/O fault at {} offset {}",
+            self.site, self.offset
+        )
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+/// Typed I/O-deadline error: a read (or its retry ladder) overran the
+/// per-read time budget. The data — if any arrived — is discarded; the
+/// engine degrades to resident weights instead of waiting on flash.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IoDeadlineExceeded {
+    pub site: FaultSite,
+    pub elapsed_s: f64,
+    pub deadline_s: f64,
+}
+
+impl std::fmt::Display for IoDeadlineExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "I/O deadline exceeded at {}: {:.4}s elapsed > {:.4}s budget",
+            self.site, self.elapsed_s, self.deadline_s
+        )
+    }
+}
+
+impl std::error::Error for IoDeadlineExceeded {}
+
+/// Bounded-retry ladder for transient flash faults, plus the per-read
+/// I/O deadline past which the caller degrades instead of waiting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (0 = fail fast).
+    pub max_retries: u32,
+    /// First backoff; doubles per retry. Slept through the [`Clock`].
+    pub backoff_base_s: f64,
+    /// Wall (clock) budget for one logical read including retries;
+    /// 0 disables the deadline.
+    pub deadline_s: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 2, backoff_base_s: 0.005, deadline_s: 0.0 }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry `attempt` (1-based): base · 2^(attempt−1).
+    pub fn backoff_s(&self, attempt: u32) -> f64 {
+        self.backoff_base_s * f64::from(1u32 << attempt.saturating_sub(1).min(16))
+    }
+
+    /// Has the per-read deadline expired `elapsed_s` into the ladder?
+    pub fn expired(&self, elapsed_s: f64) -> bool {
+        self.deadline_s > 0.0 && elapsed_s > self.deadline_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_advances_without_blocking() {
+        let c = VirtualClock::new();
+        let wall = Instant::now();
+        c.sleep(Duration::from_secs(3600));
+        assert!(wall.elapsed().as_secs_f64() < 1.0, "must not really sleep");
+        assert!((c.now_s() - 3600.0).abs() < 1e-6);
+        assert!((c.slept_s() - 3600.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn injector_is_deterministic_in_seed_and_counts_fires() {
+        let run = |seed: u64| -> (Vec<Option<FaultDecision>>, FaultCounts) {
+            let inj = FaultInjector::new(seed);
+            inj.set(FaultSite::ClusterRead, FaultSpec::transient(0.5));
+            let seq: Vec<_> =
+                (0..64).map(|_| inj.decide(FaultSite::ClusterRead)).collect();
+            (seq, inj.counts())
+        };
+        let (a, ca) = run(7);
+        let (b, cb) = run(7);
+        assert_eq!(a, b, "same seed must replay the same schedule");
+        assert_eq!(ca, cb);
+        assert!(ca.transients > 0, "a 50% rate over 64 reads must fire");
+        let (c, _) = run(8);
+        assert_ne!(a, c, "different seeds should diverge");
+    }
+
+    #[test]
+    fn unprogrammed_sites_never_fault() {
+        let inj = FaultInjector::new(3);
+        inj.set(FaultSite::ClusterRead, FaultSpec::transient(1.0));
+        assert_eq!(inj.decide(FaultSite::FlashRead), None);
+        assert_eq!(
+            inj.decide(FaultSite::ClusterRead),
+            Some(FaultDecision::Transient)
+        );
+        // a quiet spec disarms
+        inj.set(FaultSite::ClusterRead, FaultSpec::default());
+        assert_eq!(inj.decide(FaultSite::ClusterRead), None);
+    }
+
+    #[test]
+    fn retry_backoff_is_exponential_and_deadline_typed() {
+        let p = RetryPolicy {
+            max_retries: 3,
+            backoff_base_s: 0.01,
+            deadline_s: 0.5,
+        };
+        assert!((p.backoff_s(1) - 0.01).abs() < 1e-12);
+        assert!((p.backoff_s(2) - 0.02).abs() < 1e-12);
+        assert!((p.backoff_s(3) - 0.04).abs() < 1e-12);
+        assert!(!p.expired(0.4));
+        assert!(p.expired(0.6));
+        let off = RetryPolicy { deadline_s: 0.0, ..p };
+        assert!(!off.expired(1e9));
+    }
+
+    #[test]
+    fn injected_fault_error_is_downcastable() {
+        let err = anyhow::Error::new(InjectedFault {
+            site: FaultSite::ClusterRead,
+            offset: 4096,
+        });
+        let f = err.downcast_ref::<InjectedFault>().unwrap();
+        assert_eq!(f.offset, 4096);
+        assert!(format!("{f}").contains("cluster-read"));
+    }
+}

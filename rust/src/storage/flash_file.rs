@@ -8,11 +8,15 @@
 use std::fs::File;
 use std::os::unix::io::AsRawFd;
 use std::path::Path;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Error, Result};
 
 use crate::config::CoreClass;
+use crate::storage::fault::{
+    Clock, FaultDecision, FaultInjector, FaultSite, InjectedFault, SystemClock,
+};
 use crate::storage::{IoPattern, UfsModel};
 
 /// What went wrong with a positioned read.
@@ -137,19 +141,41 @@ impl FlashFile {
 }
 
 /// UFS-latency-injecting wrapper: every read takes at least what the UFS
-/// model says it would take on the phone.
+/// model says it would take on the phone. Carries the fault domain: an
+/// optional seeded [`FaultInjector`] decides each read's fate, and every
+/// delay (modeled latency, injected spikes) routes through the
+/// injectable [`Clock`] so tests can run the whole path virtually.
 #[derive(Debug)]
 pub struct ThrottledFile {
     inner: FlashFile,
     model: UfsModel,
     core: CoreClass,
+    clock: Arc<dyn Clock>,
+    injector: Option<Arc<FaultInjector>>,
+    /// Which injector site this handle's reads draw from (the weight
+    /// file reads as [`FaultSite::FlashRead`]; `NeuronStore` retags its
+    /// handle [`FaultSite::ClusterRead`]).
+    site: FaultSite,
     /// Set false to disable throttling (raw NVMe speed).
     pub throttle: bool,
 }
 
 impl ThrottledFile {
     pub fn new(inner: FlashFile, model: UfsModel, core: CoreClass) -> Self {
-        ThrottledFile { inner, model, core, throttle: true }
+        ThrottledFile {
+            inner,
+            model,
+            core,
+            clock: Arc::new(SystemClock::new()),
+            injector: None,
+            site: FaultSite::FlashRead,
+            throttle: true,
+        }
+    }
+
+    /// Retag which injector site this handle's reads draw from.
+    pub fn set_fault_site(&mut self, site: FaultSite) {
+        self.site = site;
     }
 
     pub fn len(&self) -> u64 {
@@ -160,10 +186,56 @@ impl ThrottledFile {
         self.inner.is_empty()
     }
 
-    /// Random-pattern positioned read with injected UFS latency.
+    /// Swap the time source (tests/checker install a `VirtualClock`).
+    pub fn set_clock(&mut self, clock: Arc<dyn Clock>) {
+        self.clock = clock;
+    }
+
+    pub fn clock(&self) -> Arc<dyn Clock> {
+        Arc::clone(&self.clock)
+    }
+
+    /// Arm (or disarm) fault injection on this handle's reads.
+    pub fn set_injector(&mut self, injector: Option<Arc<FaultInjector>>) {
+        self.injector = injector;
+    }
+
+    pub fn injector(&self) -> Option<Arc<FaultInjector>> {
+        self.injector.clone()
+    }
+
+    /// Random-pattern positioned read with injected UFS latency and,
+    /// when an injector is armed, programmable faults: transient errors
+    /// surface as a downcastable [`InjectedFault`], torn reads deliver a
+    /// zeroed tail (record checksums exist to catch this), and latency
+    /// spikes / stuck reads sleep through the clock.
     pub fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
         let start = Instant::now();
-        self.inner.read_at(offset, buf)?;
+        let mut keep = buf.len();
+        if let Some(inj) = &self.injector {
+            match inj.decide(self.site) {
+                Some(FaultDecision::Transient) => {
+                    return Err(Error::new(InjectedFault {
+                        site: self.site,
+                        offset,
+                    }));
+                }
+                Some(FaultDecision::ShortRead { keep_frac }) => {
+                    keep = ((buf.len() as f64 * keep_frac) as usize)
+                        .min(buf.len());
+                }
+                Some(FaultDecision::Delay { delay_s, .. }) => {
+                    self.clock.sleep(Duration::from_secs_f64(delay_s));
+                }
+                None => {}
+            }
+        }
+        self.inner.read_at(offset, &mut buf[..keep])?;
+        if keep < buf.len() {
+            // torn read: the tail never landed — zero it so stale buffer
+            // contents cannot masquerade as weights
+            buf[keep..].fill(0);
+        }
         if self.throttle {
             let modeled = self.model.single_read_s(
                 IoPattern::Random,
@@ -173,7 +245,7 @@ impl ThrottledFile {
             );
             let elapsed = start.elapsed().as_secs_f64();
             if modeled > elapsed {
-                std::thread::sleep(Duration::from_secs_f64(modeled - elapsed));
+                self.clock.sleep(Duration::from_secs_f64(modeled - elapsed));
             }
         }
         Ok(())
@@ -260,6 +332,62 @@ mod tests {
         t.read_at(0, &mut buf).unwrap();
         assert!(start.elapsed().as_secs_f64() >= modeled * 0.9);
         assert!(buf.iter().all(|&b| b == 7));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn injected_faults_are_typed_and_torn_reads_zero_the_tail() {
+        use crate::storage::fault::{
+            FaultInjector, FaultSite, FaultSpec, InjectedFault, VirtualClock,
+        };
+        use std::sync::Arc;
+        let data = vec![9u8; 4096];
+        let path = tmpfile(&data);
+        let mut t = ThrottledFile::new(
+            FlashFile::open(&path).unwrap(),
+            UfsModel::new(oneplus_12().ufs),
+            CoreClass::Big,
+        );
+        t.throttle = false;
+        t.set_clock(Arc::new(VirtualClock::new()));
+        let inj = Arc::new(FaultInjector::new(11));
+        inj.set(FaultSite::FlashRead, FaultSpec::transient(1.0));
+        t.set_injector(Some(Arc::clone(&inj)));
+        let mut buf = [0u8; 64];
+        let err = t.read_at(0, &mut buf).unwrap_err();
+        assert!(err.downcast_ref::<InjectedFault>().is_some(), "{err:#}");
+        // torn reads deliver a prefix and a zeroed (not stale) tail
+        inj.set(
+            FaultSite::FlashRead,
+            FaultSpec { short_read_rate: 1.0, ..FaultSpec::default() },
+        );
+        let mut buf = [0xAAu8; 64];
+        t.read_at(0, &mut buf).unwrap();
+        assert_eq!(buf[0], 9, "the delivered prefix is real data");
+        assert_eq!(*buf.last().unwrap(), 0, "the torn tail must be zeroed");
+        let c = inj.counts();
+        assert!(c.transients >= 1 && c.short_reads >= 1, "{c:?}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn virtual_clock_makes_throttling_instant() {
+        use crate::storage::fault::VirtualClock;
+        use std::sync::Arc;
+        let data = vec![1u8; 32 * 1024];
+        let path = tmpfile(&data);
+        let mut t = ThrottledFile::new(
+            FlashFile::open(&path).unwrap(),
+            UfsModel::new(oneplus_12().ufs),
+            CoreClass::Big,
+        );
+        let clock = Arc::new(VirtualClock::new());
+        t.set_clock(Arc::clone(&clock));
+        let start = Instant::now();
+        let mut buf = [0u8; 4096];
+        t.read_at(0, &mut buf).unwrap();
+        assert!(start.elapsed().as_secs_f64() < 0.05, "must not block");
+        assert!(clock.slept_s() > 0.0, "modeled latency must be accounted");
         std::fs::remove_file(path).ok();
     }
 }

@@ -14,8 +14,13 @@
 //! [`ThrottledFile`] which injects UFS-model latencies so a laptop NVMe
 //! device behaves like phone flash.
 
+pub mod fault;
 pub mod flash_file;
 
+pub use fault::{
+    Clock, FaultCounts, FaultDecision, FaultInjector, FaultSite, FaultSpec,
+    InjectedFault, IoDeadlineExceeded, RetryPolicy, SystemClock, VirtualClock,
+};
 pub use flash_file::{
     FlashFile, FlashReadError, FlashReadErrorKind, ThrottledFile,
 };

@@ -221,6 +221,92 @@ fn prop_sim_deterministic() {
     }
 }
 
+/// Fault schedules over a serving engine with offload streaming: random
+/// transient-fault rates plus armed one-shot faults and deadline stalls
+/// change billing only — token streams stay byte-identical to a
+/// fault-free run (including after the engine-wide degrade latch fires),
+/// the full invariant audit (byte-conservation law included) holds after
+/// every step, and nothing leaks: deadline aborts and retirement return
+/// every KV block to the pool.
+#[test]
+fn prop_fault_schedules_stream_identically_and_leak_nothing() {
+    use powerinfer2::engine::SimEngine;
+    use powerinfer2::serve::{Engine, InferenceRequest};
+    let mut faults_seen = 0u64;
+    for seed in 0..24u64 {
+        let mut rng = Rng::new(seed ^ 0xFA17);
+        let cfg = RuntimeConfig {
+            max_batch: 2,
+            offload_streaming: true,
+            offload_resident_clusters: rng.range(2, 24),
+            kv_block_tokens: 4,
+            kv_pool_blocks: 64,
+            io_failure_threshold: rng.range(1, 6),
+            seed,
+            ..Default::default()
+        };
+        let mut clean = SimEngine::new(oneplus_12(), bamboo_7b(), cfg.clone());
+        let mut faulty = SimEngine::new(oneplus_12(), bamboo_7b(), cfg);
+        faulty.set_io_fault_rate(rng.f64() * 0.3, seed ^ 0x77);
+        let total = faulty.kv_pool().unwrap().free_blocks;
+        let reqs = [
+            InferenceRequest::new(1, vec![1, 2, 3], 6),
+            InferenceRequest::new(2, vec![4, 5], 6),
+        ];
+        let run = |eng: &mut SimEngine, arm: bool, rng: &mut Rng| {
+            let mut out: [Vec<u32>; 2] = [Vec::new(), Vec::new()];
+            let mut slot_of = [0usize; 2];
+            for (i, r) in reqs.iter().enumerate() {
+                let adm = eng.admit(r).unwrap();
+                slot_of[i] = adm.slot;
+                out[i].push(adm.first_token.unwrap());
+            }
+            for _ in 0..4 {
+                if arm {
+                    if rng.bool(0.5) {
+                        eng.arm_io_fault();
+                    }
+                    if rng.bool(0.3) {
+                        eng.arm_io_stall();
+                    }
+                }
+                for (slot, tok) in eng.step().unwrap() {
+                    let i = slot_of.iter().position(|&s| s == slot).unwrap();
+                    out[i].push(tok);
+                }
+                eng.check_invariants().unwrap();
+            }
+            for &s in &slot_of {
+                eng.retire(s).unwrap();
+            }
+            out
+        };
+        let mut arm_rng = Rng::new(seed ^ 0xA11);
+        let s_clean = run(&mut clean, false, &mut arm_rng);
+        let s_faulty = run(&mut faulty, true, &mut arm_rng);
+        assert_eq!(
+            s_clean, s_faulty,
+            "seed {seed}: fault handling changed the token stream"
+        );
+        let st = faulty.stats();
+        faults_seen += st.offload_io_retries + st.offload_degraded_fetches;
+        // a deadline abort mid-decode releases its lease like retire does
+        let adm =
+            faulty.admit(&InferenceRequest::new(3, vec![7, 8], 4)).unwrap();
+        faulty.step().unwrap();
+        faulty.abort_deadline(adm.slot).unwrap();
+        faulty.check_invariants().unwrap();
+        let p = faulty.kv_pool().unwrap();
+        assert_eq!(p.free_blocks, total, "seed {seed}: leaked KV blocks");
+        assert_eq!(p.active_leases, 0, "seed {seed}: leaked lease");
+    }
+    assert!(
+        faults_seen > 0,
+        "24 seeded fault schedules drove no retries or degrades — the \
+         property tested nothing"
+    );
+}
+
 /// KV pool churn: the full bookkeeping audit (`check_invariants`) holds
 /// after EVERY operation across a randomized mix of admissions (eager
 /// and deferred-publish), appends, failed-step rollbacks, forks, and
